@@ -1,0 +1,108 @@
+//! End-to-end driver: the full three-layer stack on a real small workload.
+//!
+//!     make artifacts && cargo run --release --example mnist_clustering
+//!
+//! This is the repository's composition proof (DESIGN.md "End-to-end
+//! validation"): an MNIST-scale workload (2,000 x 784 MNIST-like images)
+//! is clustered with BanditPAM **twice** —
+//!
+//!   1. through the **XLA backend**: every distance block executes the
+//!      Pallas pairwise-l2 kernel that was written in Python (L1), wrapped
+//!      by the JAX graph (L2), AOT-lowered to HLO text by `make artifacts`,
+//!      and compiled/executed here via the PJRT C API — Python is not
+//!      running anywhere in this process;
+//!   2. through the **native backend** (pure Rust kernels).
+//!
+//! The two runs must produce identical medoids (same RNG seed, same
+//! algorithm, numerics agree to fp32 tolerance), and both must match exact
+//! PAM (FastPAM1). The headline metrics (distance-evaluation reduction,
+//! wall-clock) are printed and recorded in EXPERIMENTS.md.
+
+use banditpam::algorithms::fastpam1::FastPam1;
+use banditpam::prelude::*;
+use banditpam::runtime::executable::Client;
+use banditpam::runtime::manifest::Manifest;
+use banditpam::runtime::xla_backend::XlaBackend;
+
+fn main() -> anyhow::Result<()> {
+    let n = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(2000usize);
+    let k = 5;
+    let mut rng = Rng::seed_from(123);
+    let data = synthetic::mnist_like(&mut rng, n);
+    println!("dataset: {} (d = 784, k = {k})", data.name);
+
+    // --- Layer 3 over the AOT XLA path -----------------------------------
+    let client = Client::cpu()?;
+    println!("PJRT platform: {}", client.platform());
+    let xla = XlaBackend::new(&client, &Manifest::default_dir(), &data.points, Metric::L2)?;
+    println!(
+        "artifact: {} (tile {}x{}x{})",
+        xla.artifact().name,
+        xla.artifact().t,
+        xla.artifact().r,
+        xla.artifact().d
+    );
+    let mut algo = BanditPam::new(BanditPamConfig::default());
+    let t0 = std::time::Instant::now();
+    let fit_xla = algo.fit(&xla, k, &mut Rng::seed_from(99))?;
+    let xla_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "\n[xla   ] medoids {:?}  loss {:.2}  evals {}  PJRT executions {}  {:.2}s",
+        fit_xla.medoids,
+        fit_xla.loss,
+        fit_xla.stats.distance_evals,
+        xla.executions(),
+        xla_secs
+    );
+
+    // --- Same fit through the native kernels ------------------------------
+    let native = NativeBackend::new(&data.points, Metric::L2)
+        .with_threads(banditpam::experiments::harness::default_threads());
+    let mut algo = BanditPam::new(BanditPamConfig::default());
+    let t0 = std::time::Instant::now();
+    let fit_native = algo.fit(&native, k, &mut Rng::seed_from(99))?;
+    let native_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "[native] medoids {:?}  loss {:.2}  evals {}  {:.2}s",
+        fit_native.medoids, fit_native.loss, fit_native.stats.distance_evals, native_secs
+    );
+
+    anyhow::ensure!(
+        fit_xla.medoids == fit_native.medoids,
+        "XLA and native backends disagree: {:?} vs {:?}",
+        fit_xla.medoids,
+        fit_native.medoids
+    );
+    println!("\nXLA == native medoids: YES (three-layer stack composes)");
+
+    // --- Exact PAM reference ----------------------------------------------
+    let pam_backend = NativeBackend::new(&data.points, Metric::L2)
+        .with_threads(banditpam::experiments::harness::default_threads());
+    let pam = FastPam1::new().fit(&pam_backend, k, &mut Rng::seed_from(0))?;
+    println!(
+        "[pam   ] medoids {:?}  loss {:.2}  evals {}",
+        pam.medoids, pam.loss, pam.stats.distance_evals
+    );
+    println!(
+        "\nBanditPAM == PAM medoids: {}",
+        if fit_native.medoids == pam.medoids { "YES" } else { "no (loss ratio below)" }
+    );
+    println!("loss ratio vs PAM : {:.5}", fit_native.loss / pam.loss);
+    // Paper accounting (§5.2): per-iteration evals vs the analytic
+    // PAM (k n^2) / FastPAM1 (n^2) reference lines.
+    let per_iter = fit_native.stats.evals_per_iter();
+    println!(
+        "evals/iteration   : {:.0} (PAM ref {}, FastPAM1 ref {})",
+        per_iter,
+        k * n * n,
+        n * n
+    );
+    println!(
+        "vs PAM            : {:.1}x fewer evals per iteration",
+        (k * n * n) as f64 / per_iter
+    );
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Quickstart: cluster a synthetic Gaussian mixture with BanditPAM and
+//! compare against exact PAM.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Demonstrates the core public API: build a dataset, wrap it in a
+//! distance backend, fit, inspect medoids / loss / evaluation counts.
+
+use banditpam::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Data: 800 points in 16 dims from 5 well-separated components.
+    let mut rng = Rng::seed_from(7);
+    let data = synthetic::gmm(&mut rng, 800, 16, 5, 4.0);
+    println!("dataset: {} ({} points)", data.name, data.len());
+
+    // 2. Backend: native Rust kernels, counting every distance evaluation.
+    let backend = NativeBackend::new(&data.points, Metric::L2);
+
+    // 3. Fit BanditPAM with the paper-default configuration
+    //    (B = 100, delta = 1/(1000 |S_tar|), per-arm sigma).
+    let mut algo = BanditPam::new(BanditPamConfig::default());
+    let fit = algo.fit(&backend, 5, &mut rng)?;
+    println!("\nBanditPAM:");
+    println!("  medoids        = {:?}", fit.medoids);
+    println!("  loss           = {:.3}", fit.loss);
+    println!("  distance evals = {}", fit.stats.distance_evals);
+    println!("  swap iters     = {}", fit.stats.swap_iters);
+
+    // 4. Reference: exact PAM on the same data.
+    let pam_backend = NativeBackend::new(&data.points, Metric::L2);
+    let pam_fit = Pam::new().fit(&pam_backend, 5, &mut rng)?;
+    println!("\nPAM (exact):");
+    println!("  medoids        = {:?}", pam_fit.medoids);
+    println!("  loss           = {:.3}", pam_fit.loss);
+    println!("  distance evals = {}", pam_fit.stats.distance_evals);
+
+    // 5. The paper's claim: identical medoids, far fewer evaluations.
+    println!(
+        "\nsame medoids as PAM: {}",
+        if fit.same_medoids(&pam_fit) { "YES" } else { "no (rare; loss matches)" }
+    );
+    println!(
+        "evaluation ratio   : {:.1}x fewer",
+        pam_fit.stats.distance_evals as f64 / fit.stats.distance_evals as f64
+    );
+
+    // 6. Cluster purity against the generator's ground-truth labels.
+    if let Some(labels) = &data.labels {
+        let k = fit.medoids.len();
+        let mut majority = vec![std::collections::HashMap::new(); k];
+        for (i, &a) in fit.assignments.iter().enumerate() {
+            *majority[a].entry(labels[i]).or_insert(0usize) += 1;
+        }
+        let pure: usize = majority
+            .iter()
+            .map(|m| m.values().max().copied().unwrap_or(0))
+            .sum();
+        println!(
+            "cluster purity     : {:.1}%",
+            100.0 * pure as f64 / data.len() as f64
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,138 @@
+"""AOT lowering: jax/Pallas graphs -> HLO *text* artifacts + manifest.
+
+This is the only place Python touches the system; it runs at build time
+(``make artifacts``) and never on the Rust request path.
+
+Interchange format is HLO **text**, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+bundled XLA (xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Outputs (under ``artifacts/``):
+
+* ``<name>.hlo.txt``  -- one per entry in ``CONFIGS``
+* ``manifest.json``   -- schema the Rust runtime reads: for each artifact its
+  graph kind, metric, tile shape (t, r, d[, k]), and file name.
+
+Usage: ``python -m compile.aot --out ../artifacts`` (idempotent: skips
+regeneration when the sources are older than the manifest).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# Artifact configurations.
+#
+# Tile shapes are fixed here and padded up to by the Rust XlaBackend. R=128
+# holds the paper's reference batch size B=100 with masking; D covers the
+# dataset families we ship (16: PCA/quickstart, 64: generic, 784: MNIST-like).
+# ---------------------------------------------------------------------------
+
+CONFIGS = []
+for _metric in ("l2", "l1", "cosine"):
+    for _d in (16, 64, 784):
+        CONFIGS.append(
+            {
+                "kind": "pairwise",
+                "metric": _metric,
+                "t": 64,
+                "r": 128,
+                "d": _d,
+                "name": f"pairwise_{_metric}_64x128x{_d}",
+            }
+        )
+CONFIGS.append(
+    {"kind": "build_g", "metric": "l2", "t": 64, "r": 128, "d": 784,
+     "name": "build_g_l2_64x128x784"}
+)
+CONFIGS.append(
+    {"kind": "swap_delta", "metric": "l2", "t": 64, "r": 128, "d": 784, "k": 8,
+     "name": "swap_delta_l2_64x128x784x8"}
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_config(cfg: dict) -> str:
+    shapes = model.example_shapes(cfg["t"], cfg["r"], cfg["d"], cfg.get("k", 8))
+    if cfg["kind"] == "pairwise":
+        fn = model.pairwise(cfg["metric"])
+        args = shapes["pairwise"]
+    elif cfg["kind"] == "build_g":
+        fn = model.build_g_mean
+        args = shapes["build_g"]
+    elif cfg["kind"] == "swap_delta":
+        fn = model.swap_delta
+        args = shapes["swap_delta"]
+    else:
+        raise ValueError(f"unknown artifact kind {cfg['kind']!r}")
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def newest_source_mtime() -> float:
+    here = os.path.dirname(os.path.abspath(__file__))
+    paths = [os.path.join(here, "aot.py"), os.path.join(here, "model.py")]
+    kdir = os.path.join(here, "kernels")
+    paths += [os.path.join(kdir, f) for f in os.listdir(kdir) if f.endswith(".py")]
+    return max(os.path.getmtime(p) for p in paths)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--force", action="store_true", help="regenerate even if fresh")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated artifact names to build"
+    )
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest_path = os.path.join(args.out, "manifest.json")
+
+    if not args.force and os.path.exists(manifest_path):
+        if os.path.getmtime(manifest_path) >= newest_source_mtime():
+            print(f"artifacts fresh ({manifest_path}); nothing to do")
+            return 0
+
+    only = set(args.only.split(",")) if args.only else None
+    entries = []
+    for cfg in CONFIGS:
+        if only and cfg["name"] not in only:
+            continue
+        text = lower_config(cfg)
+        fname = f"{cfg['name']}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        entry = dict(cfg)
+        entry["file"] = fname
+        entries.append(entry)
+        print(f"lowered {cfg['name']:<36} -> {fname} ({len(text)} chars)")
+
+    with open(manifest_path, "w") as f:
+        json.dump({"version": 1, "artifacts": entries}, f, indent=2)
+    print(f"wrote {manifest_path} ({len(entries)} artifacts)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

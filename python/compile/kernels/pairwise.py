@@ -1,0 +1,235 @@
+"""Layer-1 Pallas kernels: tiled pairwise-distance blocks.
+
+These are the compute hot spot of BanditPAM: every arm pull in
+Algorithm 1 evaluates distances between a set of live target points and a
+common reference batch, i.e. a dense ``[T, R]`` pairwise-distance block.
+
+TPU mapping (see DESIGN.md "Hardware-Adaptation"):
+
+* ``l2`` / ``cosine`` reduce to a single ``[T, D] x [D, R]`` matmul (the MXU
+  systolic array's native shape) plus per-row norm vectors that are computed
+  once per block on the VPU: ``d^2 = |x|^2 + |y|^2 - 2 x.y``.
+* ``l1`` has no matmul form; its kernel tiles the D axis and accumulates
+  ``sum |x_i - y_i|`` into the VMEM-resident output tile (VPU-bound).
+
+All kernels share one BlockSpec schedule: grid ``(T/Tb, R/Rb, D/Db)`` with
+the D axis innermost so the ``[Tb, Rb]`` output tile stays resident in VMEM
+while HBM streams the x/y stripes -- the Pallas analogue of the threadblock
+tiling a CUDA kernel would use for the same computation.
+
+Kernels are executed with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so the kernels lower to plain HLO that both the pytest
+oracle checks and the Rust runtime execute. Real-TPU performance is budgeted
+statically in DESIGN.md / EXPERIMENTS.md "Perf".
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile shapes. Tb*Db and Rb*Db stripes plus the [Tb, Rb] out tile
+# must fit (double-buffered) in ~16 MiB VMEM; see DESIGN.md for the budget.
+DEFAULT_TB = 64
+DEFAULT_RB = 128
+DEFAULT_DB = 128
+
+
+def _check_tiles(t: int, r: int, d: int, tb: int, rb: int, db: int) -> None:
+    if t % tb or r % rb or d % db:
+        raise ValueError(
+            f"shape ({t},{r},{d}) not divisible by tiles ({tb},{rb},{db}); "
+            "pad inputs first (the Rust runtime pads to artifact shapes)"
+        )
+
+
+def fit_tile(dim: int, pref: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``pref`` (tile auto-fitting)."""
+    pref = min(pref, dim)
+    for cand in range(pref, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# l2: d(x, y) = sqrt(max(|x|^2 + |y|^2 - 2 x.y, 0))
+# ---------------------------------------------------------------------------
+
+
+def _l2_kernel(x_ref, y_ref, xsq_ref, ysq_ref, o_ref):
+    """Accumulate -2 * x @ y.T over D tiles; finalize with norms + sqrt."""
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU: [Tb, Db] x [Db, Rb] partial cross term.
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _finalize():
+        dot = o_ref[...]
+        sq = xsq_ref[...].reshape(-1, 1) + ysq_ref[...].reshape(1, -1) - 2.0 * dot
+        o_ref[...] = jnp.sqrt(jnp.maximum(sq, 0.0))
+
+
+def l2_pairwise(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    tb: int = DEFAULT_TB,
+    rb: int = DEFAULT_RB,
+    db: int = DEFAULT_DB,
+) -> jax.Array:
+    """Euclidean distance block: ``out[i, j] = ||x[i] - y[j]||_2``.
+
+    ``x: [T, D]``, ``y: [R, D]`` -> ``[T, R]`` (all float32).
+    """
+    t, d = x.shape
+    r, d2 = y.shape
+    assert d == d2, (d, d2)
+    tb, rb, db = fit_tile(t, tb), fit_tile(r, rb), fit_tile(d, db)
+    _check_tiles(t, r, d, tb, rb, db)
+    # Squared norms are O(ND) VPU work, computed once outside the grid so the
+    # kernel's accumulator holds only the matmul cross term.
+    xsq = jnp.sum(x * x, axis=1)
+    ysq = jnp.sum(y * y, axis=1)
+    return pl.pallas_call(
+        _l2_kernel,
+        grid=(t // tb, r // rb, d // db),
+        in_specs=[
+            pl.BlockSpec((tb, db), lambda i, j, k: (i, k)),
+            pl.BlockSpec((rb, db), lambda i, j, k: (j, k)),
+            pl.BlockSpec((tb,), lambda i, j, k: (i,)),
+            pl.BlockSpec((rb,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tb, rb), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, r), jnp.float32),
+        interpret=True,
+    )(x, y, xsq, ysq)
+
+
+# ---------------------------------------------------------------------------
+# cosine: d(x, y) = 1 - x.y / (|x| |y|)
+# ---------------------------------------------------------------------------
+
+
+def _cosine_kernel(x_ref, y_ref, xn_ref, yn_ref, o_ref):
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _finalize():
+        denom = xn_ref[...].reshape(-1, 1) * yn_ref[...].reshape(1, -1)
+        # Zero vectors get distance 1 (cos sim 0), matching ref.py / Rust.
+        safe = jnp.where(denom > 0.0, denom, 1.0)
+        cos = jnp.where(denom > 0.0, o_ref[...] / safe, 0.0)
+        o_ref[...] = 1.0 - cos
+
+
+def cosine_pairwise(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    tb: int = DEFAULT_TB,
+    rb: int = DEFAULT_RB,
+    db: int = DEFAULT_DB,
+) -> jax.Array:
+    """Cosine distance block: ``out[i, j] = 1 - cos(x[i], y[j])``."""
+    t, d = x.shape
+    r, d2 = y.shape
+    assert d == d2, (d, d2)
+    tb, rb, db = fit_tile(t, tb), fit_tile(r, rb), fit_tile(d, db)
+    _check_tiles(t, r, d, tb, rb, db)
+    xn = jnp.sqrt(jnp.sum(x * x, axis=1))
+    yn = jnp.sqrt(jnp.sum(y * y, axis=1))
+    return pl.pallas_call(
+        _cosine_kernel,
+        grid=(t // tb, r // rb, d // db),
+        in_specs=[
+            pl.BlockSpec((tb, db), lambda i, j, k: (i, k)),
+            pl.BlockSpec((rb, db), lambda i, j, k: (j, k)),
+            pl.BlockSpec((tb,), lambda i, j, k: (i,)),
+            pl.BlockSpec((rb,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tb, rb), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, r), jnp.float32),
+        interpret=True,
+    )(x, y, xn, yn)
+
+
+# ---------------------------------------------------------------------------
+# l1: d(x, y) = sum_i |x_i - y_i|   (VPU-bound; no matmul form)
+# ---------------------------------------------------------------------------
+
+
+def _l1_kernel(x_ref, y_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Broadcasted [Tb, Rb, Db] diff lives only for this tile; Db bounds the
+    # VMEM spike (Tb*Rb*Db*4 bytes).
+    diff = x_ref[...][:, None, :] - y_ref[...][None, :, :]
+    o_ref[...] += jnp.sum(jnp.abs(diff), axis=-1)
+
+
+def l1_pairwise(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    tb: int = DEFAULT_TB,
+    rb: int = DEFAULT_RB,
+    db: int = 32,
+) -> jax.Array:
+    """Manhattan distance block: ``out[i, j] = ||x[i] - y[j]||_1``."""
+    t, d = x.shape
+    r, d2 = y.shape
+    assert d == d2, (d, d2)
+    tb, rb, db = fit_tile(t, tb), fit_tile(r, rb), fit_tile(d, db)
+    _check_tiles(t, r, d, tb, rb, db)
+    return pl.pallas_call(
+        _l1_kernel,
+        grid=(t // tb, r // rb, d // db),
+        in_specs=[
+            pl.BlockSpec((tb, db), lambda i, j, k: (i, k)),
+            pl.BlockSpec((rb, db), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((tb, rb), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, r), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+PAIRWISE = {
+    "l2": l2_pairwise,
+    "l1": l1_pairwise,
+    "cosine": cosine_pairwise,
+}
+
+
+@functools.lru_cache(maxsize=None)
+def get_kernel(metric: str):
+    """Look up a pairwise kernel by metric name (raises on unknown)."""
+    try:
+        return PAIRWISE[metric]
+    except KeyError:
+        raise ValueError(f"unknown metric {metric!r}; have {sorted(PAIRWISE)}")

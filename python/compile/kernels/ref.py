@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every Pallas kernel in :mod:`pairwise` and every fused graph in
+``compile.model`` is checked against these references by
+``python/tests/test_kernel.py`` (hypothesis sweeps shapes and contents).
+The Rust `NativeBackend` mirrors the same definitions, so the oracle also
+pins the cross-language contract.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def l2_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """``out[i, j] = ||x[i] - y[j]||_2`` via explicit broadcast."""
+    diff = x[:, None, :] - y[None, :, :]
+    return jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0))
+
+
+def l1_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """``out[i, j] = ||x[i] - y[j]||_1``."""
+    return jnp.sum(jnp.abs(x[:, None, :] - y[None, :, :]), axis=-1)
+
+
+def cosine_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """``out[i, j] = 1 - cos(x[i], y[j])``; zero vectors get distance 1."""
+    dot = x @ y.T
+    xn = jnp.sqrt(jnp.sum(x * x, axis=1))
+    yn = jnp.sqrt(jnp.sum(y * y, axis=1))
+    denom = xn[:, None] * yn[None, :]
+    cos = jnp.where(denom > 0.0, dot / jnp.where(denom > 0.0, denom, 1.0), 0.0)
+    return 1.0 - cos
+
+
+def build_g_ref(
+    x: jnp.ndarray, y: jnp.ndarray, dnear: jnp.ndarray, w: jnp.ndarray
+) -> jnp.ndarray:
+    """Fused BUILD-step arm pull (Eq. 9 of the paper), l2 metric.
+
+    ``g_x(x_j) = (d(x, x_j) - dnear_j) ^ 0``; returns the weighted mean over
+    the reference batch for each target: ``out[i] = sum_j w_j g / sum_j w_j``.
+    ``w`` masks padded reference rows.
+    """
+    d = l2_ref(x, y)
+    g = jnp.minimum(d - dnear[None, :], 0.0)
+    return (g * w[None, :]).sum(axis=1) / jnp.maximum(w.sum(), 1.0)
+
+
+REF = {"l2": l2_ref, "l1": l1_ref, "cosine": cosine_ref}

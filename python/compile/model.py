@@ -1,0 +1,94 @@
+"""Layer-2 JAX compute graphs for BanditPAM's arm pulls.
+
+BanditPAM's only heavy computation is evaluating distance blocks between
+live arms (targets) and sampled reference batches.  This module wraps the
+Layer-1 Pallas kernels (``kernels.pairwise``) into the jittable functions
+that ``aot.py`` lowers to HLO text for the Rust runtime:
+
+* ``pairwise(metric)``        -> ``f(x[T,D], y[R,D]) -> d[T,R]``
+* ``build_g_mean``            -> the fused BUILD-step arm pull (Eq. 9):
+  ``f(x[T,D], y[R,D], dnear[R], w[R]) -> g_mean[T]`` where
+  ``g = min(d(x, x_j) - dnear_j, 0)`` and ``w`` masks padded rows.
+* ``swap_delta``              -> the fused FastPAM1 SWAP pull (Eq. 12
+  rearranged): given the candidate-x distance row and the cached
+  ``d1``/``d2``/membership mask, the per-(m, x) loss delta.
+
+The min/mean epilogues are plain jnp around the Pallas call -- XLA fuses
+them into the kernel's consumer, so the whole arm pull is one executable.
+
+Shapes are fixed at lowering time (AOT); the Rust ``XlaBackend`` pads
+requests up to the artifact shape and masks the padding out.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pairwise as pk
+
+
+def pairwise(metric: str):
+    """Return the jittable pairwise-distance graph for ``metric``."""
+    kernel = pk.get_kernel(metric)
+
+    def fn(x, y):
+        return (kernel(x, y),)
+
+    fn.__name__ = f"pairwise_{metric}"
+    return fn
+
+
+def build_g_mean(x, y, dnear, w):
+    """Fused BUILD arm pull: weighted mean of ``min(d - dnear, 0)`` per target.
+
+    ``x: [T, D]`` live BUILD arms, ``y: [R, D]`` reference batch,
+    ``dnear: [R]`` cached distance from each reference to its nearest
+    current medoid (+inf when no medoids yet), ``w: [R]`` 0/1 padding mask.
+    Returns ``([T],)``.
+    """
+    d = pk.l2_pairwise(x, y)
+    g = jnp.minimum(d - dnear[None, :], 0.0)
+    denom = jnp.maximum(jnp.sum(w), 1.0)
+    return ((g * w[None, :]).sum(axis=1) / denom,)
+
+
+def swap_delta(x, y, d1, d2, near_is_m, w):
+    """Fused SWAP arm pull with the FastPAM1 decomposition (Eq. 12).
+
+    For a block of candidate points ``x: [T, D]`` and reference batch
+    ``y: [R, D]`` with cached ``d1, d2: [R]`` (nearest / second-nearest
+    medoid distances) and ``near_is_m: [K, R]`` (1 when reference j's nearest
+    medoid is medoid m), returns the weighted-mean loss delta for every
+    (medoid m, candidate x) pair: ``([K, T],)``.
+
+        g_{m,x}(j) = -d1_j + [j not in C_m] min(d1_j, d(x, j))
+                           + [j     in C_m] min(d2_j, d(x, j))
+    """
+    d = pk.l2_pairwise(x, y)  # [T, R]
+    min1 = jnp.minimum(d, d1[None, :])  # [T, R]
+    min2 = jnp.minimum(d, d2[None, :])  # [T, R]
+    # delta[k, t, j] = -d1_j + (1 - near_is_m[k, j]) * min1[t, j]
+    #                        + near_is_m[k, j] * min2[t, j]
+    contrib = min1[None, :, :] + near_is_m[:, None, :] * (min2 - min1)[None, :, :]
+    g = contrib - d1[None, None, :]
+    denom = jnp.maximum(jnp.sum(w), 1.0)
+    return ((g * w[None, None, :]).sum(axis=-1) / denom,)
+
+
+def example_shapes(t: int, r: int, d: int, k: int = 8):
+    """ShapeDtypeStructs for lowering each graph at a given tile config."""
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    return {
+        "pairwise": (s((t, d), f32), s((r, d), f32)),
+        "build_g": (s((t, d), f32), s((r, d), f32), s((r,), f32), s((r,), f32)),
+        "swap_delta": (
+            s((t, d), f32),
+            s((r, d), f32),
+            s((r,), f32),
+            s((r,), f32),
+            s((k, r), f32),
+            s((r,), f32),
+        ),
+    }

@@ -1,0 +1,60 @@
+"""AOT pipeline tests: manifest schema, idempotence, artifact contents."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+def test_configs_have_unique_names():
+    names = [c["name"] for c in aot.CONFIGS]
+    assert len(names) == len(set(names))
+
+
+def test_configs_schema():
+    for cfg in aot.CONFIGS:
+        assert cfg["kind"] in ("pairwise", "build_g", "swap_delta")
+        assert cfg["metric"] in ("l2", "l1", "cosine")
+        assert cfg["t"] > 0 and cfg["r"] > 0 and cfg["d"] > 0
+        if cfg["kind"] == "swap_delta":
+            assert cfg.get("k", 0) > 0
+
+
+def test_lower_single_artifact(tmp_path):
+    """Lower the cheapest config end-to-end and validate output files."""
+    name = "pairwise_l2_64x128x16"
+    rc = aot.main(["--out", str(tmp_path), "--only", name, "--force"])
+    assert rc == 0
+    hlo = tmp_path / f"{name}.hlo.txt"
+    assert hlo.exists()
+    text = hlo.read_text()
+    assert text.startswith("HloModule")
+    assert "f32[64,128]" in text  # the [T, R] output
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    entry = manifest["artifacts"][0]
+    assert entry["name"] == name
+    assert entry["file"] == f"{name}.hlo.txt"
+    assert (entry["t"], entry["r"], entry["d"]) == (64, 128, 16)
+
+
+def test_idempotence(tmp_path):
+    """Second run without --force is a no-op when the manifest is fresh."""
+    name = "pairwise_l2_64x128x16"
+    assert aot.main(["--out", str(tmp_path), "--only", name, "--force"]) == 0
+    manifest = tmp_path / "manifest.json"
+    # Make the manifest strictly newer than all sources.
+    future = aot.newest_source_mtime() + 10
+    os.utime(manifest, (future, future))
+    before = manifest.stat().st_mtime
+    assert aot.main(["--out", str(tmp_path), "--only", name]) == 0
+    assert manifest.stat().st_mtime == before
+
+
+def test_unknown_kind_raises():
+    with pytest.raises(ValueError, match="unknown artifact kind"):
+        aot.lower_config(
+            {"kind": "nope", "metric": "l2", "t": 4, "r": 4, "d": 4, "name": "x"}
+        )

@@ -1,0 +1,153 @@
+"""Pallas kernels vs pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes (including non-default tile divisors) and data
+(including adversarial values: zeros, duplicates, large magnitudes); every
+kernel output must match ``ref.py`` to float32 tolerance.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pairwise as pk
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def rand(t, d, scale=1.0, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else RNG
+    return (rng.standard_normal((t, d)) * scale).astype(np.float32)
+
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+METRICS = ["l2", "l1", "cosine"]
+
+
+# ---------------------------------------------------------------------------
+# Fixed-shape smoke tests (fast, deterministic)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_kernel_matches_ref_default_tiles(metric):
+    x, y = rand(64, 128, seed=1), rand(128, 128, seed=2)
+    got = np.asarray(pk.get_kernel(metric)(x, y))
+    want = np.asarray(ref.REF[metric](x, y))
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_kernel_single_tile(metric):
+    """Shapes no larger than one tile exercise the min(tb, t) clamping."""
+    x, y = rand(3, 5, seed=3), rand(7, 5, seed=4)
+    got = np.asarray(pk.get_kernel(metric)(x, y))
+    want = np.asarray(ref.REF[metric](x, y))
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_kernel_multi_d_tiles(metric):
+    """D strictly larger than db exercises the accumulation loop."""
+    x, y = rand(8, 96, seed=5), rand(16, 96, seed=6)
+    got = np.asarray(pk.get_kernel(metric)(x, y, tb=4, rb=8, db=16))
+    want = np.asarray(ref.REF[metric](x, y))
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_l2_self_distance_zero():
+    x = rand(16, 32, seed=7)
+    d = np.asarray(pk.l2_pairwise(x, x, tb=8, rb=8, db=8))
+    # The norm-trick (|x|^2+|y|^2-2xy) cancels catastrophically at d ~ 0:
+    # fp32 error in d^2 is ~eps*|x|^2, so |d| <~ sqrt(eps)*|x| ~ 1e-2 here.
+    assert np.allclose(np.diag(d), 0.0, atol=2e-2)
+
+
+def test_l2_symmetry():
+    x, y = rand(8, 16, seed=8), rand(8, 16, seed=9)
+    dxy = np.asarray(pk.l2_pairwise(x, y, tb=4, rb=4, db=4))
+    dyx = np.asarray(pk.l2_pairwise(y, x, tb=4, rb=4, db=4))
+    np.testing.assert_allclose(dxy, dyx.T, **TOL)
+
+
+def test_cosine_zero_vector_distance_is_one():
+    x = np.zeros((4, 8), dtype=np.float32)
+    y = rand(4, 8, seed=10)
+    d = np.asarray(pk.cosine_pairwise(x, y, tb=4, rb=4, db=4))
+    np.testing.assert_allclose(d, np.ones_like(d), **TOL)
+
+
+def test_l1_nonnegative_and_triangle():
+    x = rand(6, 12, seed=11)
+    d = np.asarray(pk.l1_pairwise(x, x, tb=3, rb=3, db=4))
+    assert (d >= -1e-4).all()
+    n = d.shape[0]
+    for i in range(n):
+        for j in range(n):
+            for k in range(n):
+                assert d[i, j] <= d[i, k] + d[k, j] + 1e-3
+
+
+def test_indivisible_shape_autofits_tiles():
+    """Tile sizes auto-shrink to the largest divisor <= the preference, so
+    awkward shapes (e.g. d=784 with db=128) still work and stay correct."""
+    x, y = rand(10, 7, seed=20), rand(10, 7, seed=21)
+    got = np.asarray(pk.l2_pairwise(x, y, tb=4, rb=4, db=4))
+    want = np.asarray(ref.l2_ref(x, y))
+    np.testing.assert_allclose(got, want, **TOL)
+    assert pk.fit_tile(784, 128) == 112  # largest divisor of 784 <= 128
+    assert pk.fit_tile(10, 4) == 2
+    assert pk.fit_tile(7, 4) == 1
+
+
+def test_unknown_metric_raises():
+    with pytest.raises(ValueError, match="unknown metric"):
+        pk.get_kernel("chebyshev")
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: random shapes (built from tile multiples) and data
+# ---------------------------------------------------------------------------
+
+tile = st.sampled_from([1, 2, 4])
+mult = st.integers(min_value=1, max_value=3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    metric=st.sampled_from(METRICS),
+    tb=tile, rb=tile, db=st.sampled_from([2, 4]),
+    mt=mult, mr=mult, md=mult,
+    scale=st.sampled_from([1e-2, 1.0, 1e2]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_ref_random(metric, tb, rb, db, mt, mr, md, scale, seed):
+    t, r, d = tb * mt, rb * mr, db * md
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((t, d)) * scale).astype(np.float32)
+    y = (rng.standard_normal((r, d)) * scale).astype(np.float32)
+    got = np.asarray(pk.get_kernel(metric)(x, y, tb=tb, rb=rb, db=db))
+    want = np.asarray(ref.REF[metric](x, y))
+    # cosine of tiny vectors is ill-conditioned; loosen for the small scale
+    tol = dict(rtol=5e-3, atol=5e-3) if scale < 1 and metric == "cosine" else TOL
+    np.testing.assert_allclose(got, want, **tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    dup=st.booleans(),
+)
+def test_l2_duplicate_points(seed, dup):
+    """Duplicated rows must yield exactly-matching distance rows."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((8, 16)).astype(np.float32)
+    if dup:
+        x[1] = x[0]
+    y = rng.standard_normal((8, 16)).astype(np.float32)
+    d = np.asarray(pk.l2_pairwise(x, y, tb=4, rb=4, db=4))
+    if dup:
+        np.testing.assert_allclose(d[0], d[1], rtol=1e-6, atol=1e-6)
+    want = np.asarray(ref.l2_ref(x, y))
+    np.testing.assert_allclose(d, want, **TOL)

@@ -1,0 +1,12 @@
+//! Bench target for paper experiment `headline` (see DESIGN.md experiment
+//! index). Scale via BANDITPAM_BENCH_SCALE=smoke|quick|paper (default
+//! quick). Prints the same rows the paper's figure plots.
+
+fn main() {
+    let scale = banditpam::bench::Scale::from_env();
+    let t0 = std::time::Instant::now();
+    for table in banditpam::experiments::run("headline", scale, 42).expect("experiment failed") {
+        table.print();
+    }
+    println!("\n[headline] total {:.1}s at {scale:?} scale", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,94 @@
+//! Micro-benchmarks of the hot paths (mini-criterion: warmup + repeats,
+//! mean ± 95% CI). These are the numbers the §Perf optimization loop in
+//! EXPERIMENTS.md tracks.
+
+use banditpam::bench::bench_fn;
+use banditpam::coordinator::state::MedoidState;
+use banditpam::data::synthetic;
+use banditpam::distance::{dense, tree_edit, Metric};
+use banditpam::runtime::backend::{DistanceBackend, NativeBackend};
+use banditpam::util::rng::Rng;
+
+fn main() {
+    let scale = banditpam::bench::Scale::from_env();
+    let iters = scale.pick(3, 20, 50);
+    println!("== micro benches ({scale:?}, {iters} iters) ==");
+
+    // --- dense distance kernels -------------------------------------------
+    let mut rng = Rng::seed_from(1);
+    let a: Vec<f32> = (0..784).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..784).map(|_| rng.normal() as f32).collect();
+    for (name, f) in [
+        ("dense::l2 d=784", dense::l2 as fn(&[f32], &[f32]) -> f64),
+        ("dense::l1 d=784", dense::l1),
+        ("dense::cosine d=784", dense::cosine),
+    ] {
+        let r = bench_fn(name, 100, 10_000.min(iters * 500), || f(&a, &b));
+        println!("{}", r.line());
+    }
+
+    // --- distance block (the batched arm pull shape) ----------------------
+    let ds = synthetic::mnist_like(&mut Rng::seed_from(2), 600);
+    let targets: Vec<usize> = (0..64).collect();
+    let refs: Vec<usize> = (64..192).collect();
+    let mut out = vec![0.0f64; targets.len() * refs.len()];
+    for threads in [1usize, 4] {
+        let backend = NativeBackend::new(&ds.points, Metric::L2).with_threads(threads);
+        let r = bench_fn(
+            &format!("native block 64x128 d=784 threads={threads}"),
+            2,
+            iters,
+            || backend.block(&targets, &refs, &mut out),
+        );
+        println!("{}", r.line());
+    }
+
+    // --- tree edit distance ------------------------------------------------
+    let trees = synthetic::hoc4_like(&mut Rng::seed_from(3), 50);
+    if let banditpam::data::Points::Trees(ts) = &trees.points {
+        let r = bench_fn("tree_edit::ted (hoc4 pair)", 10, iters * 50, || {
+            tree_edit::ted(&ts[0], &ts[1])
+        });
+        println!("{}", r.line());
+    }
+
+    // --- one full BUILD step (Algorithm 1 call) ----------------------------
+    let ds = synthetic::mnist_like(&mut Rng::seed_from(4), scale.pick(200, 1000, 2000));
+    let r = bench_fn("BUILD step via Algorithm 1", 1, iters.min(10), || {
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let mut state = MedoidState::empty(ds.len());
+        banditpam::coordinator::build::build_step(
+            &backend,
+            &mut state,
+            &banditpam::coordinator::config::BanditPamConfig::default(),
+            &mut Rng::seed_from(5),
+        )
+    });
+    println!("{}", r.line());
+
+    // --- XLA vs native block (needs artifacts) ------------------------------
+    let dir = banditpam::runtime::manifest::Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        match banditpam::runtime::executable::Client::cpu() {
+            Ok(client) => {
+                let xla = banditpam::runtime::xla_backend::XlaBackend::new(
+                    &client,
+                    &dir,
+                    &ds.points,
+                    Metric::L2,
+                )
+                .expect("xla backend");
+                let targets: Vec<usize> = (0..64).collect();
+                let refs: Vec<usize> = (64..192).collect();
+                let mut out = vec![0.0f64; targets.len() * refs.len()];
+                let r = bench_fn("xla block 64x128 d=784 (interpret HLO)", 1, iters.min(10), || {
+                    xla.block(&targets, &refs, &mut out)
+                });
+                println!("{}", r.line());
+            }
+            Err(e) => println!("xla block: skipped ({e})"),
+        }
+    } else {
+        println!("xla block: skipped (no artifacts; run `make artifacts`)");
+    }
+}

@@ -1,0 +1,132 @@
+//! CLARA (Kaufman & Rousseeuw [20]): PAM on random subsamples.
+//!
+//! Draws `samples` subsets of size `40 + 2k` (the classical default), runs
+//! exact PAM on each, evaluates each candidate medoid set on the *full*
+//! dataset, and keeps the best. Fast but sacrifices quality — in the
+//! paper's taxonomy it belongs to the "trade quality for runtime" family
+//! CLARANS also lives in.
+
+use crate::algorithms::matrix_cache::{exact_build, FullMatrix, MatState};
+use crate::algorithms::pam::swap_until_converged;
+use crate::algorithms::{check_fit_args, Clustering, FitStats, KMedoids};
+use crate::runtime::backend::DistanceBackend;
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+
+/// CLARA with the classical sampling defaults.
+#[derive(Debug)]
+pub struct Clara {
+    /// Number of subsamples (classic: 5).
+    pub samples: usize,
+    /// Sample size override; 0 = classic `40 + 2k`.
+    pub sample_size: usize,
+}
+
+impl Default for Clara {
+    fn default() -> Self {
+        Clara { samples: 5, sample_size: 0 }
+    }
+}
+
+impl Clara {
+    pub fn new() -> Clara {
+        Clara::default()
+    }
+}
+
+impl KMedoids for Clara {
+    fn name(&self) -> &'static str {
+        "clara"
+    }
+
+    fn fit(
+        &mut self,
+        backend: &dyn DistanceBackend,
+        k: usize,
+        rng: &mut Rng,
+    ) -> anyhow::Result<Clustering> {
+        check_fit_args(backend, k)?;
+        let timer = Timer::start();
+        let start = backend.counter().get();
+        let n = backend.n();
+        let ssize = if self.sample_size == 0 { (40 + 2 * k).min(n) } else { self.sample_size.min(n) };
+        anyhow::ensure!(ssize > k, "sample size {ssize} must exceed k {k}");
+
+        let mut best: Option<(f64, Vec<usize>)> = None;
+        for _ in 0..self.samples {
+            let subset = rng.sample_indices(n, ssize);
+            let m = FullMatrix::compute_subset(backend, &subset);
+            let mut st = MatState::empty(ssize);
+            exact_build(&m, k, &mut st);
+            swap_until_converged(&m, &mut st, 100);
+            let medoids: Vec<usize> = st.medoids.iter().map(|&i| subset[i]).collect();
+            // Evaluate on the full dataset (n*k evaluations).
+            let mut loss = 0.0;
+            let refs: Vec<usize> = (0..n).collect();
+            let mut rows = vec![0.0f64; k * n];
+            backend.block(&medoids, &refs, &mut rows);
+            for j in 0..n {
+                let mut m1 = f64::INFINITY;
+                for r in 0..k {
+                    m1 = m1.min(rows[r * n + j]);
+                }
+                loss += m1;
+            }
+            if best.as_ref().map(|(l, _)| loss < *l).unwrap_or(true) {
+                best = Some((loss, medoids));
+            }
+        }
+
+        let (_, medoids) = best.unwrap();
+        let evals = backend.counter().get() - start;
+        let stats = FitStats {
+            build_evals: evals,
+            swap_iters: self.samples,
+            iters_plus_one: self.samples + 1,
+            wall_secs: timer.secs(),
+            ..Default::default()
+        };
+        Ok(Clustering::finalize(backend, medoids, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::pam::Pam;
+    use crate::data::synthetic;
+    use crate::distance::Metric;
+    use crate::runtime::backend::NativeBackend;
+
+    #[test]
+    fn clara_returns_valid_clustering() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(50), 200, 4, 3, 4.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let fit = Clara::new().fit(&backend, 3, &mut Rng::seed_from(1)).unwrap();
+        assert_eq!(fit.medoids.len(), 3);
+        let set: std::collections::HashSet<_> = fit.medoids.iter().collect();
+        assert_eq!(set.len(), 3);
+    }
+
+    #[test]
+    fn clara_uses_far_fewer_evals_than_pam() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(51), 300, 4, 3, 4.0);
+        let b1 = NativeBackend::new(&ds.points, Metric::L2);
+        let pam = Pam::new().fit(&b1, 3, &mut Rng::seed_from(0)).unwrap();
+        let b2 = NativeBackend::new(&ds.points, Metric::L2);
+        let clara = Clara::new().fit(&b2, 3, &mut Rng::seed_from(1)).unwrap();
+        assert!(clara.stats.distance_evals < pam.stats.distance_evals / 4);
+        // quality is worse-or-equal but not catastrophic on easy data
+        assert!(clara.loss >= pam.loss * 0.999);
+        assert!(clara.loss <= pam.loss * 1.5, "{} vs {}", clara.loss, pam.loss);
+    }
+
+    #[test]
+    fn sample_size_larger_than_n_is_clamped() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(52), 30, 3, 2, 3.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let mut clara = Clara { samples: 2, sample_size: 500 };
+        let fit = clara.fit(&backend, 2, &mut Rng::seed_from(2)).unwrap();
+        assert_eq!(fit.medoids.len(), 2);
+    }
+}

@@ -1,0 +1,173 @@
+//! CLARANS (Ng & Han [36]): randomized search on the swap graph.
+//!
+//! Treats medoid sets as nodes of a graph whose edges are single swaps.
+//! From a random start it examines up to `max_neighbor` random neighbours,
+//! moving greedily on any improvement; after `max_neighbor` consecutive
+//! failures the node is declared a local optimum. The process restarts
+//! `num_local` times and the best local optimum wins. Quality is
+//! distinctly below PAM (paper Figure 1a) but each neighbour check is only
+//! n evaluations.
+
+use crate::algorithms::{check_fit_args, Clustering, FitStats, KMedoids};
+use crate::coordinator::state::MedoidState;
+use crate::runtime::backend::DistanceBackend;
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+
+/// CLARANS with the classical parameter defaults.
+#[derive(Debug)]
+pub struct Clarans {
+    /// Restarts (classic: 2).
+    pub num_local: usize,
+    /// Neighbour cap; 0 = classic `max(250, 1.25% of k(n-k))`.
+    pub max_neighbor: usize,
+}
+
+impl Default for Clarans {
+    fn default() -> Self {
+        Clarans { num_local: 2, max_neighbor: 0 }
+    }
+}
+
+impl Clarans {
+    pub fn new() -> Clarans {
+        Clarans::default()
+    }
+
+    fn neighbor_budget(&self, n: usize, k: usize) -> usize {
+        if self.max_neighbor > 0 {
+            self.max_neighbor
+        } else {
+            (((k * (n - k)) as f64 * 0.0125) as usize).max(250)
+        }
+    }
+}
+
+/// Exact loss delta of swapping `state.medoids[m_pos]` for `x`
+/// (n distance evaluations, using the d1/d2 cache).
+fn swap_delta(
+    backend: &dyn DistanceBackend,
+    state: &MedoidState,
+    m_pos: usize,
+    x: usize,
+    row: &mut Vec<f64>,
+) -> f64 {
+    let n = backend.n();
+    let refs: Vec<usize> = (0..n).collect();
+    row.resize(n, 0.0);
+    backend.block(&[x], &refs, row);
+    let mut acc = 0.0;
+    for j in 0..n {
+        let d = row[j];
+        let base = if state.a1[j] == m_pos {
+            state.d2[j].min(d)
+        } else {
+            state.d1[j].min(d)
+        };
+        acc += base - state.d1[j];
+    }
+    acc
+}
+
+impl KMedoids for Clarans {
+    fn name(&self) -> &'static str {
+        "clarans"
+    }
+
+    fn fit(
+        &mut self,
+        backend: &dyn DistanceBackend,
+        k: usize,
+        rng: &mut Rng,
+    ) -> anyhow::Result<Clustering> {
+        check_fit_args(backend, k)?;
+        let timer = Timer::start();
+        let start = backend.counter().get();
+        let n = backend.n();
+        let budget = self.neighbor_budget(n, k);
+
+        let mut best: Option<(f64, Vec<usize>)> = None;
+        let mut row = Vec::new();
+        let mut moves_total = 0usize;
+        for _ in 0..self.num_local {
+            let mut state = MedoidState::empty(n);
+            for m in rng.sample_indices(n, k) {
+                state.add_medoid(backend, m);
+            }
+            let mut failures = 0;
+            while failures < budget {
+                let m_pos = rng.below(k);
+                let x = loop {
+                    let c = rng.below(n);
+                    if !state.medoids.contains(&c) {
+                        break c;
+                    }
+                };
+                let delta = swap_delta(backend, &state, m_pos, x, &mut row);
+                if delta < -1e-12 {
+                    state.apply_swap(backend, m_pos, x);
+                    moves_total += 1;
+                    failures = 0;
+                } else {
+                    failures += 1;
+                }
+            }
+            let loss = state.loss();
+            if best.as_ref().map(|(l, _)| loss < *l).unwrap_or(true) {
+                best = Some((loss, state.medoids.clone()));
+            }
+        }
+
+        let (_, medoids) = best.unwrap();
+        let stats = FitStats {
+            swap_evals: backend.counter().get() - start,
+            swap_iters: self.num_local,
+            swaps_applied: moves_total,
+            iters_plus_one: self.num_local + 1,
+            wall_secs: timer.secs(),
+            ..Default::default()
+        };
+        Ok(Clustering::finalize(backend, medoids, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::pam::Pam;
+    use crate::data::synthetic;
+    use crate::distance::Metric;
+    use crate::runtime::backend::NativeBackend;
+
+    #[test]
+    fn clarans_valid_and_distinct_medoids() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(60), 100, 4, 3, 4.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let mut algo = Clarans { num_local: 2, max_neighbor: 100 };
+        let fit = algo.fit(&backend, 3, &mut Rng::seed_from(1)).unwrap();
+        let set: std::collections::HashSet<_> = fit.medoids.iter().collect();
+        assert_eq!(set.len(), 3);
+    }
+
+    #[test]
+    fn clarans_quality_within_reason_on_easy_data() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(61), 120, 4, 3, 8.0);
+        let b1 = NativeBackend::new(&ds.points, Metric::L2);
+        let pam = Pam::new().fit(&b1, 3, &mut Rng::seed_from(0)).unwrap();
+        let b2 = NativeBackend::new(&ds.points, Metric::L2);
+        let mut algo = Clarans { num_local: 2, max_neighbor: 200 };
+        let cl = algo.fit(&b2, 3, &mut Rng::seed_from(1)).unwrap();
+        assert!(cl.loss <= pam.loss * 2.0, "{} vs {}", cl.loss, pam.loss);
+        assert!(cl.loss >= pam.loss - 1e-9);
+    }
+
+    #[test]
+    fn seeded_runs_are_reproducible() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(62), 80, 3, 2, 3.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let mut algo = Clarans { num_local: 1, max_neighbor: 60 };
+        let a = algo.fit(&backend, 2, &mut Rng::seed_from(7)).unwrap();
+        let b = algo.fit(&backend, 2, &mut Rng::seed_from(7)).unwrap();
+        assert_eq!(a.medoids, b.medoids);
+    }
+}

@@ -1,0 +1,162 @@
+//! FastPAM1 (Schubert & Rousseeuw [42]): PAM with the factor-k redundancy
+//! removed from each SWAP iteration — **guaranteed to return the same
+//! result as PAM**.
+//!
+//! For a candidate x, the loss deltas of all k possible swaps share the
+//! distance row d(x, ·); Eq. 12 computes them in one pass using the cached
+//! d1/d2/assignment arrays, so a SWAP iteration costs n² summands instead
+//! of PAM's k·n². The chosen swap (and therefore the whole trajectory) is
+//! identical to PAM's.
+
+use crate::algorithms::matrix_cache::{exact_build, FullMatrix, MatState};
+use crate::algorithms::{check_fit_args, Clustering, FitStats, KMedoids};
+use crate::runtime::backend::DistanceBackend;
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+
+/// FastPAM1: exact-PAM trajectory, O(k) faster SWAP iterations.
+#[derive(Debug, Default)]
+pub struct FastPam1 {
+    pub max_swap_iters: usize,
+}
+
+impl FastPam1 {
+    pub fn new() -> FastPam1 {
+        FastPam1 { max_swap_iters: 100 }
+    }
+}
+
+/// One FastPAM1 sweep: best (x, m_pos) over all candidates, computing all
+/// k deltas per candidate in a single pass over its distance row (Eq. 12).
+pub fn best_swap_eq12(
+    m: &FullMatrix,
+    state: &MatState,
+    deltas: &mut Vec<f64>,
+) -> (f64, usize, usize) {
+    let n = m.n();
+    let k = state.medoids.len();
+    let mut best = (f64::INFINITY, usize::MAX, usize::MAX); // (delta, x, m_pos)
+    for x in 0..n {
+        if state.medoids.contains(&x) {
+            continue;
+        }
+        deltas.clear();
+        deltas.resize(k, 0.0);
+        let row = m.row(x);
+        // Eq. 12: delta_m = sum_j -d1_j + [j notin C_m] min(d1_j, d) +
+        //                                [j    in C_m] min(d2_j, d)
+        // computed as: shared = sum_j (min(d1_j, d) - d1_j);
+        // delta_m += sum_{j in C_m} (min(d2_j, d) - min(d1_j, d)).
+        let mut shared = 0.0;
+        for j in 0..n {
+            let d = row[j];
+            let m1 = state.d1[j].min(d);
+            shared += m1 - state.d1[j];
+            let a = state.a1[j];
+            if a < k {
+                deltas[a] += state.d2[j].min(d) - m1;
+            }
+        }
+        for (m_pos, extra) in deltas.iter().enumerate() {
+            let delta = shared + extra;
+            if delta < best.0 - 1e-15 {
+                best = (delta, x, m_pos);
+            }
+        }
+    }
+    best
+}
+
+impl KMedoids for FastPam1 {
+    fn name(&self) -> &'static str {
+        "fastpam1"
+    }
+
+    fn fit(
+        &mut self,
+        backend: &dyn DistanceBackend,
+        k: usize,
+        _rng: &mut Rng,
+    ) -> anyhow::Result<Clustering> {
+        check_fit_args(backend, k)?;
+        let timer = Timer::start();
+        let start = backend.counter().get();
+        let m = FullMatrix::compute(backend);
+        let mut state = MatState::empty(backend.n());
+        exact_build(&m, k, &mut state);
+        let build_evals = backend.counter().get() - start;
+
+        let mut iters = 0;
+        let mut applied = 0;
+        let mut deltas = Vec::new();
+        while iters < self.max_swap_iters {
+            iters += 1;
+            let (delta, x, m_pos) = best_swap_eq12(&m, &state, &mut deltas);
+            if !(delta < -1e-12) {
+                break;
+            }
+            state.medoids[m_pos] = x;
+            state.rebuild(&m);
+            applied += 1;
+        }
+        let stats = FitStats {
+            build_evals,
+            swap_evals: backend.counter().get() - start - build_evals,
+            swap_iters: iters,
+            swaps_applied: applied,
+            iters_plus_one: iters + 1,
+            wall_secs: timer.secs(),
+            ..Default::default()
+        };
+        Ok(Clustering::finalize(backend, state.medoids, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::pam::Pam;
+    use crate::data::synthetic;
+    use crate::distance::Metric;
+    use crate::runtime::backend::NativeBackend;
+
+    #[test]
+    fn fastpam1_identical_to_pam() {
+        // The defining property: same final medoids as PAM, always.
+        for seed in 0..6 {
+            let ds = synthetic::gmm(&mut Rng::seed_from(300 + seed), 50, 4, 3, 2.0);
+            let backend = NativeBackend::new(&ds.points, Metric::L2);
+            let pam = Pam::new().fit(&backend, 3, &mut Rng::seed_from(0)).unwrap();
+            let fp1 = FastPam1::new().fit(&backend, 3, &mut Rng::seed_from(0)).unwrap();
+            assert_eq!(pam.medoids, fp1.medoids, "seed {seed}");
+            assert!((pam.loss - fp1.loss).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fastpam1_also_identical_on_l1_and_cosine() {
+        for metric in [Metric::L1, Metric::Cosine] {
+            let ds = synthetic::gmm(&mut Rng::seed_from(42), 40, 6, 2, 2.0);
+            let backend = NativeBackend::new(&ds.points, metric);
+            let pam = Pam::new().fit(&backend, 2, &mut Rng::seed_from(0)).unwrap();
+            let fp1 = FastPam1::new().fit(&backend, 2, &mut Rng::seed_from(0)).unwrap();
+            assert_eq!(pam.medoids, fp1.medoids, "{metric}");
+        }
+    }
+
+    #[test]
+    fn eq12_matches_direct_delta() {
+        use crate::algorithms::matrix_cache::swap_delta;
+        let ds = synthetic::gmm(&mut Rng::seed_from(43), 30, 4, 2, 2.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let m = FullMatrix::compute(&backend);
+        let mut st = MatState::empty(30);
+        exact_build(&m, 2, &mut st);
+        let mut deltas = Vec::new();
+        let (best_delta, x, m_pos) = best_swap_eq12(&m, &st, &mut deltas);
+        if x != usize::MAX {
+            let direct = swap_delta(&m, &st, m_pos, x);
+            assert!((best_delta - direct).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! Meddit (Bagaria et al. [4]): the 1-medoid bandit BanditPAM generalizes.
+//!
+//! Finds the single medoid of a point set — `argmin_x mean_j d(x, x_j)` —
+//! as a best-arm identification problem, exactly the first BUILD step of
+//! BanditPAM. Included both as the historical baseline and as a
+//! correctness cross-check (for k = 1, BanditPAM's BUILD must agree).
+
+use crate::algorithms::{check_fit_args, Clustering, FitStats, KMedoids};
+use crate::bandits::adaptive::{adaptive_search, AdaptiveConfig};
+use crate::coordinator::arms::BuildArms;
+use crate::coordinator::state::MedoidState;
+use crate::runtime::backend::DistanceBackend;
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+
+/// 1-medoid bandit solver.
+#[derive(Debug, Default)]
+pub struct Meddit {
+    /// Error probability per CI (default 1e-3 / n as in BanditPAM).
+    pub delta: Option<f64>,
+}
+
+impl Meddit {
+    pub fn new() -> Meddit {
+        Meddit::default()
+    }
+}
+
+impl KMedoids for Meddit {
+    fn name(&self) -> &'static str {
+        "meddit"
+    }
+
+    fn fit(
+        &mut self,
+        backend: &dyn DistanceBackend,
+        k: usize,
+        rng: &mut Rng,
+    ) -> anyhow::Result<Clustering> {
+        check_fit_args(backend, k)?;
+        anyhow::ensure!(k == 1, "meddit solves the 1-medoid problem (got k = {k})");
+        let timer = Timer::start();
+        let start = backend.counter().get();
+        let n = backend.n();
+        let state = MedoidState::empty(n);
+        let mut arms = BuildArms::new(backend, &state);
+        let cfg = AdaptiveConfig {
+            delta: self.delta.unwrap_or(1.0 / (1000.0 * n as f64)),
+            ..Default::default()
+        };
+        let outcome = adaptive_search(&mut arms, &cfg, rng);
+        let medoid = arms.candidates[outcome.best];
+        let stats = FitStats {
+            build_evals: backend.counter().get() - start,
+            iters_plus_one: 1,
+            wall_secs: timer.secs(),
+            ..Default::default()
+        };
+        Ok(Clustering::finalize(backend, vec![medoid], stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::distance::Metric;
+    use crate::runtime::backend::NativeBackend;
+
+    fn exact_medoid(backend: &dyn DistanceBackend) -> usize {
+        let n = backend.n();
+        (0..n)
+            .min_by(|&a, &b| {
+                let sa: f64 = (0..n).map(|j| backend.dist(a, j)).sum();
+                let sb: f64 = (0..n).map(|j| backend.dist(b, j)).sum();
+                sa.partial_cmp(&sb).unwrap()
+            })
+            .unwrap()
+    }
+
+    #[test]
+    fn meddit_finds_the_true_medoid() {
+        for seed in 0..5 {
+            let ds = synthetic::gmm(&mut Rng::seed_from(500 + seed), 80, 4, 1, 1.0);
+            let backend = NativeBackend::new(&ds.points, Metric::L2);
+            let want = exact_medoid(&backend);
+            let fit = Meddit::new().fit(&backend, 1, &mut Rng::seed_from(seed)).unwrap();
+            assert_eq!(fit.medoids, vec![want], "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn meddit_rejects_k_above_one() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(80), 20, 2, 1, 1.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        assert!(Meddit::new().fit(&backend, 2, &mut Rng::seed_from(0)).is_err());
+    }
+}

@@ -1,0 +1,152 @@
+//! k-medoids algorithms: BanditPAM's baselines and the shared interface.
+//!
+//! The paper's evaluation (Figure 1a) compares against: PAM [20] (the
+//! quality reference), FastPAM1 [42] (exact-PAM-equivalent, O(k) faster),
+//! FastPAM [42] (near-PAM quality, not exact), CLARA [20] and CLARANS [36]
+//! (sampling/randomized, lower quality) and Voronoi Iteration [40]
+//! (k-means-style alternation). [`meddit`] is the 1-medoid bandit of
+//! Bagaria et al. [4] that BanditPAM generalizes.
+
+pub mod clara;
+pub mod clarans;
+pub mod fastpam;
+pub mod fastpam1;
+pub mod matrix_cache;
+pub mod meddit;
+pub mod pam;
+pub mod voronoi;
+
+use crate::runtime::backend::{loss_and_assignments, DistanceBackend};
+use crate::util::rng::Rng;
+
+/// Bookkeeping common to every fit.
+#[derive(Debug, Clone, Default)]
+pub struct FitStats {
+    /// Total distance evaluations consumed by the algorithm itself
+    /// (excludes the final loss/assignment computation).
+    pub distance_evals: u64,
+    /// Evaluations spent in the BUILD / initialization phase.
+    pub build_evals: u64,
+    /// Evaluations spent in SWAP / refinement.
+    pub swap_evals: u64,
+    /// SWAP (or refinement) iterations executed.
+    pub swap_iters: usize,
+    /// Swaps actually applied.
+    pub swaps_applied: usize,
+    /// Wall-clock seconds for the whole fit.
+    pub wall_secs: f64,
+    /// Per-iteration normalizer the paper uses for Figures 1b/2/3:
+    /// swap iterations + 1 (the +1 folds in all k BUILD steps).
+    pub iters_plus_one: usize,
+}
+
+impl FitStats {
+    /// Distance evaluations per iteration (the paper's Fig 1b/2/3 y-axis).
+    pub fn evals_per_iter(&self) -> f64 {
+        self.distance_evals as f64 / self.iters_plus_one.max(1) as f64
+    }
+
+    /// Wall-clock per iteration (the paper's Fig 2/3 y-axis).
+    pub fn secs_per_iter(&self) -> f64 {
+        self.wall_secs / self.iters_plus_one.max(1) as f64
+    }
+}
+
+/// Result of a k-medoids fit.
+#[derive(Debug, Clone)]
+pub struct Clustering {
+    /// Medoid point indices, sorted ascending (so set equality is `==`).
+    pub medoids: Vec<usize>,
+    /// For each point, the index into `medoids` of its nearest medoid.
+    pub assignments: Vec<usize>,
+    /// Final loss (Eq. 1).
+    pub loss: f64,
+    pub stats: FitStats,
+}
+
+impl Clustering {
+    /// Assemble from an unsorted medoid set; computes loss + assignments
+    /// (not counted into `stats.distance_evals`).
+    pub fn finalize(
+        backend: &dyn DistanceBackend,
+        mut medoids: Vec<usize>,
+        mut stats: FitStats,
+    ) -> Clustering {
+        medoids.sort_unstable();
+        stats.distance_evals = stats.build_evals + stats.swap_evals;
+        let (loss, assignments) = loss_and_assignments(backend, &medoids);
+        Clustering { medoids, assignments, loss, stats }
+    }
+
+    /// Same medoid set as another clustering?
+    pub fn same_medoids(&self, other: &Clustering) -> bool {
+        self.medoids == other.medoids
+    }
+}
+
+/// Common interface for all k-medoids solvers in this crate.
+pub trait KMedoids {
+    /// Short display name ("pam", "banditpam", ...).
+    fn name(&self) -> &'static str;
+
+    /// Cluster the backend's point set into `k` medoids.
+    fn fit(
+        &mut self,
+        backend: &dyn DistanceBackend,
+        k: usize,
+        rng: &mut Rng,
+    ) -> anyhow::Result<Clustering>;
+}
+
+/// Validate common preconditions; shared by every implementation.
+pub(crate) fn check_fit_args(backend: &dyn DistanceBackend, k: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(k >= 1, "k must be >= 1 (got {k})");
+    anyhow::ensure!(
+        k < backend.n(),
+        "k = {k} must be smaller than the dataset size n = {}",
+        backend.n()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::distance::Metric;
+    use crate::runtime::backend::NativeBackend;
+
+    #[test]
+    fn finalize_sorts_and_assigns() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(1), 20, 3, 2, 3.0);
+        let b = NativeBackend::new(&ds.points, Metric::L2);
+        let c = Clustering::finalize(&b, vec![9, 2], FitStats::default());
+        assert_eq!(c.medoids, vec![2, 9]);
+        assert_eq!(c.assignments.len(), 20);
+        assert!(c.loss > 0.0);
+        assert_eq!(c.assignments[2], 0);
+        assert_eq!(c.assignments[9], 1);
+    }
+
+    #[test]
+    fn stats_per_iter_normalization() {
+        let stats = FitStats {
+            distance_evals: 1000,
+            swap_iters: 4,
+            iters_plus_one: 5,
+            wall_secs: 10.0,
+            ..Default::default()
+        };
+        assert!((stats.evals_per_iter() - 200.0).abs() < 1e-12);
+        assert!((stats.secs_per_iter() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn check_fit_args_bounds() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(2), 10, 2, 2, 1.0);
+        let b = NativeBackend::new(&ds.points, Metric::L2);
+        assert!(check_fit_args(&b, 0).is_err());
+        assert!(check_fit_args(&b, 10).is_err());
+        assert!(check_fit_args(&b, 3).is_ok());
+    }
+}

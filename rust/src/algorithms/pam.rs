@@ -1,0 +1,164 @@
+//! Partitioning Around Medoids (Kaufman & Rousseeuw [19, 20]) — the
+//! clustering-quality reference of the paper.
+//!
+//! BUILD: greedy exact assignment (Eq. 4), k passes.
+//! SWAP: exhaustive best-pair search over all k(n−k) swaps (Eq. 5),
+//! repeated until no swap improves the loss.
+//!
+//! Like the reference implementations the paper compares against, PAM here
+//! precomputes the full n² distance matrix (counted); each SWAP iteration
+//! then touches k·n² cached summands. The per-pair loop recomputes the
+//! delta for every medoid `m` separately — FastPAM1 (same trajectory)
+//! removes exactly that factor-k redundancy.
+
+use crate::algorithms::matrix_cache::{exact_build, swap_delta, FullMatrix, MatState};
+use crate::algorithms::{check_fit_args, Clustering, FitStats, KMedoids};
+use crate::runtime::backend::DistanceBackend;
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+
+/// Exact PAM.
+#[derive(Debug, Default)]
+pub struct Pam {
+    /// Cap on SWAP iterations (the paper's T; usize::MAX = until converged).
+    pub max_swap_iters: usize,
+}
+
+impl Pam {
+    pub fn new() -> Pam {
+        Pam { max_swap_iters: 100 }
+    }
+}
+
+/// Shared PAM/FastPAM1 swap loop. `per_medoid` selects the iteration
+/// order: PAM loops pairs (m, x) recomputing per m; FastPAM1 loops x once
+/// computing all m simultaneously. Both choose the identical best pair
+/// (ties broken toward the lexicographically smallest (x, m_pos)).
+pub(crate) fn swap_until_converged(
+    m: &FullMatrix,
+    state: &mut MatState,
+    max_iters: usize,
+) -> (usize, usize) {
+    let n = m.n();
+    let mut iters = 0;
+    let mut applied = 0;
+    while iters < max_iters {
+        iters += 1;
+        let mut best = (f64::NEG_INFINITY, usize::MAX, usize::MAX); // (-delta, x, m)
+        let mut found = false;
+        for x in 0..n {
+            if state.medoids.contains(&x) {
+                continue;
+            }
+            for m_pos in 0..state.medoids.len() {
+                let delta = swap_delta(m, state, m_pos, x);
+                if -delta > best.0 + 1e-15 {
+                    best = (-delta, x, m_pos);
+                    found = true;
+                }
+            }
+        }
+        if !found || best.0 <= 1e-12 {
+            break;
+        }
+        state.medoids[best.2] = best.1;
+        state.rebuild(m);
+        applied += 1;
+    }
+    (iters, applied)
+}
+
+impl KMedoids for Pam {
+    fn name(&self) -> &'static str {
+        "pam"
+    }
+
+    fn fit(
+        &mut self,
+        backend: &dyn DistanceBackend,
+        k: usize,
+        _rng: &mut Rng,
+    ) -> anyhow::Result<Clustering> {
+        check_fit_args(backend, k)?;
+        let timer = Timer::start();
+        let start = backend.counter().get();
+        let m = FullMatrix::compute(backend);
+        let mut state = MatState::empty(backend.n());
+        exact_build(&m, k, &mut state);
+        let build_evals = backend.counter().get() - start;
+        let (iters, applied) = swap_until_converged(&m, &mut state, self.max_swap_iters);
+        let stats = FitStats {
+            build_evals,
+            swap_evals: backend.counter().get() - start - build_evals,
+            swap_iters: iters,
+            swaps_applied: applied,
+            iters_plus_one: iters + 1,
+            wall_secs: timer.secs(),
+            ..Default::default()
+        };
+        Ok(Clustering::finalize(backend, state.medoids, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::distance::Metric;
+    use crate::runtime::backend::NativeBackend;
+
+    #[test]
+    fn pam_finds_obvious_clusters() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(20), 60, 4, 3, 10.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let fit = Pam::new().fit(&backend, 3, &mut Rng::seed_from(0)).unwrap();
+        assert_eq!(fit.medoids.len(), 3);
+        // with separation 10 the three medoids should come from 3 components
+        let labels = ds.labels.unwrap();
+        let medoid_labels: std::collections::HashSet<_> =
+            fit.medoids.iter().map(|&m| labels[m]).collect();
+        assert_eq!(medoid_labels.len(), 3);
+    }
+
+    #[test]
+    fn pam_loss_is_optimal_under_single_swaps() {
+        // After convergence no single swap can improve (local optimality).
+        let ds = synthetic::gmm(&mut Rng::seed_from(21), 40, 3, 2, 2.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let fit = Pam::new().fit(&backend, 2, &mut Rng::seed_from(0)).unwrap();
+        let m = FullMatrix::compute(&backend);
+        let mut st = MatState::empty(40);
+        for &med in &fit.medoids {
+            st.add_medoid(&m, med);
+        }
+        for x in 0..40 {
+            if fit.medoids.contains(&x) {
+                continue;
+            }
+            for pos in 0..2 {
+                assert!(
+                    swap_delta(&m, &st, pos, x) >= -1e-9,
+                    "improving swap exists: pos {pos} x {x}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_across_rng() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(22), 30, 3, 2, 3.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let a = Pam::new().fit(&backend, 2, &mut Rng::seed_from(1)).unwrap();
+        let b = Pam::new().fit(&backend, 2, &mut Rng::seed_from(999)).unwrap();
+        assert_eq!(a.medoids, b.medoids);
+        assert_eq!(a.loss, b.loss);
+    }
+
+    #[test]
+    fn build_evals_are_n_squared() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(23), 25, 3, 2, 3.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let fit = Pam::new().fit(&backend, 2, &mut Rng::seed_from(0)).unwrap();
+        assert_eq!(fit.stats.build_evals, 25 * 25, "matrix precompute");
+    }
+}

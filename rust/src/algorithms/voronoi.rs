@@ -1,0 +1,151 @@
+//! Voronoi Iteration (Park & Jun [40]): k-means-style alternation.
+//!
+//! Initializes with the k most "central" points (smallest weighted total
+//! distance — Park & Jun's density heuristic), then alternates between
+//! (a) assigning every point to its nearest medoid and (b) recomputing
+//! each cluster's medoid as the point minimizing within-cluster total
+//! distance, until assignments stabilize. Fast, but converges to weaker
+//! local optima than PAM (paper Figure 1a, the worst of the four).
+
+use crate::algorithms::matrix_cache::FullMatrix;
+use crate::algorithms::{check_fit_args, Clustering, FitStats, KMedoids};
+use crate::runtime::backend::DistanceBackend;
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+
+/// Park–Jun Voronoi iteration.
+#[derive(Debug, Default)]
+pub struct VoronoiIteration {
+    pub max_iters: usize,
+}
+
+impl VoronoiIteration {
+    pub fn new() -> Self {
+        VoronoiIteration { max_iters: 100 }
+    }
+}
+
+impl KMedoids for VoronoiIteration {
+    fn name(&self) -> &'static str {
+        "voronoi"
+    }
+
+    fn fit(
+        &mut self,
+        backend: &dyn DistanceBackend,
+        k: usize,
+        _rng: &mut Rng,
+    ) -> anyhow::Result<Clustering> {
+        check_fit_args(backend, k)?;
+        let timer = Timer::start();
+        let start = backend.counter().get();
+        let n = backend.n();
+        let m = FullMatrix::compute(backend);
+
+        // Park–Jun init: v_j = sum_i d(i,j) / sum_l d(i,l); pick k smallest.
+        let row_sums: Vec<f64> = (0..n).map(|i| m.row(i).iter().sum()).collect();
+        let mut v = vec![0.0f64; n];
+        for i in 0..n {
+            let inv = 1.0 / row_sums[i].max(1e-300);
+            let row = m.row(i);
+            for j in 0..n {
+                v[j] += row[j] * inv;
+            }
+        }
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| v[a].partial_cmp(&v[b]).unwrap());
+        let mut medoids: Vec<usize> = order[..k].to_vec();
+
+        let mut assign = vec![0usize; n];
+        let mut iters = 0;
+        loop {
+            iters += 1;
+            // (a) assignment
+            let mut changed = false;
+            for j in 0..n {
+                let mut best = (f64::INFINITY, 0usize);
+                for (pos, &med) in medoids.iter().enumerate() {
+                    let d = m.get(med, j);
+                    if d < best.0 {
+                        best = (d, pos);
+                    }
+                }
+                if assign[j] != best.1 {
+                    assign[j] = best.1;
+                    changed = true;
+                }
+            }
+            if !changed && iters > 1 {
+                break;
+            }
+            // (b) medoid update per cluster
+            for pos in 0..k {
+                let members: Vec<usize> =
+                    (0..n).filter(|&j| assign[j] == pos).collect();
+                if members.is_empty() {
+                    continue;
+                }
+                let mut best = (f64::INFINITY, medoids[pos]);
+                for &cand in &members {
+                    let cost: f64 = members.iter().map(|&j| m.get(cand, j)).sum();
+                    if cost < best.0 {
+                        best = (cost, cand);
+                    }
+                }
+                medoids[pos] = best.1;
+            }
+            if iters >= self.max_iters {
+                break;
+            }
+        }
+
+        let stats = FitStats {
+            build_evals: backend.counter().get() - start,
+            swap_iters: iters,
+            iters_plus_one: iters + 1,
+            wall_secs: timer.secs(),
+            ..Default::default()
+        };
+        Ok(Clustering::finalize(backend, medoids, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::pam::Pam;
+    use crate::data::synthetic;
+    use crate::distance::Metric;
+    use crate::runtime::backend::NativeBackend;
+
+    #[test]
+    fn voronoi_converges_and_is_deterministic() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(70), 80, 4, 3, 5.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let a = VoronoiIteration::new().fit(&backend, 3, &mut Rng::seed_from(0)).unwrap();
+        let b = VoronoiIteration::new().fit(&backend, 3, &mut Rng::seed_from(42)).unwrap();
+        assert_eq!(a.medoids, b.medoids);
+        assert!(a.stats.swap_iters < 100);
+    }
+
+    #[test]
+    fn voronoi_quality_is_bounded_vs_pam() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(71), 100, 4, 3, 6.0);
+        let b1 = NativeBackend::new(&ds.points, Metric::L2);
+        let pam = Pam::new().fit(&b1, 3, &mut Rng::seed_from(0)).unwrap();
+        let b2 = NativeBackend::new(&ds.points, Metric::L2);
+        let vor = VoronoiIteration::new().fit(&b2, 3, &mut Rng::seed_from(0)).unwrap();
+        assert!(vor.loss >= pam.loss - 1e-9, "PAM is the quality reference");
+        assert!(vor.loss <= pam.loss * 2.0, "{} vs {}", vor.loss, pam.loss);
+    }
+
+    #[test]
+    fn medoids_lie_in_their_own_clusters() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(72), 60, 3, 2, 4.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let fit = VoronoiIteration::new().fit(&backend, 2, &mut Rng::seed_from(0)).unwrap();
+        for (pos, &m) in fit.medoids.iter().enumerate() {
+            assert_eq!(fit.assignments[m], pos);
+        }
+    }
+}

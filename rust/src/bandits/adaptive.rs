@@ -1,0 +1,426 @@
+//! Algorithm 1 of the paper: Adaptive-Search.
+//!
+//! A batched UCB / successive-elimination best-arm search over an abstract
+//! [`ArmSet`]. Each round draws a reference batch of size `B`, evaluates
+//! `g_x` for every *live* arm on that common batch (one `pull_many` — this
+//! is what makes the XLA distance backend a dense-block computation),
+//! updates per-arm means and confidence intervals, and eliminates arms
+//! whose lower confidence bound exceeds the best upper bound. When the
+//! sample budget reaches `|S_ref|` the survivors are computed exactly
+//! (Algorithm 1, lines 11–15).
+
+use crate::bandits::confidence::{half_width, CiKind};
+use crate::bandits::estimator::ArmEstimator;
+use crate::util::rng::Rng;
+
+/// The problem interface Algorithm 1 searches over.
+///
+/// Implementations: `coordinator::arms::BuildArms`,
+/// `coordinator::arms::SwapArms`, and the test doubles in this module.
+pub trait ArmSet {
+    /// Number of target points (arms), `|S_tar|`.
+    fn n_arms(&self) -> usize;
+
+    /// Number of reference points, `|S_ref|`.
+    fn n_ref(&self) -> usize;
+
+    /// Evaluate `g_x(ref)` for every arm in `arms` over the common
+    /// reference batch `refs`. `out` is row-major `[arms.len() * refs.len()]`.
+    fn pull_many(&mut self, arms: &[usize], refs: &[usize], out: &mut [f64]);
+
+    /// Exact mean `mu_x` over the whole reference set (line 14).
+    fn exact(&mut self, arm: usize) -> f64;
+}
+
+/// How each arm's sub-Gaussianity parameter `sigma_x` is obtained.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SigmaMode {
+    /// Per-arm estimate from the first batch (paper §3.2, Eq. 11).
+    PerArmFirstBatch,
+    /// Per-arm, re-estimated after every batch (running population std).
+    PerArmRunning,
+    /// One global sigma: max over the per-arm first-batch estimates.
+    /// (Ablation `abl-sigma`: the paper argues this inflates CIs.)
+    GlobalFirstBatch,
+    /// Externally supplied constant.
+    Fixed(f64),
+}
+
+/// How reference batches are drawn.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SamplingMode {
+    /// Uniform with replacement (Algorithm 1, line 5).
+    WithReplacement,
+    /// Successive slices of one fixed random permutation — every arm sees
+    /// the same reference sequence, enabling the Appendix 2.2 cache and
+    /// exact-by-exhaustion semantics when the permutation is consumed.
+    FixedPermutation,
+}
+
+/// Tuning for one Adaptive-Search call.
+#[derive(Debug, Clone)]
+pub struct AdaptiveConfig {
+    /// Batch size `B` (paper: 100).
+    pub batch_size: usize,
+    /// Error probability `delta` for each CI.
+    pub delta: f64,
+    pub sigma_mode: SigmaMode,
+    pub ci: CiKind,
+    pub sampling: SamplingMode,
+    /// Early convergence cutoff: when every live arm's *lower* confidence
+    /// bound exceeds this threshold, the search stops immediately — with
+    /// high probability no arm has mean below it, so the caller (the SWAP
+    /// step, with threshold ~0) already knows no improving swap exists.
+    /// Without this, a converged SWAP search has all k(n-k) arms tied at
+    /// mean 0, nothing is ever eliminated, and Algorithm 1's exact
+    /// fallback (line 14) degenerates to k·n² evaluations.
+    pub early_stop_above: Option<f64>,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            batch_size: 100,
+            delta: 1e-3,
+            sigma_mode: SigmaMode::PerArmFirstBatch,
+            ci: CiKind::Hoeffding,
+            sampling: SamplingMode::WithReplacement,
+            early_stop_above: None,
+        }
+    }
+}
+
+/// Result of one Adaptive-Search call.
+#[derive(Debug, Clone)]
+pub struct AdaptiveOutcome {
+    /// Index of the winning arm.
+    pub best: usize,
+    /// Its estimated (or exact) mean.
+    pub best_mean: f64,
+    /// Rounds of batched sampling performed.
+    pub rounds: usize,
+    /// Number of arms that fell through to exact computation (line 14).
+    pub exact_fallbacks: usize,
+    /// Total g-evaluations (pull count, excluding exact fallbacks).
+    pub pulls: u64,
+    /// Final per-arm sigma estimates (for the Appendix-Fig-1 experiment).
+    pub sigmas: Vec<f64>,
+    /// True when the convergence cutoff (`early_stop_above`) fired.
+    pub early_stopped: bool,
+}
+
+/// Run Algorithm 1. Panics if the arm set is empty.
+pub fn adaptive_search(
+    arms: &mut impl ArmSet,
+    cfg: &AdaptiveConfig,
+    rng: &mut Rng,
+) -> AdaptiveOutcome {
+    let n_arms = arms.n_arms();
+    assert!(n_arms > 0, "adaptive_search over empty arm set");
+    let n_ref = arms.n_ref();
+    assert!(n_ref > 0, "adaptive_search with empty reference set");
+
+    let mut est: Vec<ArmEstimator> = vec![ArmEstimator::default(); n_arms];
+    let mut live: Vec<usize> = (0..n_arms).collect();
+    let mut n_used: usize = 0;
+    let mut rounds = 0usize;
+    let mut pulls: u64 = 0;
+    let mut early_stopped = false;
+
+    // Fixed permutation for SamplingMode::FixedPermutation.
+    let mut perm: Vec<usize> = Vec::new();
+    if cfg.sampling == SamplingMode::FixedPermutation {
+        perm = (0..n_ref).collect();
+        rng.shuffle(&mut perm);
+    }
+
+    let mut batch: Vec<usize> = Vec::with_capacity(cfg.batch_size);
+    let mut values: Vec<f64> = Vec::new();
+
+    while n_used < n_ref && live.len() > 1 {
+        // --- Line 5: draw the reference batch.
+        let b = cfg.batch_size.min(n_ref - n_used).max(1);
+        batch.clear();
+        match cfg.sampling {
+            SamplingMode::WithReplacement => {
+                batch.extend((0..b).map(|_| rng.below(n_ref)));
+            }
+            SamplingMode::FixedPermutation => {
+                batch.extend_from_slice(&perm[n_used..n_used + b]);
+            }
+        }
+
+        // --- Lines 6-7: evaluate all live arms on the common batch.
+        values.resize(live.len() * b, 0.0);
+        arms.pull_many(&live, &batch, &mut values);
+        pulls += (live.len() * b) as u64;
+        for (row, &a) in live.iter().enumerate() {
+            est[a].update(&values[row * b..(row + 1) * b]);
+        }
+        n_used += b;
+        rounds += 1;
+
+        // --- Sigma estimation (paper §3.2; modes for the ablation).
+        match cfg.sigma_mode {
+            SigmaMode::PerArmFirstBatch => {
+                if rounds == 1 {
+                    for &a in &live {
+                        est[a].sigma = Some(est[a].std_pop());
+                    }
+                }
+            }
+            SigmaMode::PerArmRunning => {
+                for &a in &live {
+                    est[a].sigma = Some(est[a].std_pop());
+                }
+            }
+            SigmaMode::GlobalFirstBatch => {
+                if rounds == 1 {
+                    let g = live
+                        .iter()
+                        .map(|&a| est[a].std_pop())
+                        .fold(0.0f64, f64::max);
+                    for &a in &live {
+                        est[a].sigma = Some(g);
+                    }
+                }
+            }
+            SigmaMode::Fixed(s) => {
+                if rounds == 1 {
+                    for &a in &live {
+                        est[a].sigma = Some(s);
+                    }
+                }
+            }
+        }
+
+        // --- Lines 8-9: successive elimination.
+        let mut best_ucb = f64::INFINITY;
+        let mut best_lcb = f64::INFINITY;
+        for &a in &live {
+            let w = half_width(cfg.ci, &est[a], cfg.delta);
+            best_ucb = best_ucb.min(est[a].mean() + w);
+            best_lcb = best_lcb.min(est[a].mean() - w);
+        }
+        live.retain(|&a| {
+            let w = half_width(cfg.ci, &est[a], cfg.delta);
+            est[a].mean() - w <= best_ucb
+        });
+        debug_assert!(!live.is_empty(), "eliminated every arm");
+
+        // --- Convergence cutoff (see AdaptiveConfig::early_stop_above).
+        if let Some(thr) = cfg.early_stop_above {
+            if best_lcb > thr {
+                early_stopped = true;
+                break;
+            }
+        }
+    }
+
+    // --- Lines 11-15: single survivor, or exact fallback. Two cases skip
+    // the exact pass entirely:
+    //   * the convergence cutoff fired (the estimate is already decisive);
+    //   * FixedPermutation sampling exhausted the whole reference set — a
+    //     surviving arm has then seen every reference exactly once, so its
+    //     running mean *is* mu_x (the Appendix-2.2 "fixed ordering"
+    //     optimization; with-replacement cannot make this claim).
+    let exhausted_exactly =
+        cfg.sampling == SamplingMode::FixedPermutation && n_used >= n_ref;
+    let skip_exact = early_stopped || exhausted_exactly;
+    let exact_fallbacks = if live.len() > 1 && !skip_exact { live.len() } else { 0 };
+    if live.len() > 1 && !skip_exact {
+        for &a in &live {
+            let mu = arms.exact(a);
+            est[a].exact = Some(mu);
+        }
+    }
+    let best = *live
+        .iter()
+        .min_by(|&&a, &&b| est[a].mean().partial_cmp(&est[b].mean()).unwrap())
+        .unwrap();
+
+    AdaptiveOutcome {
+        best,
+        best_mean: est[best].mean(),
+        rounds,
+        exact_fallbacks,
+        pulls,
+        sigmas: est
+            .iter()
+            .map(|e| e.sigma.unwrap_or(0.0))
+            .collect(),
+        early_stopped,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Arm set with Gaussian rewards of known means: `g_a(j)` is a
+    /// deterministic function of (arm, ref index) built from a hash, so the
+    /// empirical mean over all refs is fixed and exact() agrees with it.
+    struct SyntheticArms {
+        means: Vec<f64>,
+        noise: f64,
+        n_ref: usize,
+    }
+
+    impl SyntheticArms {
+        fn g(&self, arm: usize, r: usize) -> f64 {
+            // deterministic pseudo-noise in [-0.5, 0.5)
+            let mut h = (arm as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                ^ (r as u64).wrapping_mul(0xD1B54A32D192ED03);
+            h ^= h >> 33;
+            h = h.wrapping_mul(0xFF51AFD7ED558CCD);
+            h ^= h >> 33;
+            let u = (h >> 11) as f64 / (1u64 << 53) as f64 - 0.5;
+            self.means[arm] + self.noise * u
+        }
+    }
+
+    impl ArmSet for SyntheticArms {
+        fn n_arms(&self) -> usize {
+            self.means.len()
+        }
+        fn n_ref(&self) -> usize {
+            self.n_ref
+        }
+        fn pull_many(&mut self, arms: &[usize], refs: &[usize], out: &mut [f64]) {
+            for (i, &a) in arms.iter().enumerate() {
+                for (j, &r) in refs.iter().enumerate() {
+                    out[i * refs.len() + j] = self.g(a, r);
+                }
+            }
+        }
+        fn exact(&mut self, arm: usize) -> f64 {
+            (0..self.n_ref).map(|r| self.g(arm, r)).sum::<f64>() / self.n_ref as f64
+        }
+    }
+
+    fn exact_best(arms: &mut SyntheticArms) -> usize {
+        let n = arms.n_arms();
+        (0..n)
+            .min_by(|&a, &b| arms.exact(a).partial_cmp(&arms.exact(b)).unwrap())
+            .unwrap()
+    }
+
+    #[test]
+    fn finds_clearly_separated_best_arm() {
+        let mut arms = SyntheticArms {
+            means: vec![1.0, 0.2, 1.5, 0.9, 1.1],
+            noise: 0.3,
+            n_ref: 5_000,
+        };
+        let out = adaptive_search(&mut arms, &AdaptiveConfig::default(), &mut Rng::seed_from(1));
+        assert_eq!(out.best, 1);
+        // should need far fewer pulls than exhaustive 5 * 5000
+        assert!(out.pulls < 25_000, "pulls = {}", out.pulls);
+    }
+
+    #[test]
+    fn agrees_with_exact_argmin_over_seeds() {
+        for seed in 0..20 {
+            let mut rng = Rng::seed_from(1000 + seed);
+            let means: Vec<f64> = (0..30).map(|_| rng.f64() * 2.0).collect();
+            let mut arms = SyntheticArms { means, noise: 0.4, n_ref: 2_000 };
+            let want = exact_best(&mut arms);
+            let out = adaptive_search(
+                &mut arms,
+                &AdaptiveConfig { delta: 1e-5, ..Default::default() },
+                &mut rng,
+            );
+            assert_eq!(out.best, want, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn close_arms_trigger_exact_fallback_and_stay_correct() {
+        // Means closer than noise/sqrt(n_ref): elimination cannot finish,
+        // so line 14 kicks in and exact computation decides.
+        let mut arms = SyntheticArms {
+            means: vec![0.5000, 0.5001, 0.9],
+            noise: 1.0,
+            n_ref: 300,
+        };
+        let want = exact_best(&mut arms);
+        let out = adaptive_search(&mut arms, &AdaptiveConfig::default(), &mut Rng::seed_from(2));
+        assert_eq!(out.best, want);
+        assert!(out.exact_fallbacks >= 2, "fallbacks {}", out.exact_fallbacks);
+    }
+
+    #[test]
+    fn single_arm_short_circuits() {
+        let mut arms = SyntheticArms { means: vec![3.0], noise: 0.1, n_ref: 100 };
+        let out = adaptive_search(&mut arms, &AdaptiveConfig::default(), &mut Rng::seed_from(3));
+        assert_eq!(out.best, 0);
+        assert_eq!(out.pulls, 0); // loop never entered: |S| == 1 immediately
+    }
+
+    #[test]
+    fn fixed_permutation_mode_matches_exact_when_exhausted() {
+        let mut arms = SyntheticArms {
+            means: vec![0.50, 0.50001],
+            noise: 2.0,
+            n_ref: 500,
+        };
+        let cfg = AdaptiveConfig {
+            sampling: SamplingMode::FixedPermutation,
+            ..Default::default()
+        };
+        let want = exact_best(&mut arms);
+        let out = adaptive_search(&mut arms, &cfg, &mut Rng::seed_from(4));
+        assert_eq!(out.best, want);
+    }
+
+    #[test]
+    fn zero_noise_eliminates_after_first_batches() {
+        let mut arms = SyntheticArms {
+            means: vec![1.0, 2.0, 3.0, 4.0],
+            noise: 0.0,
+            n_ref: 100_000,
+        };
+        let out = adaptive_search(&mut arms, &AdaptiveConfig::default(), &mut Rng::seed_from(5));
+        assert_eq!(out.best, 0);
+        assert!(out.rounds <= 2, "rounds {}", out.rounds);
+        assert!(out.pulls <= 2 * 4 * 100);
+    }
+
+    #[test]
+    fn bernstein_ci_also_finds_best() {
+        let mut arms = SyntheticArms {
+            means: vec![1.0, 0.1, 0.9],
+            noise: 0.5,
+            n_ref: 3_000,
+        };
+        let cfg = AdaptiveConfig { ci: CiKind::EmpiricalBernstein, ..Default::default() };
+        let out = adaptive_search(&mut arms, &cfg, &mut Rng::seed_from(6));
+        assert_eq!(out.best, 1);
+    }
+
+    #[test]
+    fn sigma_modes_all_converge() {
+        for mode in [
+            SigmaMode::PerArmFirstBatch,
+            SigmaMode::PerArmRunning,
+            SigmaMode::GlobalFirstBatch,
+            SigmaMode::Fixed(0.5),
+        ] {
+            let mut arms = SyntheticArms {
+                means: vec![1.0, 0.1, 0.9, 1.4],
+                noise: 0.5,
+                n_ref: 4_000,
+            };
+            let cfg = AdaptiveConfig { sigma_mode: mode, ..Default::default() };
+            let out = adaptive_search(&mut arms, &cfg, &mut Rng::seed_from(7));
+            assert_eq!(out.best, 1, "{mode:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "empty arm set")]
+    fn empty_arm_set_panics() {
+        let mut arms = SyntheticArms { means: vec![], noise: 0.0, n_ref: 10 };
+        adaptive_search(&mut arms, &AdaptiveConfig::default(), &mut Rng::seed_from(0));
+    }
+}

@@ -1,0 +1,118 @@
+//! Confidence-interval constructions for Algorithm 1.
+//!
+//! The paper uses the sub-Gaussian Hoeffding interval
+//! `C_x = sigma_x * sqrt(log(1/delta) / n_used)` (Algorithm 1, line 8) with
+//! `sigma_x` estimated from the first batch. Appendix 2.1 suggests the
+//! empirical Bernstein inequality as a way to avoid the sub-Gaussian
+//! assumption when a range bound is available; we implement both (the
+//! ablation bench compares them).
+
+use crate::bandits::estimator::ArmEstimator;
+
+/// Which confidence interval to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CiKind {
+    /// `sigma * sqrt(log(1/delta) / n)` — the paper's interval.
+    Hoeffding,
+    /// Empirical Bernstein (Maurer & Pontil):
+    /// `sqrt(2 * Var * log(3/delta) / n) + 3 * R * log(3/delta) / n`
+    /// with `R` the observed range. No sigma estimate required.
+    EmpiricalBernstein,
+}
+
+/// Confidence half-width for an arm after `n` pulls.
+///
+/// Returns `f64::INFINITY` before any information is available; returns 0
+/// for arms whose mean is known exactly.
+pub fn half_width(kind: CiKind, arm: &ArmEstimator, delta: f64) -> f64 {
+    if arm.exact.is_some() {
+        return 0.0;
+    }
+    let n = arm.count();
+    if n == 0 {
+        return f64::INFINITY;
+    }
+    match kind {
+        CiKind::Hoeffding => match arm.sigma {
+            None => f64::INFINITY,
+            Some(sigma) => {
+                if sigma == 0.0 {
+                    // Degenerate arm (all g values identical so far): keep a
+                    // tiny floor so ties do not collapse CIs to exactly 0.
+                    return 0.0;
+                }
+                sigma * ((1.0 / delta).ln() / n as f64).sqrt()
+            }
+        },
+        CiKind::EmpiricalBernstein => {
+            if n < 2 {
+                return f64::INFINITY;
+            }
+            let log_term = (3.0 / delta).ln();
+            let var = arm.var();
+            (2.0 * var * log_term / n as f64).sqrt()
+                + 3.0 * arm.range() * log_term / n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arm_with(values: &[f64], sigma: Option<f64>) -> ArmEstimator {
+        let mut a = ArmEstimator::default();
+        a.update(values);
+        a.sigma = sigma;
+        a
+    }
+
+    #[test]
+    fn hoeffding_formula() {
+        let a = arm_with(&[0.0; 100], Some(2.0));
+        let delta = 1e-3;
+        let w = half_width(CiKind::Hoeffding, &a, delta);
+        let expect = 2.0 * ((1.0f64 / delta).ln() / 100.0).sqrt();
+        assert!((w - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hoeffding_without_sigma_is_infinite() {
+        let a = arm_with(&[1.0, 2.0], None);
+        assert!(half_width(CiKind::Hoeffding, &a, 0.01).is_infinite());
+    }
+
+    #[test]
+    fn widths_shrink_with_n() {
+        for kind in [CiKind::Hoeffding, CiKind::EmpiricalBernstein] {
+            let small = arm_with(&vec![1.0, 3.0, 2.0, 4.0], Some(1.0));
+            let big_vals: Vec<f64> = (0..400).map(|i| 1.0 + (i % 4) as f64).collect();
+            let big = arm_with(&big_vals, Some(1.0));
+            let ws = half_width(kind, &small, 0.01);
+            let wb = half_width(kind, &big, 0.01);
+            assert!(wb < ws, "{kind:?}: {wb} !< {ws}");
+        }
+    }
+
+    #[test]
+    fn exact_arm_has_zero_width() {
+        let mut a = arm_with(&[5.0, 6.0], Some(3.0));
+        a.exact = Some(5.5);
+        assert_eq!(half_width(CiKind::Hoeffding, &a, 0.01), 0.0);
+        assert_eq!(half_width(CiKind::EmpiricalBernstein, &a, 0.01), 0.0);
+    }
+
+    #[test]
+    fn bernstein_zero_variance_small_width() {
+        let a = arm_with(&[2.0; 50], None);
+        let w = half_width(CiKind::EmpiricalBernstein, &a, 0.01);
+        assert!(w >= 0.0 && w < 0.1, "w = {w}");
+    }
+
+    #[test]
+    fn no_pulls_is_infinite() {
+        let a = ArmEstimator::default();
+        assert!(half_width(CiKind::Hoeffding, &a, 0.01).is_infinite());
+        assert!(half_width(CiKind::EmpiricalBernstein, &a, 0.01).is_infinite());
+    }
+}

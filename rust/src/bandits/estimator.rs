@@ -1,0 +1,112 @@
+//! Per-arm statistics: running mean, count, sigma estimate, CI.
+
+use crate::stats::running::Running;
+
+/// State tracked for each arm in Algorithm 1.
+#[derive(Debug, Clone)]
+pub struct ArmEstimator {
+    stats: Running,
+    /// Sub-Gaussian scale parameter `sigma_x`; estimated from the first
+    /// batch (paper Eq. 11) unless overridden; `None` until then.
+    pub sigma: Option<f64>,
+    /// Observed value range (for the empirical-Bernstein CI variant).
+    pub min_seen: f64,
+    pub max_seen: f64,
+    /// Set when the arm's mean was computed exactly (CI is then zero).
+    pub exact: Option<f64>,
+}
+
+impl Default for ArmEstimator {
+    fn default() -> Self {
+        ArmEstimator {
+            stats: Running::new(),
+            sigma: None,
+            min_seen: f64::INFINITY,
+            max_seen: f64::NEG_INFINITY,
+            exact: None,
+        }
+    }
+}
+
+impl ArmEstimator {
+    /// Record a batch of g-values.
+    pub fn update(&mut self, values: &[f64]) {
+        for &v in values {
+            self.stats.push(v);
+            self.min_seen = self.min_seen.min(v);
+            self.max_seen = self.max_seen.max(v);
+        }
+    }
+
+    /// Current mean estimate (exact value wins when present).
+    #[inline]
+    pub fn mean(&self) -> f64 {
+        self.exact.unwrap_or_else(|| self.stats.mean())
+    }
+
+    /// Pulls so far.
+    #[inline]
+    pub fn count(&self) -> u64 {
+        self.stats.count()
+    }
+
+    /// Population std of observed values (the paper's Eq. 11 estimator).
+    #[inline]
+    pub fn std_pop(&self) -> f64 {
+        self.stats.std_pop()
+    }
+
+    /// Sample variance of observed values.
+    #[inline]
+    pub fn var(&self) -> f64 {
+        self.stats.var()
+    }
+
+    /// Observed range (0 when fewer than 2 observations).
+    pub fn range(&self) -> f64 {
+        if self.count() < 2 {
+            0.0
+        } else {
+            (self.max_seen - self.min_seen).max(0.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn update_and_mean() {
+        let mut a = ArmEstimator::default();
+        a.update(&[1.0, 2.0, 3.0]);
+        assert_eq!(a.count(), 3);
+        assert!((a.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(a.min_seen, 1.0);
+        assert_eq!(a.max_seen, 3.0);
+        assert_eq!(a.range(), 2.0);
+    }
+
+    #[test]
+    fn exact_overrides_mean() {
+        let mut a = ArmEstimator::default();
+        a.update(&[10.0, 20.0]);
+        a.exact = Some(-5.0);
+        assert_eq!(a.mean(), -5.0);
+    }
+
+    #[test]
+    fn empty_range_is_zero() {
+        let mut a = ArmEstimator::default();
+        assert_eq!(a.range(), 0.0);
+        a.update(&[4.0]);
+        assert_eq!(a.range(), 0.0);
+    }
+
+    #[test]
+    fn sigma_estimate_matches_population_std() {
+        let mut a = ArmEstimator::default();
+        a.update(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((a.std_pop() - 2.0).abs() < 1e-12);
+    }
+}

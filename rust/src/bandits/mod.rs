@@ -1,0 +1,20 @@
+//! Generic best-arm identification: the statistical machinery behind
+//! BanditPAM (paper §3.1, Algorithm 1).
+//!
+//! The BUILD step and every SWAP iteration of PAM share one structure
+//! (paper Eq. 8): `argmin_{x in S_tar} (1/|S_ref|) sum_j g_x(x_j)`.
+//! [`adaptive::adaptive_search`] solves it as a best-arm problem — batched
+//! UCB + successive elimination with per-arm sub-Gaussian confidence
+//! intervals — against any [`adaptive::ArmSet`].
+//!
+//! The coordinator supplies the two concrete arm sets (BUILD candidates,
+//! FastPAM1-decomposed SWAP pairs); [`crate::algorithms::meddit`] reuses the
+//! same search for the 1-medoid problem of Bagaria et al. [4].
+
+pub mod adaptive;
+pub mod confidence;
+pub mod estimator;
+
+pub use adaptive::{adaptive_search, AdaptiveConfig, AdaptiveOutcome, ArmSet};
+pub use confidence::CiKind;
+pub use estimator::ArmEstimator;

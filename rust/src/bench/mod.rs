@@ -1,0 +1,102 @@
+//! Mini-criterion: the in-tree bench harness (`criterion` is not in the
+//! offline cache).
+//!
+//! Used by the `harness = false` targets in `rust/benches/`. Provides
+//! timed repetition with warmup ([`bench_fn`]) and, more importantly for
+//! this paper, *experiment tables*: each paper figure's bench prints the
+//! same rows the figure plots (sample size, evals/iteration, runtime/
+//! iteration, fitted log–log slope) via [`table::Table`].
+
+pub mod table;
+
+use crate::stats::summary::mean_ci95;
+use crate::util::timer::Timer;
+
+/// Result of a micro-benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub ci95_secs: f64,
+}
+
+impl BenchResult {
+    /// One-line human-readable summary.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<40} {:>12}/iter ± {:<10} ({} iters)",
+            self.name,
+            crate::util::timer::fmt_duration(self.mean_secs),
+            crate::util::timer::fmt_duration(self.ci95_secs),
+            self.iters
+        )
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs followed by `iters` measured
+/// runs; returns mean ± 95% CI.
+pub fn bench_fn<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        std::hint::black_box(f());
+        times.push(t.secs());
+    }
+    let (mean, ci) = mean_ci95(&times);
+    BenchResult { name: name.to_string(), iters, mean_secs: mean, ci95_secs: ci }
+}
+
+/// Scale knob shared by all bench binaries: `BANDITPAM_BENCH_SCALE` may be
+/// `smoke` (tiny; used by `cargo test --benches` sanity runs), `quick`
+/// (default for `cargo bench`; minutes) or `paper` (the full sweep sizes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Smoke,
+    Quick,
+    Paper,
+}
+
+impl Scale {
+    /// Read from the environment (default `Quick`).
+    pub fn from_env() -> Scale {
+        match std::env::var("BANDITPAM_BENCH_SCALE").as_deref() {
+            Ok("smoke") => Scale::Smoke,
+            Ok("paper") => Scale::Paper,
+            _ => Scale::Quick,
+        }
+    }
+
+    /// Pick one of three values by scale.
+    pub fn pick<T: Copy>(&self, smoke: T, quick: T, paper: T) -> T {
+        match self {
+            Scale::Smoke => smoke,
+            Scale::Quick => quick,
+            Scale::Paper => paper,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_fn_reports_positive_mean() {
+        let r = bench_fn("spin", 1, 5, || (0..10_000u64).sum::<u64>());
+        assert!(r.mean_secs >= 0.0);
+        assert_eq!(r.iters, 5);
+        assert!(r.line().contains("spin"));
+    }
+
+    #[test]
+    fn scale_pick() {
+        assert_eq!(Scale::Smoke.pick(1, 2, 3), 1);
+        assert_eq!(Scale::Quick.pick(1, 2, 3), 2);
+        assert_eq!(Scale::Paper.pick(1, 2, 3), 3);
+    }
+}

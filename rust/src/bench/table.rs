@@ -1,0 +1,113 @@
+//! Aligned-text experiment tables (what the bench binaries print).
+
+use std::fmt::Write as _;
+
+/// A simple right-aligned table with a title and column headers.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with headers.
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match header count).
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1).max(0);
+        writeln!(out, "\n== {} ==", self.title).unwrap();
+        for (i, h) in self.headers.iter().enumerate() {
+            write!(out, "{:>w$}{}", h, if i + 1 == ncol { "\n" } else { "  " }, w = widths[i]).unwrap();
+        }
+        writeln!(out, "{}", "-".repeat(total)).unwrap();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                write!(out, "{:>w$}{}", c, if i + 1 == ncol { "\n" } else { "  " }, w = widths[i]).unwrap();
+            }
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// CSV rendering (for plotting outside).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        writeln!(out, "{}", self.headers.join(",")).unwrap();
+        for row in &self.rows {
+            writeln!(out, "{}", row.join(",")).unwrap();
+        }
+        out
+    }
+}
+
+/// Format a float compactly for table cells.
+pub fn fnum(x: f64) -> String {
+    if x == 0.0 {
+        "0".into()
+    } else if x.abs() >= 1e6 || x.abs() < 1e-3 {
+        format!("{x:.3e}")
+    } else if x.abs() >= 100.0 {
+        format!("{x:.1}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_alignment_and_csv() {
+        let mut t = Table::new("demo", &["n", "value"]);
+        t.row(vec!["10".into(), "1.5".into()]);
+        t.row(vec!["1000".into(), "2.25".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("1000"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("n,value\n"));
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn fnum_ranges() {
+        assert_eq!(fnum(0.0), "0");
+        assert_eq!(fnum(2.0e7), "2.000e7");
+        assert_eq!(fnum(123.456), "123.5");
+        assert_eq!(fnum(1.23456), "1.2346");
+    }
+}

@@ -1,0 +1,311 @@
+//! Concrete arm sets for the two PAM search problems (paper Eqs. 9–10).
+
+use crate::bandits::adaptive::ArmSet;
+use crate::coordinator::scheduler;
+use crate::coordinator::state::MedoidState;
+use crate::runtime::backend::DistanceBackend;
+
+/// BUILD-step arms (Eq. 9): one arm per candidate point x, with
+/// `g_x(j) = min(d(x, x_j) - d1_j, 0)` — or plain `d(x, x_j)` for the very
+/// first medoid (empty medoid set).
+pub struct BuildArms<'a> {
+    backend: &'a dyn DistanceBackend,
+    /// Candidate point ids (non-medoids).
+    pub candidates: Vec<usize>,
+    d1: &'a [f64],
+    scratch: Vec<f64>,
+}
+
+impl<'a> BuildArms<'a> {
+    /// Candidates are all non-medoid points of `state`.
+    pub fn new(backend: &'a dyn DistanceBackend, state: &'a MedoidState) -> Self {
+        let medoids: std::collections::HashSet<usize> =
+            state.medoids.iter().copied().collect();
+        let candidates: Vec<usize> =
+            (0..backend.n()).filter(|i| !medoids.contains(i)).collect();
+        BuildArms { backend, candidates, d1: &state.d1, scratch: Vec::new() }
+    }
+
+    #[inline]
+    fn g(&self, d: f64, j: usize) -> f64 {
+        let d1 = self.d1[j];
+        if d1.is_infinite() {
+            d // first medoid: plain mean distance (Eq. 4 with empty M)
+        } else {
+            (d - d1).min(0.0)
+        }
+    }
+}
+
+impl<'a> ArmSet for BuildArms<'a> {
+    fn n_arms(&self) -> usize {
+        self.candidates.len()
+    }
+
+    fn n_ref(&self) -> usize {
+        self.backend.n()
+    }
+
+    fn pull_many(&mut self, arms: &[usize], refs: &[usize], out: &mut [f64]) {
+        let targets: Vec<usize> = arms.iter().map(|&a| self.candidates[a]).collect();
+        self.scratch.resize(targets.len() * refs.len(), 0.0);
+        self.backend.block(&targets, refs, &mut self.scratch);
+        let rn = refs.len();
+        for ai in 0..arms.len() {
+            for (ri, &j) in refs.iter().enumerate() {
+                out[ai * rn + ri] = self.g(self.scratch[ai * rn + ri], j);
+            }
+        }
+    }
+
+    fn exact(&mut self, arm: usize) -> f64 {
+        let x = self.candidates[arm];
+        let n = self.backend.n();
+        let refs: Vec<usize> = (0..n).collect();
+        self.scratch.resize(n, 0.0);
+        self.backend.block(&[x], &refs, &mut self.scratch);
+        let mut acc = 0.0;
+        for j in 0..n {
+            acc += self.g(self.scratch[j], j);
+        }
+        acc / n as f64
+    }
+}
+
+/// SWAP-step arms (Eq. 10): one arm per (medoid position m, candidate x)
+/// pair, using the FastPAM1 decomposition (Eq. 12):
+///
+/// `g_{m,x}(j) = -d1_j + [a1_j != m] min(d1_j, d(x,j)) + [a1_j == m] min(d2_j, d(x,j))`
+///
+/// Arms with the same candidate share one distance row: `pull_many`
+/// deduplicates candidates through the scheduler, so a round over all
+/// k·(n−k) arms costs only (n−k)·B distance evaluations.
+pub struct SwapArms<'a> {
+    backend: &'a dyn DistanceBackend,
+    pub candidates: Vec<usize>,
+    pub k: usize,
+    d1: &'a [f64],
+    d2: &'a [f64],
+    a1: &'a [usize],
+    /// When false (`abl-fastpam1` ablation) deduplication is disabled and
+    /// every arm evaluates its own row — PAM-style O(k n^2) counting.
+    share_rows: bool,
+    scratch: Vec<f64>,
+    /// Last full distance row computed by `exact` (candidate, row):
+    /// Algorithm 1's exact fallback visits arms in id order, so arms of
+    /// the same candidate are consecutive and share this row.
+    exact_row: Option<(usize, Vec<f64>)>,
+}
+
+impl<'a> SwapArms<'a> {
+    /// Arms over all (medoid, non-medoid) pairs of `state`.
+    pub fn new(
+        backend: &'a dyn DistanceBackend,
+        state: &'a MedoidState,
+        share_rows: bool,
+    ) -> Self {
+        let medoids: std::collections::HashSet<usize> =
+            state.medoids.iter().copied().collect();
+        let candidates: Vec<usize> =
+            (0..backend.n()).filter(|i| !medoids.contains(i)).collect();
+        SwapArms {
+            backend,
+            candidates,
+            k: state.medoids.len(),
+            d1: &state.d1,
+            d2: &state.d2,
+            a1: &state.a1,
+            share_rows,
+            scratch: Vec::new(),
+            exact_row: None,
+        }
+    }
+
+    /// Arm id encoding: `arm = cand_idx * k + medoid_pos`.
+    #[inline]
+    pub fn decode(&self, arm: usize) -> (usize, usize) {
+        (self.candidates[arm / self.k], arm % self.k)
+    }
+
+    #[inline]
+    fn g(&self, m_pos: usize, d: f64, j: usize) -> f64 {
+        let base = if self.a1[j] == m_pos {
+            // j's nearest medoid is being removed: falls back to d2 or d(x,j)
+            self.d2[j].min(d)
+        } else {
+            self.d1[j].min(d)
+        };
+        base - self.d1[j]
+    }
+}
+
+impl<'a> ArmSet for SwapArms<'a> {
+    fn n_arms(&self) -> usize {
+        self.candidates.len() * self.k
+    }
+
+    fn n_ref(&self) -> usize {
+        self.backend.n()
+    }
+
+    fn pull_many(&mut self, arms: &[usize], refs: &[usize], out: &mut [f64]) {
+        let rn = refs.len();
+        if self.share_rows {
+            let cand_pts: Vec<usize> =
+                arms.iter().map(|&a| self.candidates[a / self.k]).collect();
+            let mut scratch = std::mem::take(&mut self.scratch);
+            let dd = scheduler::block_dedup(self.backend, &cand_pts, refs, &mut scratch);
+            for (ai, &arm) in arms.iter().enumerate() {
+                let m_pos = arm % self.k;
+                let row = dd.row_of[ai];
+                for (ri, &j) in refs.iter().enumerate() {
+                    out[ai * rn + ri] = self.g(m_pos, scratch[row * rn + ri], j);
+                }
+            }
+            self.scratch = scratch;
+        } else {
+            // Ablation: each arm computes its own row (PAM-style counting).
+            for (ai, &arm) in arms.iter().enumerate() {
+                let (x, m_pos) = self.decode(arm);
+                self.scratch.resize(rn, 0.0);
+                self.backend.block(&[x], refs, &mut self.scratch);
+                for (ri, &j) in refs.iter().enumerate() {
+                    out[ai * rn + ri] = self.g(m_pos, self.scratch[ri], j);
+                }
+            }
+        }
+    }
+
+    fn exact(&mut self, arm: usize) -> f64 {
+        let (x, m_pos) = self.decode(arm);
+        let n = self.backend.n();
+        let reuse = matches!(&self.exact_row, Some((c, _)) if *c == x && self.share_rows);
+        if !reuse {
+            let refs: Vec<usize> = (0..n).collect();
+            let mut row = vec![0.0f64; n];
+            self.backend.block(&[x], &refs, &mut row);
+            self.exact_row = Some((x, row));
+        }
+        let row = &self.exact_row.as_ref().unwrap().1;
+        let mut acc = 0.0;
+        for (j, &d) in row.iter().enumerate() {
+            acc += self.g(m_pos, d, j);
+        }
+        acc / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::distance::Metric;
+    use crate::runtime::backend::NativeBackend;
+    use crate::util::rng::Rng;
+
+    fn fixture() -> (crate::data::Dataset, MedoidState) {
+        let ds = synthetic::gmm(&mut Rng::seed_from(7), 25, 4, 3, 3.0);
+        (ds, MedoidState::empty(25))
+    }
+
+    #[test]
+    fn build_arms_first_step_is_mean_distance() {
+        let (ds, state) = fixture();
+        let b = NativeBackend::new(&ds.points, Metric::L2);
+        let mut arms = BuildArms::new(&b, &state);
+        assert_eq!(arms.n_arms(), 25);
+        let mu = arms.exact(3);
+        // first BUILD step: mu == mean distance to all points
+        let manual: f64 = (0..25).map(|j| b.dist(arms.candidates[3], j)).sum::<f64>() / 25.0;
+        assert!((mu - manual).abs() < 1e-12);
+    }
+
+    #[test]
+    fn build_arms_g_is_nonpositive_after_first_medoid() {
+        let (ds, mut state) = fixture();
+        let b = NativeBackend::new(&ds.points, Metric::L2);
+        state.add_medoid(&b, 0);
+        let mut arms = BuildArms::new(&b, &state);
+        assert_eq!(arms.n_arms(), 24); // medoid excluded
+        let refs: Vec<usize> = (0..25).collect();
+        let mut out = vec![0.0; arms.n_arms() * 25];
+        let all: Vec<usize> = (0..arms.n_arms()).collect();
+        arms.pull_many(&all, &refs, &mut out);
+        assert!(out.iter().all(|&g| g <= 1e-12));
+    }
+
+    #[test]
+    fn build_pull_mean_converges_to_exact() {
+        let (ds, mut state) = fixture();
+        let b = NativeBackend::new(&ds.points, Metric::L2);
+        state.add_medoid(&b, 2);
+        let mut arms = BuildArms::new(&b, &state);
+        // pulling over ALL refs once == exact
+        let refs: Vec<usize> = (0..25).collect();
+        let mut out = vec![0.0; 25];
+        arms.pull_many(&[5], &refs, &mut out);
+        let mean: f64 = out.iter().sum::<f64>() / 25.0;
+        assert!((mean - arms.exact(5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn swap_arms_decode_roundtrip() {
+        let (ds, mut state) = fixture();
+        let b = NativeBackend::new(&ds.points, Metric::L2);
+        state.add_medoid(&b, 0);
+        state.add_medoid(&b, 1);
+        let arms = SwapArms::new(&b, &state, true);
+        assert_eq!(arms.n_arms(), 23 * 2);
+        let (x, m) = arms.decode(2 * 2 + 1);
+        assert_eq!(x, arms.candidates[2]);
+        assert_eq!(m, 1);
+    }
+
+    #[test]
+    fn swap_exact_equals_bruteforce_delta() {
+        let (ds, mut state) = fixture();
+        let b = NativeBackend::new(&ds.points, Metric::L2);
+        state.add_medoid(&b, 0);
+        state.add_medoid(&b, 10);
+        let mut arms = SwapArms::new(&b, &state, true);
+        for arm in [0usize, 5, 11, arms.n_arms() - 1] {
+            let (x, m_pos) = arms.decode(arm);
+            let got = arms.exact(arm);
+            // brute force: loss delta of swapping medoids[m_pos] -> x
+            let mut med = state.medoids.clone();
+            med[m_pos] = x;
+            let before: f64 = state.loss();
+            let after: f64 = (0..25)
+                .map(|j| med.iter().map(|&m| b.dist(m, j)).fold(f64::INFINITY, f64::min))
+                .sum();
+            let want = (after - before) / 25.0;
+            assert!((got - want).abs() < 1e-9, "arm {arm}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn swap_row_sharing_saves_distance_evals() {
+        let (ds, mut state) = fixture();
+        let b_shared = NativeBackend::new(&ds.points, Metric::L2);
+        state.add_medoid(&b_shared, 0);
+        state.add_medoid(&b_shared, 1);
+
+        let refs: Vec<usize> = (0..10).collect();
+        let all_arms: Vec<usize> = (0..(23 * 2)).collect();
+        let mut out = vec![0.0; all_arms.len() * refs.len()];
+
+        let before = b_shared.counter().get();
+        let mut arms = SwapArms::new(&b_shared, &state, true);
+        arms.pull_many(&all_arms, &refs, &mut out);
+        let shared_cost = b_shared.counter().get() - before;
+        assert_eq!(shared_cost, 23 * 10, "k rows shared per candidate");
+
+        let out_shared = out.clone();
+        let before = b_shared.counter().get();
+        let mut arms_naive = SwapArms::new(&b_shared, &state, false);
+        arms_naive.pull_many(&all_arms, &refs, &mut out);
+        let naive_cost = b_shared.counter().get() - before;
+        assert_eq!(naive_cost, 23 * 2 * 10, "naive recomputes per medoid");
+        assert_eq!(out, out_shared, "ablation must not change values");
+    }
+}

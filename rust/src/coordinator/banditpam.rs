@@ -1,0 +1,206 @@
+//! The BanditPAM driver: k BUILD searches + SWAP-until-converged, each via
+//! Algorithm 1. Implements [`crate::algorithms::KMedoids`].
+
+use crate::algorithms::{check_fit_args, Clustering, FitStats, KMedoids};
+use crate::coordinator::build::build_step;
+use crate::coordinator::config::BanditPamConfig;
+use crate::coordinator::state::MedoidState;
+use crate::coordinator::swap::swap_step;
+use crate::runtime::backend::DistanceBackend;
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+
+/// BanditPAM (paper §3). Tracks PAM's optimization trajectory with high
+/// probability in O(n log n) distance evaluations per iteration.
+pub struct BanditPam {
+    pub config: BanditPamConfig,
+    /// Telemetry from the last fit (populated when
+    /// `config.record_sigmas` is set): per BUILD step, all sigma_x.
+    pub build_sigmas: Vec<Vec<f64>>,
+    /// Per-call adaptive-search telemetry from the last fit.
+    pub trace: Vec<SearchTrace>,
+}
+
+/// One Algorithm-1 invocation's telemetry.
+#[derive(Debug, Clone)]
+pub struct SearchTrace {
+    /// "build" or "swap".
+    pub phase: &'static str,
+    pub arms: usize,
+    pub rounds: usize,
+    pub exact_fallbacks: usize,
+    pub distance_evals: u64,
+}
+
+impl BanditPam {
+    /// With explicit configuration.
+    pub fn new(config: BanditPamConfig) -> Self {
+        BanditPam { config, build_sigmas: Vec::new(), trace: Vec::new() }
+    }
+
+    /// Paper-default configuration.
+    pub fn default_paper() -> Self {
+        Self::new(BanditPamConfig::default())
+    }
+
+    /// Run only the BUILD phase (used by the Appendix-Figure-1 experiment).
+    pub fn build_only(
+        &mut self,
+        backend: &dyn DistanceBackend,
+        k: usize,
+        rng: &mut Rng,
+    ) -> anyhow::Result<MedoidState> {
+        check_fit_args(backend, k)?;
+        self.build_sigmas.clear();
+        self.trace.clear();
+        let mut state = MedoidState::empty(backend.n());
+        for _ in 0..k {
+            let before = backend.counter().get();
+            let (_, outcome) = build_step(backend, &mut state, &self.config, rng);
+            if self.config.record_sigmas {
+                self.build_sigmas.push(outcome.sigmas.clone());
+            }
+            self.trace.push(SearchTrace {
+                phase: "build",
+                arms: outcome.sigmas.len(),
+                rounds: outcome.rounds,
+                exact_fallbacks: outcome.exact_fallbacks,
+                distance_evals: backend.counter().get() - before,
+            });
+        }
+        Ok(state)
+    }
+}
+
+impl KMedoids for BanditPam {
+    fn name(&self) -> &'static str {
+        "banditpam"
+    }
+
+    fn fit(
+        &mut self,
+        backend: &dyn DistanceBackend,
+        k: usize,
+        rng: &mut Rng,
+    ) -> anyhow::Result<Clustering> {
+        let timer = Timer::start();
+        let start_evals = backend.counter().get();
+        let mut state = self.build_only(backend, k, rng)?;
+        let build_evals = backend.counter().get() - start_evals;
+
+        let mut stats = FitStats { build_evals, ..Default::default() };
+        for _ in 0..self.config.max_swap_iters {
+            let before = backend.counter().get();
+            let step = swap_step(backend, &mut state, &self.config, rng);
+            stats.swap_iters += 1;
+            self.trace.push(SearchTrace {
+                phase: "swap",
+                arms: state.medoids.len() * (backend.n() - state.medoids.len()),
+                rounds: step.outcome.rounds,
+                exact_fallbacks: step.outcome.exact_fallbacks,
+                distance_evals: backend.counter().get() - before,
+            });
+            match step.applied {
+                Some(_) => stats.swaps_applied += 1,
+                None => break,
+            }
+        }
+        stats.swap_evals = backend.counter().get() - start_evals - build_evals;
+        stats.iters_plus_one = stats.swap_iters + 1;
+        stats.wall_secs = timer.secs();
+        Ok(Clustering::finalize(backend, state.medoids, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::pam::Pam;
+    use crate::data::synthetic;
+    use crate::distance::Metric;
+    use crate::runtime::backend::NativeBackend;
+
+    #[test]
+    fn banditpam_matches_pam_on_small_data() {
+        // The paper's core claim (Theorem 2): same medoids as PAM w.h.p.
+        let mut agree = 0;
+        let total = 8;
+        for seed in 0..total {
+            let ds = synthetic::gmm(&mut Rng::seed_from(200 + seed), 70, 5, 3, 3.0);
+            let backend = NativeBackend::new(&ds.points, Metric::L2);
+            let pam_fit = Pam::new()
+                .fit(&backend, 3, &mut Rng::seed_from(0))
+                .unwrap();
+            let bp_fit = BanditPam::default_paper()
+                .fit(&backend, 3, &mut Rng::seed_from(seed))
+                .unwrap();
+            if bp_fit.same_medoids(&pam_fit) {
+                agree += 1;
+            } else {
+                // when the sets differ, the loss must still match closely
+                assert!(
+                    bp_fit.loss <= pam_fit.loss * 1.05,
+                    "seed {seed}: {} vs {}",
+                    bp_fit.loss,
+                    pam_fit.loss
+                );
+            }
+        }
+        assert!(agree >= total - 1, "only {agree}/{total} exact agreements");
+    }
+
+    #[test]
+    fn stats_are_populated() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(3), 60, 4, 3, 3.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let mut algo = BanditPam::default_paper();
+        let fit = algo.fit(&backend, 3, &mut Rng::seed_from(1)).unwrap();
+        assert_eq!(fit.medoids.len(), 3);
+        assert!(fit.stats.build_evals > 0);
+        assert!(fit.stats.swap_iters >= 1);
+        assert_eq!(fit.stats.iters_plus_one, fit.stats.swap_iters + 1);
+        assert!(fit.stats.distance_evals >= fit.stats.build_evals);
+        assert!(!algo.trace.is_empty());
+        assert_eq!(
+            algo.trace.iter().filter(|t| t.phase == "build").count(),
+            3
+        );
+    }
+
+    #[test]
+    fn record_sigmas_captures_build_steps() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(4), 50, 4, 2, 3.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let mut algo = BanditPam::new(BanditPamConfig {
+            record_sigmas: true,
+            ..Default::default()
+        });
+        algo.fit(&backend, 2, &mut Rng::seed_from(2)).unwrap();
+        assert_eq!(algo.build_sigmas.len(), 2);
+        assert_eq!(algo.build_sigmas[0].len(), 50);
+        // paper Appendix Fig 1: sigma drops once the first medoid exists
+        let med0: f64 = crate::stats::quantile(&algo.build_sigmas[0], 0.5);
+        let med1: f64 = crate::stats::quantile(&algo.build_sigmas[1], 0.5);
+        assert!(med1 <= med0, "median sigma should not grow: {med0} -> {med1}");
+    }
+
+    #[test]
+    fn swap_cap_is_respected() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(5), 80, 4, 4, 1.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let mut algo = BanditPam::new(BanditPamConfig {
+            max_swap_iters: 1,
+            ..Default::default()
+        });
+        let fit = algo.fit(&backend, 4, &mut Rng::seed_from(3)).unwrap();
+        assert!(fit.stats.swap_iters <= 1);
+    }
+
+    #[test]
+    fn rejects_bad_k() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(6), 10, 2, 2, 1.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        assert!(BanditPam::default_paper().fit(&backend, 0, &mut Rng::seed_from(0)).is_err());
+        assert!(BanditPam::default_paper().fit(&backend, 10, &mut Rng::seed_from(0)).is_err());
+    }
+}

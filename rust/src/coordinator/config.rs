@@ -1,0 +1,122 @@
+//! BanditPAM configuration.
+
+use crate::bandits::adaptive::{SamplingMode, SigmaMode};
+use crate::bandits::confidence::CiKind;
+
+/// How the per-call error probability `delta` is chosen.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DeltaMode {
+    /// The paper's experimental setting: `delta = 1 / (1000 * |S_tar|)`.
+    PaperDefault,
+    /// The theoretical setting of Theorems 1–2: `delta = n^-3`.
+    NCubed,
+    /// Explicit value (the Appendix-2.3 approximate-BanditPAM knob:
+    /// larger `delta` trades clustering fidelity for fewer evaluations).
+    Fixed(f64),
+}
+
+impl DeltaMode {
+    /// Resolve to a concrete probability for a call with `n_targets` arms
+    /// over a dataset of `n` points.
+    pub fn resolve(&self, n_targets: usize, n: usize) -> f64 {
+        match self {
+            DeltaMode::PaperDefault => 1.0 / (1000.0 * n_targets.max(1) as f64),
+            DeltaMode::NCubed => (n.max(2) as f64).powi(-3),
+            DeltaMode::Fixed(d) => *d,
+        }
+    }
+}
+
+/// Full configuration for a BanditPAM run.
+#[derive(Debug, Clone)]
+pub struct BanditPamConfig {
+    /// Reference batch size `B` (paper: 100).
+    pub batch_size: usize,
+    pub delta: DeltaMode,
+    /// Hard cap `T` on SWAP iterations (paper Remark 1; empirically O(k)).
+    pub max_swap_iters: usize,
+    pub sigma_mode: SigmaMode,
+    pub ci: CiKind,
+    pub sampling: SamplingMode,
+    /// Use the FastPAM1 decomposition in SWAP (paper §3.2 / Appendix 1.1).
+    /// Disabling it makes each (m, x) arm compute its own distance row —
+    /// the `abl-fastpam1` ablation.
+    pub fastpam1_swap: bool,
+    /// Record per-arm sigma estimates of every BUILD step (Appendix Fig 1).
+    pub record_sigmas: bool,
+    /// Minimum exact loss improvement required to accept a swap.
+    pub swap_tolerance: f64,
+}
+
+impl Default for BanditPamConfig {
+    fn default() -> Self {
+        BanditPamConfig {
+            batch_size: 100,
+            delta: DeltaMode::PaperDefault,
+            max_swap_iters: 100,
+            sigma_mode: SigmaMode::PerArmFirstBatch,
+            ci: CiKind::Hoeffding,
+            // Fixed-permutation reference sampling (the paper's Appendix
+            // 2.2 "fixed ordering" idea): statistically equivalent batches,
+            // but when the permutation is exhausted the surviving arms'
+            // running means are *exact*, so Algorithm 1's line-14 exact
+            // recomputation is free. `SamplingMode::WithReplacement` is the
+            // paper-literal variant (abl-cache ablation compares them).
+            sampling: SamplingMode::FixedPermutation,
+            fastpam1_swap: true,
+            record_sigmas: false,
+            swap_tolerance: 1e-12,
+        }
+    }
+}
+
+impl BanditPamConfig {
+    /// Adaptive-search knobs for a call with `n_targets` arms over `n`
+    /// points. BUILD searches always have a strictly-improving winner;
+    /// SWAP searches pass `early_stop` so a converged iteration terminates
+    /// after a few batches instead of exhausting all k(n-k) tied arms.
+    pub fn adaptive(
+        &self,
+        n_targets: usize,
+        n: usize,
+        early_stop: Option<f64>,
+    ) -> crate::bandits::adaptive::AdaptiveConfig {
+        crate::bandits::adaptive::AdaptiveConfig {
+            batch_size: self.batch_size,
+            delta: self.delta.resolve(n_targets, n),
+            sigma_mode: self.sigma_mode,
+            ci: self.ci,
+            sampling: self.sampling,
+            early_stop_above: early_stop,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delta_modes_resolve() {
+        assert!((DeltaMode::PaperDefault.resolve(500, 1000) - 1.0 / 500_000.0).abs() < 1e-15);
+        assert!((DeltaMode::NCubed.resolve(10, 100) - 1e-6).abs() < 1e-12);
+        assert_eq!(DeltaMode::Fixed(0.05).resolve(10, 100), 0.05);
+    }
+
+    #[test]
+    fn delta_degenerate_inputs() {
+        assert!(DeltaMode::PaperDefault.resolve(0, 0) > 0.0);
+        assert!(DeltaMode::NCubed.resolve(0, 0) > 0.0);
+    }
+
+    #[test]
+    fn default_config_matches_paper() {
+        let c = BanditPamConfig::default();
+        assert_eq!(c.batch_size, 100);
+        assert_eq!(c.delta, DeltaMode::PaperDefault);
+        assert!(c.fastpam1_swap);
+        let a = c.adaptive(200, 1000, None);
+        assert_eq!(a.batch_size, 100);
+        assert!((a.delta - 1.0 / 200_000.0).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,25 @@
+//! The BanditPAM coordinator: the paper's system contribution.
+//!
+//! PAM's trajectory is a sequence of argmin searches — k BUILD assignments
+//! (Eq. 6) followed by SWAP iterations (Eq. 7) until convergence. The
+//! coordinator runs each of those searches through the bandit engine
+//! ([`crate::bandits::adaptive`], Algorithm 1):
+//!
+//! * [`state`]   — the d₁/d₂/assignment cache PAM's recurrences rely on;
+//! * [`arms`]    — the two arm sets: BUILD candidates, and SWAP
+//!   (medoid, candidate) pairs with the FastPAM1 row-sharing (Eq. 12);
+//! * [`scheduler`] — batches arm pulls into deduplicated dense distance
+//!   blocks for the backend (this is where the XLA tile shape comes from);
+//! * [`build`] / [`swap`] — one PAM step each, as a bandit search;
+//! * [`banditpam`] — the public driver implementing
+//!   [`crate::algorithms::KMedoids`];
+//! * [`config`]  — all tunables (B, delta, sigma mode, CI kind, sampling
+//!   mode, swap cap T, instrumentation).
+
+pub mod arms;
+pub mod banditpam;
+pub mod build;
+pub mod config;
+pub mod scheduler;
+pub mod state;
+pub mod swap;

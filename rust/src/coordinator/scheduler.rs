@@ -1,0 +1,93 @@
+//! Batching scheduler: turns arm-pull requests into deduplicated dense
+//! distance blocks.
+//!
+//! Algorithm 1 evaluates every live arm against one shared reference batch.
+//! In the SWAP step each arm is a (medoid, candidate) *pair* but — per the
+//! FastPAM1 decomposition — its g-values depend on the backend only through
+//! the candidate's distance row. The scheduler therefore deduplicates
+//! candidates before dispatching one `[unique_candidates x batch]` block to
+//! the backend (native: threaded kernels; XLA: padded PJRT tiles). This is
+//! the step that realizes the paper's O(k) SWAP saving and the MXU-shaped
+//! workload described in DESIGN.md §Hardware-Adaptation.
+
+use crate::runtime::backend::DistanceBackend;
+use std::collections::HashMap;
+
+/// A deduplicated block request: unique point ids and, for each original
+/// request, the row of the block it maps to.
+#[derive(Debug)]
+pub struct Dedup {
+    pub unique: Vec<usize>,
+    pub row_of: Vec<usize>,
+}
+
+/// Deduplicate `requested` point ids, preserving first-seen order.
+pub fn dedup(requested: &[usize]) -> Dedup {
+    let mut index: HashMap<usize, usize> = HashMap::with_capacity(requested.len());
+    let mut unique = Vec::new();
+    let mut row_of = Vec::with_capacity(requested.len());
+    for &p in requested {
+        let row = *index.entry(p).or_insert_with(|| {
+            unique.push(p);
+            unique.len() - 1
+        });
+        row_of.push(row);
+    }
+    Dedup { unique, row_of }
+}
+
+/// Evaluate the distance block for (possibly duplicated) `targets` over
+/// `refs`, computing each unique target row once. Returns the *unique*
+/// block (row-major `[unique x refs]`) plus the row map.
+pub fn block_dedup(
+    backend: &dyn DistanceBackend,
+    targets: &[usize],
+    refs: &[usize],
+    scratch: &mut Vec<f64>,
+) -> Dedup {
+    let d = dedup(targets);
+    scratch.resize(d.unique.len() * refs.len(), 0.0);
+    backend.block(&d.unique, refs, scratch);
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::distance::Metric;
+    use crate::runtime::backend::NativeBackend;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dedup_preserves_order_and_maps_rows() {
+        let d = dedup(&[5, 3, 5, 7, 3]);
+        assert_eq!(d.unique, vec![5, 3, 7]);
+        assert_eq!(d.row_of, vec![0, 1, 0, 2, 1]);
+    }
+
+    #[test]
+    fn dedup_of_unique_input_is_identity() {
+        let d = dedup(&[1, 2, 3]);
+        assert_eq!(d.unique, vec![1, 2, 3]);
+        assert_eq!(d.row_of, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn block_dedup_counts_unique_rows_only() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(3), 20, 4, 2, 2.0);
+        let b = NativeBackend::new(&ds.points, Metric::L2);
+        let targets = [4usize, 4, 4, 9, 9]; // 2 unique
+        let refs: Vec<usize> = (0..10).collect();
+        let mut scratch = Vec::new();
+        let d = block_dedup(&b, &targets, &refs, &mut scratch);
+        assert_eq!(d.unique.len(), 2);
+        assert_eq!(b.counter().get(), 2 * 10, "only unique rows evaluated");
+        // mapped rows reproduce the duplicated view
+        for (req, &row) in targets.iter().zip(&d.row_of) {
+            for (ri, &r) in refs.iter().enumerate() {
+                assert_eq!(scratch[row * refs.len() + ri], b.dist(*req, r));
+            }
+        }
+    }
+}

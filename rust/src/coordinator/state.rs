@@ -1,0 +1,188 @@
+//! Medoid state cache: nearest / second-nearest medoid distances.
+//!
+//! PAM's recurrences (paper Eqs. 4–5) and the FastPAM1 decomposition
+//! (Eq. 12) need, for every point j, the distance to its nearest medoid
+//! (`d1`), which medoid that is (`a1`), and the distance to the second
+//! nearest (`d2`). This cache is maintained incrementally: adding a medoid
+//! costs n evaluations; a swap triggers a full rebuild (n·k evaluations,
+//! the O(n) bookkeeping Theorem 1's `4n` term accounts for).
+
+use crate::runtime::backend::DistanceBackend;
+
+/// d₁/a₁/d₂ cache for a (possibly growing) medoid set.
+#[derive(Debug, Clone)]
+pub struct MedoidState {
+    pub medoids: Vec<usize>,
+    /// Distance from each point to its nearest medoid (`+inf` when none).
+    pub d1: Vec<f64>,
+    /// Index *into `medoids`* of each point's nearest medoid.
+    pub a1: Vec<usize>,
+    /// Distance to the second-nearest medoid (`+inf` with < 2 medoids).
+    pub d2: Vec<f64>,
+}
+
+impl MedoidState {
+    /// Empty state over `n` points.
+    pub fn empty(n: usize) -> MedoidState {
+        MedoidState {
+            medoids: Vec::new(),
+            d1: vec![f64::INFINITY; n],
+            a1: vec![usize::MAX; n],
+            d2: vec![f64::INFINITY; n],
+        }
+    }
+
+    /// Number of medoids.
+    pub fn k(&self) -> usize {
+        self.medoids.len()
+    }
+
+    /// Current loss (Eq. 1): sum of nearest-medoid distances.
+    pub fn loss(&self) -> f64 {
+        self.d1.iter().sum()
+    }
+
+    /// Append a new medoid, updating the cache with n evaluations.
+    pub fn add_medoid(&mut self, backend: &dyn DistanceBackend, m: usize) {
+        let pos = self.medoids.len();
+        self.medoids.push(m);
+        let n = backend.n();
+        let refs: Vec<usize> = (0..n).collect();
+        let mut row = vec![0.0f64; n];
+        backend.block(&[m], &refs, &mut row);
+        for (j, &d) in row.iter().enumerate() {
+            if d < self.d1[j] {
+                self.d2[j] = self.d1[j];
+                self.d1[j] = d;
+                self.a1[j] = pos;
+            } else if d < self.d2[j] {
+                self.d2[j] = d;
+            }
+        }
+    }
+
+    /// Replace `medoids[pos]` with point `x` and rebuild the cache
+    /// (n·k evaluations).
+    pub fn apply_swap(&mut self, backend: &dyn DistanceBackend, pos: usize, x: usize) {
+        assert!(pos < self.medoids.len());
+        self.medoids[pos] = x;
+        self.rebuild(backend);
+    }
+
+    /// Recompute d₁/a₁/d₂ from scratch for the current medoid set.
+    pub fn rebuild(&mut self, backend: &dyn DistanceBackend) {
+        let n = backend.n();
+        let k = self.medoids.len();
+        self.d1.iter_mut().for_each(|v| *v = f64::INFINITY);
+        self.d2.iter_mut().for_each(|v| *v = f64::INFINITY);
+        self.a1.iter_mut().for_each(|v| *v = usize::MAX);
+        if k == 0 {
+            return;
+        }
+        let refs: Vec<usize> = (0..n).collect();
+        let mut rows = vec![0.0f64; k * n];
+        backend.block(&self.medoids, &refs, &mut rows);
+        for (pos, row) in rows.chunks(n).enumerate() {
+            for (j, &d) in row.iter().enumerate() {
+                if d < self.d1[j] {
+                    self.d2[j] = self.d1[j];
+                    self.d1[j] = d;
+                    self.a1[j] = pos;
+                } else if d < self.d2[j] {
+                    self.d2[j] = d;
+                }
+            }
+        }
+    }
+
+    /// Debug invariant: d1 <= d2, a1 valid, d1 is the true minimum.
+    #[cfg(any(test, feature = "strict"))]
+    pub fn check_invariants(&self, backend: &dyn DistanceBackend) {
+        for j in 0..backend.n() {
+            assert!(self.d1[j] <= self.d2[j] + 1e-9, "d1 > d2 at {j}");
+            if self.k() > 0 {
+                assert!(self.a1[j] < self.k());
+                let true_min = self
+                    .medoids
+                    .iter()
+                    .map(|&m| backend.dist(m, j))
+                    .fold(f64::INFINITY, f64::min);
+                assert!(
+                    (self.d1[j] - true_min).abs() < 1e-9,
+                    "stale d1 at {j}: {} vs {}",
+                    self.d1[j],
+                    true_min
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::distance::Metric;
+    use crate::runtime::backend::NativeBackend;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (crate::data::Dataset, ()) {
+        (synthetic::gmm(&mut Rng::seed_from(5), 30, 4, 3, 3.0), ())
+    }
+
+    #[test]
+    fn add_medoid_maintains_invariants() {
+        let (ds, _) = setup();
+        let b = NativeBackend::new(&ds.points, Metric::L2);
+        let mut st = MedoidState::empty(30);
+        for &m in &[3, 17, 9] {
+            st.add_medoid(&b, m);
+            st.check_invariants(&b);
+        }
+        assert_eq!(st.k(), 3);
+        // medoid points have d1 == 0 and are assigned to themselves
+        assert_eq!(st.d1[3], 0.0);
+        assert_eq!(st.medoids[st.a1[17]], 17);
+    }
+
+    #[test]
+    fn loss_decreases_as_medoids_are_added() {
+        let (ds, _) = setup();
+        let b = NativeBackend::new(&ds.points, Metric::L2);
+        let mut st = MedoidState::empty(30);
+        st.add_medoid(&b, 0);
+        let l1 = st.loss();
+        st.add_medoid(&b, 15);
+        let l2 = st.loss();
+        assert!(l2 <= l1);
+    }
+
+    #[test]
+    fn swap_rebuild_matches_fresh_state() {
+        let (ds, _) = setup();
+        let b = NativeBackend::new(&ds.points, Metric::L2);
+        let mut st = MedoidState::empty(30);
+        st.add_medoid(&b, 0);
+        st.add_medoid(&b, 1);
+        st.apply_swap(&b, 0, 20);
+        st.check_invariants(&b);
+        let mut fresh = MedoidState::empty(30);
+        fresh.add_medoid(&b, 20);
+        fresh.add_medoid(&b, 1);
+        for j in 0..30 {
+            assert!((st.d1[j] - fresh.d1[j]).abs() < 1e-12);
+            assert!(
+                (st.d2[j] - fresh.d2[j]).abs() < 1e-12
+                    || (st.d2[j].is_infinite() && fresh.d2[j].is_infinite())
+            );
+        }
+        assert!((st.loss() - fresh.loss()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_state_has_infinite_loss_components() {
+        let st = MedoidState::empty(5);
+        assert_eq!(st.k(), 0);
+        assert!(st.loss().is_infinite());
+    }
+}

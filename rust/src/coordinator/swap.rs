@@ -1,0 +1,102 @@
+//! One SWAP iteration (paper Eq. 7) as a bandit search.
+
+use crate::bandits::adaptive::{adaptive_search, AdaptiveOutcome, ArmSet};
+use crate::coordinator::arms::SwapArms;
+use crate::coordinator::config::BanditPamConfig;
+use crate::coordinator::state::MedoidState;
+use crate::runtime::backend::DistanceBackend;
+use crate::util::rng::Rng;
+
+/// Outcome of one SWAP iteration.
+#[derive(Debug)]
+pub struct SwapStep {
+    /// `Some((medoid_position, new_point))` when an improving swap was
+    /// found and applied; `None` when PAM has converged.
+    pub applied: Option<(usize, usize)>,
+    /// Exact mean loss delta of the best arm (negative = improvement).
+    pub best_delta: f64,
+    pub outcome: AdaptiveOutcome,
+}
+
+/// Find the best (medoid, candidate) swap with Algorithm 1; verify the
+/// winner's exact loss delta; apply it when it improves by more than
+/// `cfg.swap_tolerance`.
+pub fn swap_step(
+    backend: &dyn DistanceBackend,
+    state: &mut MedoidState,
+    cfg: &BanditPamConfig,
+    rng: &mut Rng,
+) -> SwapStep {
+    let (m_pos, x, best_delta, outcome) = {
+        let mut arms = SwapArms::new(backend, state, cfg.fastpam1_swap);
+        let acfg = cfg.adaptive(arms.n_arms(), backend.n(), Some(-cfg.swap_tolerance));
+        let outcome = adaptive_search(&mut arms, &acfg, rng);
+        // Verify exactly before committing (n evaluations) — the sampled
+        // estimate can be noisy near convergence, and PAM's termination
+        // rule ("swap while it improves") needs the true sign.
+        let best_delta = arms.exact(outcome.best);
+        let (x, m_pos) = arms.decode(outcome.best);
+        (m_pos, x, best_delta, outcome)
+    };
+    if best_delta < -cfg.swap_tolerance {
+        state.apply_swap(backend, m_pos, x);
+        SwapStep { applied: Some((m_pos, x)), best_delta, outcome }
+    } else {
+        SwapStep { applied: None, best_delta, outcome }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::build::build_phase;
+    use crate::data::synthetic;
+    use crate::distance::Metric;
+    use crate::runtime::backend::NativeBackend;
+
+    #[test]
+    fn swap_never_increases_loss() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(11), 50, 4, 3, 3.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let mut state = MedoidState::empty(50);
+        let mut rng = Rng::seed_from(2);
+        let cfg = BanditPamConfig::default();
+        // deliberately bad init: first 3 points
+        for m in 0..3 {
+            state.add_medoid(&backend, m);
+        }
+        let mut prev = state.loss();
+        for _ in 0..10 {
+            let step = swap_step(&backend, &mut state, &cfg, &mut rng);
+            let now = state.loss();
+            assert!(now <= prev + 1e-9, "loss increased: {prev} -> {now}");
+            prev = now;
+            if step.applied.is_none() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn converged_state_reports_no_swap() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(12), 40, 4, 2, 5.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let mut state = MedoidState::empty(40);
+        let mut rng = Rng::seed_from(3);
+        let cfg = BanditPamConfig::default();
+        build_phase(&backend, &mut state, 2, &cfg, &mut rng);
+        // run to convergence
+        let mut converged = false;
+        for _ in 0..20 {
+            if swap_step(&backend, &mut state, &cfg, &mut rng).applied.is_none() {
+                converged = true;
+                break;
+            }
+        }
+        assert!(converged);
+        // a converged state must again report no swap
+        let again = swap_step(&backend, &mut state, &cfg, &mut rng);
+        assert!(again.applied.is_none());
+        assert!(again.best_delta >= -1e-9);
+    }
+}

@@ -1,0 +1,303 @@
+//! HOC4-like abstract syntax trees and their generator.
+//!
+//! The paper's HOC4 dataset is 3,360 unique student solutions to the
+//! fourth Hour-of-Code exercise on Code.org, represented as ASTs and
+//! compared with tree edit distance. The raw corpus is not publicly
+//! downloadable, so we generate a statistically analogous corpus: a small
+//! block-language grammar (the Hour-of-Code blocks: move/turn/repeat/if),
+//! a handful of canonical "solution" prototypes, and a mutation process
+//! that produces a cloud of variants around each prototype — mimicking the
+//! real corpus's structure of a few correct solutions plus thousands of
+//! near-miss variants.
+
+use crate::util::rng::Rng;
+
+/// An ordered, labelled tree (AST node).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tree {
+    pub label: u32,
+    pub children: Vec<Tree>,
+}
+
+/// Block-language vocabulary (labels for [`Tree::label`]).
+pub mod blocks {
+    pub const PROGRAM: u32 = 0;
+    pub const MOVE_FORWARD: u32 = 1;
+    pub const TURN_LEFT: u32 = 2;
+    pub const TURN_RIGHT: u32 = 3;
+    pub const REPEAT: u32 = 4;
+    pub const IF_PATH_AHEAD: u32 = 5;
+    pub const IF_PATH_LEFT: u32 = 6;
+    pub const NUMBER_BASE: u32 = 16; // NUMBER_BASE + i encodes literal i
+
+    /// Printable name for a label.
+    pub fn name(label: u32) -> String {
+        match label {
+            PROGRAM => "program".into(),
+            MOVE_FORWARD => "move_forward".into(),
+            TURN_LEFT => "turn_left".into(),
+            TURN_RIGHT => "turn_right".into(),
+            REPEAT => "repeat".into(),
+            IF_PATH_AHEAD => "if_path_ahead".into(),
+            IF_PATH_LEFT => "if_path_left".into(),
+            n if n >= NUMBER_BASE => format!("{}", n - NUMBER_BASE),
+            n => format!("label{n}"),
+        }
+    }
+}
+
+impl Tree {
+    /// Leaf constructor.
+    pub fn leaf(label: u32) -> Tree {
+        Tree { label, children: vec![] }
+    }
+
+    /// Internal-node constructor.
+    pub fn node(label: u32, children: Vec<Tree>) -> Tree {
+        Tree { label, children }
+    }
+
+    /// Total number of nodes.
+    pub fn size(&self) -> usize {
+        1 + self.children.iter().map(Tree::size).sum::<usize>()
+    }
+
+    /// Depth (a single node has depth 1).
+    pub fn depth(&self) -> usize {
+        1 + self.children.iter().map(Tree::depth).max().unwrap_or(0)
+    }
+
+    /// S-expression rendering, e.g. `(program move_forward (repeat 4 ...))`.
+    pub fn render(&self) -> String {
+        if self.children.is_empty() {
+            blocks::name(self.label)
+        } else {
+            let ch: Vec<String> = self.children.iter().map(Tree::render).collect();
+            format!("({} {})", blocks::name(self.label), ch.join(" "))
+        }
+    }
+
+    /// Collect mutable pointers is not possible without unsafe; instead we
+    /// address nodes by preorder index for mutation.
+    fn count(&self) -> usize {
+        self.size()
+    }
+
+    fn get_mut(&mut self, idx: usize) -> Option<&mut Tree> {
+        fn walk<'a>(t: &'a mut Tree, idx: &mut usize) -> Option<&'a mut Tree> {
+            if *idx == 0 {
+                return Some(t);
+            }
+            *idx -= 1;
+            for c in &mut t.children {
+                if let Some(found) = walk(c, idx) {
+                    return Some(found);
+                }
+            }
+            None
+        }
+        let mut i = idx;
+        walk(self, &mut i)
+    }
+}
+
+/// Canonical "solutions" to the HOC4-like maze task.
+pub fn prototypes() -> Vec<Tree> {
+    use blocks::*;
+    vec![
+        // move, turn left, move, move
+        Tree::node(
+            PROGRAM,
+            vec![
+                Tree::leaf(MOVE_FORWARD),
+                Tree::leaf(TURN_LEFT),
+                Tree::leaf(MOVE_FORWARD),
+                Tree::leaf(MOVE_FORWARD),
+            ],
+        ),
+        // repeat 2 { move }, turn left, repeat 2 { move }
+        Tree::node(
+            PROGRAM,
+            vec![
+                Tree::node(
+                    REPEAT,
+                    vec![Tree::leaf(NUMBER_BASE + 2), Tree::leaf(MOVE_FORWARD)],
+                ),
+                Tree::leaf(TURN_LEFT),
+                Tree::node(
+                    REPEAT,
+                    vec![Tree::leaf(NUMBER_BASE + 2), Tree::leaf(MOVE_FORWARD)],
+                ),
+            ],
+        ),
+        // repeat 4 { if path-ahead { move } else-ish turn }
+        Tree::node(
+            PROGRAM,
+            vec![Tree::node(
+                REPEAT,
+                vec![
+                    Tree::leaf(NUMBER_BASE + 4),
+                    Tree::node(IF_PATH_AHEAD, vec![Tree::leaf(MOVE_FORWARD)]),
+                    Tree::node(IF_PATH_LEFT, vec![Tree::leaf(TURN_LEFT)]),
+                ],
+            )],
+        ),
+        // long literal solution
+        Tree::node(
+            PROGRAM,
+            vec![
+                Tree::leaf(MOVE_FORWARD),
+                Tree::leaf(MOVE_FORWARD),
+                Tree::leaf(TURN_RIGHT),
+                Tree::leaf(TURN_LEFT),
+                Tree::leaf(MOVE_FORWARD),
+                Tree::leaf(MOVE_FORWARD),
+            ],
+        ),
+    ]
+}
+
+const MUTATION_LABELS: &[u32] = &[
+    blocks::MOVE_FORWARD,
+    blocks::TURN_LEFT,
+    blocks::TURN_RIGHT,
+];
+
+/// Apply one random edit (relabel / insert-leaf / delete-leaf) in place.
+pub fn mutate(t: &mut Tree, rng: &mut Rng) {
+    let n = t.count();
+    match rng.below(3) {
+        0 => {
+            // relabel a random non-root node to a random action block
+            if n > 1 {
+                let idx = rng.range(1, n);
+                if let Some(node) = t.get_mut(idx) {
+                    if node.label != blocks::REPEAT && node.children.is_empty() {
+                        node.label = *rng.choose(MUTATION_LABELS);
+                    }
+                }
+            }
+        }
+        1 => {
+            // insert a new action leaf under a random internal-capable node
+            let idx = rng.below(n);
+            if let Some(node) = t.get_mut(idx) {
+                if node.label == blocks::PROGRAM || node.label == blocks::REPEAT {
+                    let pos = rng.below(node.children.len() + 1);
+                    node
+                        .children
+                        .insert(pos, Tree::leaf(*rng.choose(MUTATION_LABELS)));
+                }
+            }
+        }
+        _ => {
+            // delete a random leaf (never the root, keep >= 1 child)
+            let idx = rng.below(n);
+            if let Some(node) = t.get_mut(idx) {
+                if node.children.len() > 1 {
+                    let pos = rng.below(node.children.len());
+                    if node.children[pos].children.is_empty() {
+                        node.children.remove(pos);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Generate an HOC4-like corpus of `n` ASTs (and their prototype labels).
+///
+/// Each sample picks a prototype (geometric-ish popularity skew, like real
+/// student data where a few solutions dominate) and applies
+/// `Poisson(edit_rate)` random edits.
+pub fn generate(n: usize, edit_rate: f64, rng: &mut Rng) -> (Vec<Tree>, Vec<usize>) {
+    let protos = prototypes();
+    let mut trees = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    // popularity weights 8:4:2:1
+    let weights = [8usize, 4, 2, 1];
+    let total: usize = weights.iter().sum();
+    for _ in 0..n {
+        let mut pick = rng.below(total);
+        let mut proto_idx = 0;
+        for (i, &w) in weights.iter().enumerate() {
+            if pick < w {
+                proto_idx = i;
+                break;
+            }
+            pick -= w;
+        }
+        let mut t = protos[proto_idx].clone();
+        let edits = rng.poisson(edit_rate);
+        for _ in 0..edits {
+            mutate(&mut t, rng);
+        }
+        trees.push(t);
+        labels.push(proto_idx);
+    }
+    (trees, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_and_depth() {
+        let t = Tree::node(0, vec![Tree::leaf(1), Tree::node(2, vec![Tree::leaf(3)])]);
+        assert_eq!(t.size(), 4);
+        assert_eq!(t.depth(), 3);
+    }
+
+    #[test]
+    fn render_sexpr() {
+        let t = prototypes()[0].clone();
+        let s = t.render();
+        assert!(s.starts_with("(program"));
+        assert!(s.contains("move_forward"));
+    }
+
+    #[test]
+    fn prototypes_are_distinct() {
+        let ps = prototypes();
+        for i in 0..ps.len() {
+            for j in (i + 1)..ps.len() {
+                assert_ne!(ps[i], ps[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn mutate_keeps_valid_tree() {
+        let mut rng = Rng::seed_from(3);
+        let mut t = prototypes()[1].clone();
+        for _ in 0..200 {
+            mutate(&mut t, &mut rng);
+            assert_eq!(t.label, blocks::PROGRAM);
+            assert!(t.size() >= 1);
+            assert!(t.size() < 500, "runaway growth");
+        }
+    }
+
+    #[test]
+    fn generate_shapes_and_label_range() {
+        let mut rng = Rng::seed_from(4);
+        let (trees, labels) = generate(100, 2.0, &mut rng);
+        assert_eq!(trees.len(), 100);
+        assert_eq!(labels.len(), 100);
+        assert!(labels.iter().all(|&l| l < prototypes().len()));
+        // popularity skew: prototype 0 should dominate
+        let c0 = labels.iter().filter(|&&l| l == 0).count();
+        assert!(c0 > 30, "c0 = {c0}");
+    }
+
+    #[test]
+    fn zero_edit_rate_reproduces_prototypes() {
+        let mut rng = Rng::seed_from(5);
+        let (trees, labels) = generate(20, 0.0, &mut rng);
+        let ps = prototypes();
+        for (t, &l) in trees.iter().zip(&labels) {
+            assert_eq!(*t, ps[l]);
+        }
+    }
+}

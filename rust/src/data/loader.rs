@@ -1,0 +1,164 @@
+//! File loaders: CSV feature matrices and MNIST IDX images.
+//!
+//! The bench suite runs on the synthetic generators, but real data drops in
+//! via these loaders: `banditpam cluster --data points.csv` or an IDX file
+//! (`train-images-idx3-ubyte`) if the user supplies the original MNIST.
+
+use crate::data::Dataset;
+use crate::util::matrix::Matrix;
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+/// Load a headerless CSV of floats (rows = points).
+pub fn load_csv(path: &Path) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut rows: Vec<Vec<f32>> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let row: Result<Vec<f32>, _> =
+            line.split(',').map(|f| f.trim().parse::<f32>()).collect();
+        let row = row.with_context(|| format!("line {} of {}", lineno + 1, path.display()))?;
+        if let Some(first) = rows.first() {
+            if row.len() != first.len() {
+                bail!(
+                    "ragged CSV: line {} has {} fields, expected {}",
+                    lineno + 1,
+                    row.len(),
+                    first.len()
+                );
+            }
+        }
+        rows.push(row);
+    }
+    if rows.is_empty() {
+        bail!("empty CSV {}", path.display());
+    }
+    let (n, d) = (rows.len(), rows[0].len());
+    let flat: Vec<f32> = rows.into_iter().flatten().collect();
+    Ok(Dataset::dense(
+        Matrix::from_vec(flat, n, d),
+        path.display().to_string(),
+    ))
+}
+
+/// Save a dense dataset as CSV (row per point). Used by `generate-data`.
+pub fn save_csv(ds: &Dataset, path: &Path) -> Result<()> {
+    use std::io::Write;
+    let m = match &ds.points {
+        crate::data::Points::Dense(m) => m,
+        _ => bail!("save_csv supports dense datasets only"),
+    };
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    for i in 0..m.rows() {
+        let row: Vec<String> = m.row(i).iter().map(|v| format!("{v}")).collect();
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Load an MNIST IDX3 image file (magic 0x00000803) as flattened rows
+/// scaled to [0, 1]. `limit` caps the number of images read (0 = all).
+pub fn load_idx_images(path: &Path, limit: usize) -> Result<Dataset> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut header = [0u8; 16];
+    f.read_exact(&mut header).context("IDX header")?;
+    let magic = u32::from_be_bytes(header[0..4].try_into().unwrap());
+    if magic != 0x0000_0803 {
+        bail!("not an IDX3 image file (magic {magic:#x})");
+    }
+    let n = u32::from_be_bytes(header[4..8].try_into().unwrap()) as usize;
+    let h = u32::from_be_bytes(header[8..12].try_into().unwrap()) as usize;
+    let w = u32::from_be_bytes(header[12..16].try_into().unwrap()) as usize;
+    let take = if limit == 0 { n } else { limit.min(n) };
+    let mut buf = vec![0u8; take * h * w];
+    f.read_exact(&mut buf).context("IDX pixel data")?;
+    let data: Vec<f32> = buf.into_iter().map(|b| b as f32 / 255.0).collect();
+    Ok(Dataset::dense(
+        Matrix::from_vec(data, take, h * w),
+        format!("{}[{}]", path.display(), take),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Points;
+    use std::io::Write;
+
+    fn tmpfile(name: &str, contents: &[u8]) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("banditpam_test_{}_{name}", std::process::id()));
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(contents).unwrap();
+        p
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let p = tmpfile("a.csv", b"1.0,2.0\n3.5,4.5\n# comment\n\n5.0,6.0\n");
+        let d = load_csv(&p).unwrap();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.points.dim(), Some(2));
+        if let Points::Dense(m) = &d.points {
+            assert_eq!(m.get(1, 1), 4.5);
+        }
+        let out = tmpfile("b.csv", b"");
+        save_csv(&d, &out).unwrap();
+        let d2 = load_csv(&out).unwrap();
+        if let (Points::Dense(a), Points::Dense(b)) = (&d.points, &d2.points) {
+            assert_eq!(a.as_slice(), b.as_slice());
+        }
+        let _ = std::fs::remove_file(p);
+        let _ = std::fs::remove_file(out);
+    }
+
+    #[test]
+    fn ragged_csv_rejected() {
+        let p = tmpfile("ragged.csv", b"1,2\n3\n");
+        assert!(load_csv(&p).unwrap_err().to_string().contains("ragged"));
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn empty_csv_rejected() {
+        let p = tmpfile("empty.csv", b"\n# only comments\n");
+        assert!(load_csv(&p).is_err());
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn idx_loader_parses_synthetic_file() {
+        // 2 images of 2x3 pixels
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&0x0000_0803u32.to_be_bytes());
+        bytes.extend_from_slice(&2u32.to_be_bytes());
+        bytes.extend_from_slice(&2u32.to_be_bytes());
+        bytes.extend_from_slice(&3u32.to_be_bytes());
+        bytes.extend((0u8..12).map(|i| i * 20));
+        let p = tmpfile("images.idx", &bytes);
+        let d = load_idx_images(&p, 0).unwrap();
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.points.dim(), Some(6));
+        if let Points::Dense(m) = &d.points {
+            assert!((m.get(0, 1) - 20.0 / 255.0).abs() < 1e-6);
+        }
+        let limited = load_idx_images(&p, 1).unwrap();
+        assert_eq!(limited.len(), 1);
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn idx_loader_rejects_bad_magic() {
+        let p = tmpfile("bad.idx", &[0u8; 16]);
+        assert!(load_idx_images(&p, 0).is_err());
+        let _ = std::fs::remove_file(p);
+    }
+}

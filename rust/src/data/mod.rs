@@ -1,0 +1,150 @@
+//! Dataset abstraction and the synthetic stand-ins for the paper's corpora.
+//!
+//! The paper evaluates on MNIST (l2/cosine), the 10x Genomics 68k PBMC
+//! scRNA-seq dataset (l1), its 10-PC projection (l2), and HOC4 Code.org
+//! abstract syntax trees (tree edit distance). None of those are available
+//! offline, so [`synthetic`], [`ast`] and [`pca`] generate statistical
+//! equivalents — see DESIGN.md §Substitutions for the preservation
+//! argument (Theorems 1–2 depend on the data only through the arm-mean and
+//! sigma distributions).
+
+pub mod ast;
+pub mod loader;
+pub mod pca;
+pub mod synthetic;
+
+use crate::util::matrix::Matrix;
+use ast::Tree;
+
+/// Point storage: dense feature vectors or ASTs.
+#[derive(Debug, Clone)]
+pub enum Points {
+    /// `n x d` dense matrix (one point per row).
+    Dense(Matrix),
+    /// Ordered labelled trees (HOC4-like).
+    Trees(Vec<Tree>),
+}
+
+impl Points {
+    /// Number of points.
+    pub fn len(&self) -> usize {
+        match self {
+            Points::Dense(m) => m.rows(),
+            Points::Trees(t) => t.len(),
+        }
+    }
+
+    /// True when there are no points.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Feature dimensionality (dense only).
+    pub fn dim(&self) -> Option<usize> {
+        match self {
+            Points::Dense(m) => Some(m.cols()),
+            Points::Trees(_) => None,
+        }
+    }
+
+    /// Storage kind name for error messages.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Points::Dense(_) => "dense",
+            Points::Trees(_) => "trees",
+        }
+    }
+}
+
+/// A dataset: points plus (for synthetic data) ground-truth component
+/// labels, used by the examples to report cluster purity.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub points: Points,
+    /// Generating component of each point, when known.
+    pub labels: Option<Vec<usize>>,
+    /// Human-readable provenance (e.g. "mnist_like(n=1000, seed=7)").
+    pub name: String,
+}
+
+impl Dataset {
+    /// Wrap a dense matrix with no labels.
+    pub fn dense(m: Matrix, name: impl Into<String>) -> Dataset {
+        Dataset { points: Points::Dense(m), labels: None, name: name.into() }
+    }
+
+    /// Wrap existing points with no labels (name "anonymous").
+    pub fn dense_from_points(points: Points) -> Dataset {
+        Dataset { points, labels: None, name: "anonymous".into() }
+    }
+
+    /// Number of points.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Subsample `n` points uniformly without replacement (the paper's
+    /// experimental protocol subsamples each dataset per repetition).
+    pub fn subsample(&self, n: usize, rng: &mut crate::util::rng::Rng) -> Dataset {
+        assert!(n <= self.len(), "subsample({n}) > len({})", self.len());
+        let idx = rng.sample_indices(self.len(), n);
+        self.select(&idx)
+    }
+
+    /// Select points by index.
+    pub fn select(&self, idx: &[usize]) -> Dataset {
+        let points = match &self.points {
+            Points::Dense(m) => Points::Dense(m.select_rows(idx)),
+            Points::Trees(t) => {
+                Points::Trees(idx.iter().map(|&i| t[i].clone()).collect())
+            }
+        };
+        let labels = self
+            .labels
+            .as_ref()
+            .map(|l| idx.iter().map(|&i| l[i]).collect());
+        Dataset { points, labels, name: format!("{}[sub {}]", self.name, idx.len()) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn len_and_dim() {
+        let d = Dataset::dense(Matrix::zeros(5, 3), "z");
+        assert_eq!(d.len(), 5);
+        assert_eq!(d.points.dim(), Some(3));
+        assert!(!d.is_empty());
+    }
+
+    #[test]
+    fn subsample_preserves_labels() {
+        let m = Matrix::from_fn(10, 2, |i, _| i as f32);
+        let mut d = Dataset::dense(m, "t");
+        d.labels = Some((0..10).collect());
+        let mut rng = Rng::seed_from(1);
+        let s = d.subsample(4, &mut rng);
+        assert_eq!(s.len(), 4);
+        let labels = s.labels.unwrap();
+        if let Points::Dense(m) = &s.points {
+            for (r, &lab) in labels.iter().enumerate() {
+                assert_eq!(m.get(r, 0) as usize, lab);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "subsample")]
+    fn oversample_panics() {
+        let d = Dataset::dense(Matrix::zeros(3, 1), "t");
+        d.subsample(4, &mut Rng::seed_from(0));
+    }
+}

@@ -1,0 +1,168 @@
+//! PCA via block power iteration (for the scRNA-PCA dataset, Appendix 1.3).
+//!
+//! Computes the top-`k` principal components of a centered `n x d` matrix
+//! without forming the `d x d` covariance: each iteration applies
+//! `v <- X^T (X v) / n` (O(n d k) per sweep) followed by Gram–Schmidt
+//! re-orthonormalization. Enough accuracy for a dataset projection —
+//! downstream only the *distribution* of projected distances matters.
+
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Project the rows of `m` onto the top `k` principal components.
+/// Returns an `n x k` matrix of scores.
+pub fn project(m: &Matrix, k: usize, rng: &mut Rng) -> Matrix {
+    let comps = components(m, k, rng, 40);
+    let means = m.col_means();
+    let (n, d) = (m.rows(), m.cols());
+    let mut out = Matrix::zeros(n, k);
+    for i in 0..n {
+        let row = m.row(i);
+        for (c, comp) in comps.iter().enumerate() {
+            let mut s = 0.0f64;
+            for j in 0..d {
+                s += (row[j] as f64 - means[j]) * comp[j];
+            }
+            out.set(i, c, s as f32);
+        }
+    }
+    out
+}
+
+/// Top-`k` principal directions (unit d-vectors), via block power iteration.
+pub fn components(m: &Matrix, k: usize, rng: &mut Rng, sweeps: usize) -> Vec<Vec<f64>> {
+    let (n, d) = (m.rows(), m.cols());
+    assert!(k <= d, "k={k} > d={d}");
+    let means = m.col_means();
+    // centered row access closure cost is dominated by the matvec anyway
+    let mut basis: Vec<Vec<f64>> =
+        (0..k).map(|_| (0..d).map(|_| rng.normal()).collect()).collect();
+    orthonormalize(&mut basis);
+    let mut scores = vec![0.0f64; n];
+    for _ in 0..sweeps {
+        for v in basis.iter_mut() {
+            // scores = X v (centered)
+            for (i, s) in scores.iter_mut().enumerate() {
+                let row = m.row(i);
+                let mut acc = 0.0;
+                for j in 0..d {
+                    acc += (row[j] as f64 - means[j]) * v[j];
+                }
+                *s = acc;
+            }
+            // v = X^T scores
+            v.iter_mut().for_each(|x| *x = 0.0);
+            for (i, &s) in scores.iter().enumerate() {
+                if s == 0.0 {
+                    continue;
+                }
+                let row = m.row(i);
+                for j in 0..d {
+                    v[j] += (row[j] as f64 - means[j]) * s;
+                }
+            }
+        }
+        orthonormalize(&mut basis);
+    }
+    basis
+}
+
+/// Modified Gram–Schmidt in place; re-randomizes degenerate vectors is not
+/// needed for our use (random init, k << d).
+fn orthonormalize(vs: &mut [Vec<f64>]) {
+    for i in 0..vs.len() {
+        for j in 0..i {
+            let dot: f64 = vs[i].iter().zip(&vs[j]).map(|(a, b)| a * b).sum();
+            let (head, tail) = vs.split_at_mut(i);
+            tail[0]
+                .iter_mut()
+                .zip(&head[j])
+                .for_each(|(a, b)| *a -= dot * b);
+        }
+        let norm: f64 = vs[i].iter().map(|a| a * a).sum::<f64>().sqrt();
+        if norm > 1e-12 {
+            vs[i].iter_mut().for_each(|a| *a /= norm);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Data stretched along a known direction: PC1 must recover it.
+    #[test]
+    fn recovers_dominant_direction() {
+        let mut rng = Rng::seed_from(7);
+        let d = 8;
+        let n = 400;
+        let dir: Vec<f64> = {
+            let mut v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            let norm = v.iter().map(|a| a * a).sum::<f64>().sqrt();
+            v.iter_mut().for_each(|a| *a /= norm);
+            v
+        };
+        let mut m = Matrix::zeros(n, d);
+        for i in 0..n {
+            let t = rng.normal() * 10.0; // big variance along dir
+            for j in 0..d {
+                m.set(i, j, (t * dir[j] + rng.normal() * 0.1) as f32);
+            }
+        }
+        let comps = components(&m, 1, &mut rng, 30);
+        let cos: f64 = comps[0].iter().zip(&dir).map(|(a, b)| a * b).sum();
+        assert!(cos.abs() > 0.99, "cos = {cos}");
+    }
+
+    #[test]
+    fn components_are_orthonormal() {
+        let mut rng = Rng::seed_from(8);
+        let m = Matrix::from_fn(100, 6, |_, _| rng.normal() as f32);
+        let comps = components(&m, 3, &mut rng, 20);
+        for i in 0..3 {
+            let n: f64 = comps[i].iter().map(|a| a * a).sum();
+            assert!((n - 1.0).abs() < 1e-8, "norm {n}");
+            for j in 0..i {
+                let dot: f64 = comps[i].iter().zip(&comps[j]).map(|(a, b)| a * b).sum();
+                assert!(dot.abs() < 1e-6, "dot {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn projection_shape_and_centering() {
+        let mut rng = Rng::seed_from(9);
+        let m = Matrix::from_fn(50, 12, |_, _| (rng.normal() + 5.0) as f32);
+        let p = project(&m, 4, &mut rng);
+        assert_eq!(p.rows(), 50);
+        assert_eq!(p.cols(), 4);
+        // projected scores are centered (mean ~ 0 per component)
+        for c in 0..4 {
+            let mean: f64 =
+                (0..50).map(|i| p.get(i, c) as f64).sum::<f64>() / 50.0;
+            assert!(mean.abs() < 0.5, "mean {mean}");
+        }
+    }
+
+    #[test]
+    fn variance_explained_is_decreasing() {
+        let mut rng = Rng::seed_from(10);
+        // anisotropic data: variance 9, 4, 1 in first three axes
+        let mut m = Matrix::zeros(300, 5);
+        for i in 0..300 {
+            m.set(i, 0, (rng.normal() * 3.0) as f32);
+            m.set(i, 1, (rng.normal() * 2.0) as f32);
+            m.set(i, 2, rng.normal() as f32);
+        }
+        let p = project(&m, 3, &mut rng);
+        let var = |c: usize| -> f64 {
+            let mean: f64 = (0..300).map(|i| p.get(i, c) as f64).sum::<f64>() / 300.0;
+            (0..300)
+                .map(|i| (p.get(i, c) as f64 - mean).powi(2))
+                .sum::<f64>()
+                / 300.0
+        };
+        assert!(var(0) > var(1));
+        assert!(var(1) > var(2));
+    }
+}

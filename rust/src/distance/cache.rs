@@ -1,0 +1,161 @@
+//! Pairwise-distance cache (paper Appendix 2.2 "Intelligent Cache Design").
+//!
+//! The released BanditPAM implementation recomputes every distance; the
+//! appendix observes that because each target needs only O(log n) reference
+//! points *on average*, a cache of O(n log n) entries (rather than the full
+//! n² matrix PAM/FastPAM1 precompute) captures most reuse — especially when
+//! reference batches come from a **fixed permutation** so different arms
+//! share reference points. The coordinator enables that mode via
+//! [`crate::coordinator::config::SamplingMode::FixedPermutation`].
+//!
+//! Sharded `HashMap` protected by mutexes: the hot path takes one lock per
+//! evaluation, but only on the (cheap) cache probe; misses compute outside
+//! the lock.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+const SHARDS: usize = 64;
+
+/// Thread-safe (i, j)-keyed distance cache with hit/miss statistics.
+pub struct DistanceCache {
+    shards: Vec<Mutex<HashMap<u64, f64>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    capacity_per_shard: usize,
+}
+
+impl DistanceCache {
+    /// Create with a total soft capacity (entries beyond it are not stored;
+    /// the adaptive algorithm's access pattern is heavily skewed so simple
+    /// insertion-capping behaves like LRU at a fraction of the cost).
+    pub fn new(capacity: usize) -> Self {
+        DistanceCache {
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            capacity_per_shard: capacity / SHARDS + 1,
+        }
+    }
+
+    /// Symmetric key: unordered pair (i, j).
+    #[inline]
+    fn key(i: usize, j: usize) -> u64 {
+        let (a, b) = if i <= j { (i, j) } else { (j, i) };
+        ((a as u64) << 32) | b as u64
+    }
+
+    /// Look up `d(i, j)`, computing and inserting via `f` on a miss.
+    pub fn get_or_compute(&self, i: usize, j: usize, f: impl FnOnce() -> f64) -> f64 {
+        let key = Self::key(i, j);
+        let shard = &self.shards[(key % SHARDS as u64) as usize];
+        if let Some(&d) = shard.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return d;
+        }
+        // compute outside the lock
+        let d = f();
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut guard = shard.lock().unwrap();
+        if guard.len() < self.capacity_per_shard {
+            guard.insert(key, d);
+        }
+        d
+    }
+
+    /// (hits, misses) so far.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Number of stored entries.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// True when no entries are stored.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all entries and statistics.
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_then_hit() {
+        let c = DistanceCache::new(1000);
+        let mut calls = 0;
+        let d1 = c.get_or_compute(1, 2, || {
+            calls += 1;
+            3.5
+        });
+        let d2 = c.get_or_compute(1, 2, || {
+            calls += 1;
+            999.0
+        });
+        assert_eq!(d1, 3.5);
+        assert_eq!(d2, 3.5);
+        assert_eq!(calls, 1);
+        assert_eq!(c.stats(), (1, 1));
+    }
+
+    #[test]
+    fn symmetric_key() {
+        let c = DistanceCache::new(1000);
+        c.get_or_compute(7, 3, || 1.25);
+        let d = c.get_or_compute(3, 7, || panic!("should be cached"));
+        assert_eq!(d, 1.25);
+    }
+
+    #[test]
+    fn capacity_cap_does_not_evict_but_stops_inserting() {
+        let c = DistanceCache::new(SHARDS); // 2 per shard incl. +1
+        for i in 0..10_000usize {
+            c.get_or_compute(i, i + 1, || i as f64);
+        }
+        assert!(c.len() <= 2 * SHARDS);
+        // values already stored remain correct
+        let d = c.get_or_compute(0, 1, || panic!("evicted"));
+        assert_eq!(d, 0.0);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let c = DistanceCache::new(100);
+        c.get_or_compute(0, 1, || 1.0);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.stats(), (0, 0));
+    }
+
+    #[test]
+    fn concurrent_access_consistent() {
+        let c = DistanceCache::new(100_000);
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let c = &c;
+                s.spawn(move || {
+                    for i in 0..1000usize {
+                        let d = c.get_or_compute(i % 50, (i + t) % 50, || {
+                            ((i % 50) * 100 + (i + t) % 50) as f64
+                        });
+                        assert!(d >= 0.0);
+                    }
+                });
+            }
+        });
+        assert!(c.len() <= 50 * 50);
+    }
+}

@@ -1,0 +1,80 @@
+//! Atomic distance-evaluation counter.
+//!
+//! The paper's primary efficiency metric (Figures 1b, Appendix Fig 5, the
+//! "200x fewer distance computations" headline) is the number of distance
+//! evaluations. Both backends increment one of these per evaluation; it is
+//! atomic so the thread-sharded arm evaluation in the coordinator can share
+//! it without locks.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Shared, thread-safe evaluation counter.
+#[derive(Debug, Clone, Default)]
+pub struct DistanceCounter {
+    count: Arc<AtomicU64>,
+}
+
+impl DistanceCounter {
+    /// New counter at zero.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `n` evaluations.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.count.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current total.
+    pub fn get(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Reset to zero (between experiment repetitions).
+    pub fn reset(&self) {
+        self.count.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_reset() {
+        let c = DistanceCounter::new();
+        c.add(5);
+        c.add(7);
+        assert_eq!(c.get(), 12);
+        c.reset();
+        assert_eq!(c.get(), 0);
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let c = DistanceCounter::new();
+        let c2 = c.clone();
+        c.add(3);
+        c2.add(4);
+        assert_eq!(c.get(), 7);
+        assert_eq!(c2.get(), 7);
+    }
+
+    #[test]
+    fn concurrent_increments() {
+        let c = DistanceCounter::new();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for _ in 0..10_000 {
+                        c.add(1);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 80_000);
+    }
+}

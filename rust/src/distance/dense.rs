@@ -1,0 +1,171 @@
+//! Optimized dense-vector distance kernels.
+//!
+//! This is the L3 hot path when the `NativeBackend` is active: a single
+//! BanditPAM run at n = 10k touches these functions tens of millions of
+//! times. The kernels accumulate in 16 independent f32 lanes (one AVX-512
+//! register / two AVX2 registers after autovectorization with
+//! `target-cpu=native`) and fold to f64 once at the end: 3.8x faster than
+//! f64-lane accumulation, with worst-case relative error (d/16)*f32-eps
+//! ~ 6e-6 at d = 784 — far below any clustering-relevant scale and applied
+//! identically by every algorithm (see EXPERIMENTS.md §Perf).
+
+/// Euclidean distance `||a - b||_2`.
+#[inline]
+pub fn l2(a: &[f32], b: &[f32]) -> f64 {
+    sq_l2(a, b).sqrt()
+}
+
+/// Squared Euclidean distance (no sqrt; used by PCA and k-means-style code).
+#[inline]
+pub fn sq_l2(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n16 = a.len() - a.len() % 16;
+    let mut acc = [0.0f32; 16];
+    for (ca, cb) in a[..n16].chunks_exact(16).zip(b[..n16].chunks_exact(16)) {
+        for l in 0..16 {
+            let d = ca[l] - cb[l];
+            acc[l] += d * d;
+        }
+    }
+    let mut s = acc.iter().map(|&v| v as f64).sum::<f64>();
+    for (x, y) in a[n16..].iter().zip(&b[n16..]) {
+        let d = (*x - *y) as f64;
+        s += d * d;
+    }
+    s
+}
+
+/// Manhattan distance `||a - b||_1` (same 16-lane f32 scheme as [`sq_l2`]).
+#[inline]
+pub fn l1(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n16 = a.len() - a.len() % 16;
+    let mut acc = [0.0f32; 16];
+    for (ca, cb) in a[..n16].chunks_exact(16).zip(b[..n16].chunks_exact(16)) {
+        for l in 0..16 {
+            acc[l] += (ca[l] - cb[l]).abs();
+        }
+    }
+    let mut s = acc.iter().map(|&v| v as f64).sum::<f64>();
+    for (x, y) in a[n16..].iter().zip(&b[n16..]) {
+        s += ((*x - *y) as f64).abs();
+    }
+    s
+}
+
+/// Cosine distance `1 - a.b / (|a| |b|)`. Zero vectors get distance 1
+/// (similarity 0), matching the Python oracle `ref.py`.
+#[inline]
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n16 = a.len() - a.len() % 16;
+    let mut dot = [0.0f32; 16];
+    let mut na = [0.0f32; 16];
+    let mut nb = [0.0f32; 16];
+    for (x, y) in a[..n16].chunks_exact(16).zip(b[..n16].chunks_exact(16)) {
+        for l in 0..16 {
+            dot[l] += x[l] * y[l];
+            na[l] += x[l] * x[l];
+            nb[l] += y[l] * y[l];
+        }
+    }
+    let mut d = dot.iter().map(|&v| v as f64).sum::<f64>();
+    let mut sa = na.iter().map(|&v| v as f64).sum::<f64>();
+    let mut sb = nb.iter().map(|&v| v as f64).sum::<f64>();
+    for (x, y) in a[n16..].iter().zip(&b[n16..]) {
+        let (xf, yf) = (*x as f64, *y as f64);
+        d += xf * yf;
+        sa += xf * xf;
+        sb += yf * yf;
+    }
+    let denom = (sa * sb).sqrt();
+    if denom > 0.0 {
+        1.0 - d / denom
+    } else {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_l2(a: &[f32], b: &[f32]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| ((x - y) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    fn naive_l1(a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| ((x - y) as f64).abs()).sum()
+    }
+
+    fn randvec(rng: &mut Rng, d: usize) -> Vec<f32> {
+        (0..d).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn pythagorean_triple() {
+        assert!((l2(&[0.0, 0.0], &[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert!((l1(&[0.0, 0.0], &[3.0, 4.0]) - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matches_naive_over_random_lengths() {
+        let mut rng = Rng::seed_from(11);
+        for d in [1, 3, 4, 7, 8, 31, 100, 784] {
+            let a = randvec(&mut rng, d);
+            let b = randvec(&mut rng, d);
+            // blocked-f32 accumulation: relative error bounded by ~1e-5
+            let t2 = 2e-5 * (1.0 + naive_l2(&a, &b));
+            let t1 = 2e-5 * (1.0 + naive_l1(&a, &b));
+            assert!((l2(&a, &b) - naive_l2(&a, &b)).abs() < t2, "d={d}");
+            assert!((l1(&a, &b) - naive_l1(&a, &b)).abs() < t1, "d={d}");
+        }
+    }
+
+    #[test]
+    fn cosine_bounds_and_identity() {
+        let mut rng = Rng::seed_from(12);
+        for d in [2, 5, 64] {
+            let a = randvec(&mut rng, d);
+            let b = randvec(&mut rng, d);
+            let c = cosine(&a, &b);
+            assert!((0.0..=2.0 + 1e-12).contains(&c), "c={c}");
+            assert!(cosine(&a, &a).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cosine_opposite_vectors() {
+        let a = [1.0f32, 0.0];
+        let b = [-1.0f32, 0.0];
+        assert!((cosine(&a, &b) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_zero_vector() {
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 1.0]), 1.0);
+        assert_eq!(cosine(&[0.0, 0.0], &[0.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn symmetry() {
+        let mut rng = Rng::seed_from(13);
+        let a = randvec(&mut rng, 33);
+        let b = randvec(&mut rng, 33);
+        assert_eq!(l2(&a, &b), l2(&b, &a));
+        assert_eq!(l1(&a, &b), l1(&b, &a));
+        assert!((cosine(&a, &b) - cosine(&b, &a)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn empty_vectors() {
+        assert_eq!(l2(&[], &[]), 0.0);
+        assert_eq!(l1(&[], &[]), 0.0);
+        assert_eq!(cosine(&[], &[]), 1.0);
+    }
+}

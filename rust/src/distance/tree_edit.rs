@@ -1,0 +1,219 @@
+//! Zhang–Shasha tree edit distance [46].
+//!
+//! Exact ordered-tree edit distance with unit insert/delete/relabel costs —
+//! the metric the paper uses on the HOC4 Code.org AST dataset (Figure 1b).
+//! This is deliberately the *expensive* metric of the suite
+//! (`O(|T1||T2| * min(depth, leaves)^2)`), which is exactly why counting
+//! distance evaluations matters there.
+//!
+//! Implementation follows the classic formulation: postorder numbering,
+//! leftmost-leaf-descendant array `l(i)`, LR-keyroots, and the forest
+//! distance DP.
+
+use crate::data::ast::Tree;
+
+/// Flattened postorder view of a tree: interned labels + `l(i)` array.
+struct PostOrder {
+    labels: Vec<u32>,
+    /// `lml[i]` = postorder index of the leftmost leaf descendant of node i.
+    lml: Vec<usize>,
+    keyroots: Vec<usize>,
+}
+
+impl PostOrder {
+    fn build(t: &Tree) -> PostOrder {
+        let mut labels = Vec::new();
+        let mut lml = Vec::new();
+        fn walk(t: &Tree, labels: &mut Vec<u32>, lml: &mut Vec<usize>) -> usize {
+            // returns postorder index of the leftmost leaf under t
+            let mut leftmost = usize::MAX;
+            for (ci, c) in t.children.iter().enumerate() {
+                let lm = walk(c, labels, lml);
+                if ci == 0 {
+                    leftmost = lm;
+                }
+            }
+            let my_index = labels.len();
+            if t.children.is_empty() {
+                leftmost = my_index;
+            }
+            labels.push(t.label);
+            lml.push(leftmost);
+            leftmost
+        }
+        walk(t, &mut labels, &mut lml);
+        // keyroots: nodes i such that no j > i has lml[j] == lml[i]
+        let n = labels.len();
+        let mut seen = std::collections::HashSet::new();
+        let mut keyroots = Vec::new();
+        for i in (0..n).rev() {
+            if seen.insert(lml[i]) {
+                keyroots.push(i);
+            }
+        }
+        keyroots.sort_unstable();
+        PostOrder { labels, lml, keyroots }
+    }
+
+    #[inline]
+    fn len(&self) -> usize {
+        self.labels.len()
+    }
+}
+
+/// Unit-cost tree edit distance between two ASTs.
+pub fn ted(a: &Tree, b: &Tree) -> f64 {
+    let ta = PostOrder::build(a);
+    let tb = PostOrder::build(b);
+    let (na, nb) = (ta.len(), tb.len());
+    let mut td = vec![0.0f64; na * nb]; // treedist[i][j]
+    // forest-distance scratch, reused across keyroot pairs
+    let mut fd = vec![0.0f64; (na + 1) * (nb + 1)];
+
+    for &i in &ta.keyroots {
+        for &j in &tb.keyroots {
+            tree_dist(&ta, &tb, i, j, &mut td, &mut fd, nb);
+        }
+    }
+    td[(na - 1) * nb + (nb - 1)]
+}
+
+#[inline]
+fn cost_relabel(a: u32, b: u32) -> f64 {
+    if a == b {
+        0.0
+    } else {
+        1.0
+    }
+}
+
+/// Fill `td[i][j]` for all pairs rooted in the keyroot subtrees (i, j).
+#[allow(clippy::too_many_arguments)]
+fn tree_dist(
+    ta: &PostOrder,
+    tb: &PostOrder,
+    i: usize,
+    j: usize,
+    td: &mut [f64],
+    fd: &mut [f64],
+    nb: usize,
+) {
+    let li = ta.lml[i];
+    let lj = tb.lml[j];
+    let m = i - li + 2; // forest rows: li-1 .. i  (offset by li)
+    let n = j - lj + 2;
+    let stride = tb.len() + 1;
+    // fd[(x)*stride + y] with x in [0, m), y in [0, n)
+    fd[0] = 0.0;
+    for x in 1..m {
+        fd[x * stride] = fd[(x - 1) * stride] + 1.0; // delete
+    }
+    for y in 1..n {
+        fd[y] = fd[y - 1] + 1.0; // insert
+    }
+    for x in 1..m {
+        let ia = li + x - 1; // actual postorder index in ta
+        for y in 1..n {
+            let jb = lj + y - 1;
+            if ta.lml[ia] == li && tb.lml[jb] == lj {
+                // both forests are whole trees
+                let d = (fd[(x - 1) * stride + y] + 1.0)
+                    .min(fd[x * stride + y - 1] + 1.0)
+                    .min(
+                        fd[(x - 1) * stride + y - 1]
+                            + cost_relabel(ta.labels[ia], tb.labels[jb]),
+                    );
+                fd[x * stride + y] = d;
+                td[ia * nb + jb] = d;
+            } else {
+                let xa = ta.lml[ia].saturating_sub(li); // forest prefix length
+                let yb = tb.lml[jb].saturating_sub(lj);
+                let d = (fd[(x - 1) * stride + y] + 1.0)
+                    .min(fd[x * stride + y - 1] + 1.0)
+                    .min(fd[xa * stride + yb] + td[ia * nb + jb]);
+                fd[x * stride + y] = d;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ast::Tree;
+
+    fn leaf(l: u32) -> Tree {
+        Tree { label: l, children: vec![] }
+    }
+
+    fn node(l: u32, ch: Vec<Tree>) -> Tree {
+        Tree { label: l, children: ch }
+    }
+
+    #[test]
+    fn identical_trees_zero() {
+        let t = node(0, vec![leaf(1), node(2, vec![leaf(3)])]);
+        assert_eq!(ted(&t, &t), 0.0);
+    }
+
+    #[test]
+    fn single_relabel() {
+        let a = node(0, vec![leaf(1)]);
+        let b = node(0, vec![leaf(2)]);
+        assert_eq!(ted(&a, &b), 1.0);
+    }
+
+    #[test]
+    fn single_insert_delete() {
+        let a = node(0, vec![leaf(1)]);
+        let b = node(0, vec![leaf(1), leaf(2)]);
+        assert_eq!(ted(&a, &b), 1.0);
+        assert_eq!(ted(&b, &a), 1.0);
+    }
+
+    #[test]
+    fn zhang_shasha_classic_example() {
+        // The canonical example from the Zhang–Shasha paper:
+        // T1 = f(d(a, c(b)), e),  T2 = f(c(d(a, b)), e): distance 2.
+        let t1 = node(
+            5, // f
+            vec![node(3, vec![leaf(0), node(2, vec![leaf(1)])]), leaf(4)],
+        );
+        let t2 = node(
+            5,
+            vec![node(2, vec![node(3, vec![leaf(0), leaf(1)])]), leaf(4)],
+        );
+        assert_eq!(ted(&t1, &t2), 2.0);
+    }
+
+    #[test]
+    fn distance_to_single_node_is_size_minus_overlap() {
+        // Deleting everything but the root: |T| - 1 when labels match root.
+        let t = node(0, vec![leaf(1), leaf(2), node(3, vec![leaf(4)])]);
+        let single = leaf(0);
+        assert_eq!(ted(&t, &single), 4.0);
+    }
+
+    #[test]
+    fn symmetry_and_triangle_on_fixed_trees() {
+        let a = node(0, vec![leaf(1), leaf(2)]);
+        let b = node(0, vec![node(1, vec![leaf(2)])]);
+        let c = node(3, vec![leaf(2)]);
+        let dab = ted(&a, &b);
+        let dba = ted(&b, &a);
+        assert_eq!(dab, dba);
+        let dac = ted(&a, &c);
+        let dbc = ted(&b, &c);
+        assert!(dac <= dab + dbc + 1e-12);
+    }
+
+    #[test]
+    fn deep_chain_vs_wide_star() {
+        // chain a-b-c-d vs star a(b,c,d): known small distance, must not
+        // panic on degenerate shapes.
+        let chain = node(0, vec![node(1, vec![node(2, vec![leaf(3)])])]);
+        let star = node(0, vec![leaf(1), leaf(2), leaf(3)]);
+        let d = ted(&chain, &star);
+        assert!(d > 0.0 && d <= 4.0, "d = {d}");
+    }
+}

@@ -1,0 +1,176 @@
+//! Ablations of BanditPAM's design choices (DESIGN.md: abl-sigma,
+//! abl-delta, abl-cache, abl-fastpam1).
+//!
+//! * **sigma mode** (paper §3.2 / Appendix 1.2): per-arm first-batch
+//!   (default) vs per-arm running vs one global sigma. Global sigma
+//!   inflates CIs and wastes evaluations.
+//! * **delta sweep** (paper Appendix 2.3): larger delta = approximate
+//!   BanditPAM; fewer evaluations, possible loss concessions.
+//! * **cache** (paper Appendix 2.2): fixed-permutation sampling + pairwise
+//!   cache trades memory for recomputation.
+//! * **FastPAM1 row sharing** (paper Appendix 1.1): disabling the Eq. 12
+//!   sharing makes each SWAP arm pay its own distance row.
+
+use crate::algorithms::{fastpam1::FastPam1, KMedoids};
+use crate::bandits::adaptive::{SamplingMode, SigmaMode};
+use crate::bench::table::{fnum, Table};
+use crate::bench::Scale;
+use crate::coordinator::banditpam::BanditPam;
+use crate::coordinator::config::{BanditPamConfig, DeltaMode};
+use crate::data::synthetic;
+use crate::distance::Metric;
+use crate::runtime::backend::NativeBackend;
+use crate::util::rng::Rng;
+
+pub fn params(scale: Scale) -> (usize, usize, usize) {
+    // (n, k, repeats)
+    match scale {
+        Scale::Smoke => (120, 3, 2),
+        Scale::Quick => (1000, 5, 3),
+        Scale::Paper => (2000, 5, 5),
+    }
+}
+
+struct RunResult {
+    evals: f64,
+    loss: f64,
+    same_as_pam: usize,
+}
+
+fn run_config(
+    cfg: BanditPamConfig,
+    n: usize,
+    k: usize,
+    repeats: usize,
+    seed: u64,
+    use_cache: bool,
+) -> RunResult {
+    let base = synthetic::mnist_like(&mut Rng::seed_from(seed), n * 2);
+    let mut evals = 0.0;
+    let mut loss = 0.0;
+    let mut same = 0;
+    for rep in 0..repeats {
+        let sub = base.subsample(n, &mut Rng::seed_from(seed ^ (0xD0D0 + rep as u64)));
+        let backend = if use_cache {
+            NativeBackend::new(&sub.points, Metric::L2)
+                .with_cache(32 * n * ((n as f64).ln() as usize + 1))
+        } else {
+            NativeBackend::new(&sub.points, Metric::L2)
+        };
+        let mut algo = BanditPam::new(cfg.clone());
+        let fit = algo
+            .fit(&backend, k, &mut Rng::seed_from(seed ^ (0xA1A1 + rep as u64)))
+            .unwrap();
+        let pam_backend = NativeBackend::new(&sub.points, Metric::L2);
+        let pam = FastPam1::new()
+            .fit(&pam_backend, k, &mut Rng::seed_from(0))
+            .unwrap();
+        evals += fit.stats.distance_evals as f64 / repeats as f64;
+        loss += fit.loss / pam.loss / repeats as f64;
+        if fit.medoids == pam.medoids {
+            same += 1;
+        }
+    }
+    RunResult { evals, loss, same_as_pam: same }
+}
+
+pub fn run(scale: Scale, seed: u64) -> Vec<Table> {
+    let (n, k, repeats) = params(scale);
+    let mut out = Vec::new();
+
+    // --- abl-sigma -------------------------------------------------------
+    let mut t = Table::new(
+        format!("Ablation: sigma estimation (n={n}, k={k}, {repeats} repeats)"),
+        &["sigma mode", "mean evals", "loss ratio vs PAM", "same medoids"],
+    );
+    for (name, mode) in [
+        ("per-arm first batch (paper)", SigmaMode::PerArmFirstBatch),
+        ("per-arm running", SigmaMode::PerArmRunning),
+        ("global first batch", SigmaMode::GlobalFirstBatch),
+    ] {
+        let cfg = BanditPamConfig { sigma_mode: mode, ..Default::default() };
+        let r = run_config(cfg, n, k, repeats, seed, false);
+        t.row(vec![
+            name.into(),
+            fnum(r.evals),
+            fnum(r.loss),
+            format!("{}/{repeats}", r.same_as_pam),
+        ]);
+    }
+    out.push(t);
+
+    // --- abl-delta (approximate BanditPAM) -------------------------------
+    let mut t = Table::new(
+        "Ablation: delta sweep (Appendix 2.3 approximate BanditPAM)",
+        &["delta", "mean evals", "loss ratio vs PAM", "same medoids"],
+    );
+    for &delta in &[1e-8, 1e-5, 1e-3, 1e-1] {
+        let cfg = BanditPamConfig { delta: DeltaMode::Fixed(delta), ..Default::default() };
+        let r = run_config(cfg, n, k, repeats, seed, false);
+        t.row(vec![
+            format!("{delta:.0e}"),
+            fnum(r.evals),
+            fnum(r.loss),
+            format!("{}/{repeats}", r.same_as_pam),
+        ]);
+    }
+    out.push(t);
+
+    // --- abl-cache --------------------------------------------------------
+    let mut t = Table::new(
+        "Ablation: fixed-permutation sampling + pairwise cache (Appendix 2.2)",
+        &["config", "counted evals (cache misses)", "loss ratio", "same medoids"],
+    );
+    for (name, sampling, cache) in [
+        ("with-replacement, no cache (paper)", SamplingMode::WithReplacement, false),
+        ("fixed permutation, no cache", SamplingMode::FixedPermutation, false),
+        ("fixed permutation + cache", SamplingMode::FixedPermutation, true),
+    ] {
+        let cfg = BanditPamConfig { sampling, ..Default::default() };
+        let r = run_config(cfg, n, k, repeats, seed, cache);
+        t.row(vec![
+            name.into(),
+            fnum(r.evals),
+            fnum(r.loss),
+            format!("{}/{repeats}", r.same_as_pam),
+        ]);
+    }
+    out.push(t);
+
+    // --- abl-fastpam1 ------------------------------------------------------
+    let mut t = Table::new(
+        "Ablation: FastPAM1 SWAP row sharing (Appendix 1.1)",
+        &["config", "mean evals", "loss ratio", "same medoids"],
+    );
+    for (name, share) in [("shared rows (paper)", true), ("per-arm rows", false)] {
+        let cfg = BanditPamConfig { fastpam1_swap: share, ..Default::default() };
+        let r = run_config(cfg, n, k, repeats, seed, false);
+        t.row(vec![
+            name.into(),
+            fnum(r.evals),
+            fnum(r.loss),
+            format!("{}/{repeats}", r.same_as_pam),
+        ]);
+    }
+    out.push(t);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_ablations_run_and_delta_monotonicity_holds() {
+        let tables = run(Scale::Smoke, 43);
+        assert_eq!(tables.len(), 4);
+        // delta sweep: evals at delta=1e-1 <= evals at delta=1e-8
+        let d = &tables[1].rows;
+        let tight: f64 = d[0][1].parse().unwrap();
+        let loose: f64 = d[3][1].parse().unwrap();
+        assert!(
+            loose <= tight * 1.05,
+            "looser delta should not cost more evals: {tight} -> {loose}"
+        );
+    }
+}

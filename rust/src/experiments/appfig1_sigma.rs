@@ -1,0 +1,73 @@
+//! Appendix Figure 1: boxplot of the per-arm sigma estimates at each BUILD
+//! assignment step (MNIST-like, l2).
+//!
+//! The paper's observation: the median sigma drops dramatically after the
+//! first medoid is assigned and keeps decreasing, while the spread across
+//! arms stays wide — justifying both per-arm sigma and re-estimation at
+//! every step (§3.2 / Appendix 1.2).
+
+use crate::bench::table::{fnum, Table};
+use crate::bench::Scale;
+use crate::coordinator::banditpam::BanditPam;
+use crate::coordinator::config::BanditPamConfig;
+use crate::data::synthetic;
+use crate::distance::Metric;
+use crate::runtime::backend::NativeBackend;
+use crate::stats::summary::Summary;
+use crate::util::rng::Rng;
+
+pub fn params(scale: Scale) -> (usize, usize) {
+    match scale {
+        Scale::Smoke => (120, 3),
+        Scale::Quick => (1000, 5),
+        Scale::Paper => (3000, 10),
+    }
+}
+
+pub fn run(scale: Scale, seed: u64) -> Vec<Table> {
+    let (n, k) = params(scale);
+    let ds = synthetic::mnist_like(&mut Rng::seed_from(seed), n);
+    let backend = NativeBackend::new(&ds.points, Metric::L2);
+    let mut algo = BanditPam::new(BanditPamConfig {
+        record_sigmas: true,
+        ..Default::default()
+    });
+    algo.build_only(&backend, k, &mut Rng::seed_from(seed ^ 3))
+        .expect("build failed");
+
+    let mut table = Table::new(
+        format!("Appendix Fig 1 — sigma_x distribution per BUILD step (mnist_like n={n})"),
+        &["build step", "min", "q1", "median", "q3", "max"],
+    );
+    for (step, sigmas) in algo.build_sigmas.iter().enumerate() {
+        let nonzero: Vec<f64> = sigmas.iter().copied().filter(|s| *s > 0.0).collect();
+        let s = Summary::of(if nonzero.is_empty() { sigmas } else { &nonzero });
+        table.row(vec![
+            format!("{}", step + 1),
+            fnum(s.min),
+            fnum(s.q1),
+            fnum(s.median),
+            fnum(s.q3),
+            fnum(s.max),
+        ]);
+    }
+    vec![table]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_sigma_drops_after_first_medoid() {
+        let tables = run(Scale::Smoke, 23);
+        let rows = &tables[0].rows;
+        assert_eq!(rows.len(), 3);
+        let med0: f64 = rows[0][3].parse().unwrap();
+        let med1: f64 = rows[1][3].parse().unwrap();
+        assert!(
+            med1 < med0,
+            "paper App Fig 1: median sigma should drop ({med0} -> {med1})"
+        );
+    }
+}

@@ -1,0 +1,110 @@
+//! Appendix Figures 3–4: per-arm reward distributions (4 sample arms) in
+//! the first BUILD step, MNIST-like vs scRNA-PCA.
+//!
+//! The paper's observation: MNIST rewards look Gaussian-ish; scRNA-PCA
+//! rewards are much heavier-tailed (large sigma_x), violating the
+//! effective sub-Gaussian assumption. We print per-arm summary stats plus
+//! excess kurtosis as the tail-weight readout.
+
+use crate::bench::table::{fnum, Table};
+use crate::bench::Scale;
+use crate::data::{synthetic, Dataset};
+use crate::distance::Metric;
+use crate::runtime::backend::{DistanceBackend, NativeBackend};
+use crate::util::rng::Rng;
+
+pub fn params(scale: Scale) -> (usize, usize) {
+    match scale {
+        Scale::Smoke => (150, 128),
+        Scale::Quick => (1000, 512),
+        Scale::Paper => (3000, 1024),
+    }
+}
+
+/// Excess kurtosis of a sample (0 for a Gaussian).
+pub fn excess_kurtosis(xs: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let m2 = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+    let m4 = xs.iter().map(|x| (x - mean).powi(4)).sum::<f64>() / n;
+    if m2 <= 0.0 {
+        return 0.0;
+    }
+    m4 / (m2 * m2) - 3.0
+}
+
+fn arm_rows(ds: &Dataset, metric: Metric, arms: &[usize]) -> Vec<Vec<f64>> {
+    let backend = NativeBackend::new(&ds.points, metric);
+    let n = backend.n();
+    let refs: Vec<usize> = (0..n).collect();
+    arms.iter()
+        .map(|&a| {
+            let mut row = vec![0.0f64; n];
+            backend.block(&[a], &refs, &mut row);
+            row
+        })
+        .collect()
+}
+
+pub fn run(scale: Scale, seed: u64) -> Vec<Table> {
+    let (n, genes) = params(scale);
+    let mut rng = Rng::seed_from(seed);
+    let mnist = synthetic::mnist_like(&mut rng, n);
+    let pca = synthetic::scrna_pca(&mut rng, n, genes, 10);
+    let mut arm_rng = Rng::seed_from(seed ^ 0xABCD);
+    let arms = arm_rng.sample_indices(n, 4);
+
+    let mut out = Vec::new();
+    for (name, ds, metric) in [
+        ("mnist_like / l2 (App Fig 3)", &mnist, Metric::L2),
+        ("scrna_pca / l2 (App Fig 4)", &pca, Metric::L2),
+    ] {
+        let mut table = Table::new(
+            format!("Reward distributions, first BUILD step — {name}"),
+            &["arm", "mean", "std", "min", "max", "excess kurtosis"],
+        );
+        for (ai, rewards) in arm_rows(ds, metric, &arms).iter().enumerate() {
+            let s = crate::stats::summary::Summary::of(rewards);
+            let mut r = crate::stats::running::Running::new();
+            r.extend(rewards.iter().copied());
+            table.row(vec![
+                format!("x{}", arms[ai]),
+                fnum(s.mean),
+                fnum(r.std_pop()),
+                fnum(s.min),
+                fnum(s.max),
+                fnum(excess_kurtosis(rewards)),
+            ]);
+        }
+        out.push(table);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kurtosis_of_gaussian_is_near_zero() {
+        let mut rng = Rng::seed_from(5);
+        let xs: Vec<f64> = (0..20_000).map(|_| rng.normal()).collect();
+        let k = excess_kurtosis(&xs);
+        assert!(k.abs() < 0.15, "kurtosis {k}");
+    }
+
+    #[test]
+    fn kurtosis_of_heavy_tail_is_positive() {
+        let mut rng = Rng::seed_from(6);
+        let xs: Vec<f64> = (0..20_000).map(|_| rng.lognormal(0.0, 1.0)).collect();
+        assert!(excess_kurtosis(&xs) > 1.0);
+    }
+
+    #[test]
+    fn smoke_produces_two_tables_with_four_arms() {
+        let tables = run(Scale::Smoke, 31);
+        assert_eq!(tables.len(), 2);
+        assert_eq!(tables[0].rows.len(), 4);
+        assert_eq!(tables[1].rows.len(), 4);
+    }
+}

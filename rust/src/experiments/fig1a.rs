@@ -1,0 +1,110 @@
+//! Figure 1(a): clustering loss relative to PAM.
+//!
+//! Protocol (paper §5.1): data subsampled from MNIST, n ∈ {500..3000},
+//! k = 5, l2, 10 repeats, 95% CIs. BanditPAM returns the same solution as
+//! PAM (ratio exactly 1, as does FastPAM1); FastPAM is comparable; CLARANS
+//! and Voronoi Iteration are significantly worse.
+//!
+//! PAM's loss is obtained through FastPAM1 (guaranteed-identical result,
+//! O(k) cheaper per iteration) — the paper itself plots FastPAM1 at ratio 1
+//! "omitted for clarity".
+
+use crate::algorithms::{
+    clarans::Clarans, fastpam::FastPam, fastpam1::FastPam1,
+    voronoi::VoronoiIteration, KMedoids,
+};
+use crate::bench::table::{fnum, Table};
+use crate::bench::Scale;
+use crate::coordinator::banditpam::BanditPam;
+use crate::data::synthetic;
+use crate::distance::Metric;
+use crate::experiments::harness::{default_threads, run_setting};
+use crate::stats::summary::mean_ci95;
+use crate::util::rng::Rng;
+
+/// Sweep sizes / repeats / k per scale.
+pub fn params(scale: Scale) -> (Vec<usize>, usize, usize) {
+    match scale {
+        Scale::Smoke => (vec![80, 150], 2, 3),
+        Scale::Quick => (vec![500, 1000, 2000], 3, 5),
+        Scale::Paper => (vec![500, 1000, 1500, 2000, 2500, 3000], 10, 5),
+    }
+}
+
+pub fn run(scale: Scale, seed: u64) -> Vec<Table> {
+    let (sizes, repeats, k) = params(scale);
+    let base_n = *sizes.iter().max().unwrap() * 2;
+    let base = synthetic::mnist_like(&mut Rng::seed_from(seed), base_n);
+    let threads = default_threads();
+
+    let mut table = Table::new(
+        format!("Fig 1a — loss relative to PAM (mnist_like, l2, k={k}, {repeats} repeats)"),
+        &["n", "banditpam", "fastpam", "clarans", "voronoi", "banditpam==pam"],
+    );
+
+    for &n in &sizes {
+        // Reference (PAM-equivalent) runs per repeat.
+        let mut pam_ref = FastPam1::new();
+        let pam_runs = run_setting(&mut pam_ref, &base, Metric::L2, n, k, repeats, threads, seed);
+
+        let mut ratios: Vec<Vec<f64>> = Vec::new();
+        let mut exact_matches = 0usize;
+        let algos: Vec<Box<dyn KMedoids>> = vec![
+            Box::new(BanditPam::default_paper()),
+            Box::new(FastPam::new()),
+            Box::new(Clarans::new()),
+            Box::new(VoronoiIteration::new()),
+        ];
+        for mut algo in algos {
+            let runs = run_setting(algo.as_mut(), &base, Metric::L2, n, k, repeats, threads, seed);
+            let r: Vec<f64> = runs
+                .iter()
+                .zip(&pam_runs)
+                .map(|(a, p)| a.loss / p.loss)
+                .collect();
+            if algo.name() == "banditpam" {
+                exact_matches = runs
+                    .iter()
+                    .zip(&pam_runs)
+                    .filter(|(a, p)| a.medoids == p.medoids)
+                    .count();
+            }
+            ratios.push(r);
+        }
+
+        let cell = |rs: &[f64]| {
+            let (m, ci) = mean_ci95(rs);
+            format!("{}±{}", fnum(m), fnum(ci))
+        };
+        table.row(vec![
+            n.to_string(),
+            cell(&ratios[0]),
+            cell(&ratios[1]),
+            cell(&ratios[2]),
+            cell(&ratios[3]),
+            format!("{exact_matches}/{repeats}"),
+        ]);
+    }
+    vec![table]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_scale_runs_and_banditpam_ratio_is_one() {
+        let tables = run(Scale::Smoke, 11);
+        assert_eq!(tables.len(), 1);
+        let t = &tables[0];
+        assert_eq!(t.rows.len(), 2);
+        for row in &t.rows {
+            // banditpam ratio column starts with "1" or very close to it
+            let ratio: f64 = row[1].split('±').next().unwrap().parse().unwrap();
+            assert!(
+                (ratio - 1.0).abs() < 0.02,
+                "banditpam loss ratio {ratio} too far from 1"
+            );
+        }
+    }
+}

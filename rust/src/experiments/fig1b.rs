@@ -1,0 +1,67 @@
+//! Figure 1(b): distance evaluations per iteration vs n on HOC4-like ASTs
+//! with tree edit distance, k = 2, log–log.
+//!
+//! The paper reports a fitted slope of 1.046 for BanditPAM and draws
+//! analytic reference lines for PAM (k·n²) and FastPAM1 (n²); we print all
+//! three plus our fitted slope.
+
+use crate::bench::table::{fnum, Table};
+use crate::bench::Scale;
+use crate::coordinator::banditpam::BanditPam;
+use crate::data::synthetic;
+use crate::distance::Metric;
+use crate::experiments::harness::{aggregate, default_threads, run_setting, scaling_slope};
+use crate::util::rng::Rng;
+
+pub fn params(scale: Scale) -> (Vec<usize>, usize, usize) {
+    match scale {
+        Scale::Smoke => (vec![120, 240], 2, 2),
+        Scale::Quick => (vec![100, 200, 400, 800], 3, 2),
+        Scale::Paper => (vec![200, 400, 800, 1600, 3360], 5, 2),
+    }
+}
+
+pub fn run(scale: Scale, seed: u64) -> Vec<Table> {
+    let (sizes, repeats, k) = params(scale);
+    let base = synthetic::hoc4_like(&mut Rng::seed_from(seed), *sizes.iter().max().unwrap());
+    let threads = default_threads();
+
+    let mut table = Table::new(
+        format!("Fig 1b — distance evals/iter vs n (hoc4_like, tree edit, k={k})"),
+        &["n", "banditpam evals/iter", "ci95", "PAM ref (kn^2)", "FastPAM1 ref (n^2)"],
+    );
+    let mut points = Vec::new();
+    for &n in &sizes {
+        let mut algo = BanditPam::default_paper();
+        let ms = run_setting(&mut algo, &base, Metric::TreeEdit, n, k, repeats, threads, seed);
+        let p = aggregate(n, &ms);
+        table.row(vec![
+            n.to_string(),
+            fnum(p.evals_per_iter.0),
+            fnum(p.evals_per_iter.1),
+            fnum((k * n * n) as f64),
+            fnum((n * n) as f64),
+        ]);
+        points.push(p);
+    }
+    let slope = scaling_slope(&points, false);
+    let mut summary = Table::new("Fig 1b — fitted log-log slope", &["series", "slope", "paper"]);
+    summary.row(vec!["banditpam evals/iter".into(), fnum(slope), "1.046".into()]);
+    summary.row(vec!["pam ref".into(), "2.0".into(), "2".into()]);
+    summary.row(vec!["fastpam1 ref".into(), "2.0".into(), "2".into()]);
+    vec![table, summary]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_runs_and_scaling_is_subquadratic() {
+        let tables = run(Scale::Smoke, 13);
+        assert_eq!(tables.len(), 2);
+        // pre-asymptotic at smoke sizes; see fig2 smoke test comment
+        let slope: f64 = tables[1].rows[0][1].parse().unwrap();
+        assert!(slope.is_finite() && slope < 2.4, "slope {slope}");
+    }
+}

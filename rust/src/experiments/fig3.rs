@@ -1,0 +1,89 @@
+//! Figure 3: runtime per iteration vs n for (a) MNIST-like with cosine
+//! distance and (b) scRNA-like with l1, both k = 5, log–log.
+//!
+//! Paper slopes: 1.007 (MNIST/cosine) and 1.011 (scRNA/l1).
+
+use crate::bench::table::{fnum, Table};
+use crate::bench::Scale;
+use crate::coordinator::banditpam::BanditPam;
+use crate::data::{synthetic, Dataset};
+use crate::distance::Metric;
+use crate::experiments::harness::{aggregate, default_threads, run_setting, scaling_slope};
+use crate::util::rng::Rng;
+
+pub fn params(scale: Scale) -> (Vec<usize>, usize, usize) {
+    match scale {
+        Scale::Smoke => (vec![150, 300], 2, 128),
+        Scale::Quick => (vec![500, 1000, 2000], 3, 1024),
+        Scale::Paper => (vec![500, 1000, 2000, 4000], 5, 1024),
+    }
+}
+
+fn sweep(
+    name: &str,
+    base: &Dataset,
+    metric: Metric,
+    sizes: &[usize],
+    repeats: usize,
+    seed: u64,
+    paper_slope: &str,
+) -> (Table, Table) {
+    let threads = default_threads();
+    let k = 5.min(sizes[0] / 10).max(2);
+    let mut table = Table::new(
+        format!("Fig 3 — runtime/iter vs n ({name}, {metric}, k={k})"),
+        &["n", "secs/iter", "ci95", "evals/iter", "FastPAM1 ref (n^2)"],
+    );
+    let mut points = Vec::new();
+    for &n in sizes {
+        let mut algo = BanditPam::default_paper();
+        let ms = run_setting(&mut algo, base, metric, n, k, repeats, threads, seed);
+        let p = aggregate(n, &ms);
+        table.row(vec![
+            n.to_string(),
+            fnum(p.secs_per_iter.0),
+            fnum(p.secs_per_iter.1),
+            fnum(p.evals_per_iter.0),
+            fnum((n * n) as f64),
+        ]);
+        points.push(p);
+    }
+    let mut summary = Table::new(
+        format!("Fig 3 — slopes ({name}, {metric})"),
+        &["series", "slope", "paper"],
+    );
+    summary.row(vec![
+        "evals/iter".into(),
+        fnum(scaling_slope(&points, false)),
+        paper_slope.into(),
+    ]);
+    (table, summary)
+}
+
+pub fn run(scale: Scale, seed: u64) -> Vec<Table> {
+    let (sizes, repeats, genes) = params(scale);
+    let max = *sizes.iter().max().unwrap();
+    let mnist = synthetic::mnist_like(&mut Rng::seed_from(seed), max * 2);
+    let scrna = synthetic::scrna_like(&mut Rng::seed_from(seed ^ 2), max * 2, genes);
+    let (t1, s1) = sweep("mnist_like", &mnist, Metric::Cosine, &sizes, repeats, seed, "1.007");
+    let (t2, s2) = sweep("scrna_like", &scrna, Metric::L1, &sizes, repeats, seed, "1.011");
+    vec![t1, s1, t2, s2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_runs_both_datasets() {
+        let tables = run(Scale::Smoke, 19);
+        assert_eq!(tables.len(), 4);
+        assert!(tables[0].title.contains("cosine"));
+        assert!(tables[2].title.contains("l1"));
+        for summary in [&tables[1], &tables[3]] {
+            // pre-asymptotic at smoke sizes; see fig2 smoke test comment
+            let slope: f64 = summary.rows[0][1].parse().unwrap();
+            assert!(slope.is_finite() && slope < 2.4, "slope {slope}");
+        }
+    }
+}

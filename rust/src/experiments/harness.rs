@@ -1,0 +1,151 @@
+//! Shared experiment harness: sweep runner following the paper's protocol
+//! ("each parameter setting was repeated 10 times with data subsampled
+//! from the original dataset and 95% confidence intervals are provided").
+
+use crate::algorithms::{Clustering, KMedoids};
+use crate::data::Dataset;
+use crate::distance::Metric;
+use crate::runtime::backend::NativeBackend;
+use crate::stats::regression::loglog_slope;
+use crate::stats::summary::mean_ci95;
+use crate::util::rng::Rng;
+
+/// One measurement (a single fit).
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub n: usize,
+    pub loss: f64,
+    pub distance_evals: u64,
+    pub evals_per_iter: f64,
+    pub secs_per_iter: f64,
+    pub wall_secs: f64,
+    pub swap_iters: usize,
+    pub medoids: Vec<usize>,
+}
+
+impl Measurement {
+    pub fn from_fit(n: usize, fit: &Clustering) -> Measurement {
+        Measurement {
+            n,
+            loss: fit.loss,
+            distance_evals: fit.stats.distance_evals,
+            evals_per_iter: fit.stats.evals_per_iter(),
+            secs_per_iter: fit.stats.secs_per_iter(),
+            wall_secs: fit.stats.wall_secs,
+            swap_iters: fit.stats.swap_iters,
+            medoids: fit.medoids.clone(),
+        }
+    }
+}
+
+/// Aggregated point of a sweep (mean ± 95% CI over repeats).
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub n: usize,
+    pub evals_per_iter: (f64, f64),
+    pub secs_per_iter: (f64, f64),
+    pub loss: (f64, f64),
+}
+
+/// Run `algo` on `repeats` subsamples of size `n` from `base` and collect
+/// measurements. The backend uses `threads` for block sharding.
+#[allow(clippy::too_many_arguments)]
+pub fn run_setting(
+    algo: &mut dyn KMedoids,
+    base: &Dataset,
+    metric: Metric,
+    n: usize,
+    k: usize,
+    repeats: usize,
+    threads: usize,
+    seed: u64,
+) -> Vec<Measurement> {
+    let mut out = Vec::with_capacity(repeats);
+    for rep in 0..repeats {
+        let mut data_rng = Rng::seed_from(seed ^ (0xD0D0 + rep as u64));
+        let sub = if n < base.len() {
+            base.subsample(n, &mut data_rng)
+        } else {
+            base.clone()
+        };
+        let backend = NativeBackend::new(&sub.points, metric).with_threads(threads);
+        let mut algo_rng = Rng::seed_from(seed ^ (0xA1A1 + rep as u64));
+        let fit = algo
+            .fit(&backend, k, &mut algo_rng)
+            .expect("fit failed in sweep");
+        out.push(Measurement::from_fit(sub.len(), &fit));
+    }
+    out
+}
+
+/// Aggregate measurements at one n.
+pub fn aggregate(n: usize, ms: &[Measurement]) -> SweepPoint {
+    let e: Vec<f64> = ms.iter().map(|m| m.evals_per_iter).collect();
+    let s: Vec<f64> = ms.iter().map(|m| m.secs_per_iter).collect();
+    let l: Vec<f64> = ms.iter().map(|m| m.loss).collect();
+    SweepPoint {
+        n,
+        evals_per_iter: mean_ci95(&e),
+        secs_per_iter: mean_ci95(&s),
+        loss: mean_ci95(&l),
+    }
+}
+
+/// Fitted log–log scaling exponent of evals/iter (or secs/iter) vs n —
+/// the readout the paper reports for Figures 1b, 2, 3 and Appendix Fig 5.
+pub fn scaling_slope(points: &[SweepPoint], use_time: bool) -> f64 {
+    let xs: Vec<f64> = points.iter().map(|p| p.n as f64).collect();
+    let ys: Vec<f64> = points
+        .iter()
+        .map(|p| if use_time { p.secs_per_iter.0 } else { p.evals_per_iter.0 })
+        .map(|y| y.max(1e-12))
+        .collect();
+    loglog_slope(&xs, &ys).slope
+}
+
+/// Default thread count for sweeps (leave two cores for the system).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get().saturating_sub(2).max(1))
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::banditpam::BanditPam;
+    use crate::data::synthetic;
+
+    #[test]
+    fn sweep_and_slope_on_tiny_sizes() {
+        let base = synthetic::gmm(&mut Rng::seed_from(1), 200, 6, 3, 3.0);
+        let mut points = Vec::new();
+        for &n in &[60usize, 120] {
+            let mut algo = BanditPam::default_paper();
+            let ms = run_setting(&mut algo, &base, Metric::L2, n, 2, 2, 1, 7);
+            assert_eq!(ms.len(), 2);
+            assert!(ms.iter().all(|m| m.n == n && m.distance_evals > 0));
+            points.push(aggregate(n, &ms));
+        }
+        let slope = scaling_slope(&points, false);
+        assert!(slope.is_finite());
+    }
+
+    #[test]
+    fn aggregate_computes_ci() {
+        let ms = vec![
+            Measurement {
+                n: 10, loss: 1.0, distance_evals: 100, evals_per_iter: 50.0,
+                secs_per_iter: 0.1, wall_secs: 0.2, swap_iters: 1, medoids: vec![0],
+            },
+            Measurement {
+                n: 10, loss: 3.0, distance_evals: 200, evals_per_iter: 70.0,
+                secs_per_iter: 0.3, wall_secs: 0.6, swap_iters: 1, medoids: vec![1],
+            },
+        ];
+        let p = aggregate(10, &ms);
+        assert!((p.loss.0 - 2.0).abs() < 1e-12);
+        assert!(p.loss.1 > 0.0);
+        assert!((p.evals_per_iter.0 - 60.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,118 @@
+//! The paper's headline claims (§1 / §5): BanditPAM returns **the same
+//! medoids as PAM** while computing dramatically fewer distances ("up to
+//! 200x fewer"), crossing over by n ≈ 1–2k.
+//!
+//! This experiment runs BanditPAM and FastPAM1 (PAM-identical) on the same
+//! subsamples and reports the evaluation ratio, wall-clock ratio and
+//! medoid agreement at each n, plus the extrapolated ratio at the paper's
+//! full-MNIST n = 70,000 (the evaluation ratio grows like n / log n).
+
+use crate::algorithms::fastpam1::FastPam1;
+use crate::bench::table::{fnum, Table};
+use crate::bench::Scale;
+use crate::coordinator::banditpam::BanditPam;
+use crate::data::synthetic;
+use crate::distance::Metric;
+use crate::experiments::harness::{default_threads, run_setting};
+use crate::util::rng::Rng;
+
+pub fn params(scale: Scale) -> (Vec<usize>, usize, usize) {
+    match scale {
+        Scale::Smoke => (vec![100, 200], 2, 3),
+        Scale::Quick => (vec![500, 1000, 2000, 4000], 2, 5),
+        Scale::Paper => (vec![1000, 2000, 4000, 8000], 3, 5),
+    }
+}
+
+pub fn run(scale: Scale, seed: u64) -> Vec<Table> {
+    let (sizes, repeats, k) = params(scale);
+    let base = synthetic::mnist_like(&mut Rng::seed_from(seed), *sizes.iter().max().unwrap() * 2);
+    let threads = default_threads();
+
+    // Per-iteration accounting follows the paper (§5.2): BanditPAM's
+    // measured evals are divided by (swap iterations + 1); PAM and
+    // FastPAM1 are "expected to be exactly k n^2 and n^2 respectively in
+    // each iteration" — the analytic reference lines of Figs 1b/2/3.
+    let mut table = Table::new(
+        format!("Headline — BanditPAM vs PAM/FastPAM1 per-iteration (mnist_like, l2, k={k})"),
+        &[
+            "n",
+            "bp evals/iter",
+            "vs fp1 (n^2)",
+            "vs pam (kn^2)",
+            "bp secs",
+            "fp1 secs (measured)",
+            "same medoids",
+        ],
+    );
+    let mut last_ratio_pam = 0.0;
+    let mut last_n = 1usize;
+    for &n in &sizes {
+        let mut bp = BanditPam::default_paper();
+        let bp_runs = run_setting(&mut bp, &base, Metric::L2, n, k, repeats, threads, seed);
+        let mut fp1 = FastPam1::new();
+        let fp1_runs = run_setting(&mut fp1, &base, Metric::L2, n, k, repeats, threads, seed);
+
+        let bp_iter: f64 =
+            bp_runs.iter().map(|m| m.evals_per_iter).sum::<f64>() / repeats as f64;
+        let bp_s: f64 =
+            bp_runs.iter().map(|m| m.wall_secs).sum::<f64>() / repeats as f64;
+        let fp_s: f64 =
+            fp1_runs.iter().map(|m| m.wall_secs).sum::<f64>() / repeats as f64;
+        let same = bp_runs
+            .iter()
+            .zip(&fp1_runs)
+            .filter(|(a, b)| a.medoids == b.medoids)
+            .count();
+        let ratio_fp1 = (n * n) as f64 / bp_iter.max(1.0);
+        let ratio_pam = (k * n * n) as f64 / bp_iter.max(1.0);
+        table.row(vec![
+            n.to_string(),
+            fnum(bp_iter),
+            format!("{}x fewer", fnum(ratio_fp1)),
+            format!("{}x fewer", fnum(ratio_pam)),
+            fnum(bp_s),
+            fnum(fp_s),
+            format!("{same}/{repeats}"),
+        ]);
+        last_ratio_pam = ratio_pam;
+        last_n = n;
+    }
+
+    // Extrapolate the PAM ratio to n = 70,000: BanditPAM/iter ~ c n log n
+    // vs PAM's k n^2, so the ratio grows ~ n / log n.
+    let c = last_ratio_pam * (last_n as f64).ln() / last_n as f64;
+    let extro = c * 70_000.0 / 70_000f64.ln();
+    let mut summary = Table::new("Headline — extrapolation", &["quantity", "value", "paper"]);
+    summary.row(vec![
+        "evals/iter ratio vs PAM @ n=70k (extrapolated)".into(),
+        format!("{}x", fnum(extro)),
+        "up to 200x".into(),
+    ]);
+    vec![table, summary]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_grows_with_n_and_medoids_agree() {
+        let tables = run(Scale::Smoke, 41);
+        let rows = &tables[0].rows;
+        assert_eq!(rows.len(), 2);
+        let parse_ratio = |s: &str| -> f64 {
+            s.split('x').next().unwrap().parse().unwrap()
+        };
+        let r0 = parse_ratio(&rows[0][3]);
+        let r1 = parse_ratio(&rows[1][3]);
+        assert!(r1 > r0 * 0.8, "PAM ratio should trend upward: {r0} -> {r1}");
+        // medoid agreement in most repeats
+        for row in rows {
+            let (a, b) = row[6].split_once('/').unwrap();
+            let a: usize = a.parse().unwrap();
+            let b: usize = b.parse().unwrap();
+            assert!(a + 1 >= b, "medoid agreement too low: {}", row[6]);
+        }
+    }
+}

@@ -1,0 +1,48 @@
+//! Experiment registry: one module per paper table/figure.
+//!
+//! Every experiment implements a `run(scale) -> Table(s)` entry point used
+//! both by the `banditpam experiment <id>` CLI subcommand and by the
+//! corresponding `cargo bench` target. See DESIGN.md §Experiment-index for
+//! the mapping (figure → module → bench) and EXPERIMENTS.md for recorded
+//! paper-vs-measured results.
+
+pub mod ablations;
+pub mod appfig1_sigma;
+pub mod appfig2_mu;
+pub mod appfig34_rewards;
+pub mod appfig5_pca;
+pub mod fig1a;
+pub mod fig1b;
+pub mod fig2;
+pub mod fig3;
+pub mod harness;
+pub mod headline;
+
+use crate::bench::Scale;
+use crate::bench::table::Table;
+
+/// Run an experiment by id; returns its printed tables.
+pub fn run(id: &str, scale: Scale, seed: u64) -> anyhow::Result<Vec<Table>> {
+    match id {
+        "fig1a" => Ok(fig1a::run(scale, seed)),
+        "fig1b" => Ok(fig1b::run(scale, seed)),
+        "fig2" => Ok(fig2::run(scale, seed)),
+        "fig3" => Ok(fig3::run(scale, seed)),
+        "appfig1" => Ok(appfig1_sigma::run(scale, seed)),
+        "appfig2" => Ok(appfig2_mu::run(scale, seed)),
+        "appfig34" => Ok(appfig34_rewards::run(scale, seed)),
+        "appfig5" => Ok(appfig5_pca::run(scale, seed)),
+        "headline" => Ok(headline::run(scale, seed)),
+        "ablations" => Ok(ablations::run(scale, seed)),
+        other => anyhow::bail!(
+            "unknown experiment {other:?}; available: fig1a fig1b fig2 fig3 \
+             appfig1 appfig2 appfig34 appfig5 headline ablations"
+        ),
+    }
+}
+
+/// All experiment ids (for `banditpam experiment all`).
+pub const ALL: &[&str] = &[
+    "fig1a", "fig1b", "fig2", "fig3", "appfig1", "appfig2", "appfig34",
+    "appfig5", "headline", "ablations",
+];

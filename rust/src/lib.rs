@@ -1,0 +1,64 @@
+//! # BanditPAM — almost linear time k-medoids via multi-armed bandits
+//!
+//! Production-quality reproduction of *BanditPAM: Almost Linear Time
+//! k-Medoids Clustering via Multi-Armed Bandits* (Tiwari et al., NeurIPS
+//! 2020) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: the BanditPAM adaptive
+//!   search ([`bandits::adaptive`], Algorithm 1 of the paper), BUILD/SWAP
+//!   orchestration and state management ([`coordinator`]), every baseline
+//!   the paper evaluates against ([`algorithms`]), dataset generators
+//!   ([`data`]), distance substrates ([`distance`]) and the experiment /
+//!   benchmark harness ([`experiments`], [`bench`]).
+//! * **Layer 2/1 (build time)** — `python/compile/` lowers JAX graphs that
+//!   call Pallas pairwise-distance kernels to HLO-text artifacts.
+//! * **Runtime** — [`runtime`] loads those artifacts through the PJRT C API
+//!   (`xla` crate) so the Rust hot path can execute the AOT-compiled
+//!   kernels; Python is never on the request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! # // no_run: rustdoc test binaries miss the cargo rpath to
+//! # // /opt/xla_extension/lib (libstdc++); compile-checked only.
+//! use banditpam::prelude::*;
+//!
+//! let mut rng = Rng::seed_from(7);
+//! let data = synthetic::gmm(&mut rng, 200, 16, 5, 3.0);
+//! let backend = NativeBackend::new(&data.points, Metric::L2);
+//! let fit = BanditPam::new(BanditPamConfig::default())
+//!     .fit(&backend, 5, &mut rng)
+//!     .unwrap();
+//! println!("loss = {}, medoids = {:?}", fit.loss, fit.medoids);
+//! assert_eq!(fit.medoids.len(), 5);
+//! ```
+//!
+//! See `examples/` for end-to-end drivers (including one that routes all
+//! distance computation through the AOT XLA artifacts) and `DESIGN.md` for
+//! the experiment index.
+
+pub mod algorithms;
+pub mod bandits;
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod distance;
+pub mod experiments;
+pub mod runtime;
+pub mod stats;
+pub mod testkit;
+pub mod util;
+
+/// Convenient single-import surface for examples and downstream users.
+pub mod prelude {
+    pub use crate::algorithms::{
+        clara::Clara, clarans::Clarans, fastpam::FastPam, fastpam1::FastPam1,
+        meddit::Meddit, pam::Pam, voronoi::VoronoiIteration, Clustering, FitStats,
+        KMedoids,
+    };
+    pub use crate::coordinator::{banditpam::BanditPam, config::BanditPamConfig};
+    pub use crate::data::{synthetic, Dataset, Points};
+    pub use crate::distance::{counter::DistanceCounter, Metric};
+    pub use crate::runtime::backend::{DistanceBackend, NativeBackend};
+    pub use crate::util::rng::Rng;
+}

@@ -1,0 +1,217 @@
+//! `banditpam` CLI — leader entrypoint for the BanditPAM coordinator.
+//!
+//! Subcommands:
+//!   cluster        fit k medoids on a CSV / synthetic dataset
+//!   experiment     regenerate a paper table/figure (see DESIGN.md)
+//!   generate-data  write a synthetic dataset to CSV
+//!   info           runtime / artifact diagnostics
+//!
+//! Run `banditpam help` for full usage.
+
+use anyhow::{bail, Context, Result};
+use banditpam::algorithms::{
+    clara::Clara, clarans::Clarans, fastpam::FastPam, fastpam1::FastPam1,
+    meddit::Meddit, pam::Pam, voronoi::VoronoiIteration, KMedoids,
+};
+use banditpam::bench::Scale;
+use banditpam::coordinator::banditpam::BanditPam;
+use banditpam::data::{loader, synthetic, Dataset};
+use banditpam::distance::Metric;
+use banditpam::runtime::backend::NativeBackend;
+use banditpam::runtime::executable::Client;
+use banditpam::runtime::manifest::Manifest;
+use banditpam::runtime::xla_backend::XlaBackend;
+use banditpam::util::cli::Args;
+use banditpam::util::rng::Rng;
+use std::path::PathBuf;
+
+const HELP: &str = "\
+banditpam — almost linear time k-medoids clustering via multi-armed bandits
+
+USAGE:
+  banditpam cluster [--data FILE.csv | --synthetic NAME] [--n N] [--k K]
+                    [--metric l2|l1|cosine|tree] [--algo NAME] [--seed S]
+                    [--backend native|xla] [--threads T] [--verbose]
+  banditpam experiment <id|all> [--scale smoke|quick|paper] [--seed S] [--csv]
+  banditpam generate-data --synthetic NAME --n N --out FILE.csv [--seed S]
+  banditpam info
+
+ALGORITHMS: banditpam (default), pam, fastpam1, fastpam, clara, clarans,
+            voronoi, meddit (k=1 only)
+SYNTHETIC DATASETS: gmm, mnist, scrna, scrna-pca, hoc4
+EXPERIMENTS: fig1a fig1b fig2 fig3 appfig1 appfig2 appfig34 appfig5
+             headline ablations (see DESIGN.md for the paper mapping)
+";
+
+fn make_algo(name: &str) -> Result<Box<dyn KMedoids>> {
+    Ok(match name {
+        "banditpam" => Box::new(BanditPam::default_paper()),
+        "pam" => Box::new(Pam::new()),
+        "fastpam1" => Box::new(FastPam1::new()),
+        "fastpam" => Box::new(FastPam::new()),
+        "clara" => Box::new(Clara::new()),
+        "clarans" => Box::new(Clarans::new()),
+        "voronoi" => Box::new(VoronoiIteration::new()),
+        "meddit" => Box::new(Meddit::new()),
+        other => bail!("unknown algorithm {other:?} (see `banditpam help`)"),
+    })
+}
+
+fn make_dataset(args: &Args, rng: &mut Rng) -> Result<Dataset> {
+    let n: usize = args.get_parsed("n", 1000usize)?;
+    if let Some(path) = args.get("data") {
+        return loader::load_csv(&PathBuf::from(path));
+    }
+    let name = args.get("synthetic").unwrap_or("gmm");
+    Ok(match name {
+        "gmm" => synthetic::gmm(rng, n, 16, 5, 3.0),
+        "mnist" => synthetic::mnist_like(rng, n),
+        "scrna" => synthetic::scrna_like(rng, n, 1024),
+        "scrna-pca" => synthetic::scrna_pca(rng, n, 1024, 10),
+        "hoc4" => synthetic::hoc4_like(rng, n),
+        other => bail!("unknown synthetic dataset {other:?}"),
+    })
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let seed: u64 = args.get_parsed("seed", 42u64)?;
+    let mut rng = Rng::seed_from(seed);
+    let ds = make_dataset(args, &mut rng)?;
+    let k: usize = args.get_parsed("k", 5usize)?;
+    let metric = Metric::parse(args.get("metric").unwrap_or("l2"))
+        .context("bad --metric (l2|l1|cosine|tree)")?;
+    let algo_name = args.get("algo").unwrap_or("banditpam").to_string();
+    let threads: usize = args.get_parsed(
+        "threads",
+        banditpam::experiments::harness::default_threads(),
+    )?;
+
+    let backend_kind = args.get("backend").unwrap_or("native");
+    let mut algo = make_algo(&algo_name)?;
+    println!(
+        "dataset {} (n={}, metric={metric}, k={k}, algo={algo_name}, backend={backend_kind})",
+        ds.name,
+        ds.len()
+    );
+    let fit = match backend_kind {
+        "native" => {
+            let backend = NativeBackend::new(&ds.points, metric).with_threads(threads);
+            algo.fit(&backend, k, &mut rng)?
+        }
+        "xla" => {
+            let client = Client::cpu()?;
+            let backend =
+                XlaBackend::new(&client, &Manifest::default_dir(), &ds.points, metric)?;
+            println!(
+                "xla backend: artifact {} on {}",
+                backend.artifact().name,
+                client.platform()
+            );
+            algo.fit(&backend, k, &mut rng)?
+        }
+        other => bail!("unknown backend {other:?} (native|xla)"),
+    };
+
+    println!("medoids       : {:?}", fit.medoids);
+    println!("loss          : {:.4}", fit.loss);
+    println!("distance evals: {}", fit.stats.distance_evals);
+    println!(
+        "evals/iter    : {:.1} ({} swap iters)",
+        fit.stats.evals_per_iter(),
+        fit.stats.swap_iters
+    );
+    println!("wall time     : {:.3}s", fit.stats.wall_secs);
+    if args.flag("verbose") {
+        let mut sizes = vec![0usize; k];
+        for &a in &fit.assignments {
+            sizes[a] += 1;
+        }
+        println!("cluster sizes : {sizes:?}");
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .context("usage: banditpam experiment <id|all>")?;
+    let scale = match args.get("scale").unwrap_or("quick") {
+        "smoke" => Scale::Smoke,
+        "quick" => Scale::Quick,
+        "paper" => Scale::Paper,
+        other => bail!("bad --scale {other:?}"),
+    };
+    let seed: u64 = args.get_parsed("seed", 42u64)?;
+    let ids: Vec<&str> = if id == "all" {
+        banditpam::experiments::ALL.to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        for table in banditpam::experiments::run(id, scale, seed)? {
+            if args.flag("csv") {
+                print!("{}", table.to_csv());
+            } else {
+                table.print();
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let out = args.get("out").context("--out FILE.csv required")?;
+    let seed: u64 = args.get_parsed("seed", 42u64)?;
+    let mut rng = Rng::seed_from(seed);
+    let ds = make_dataset(args, &mut rng)?;
+    loader::save_csv(&ds, &PathBuf::from(out))?;
+    println!("wrote {} points to {out}", ds.len());
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("banditpam v{}", env!("CARGO_PKG_VERSION"));
+    println!(
+        "threads available: {}",
+        banditpam::experiments::harness::default_threads()
+    );
+    let dir = Manifest::default_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!(
+                "artifacts dir: {} ({} artifacts)",
+                dir.display(),
+                m.artifacts.len()
+            );
+            for a in &m.artifacts {
+                println!(
+                    "  {:<36} kind={} metric={} [{} x {} x {}]",
+                    a.name, a.kind, a.metric, a.t, a.r, a.d
+                );
+            }
+        }
+        Err(e) => println!("artifacts dir: {} (unavailable: {e})", dir.display()),
+    }
+    match Client::cpu() {
+        Ok(c) => println!("PJRT client: {}", c.platform()),
+        Err(e) => println!("PJRT client: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("cluster") => cmd_cluster(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("generate-data") => cmd_generate(&args),
+        Some("info") => cmd_info(),
+        Some("help") | None => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand {other:?}\n{HELP}"),
+    }
+}

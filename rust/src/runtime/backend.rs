@@ -1,0 +1,300 @@
+//! The `DistanceBackend` trait and the native (pure-Rust) engine.
+
+use crate::data::Points;
+use crate::distance::cache::DistanceCache;
+use crate::distance::counter::DistanceCounter;
+use crate::distance::{evaluate, Metric};
+use std::sync::Arc;
+
+/// A distance engine over a fixed point set.
+///
+/// All algorithm code computes distances exclusively through this trait, so
+/// evaluation counting, caching and the XLA path are transparent to it.
+pub trait DistanceBackend {
+    /// The point set.
+    fn points(&self) -> &Points;
+
+    /// The active metric.
+    fn metric(&self) -> Metric;
+
+    /// The shared evaluation counter.
+    fn counter(&self) -> &DistanceCounter;
+
+    /// Number of points.
+    fn n(&self) -> usize {
+        self.points().len()
+    }
+
+    /// Distance between points `i` and `j` (counted).
+    fn dist(&self, i: usize, j: usize) -> f64;
+
+    /// Dense distance block: `out[t * refs.len() + r] = d(targets[t], refs[r])`.
+    ///
+    /// `out.len()` must equal `targets.len() * refs.len()`. The default
+    /// implementation loops over [`DistanceBackend::dist`]; engines override
+    /// it with batched/parallel execution.
+    fn block(&self, targets: &[usize], refs: &[usize], out: &mut [f64]) {
+        assert_eq!(out.len(), targets.len() * refs.len());
+        for (ti, &t) in targets.iter().enumerate() {
+            for (ri, &r) in refs.iter().enumerate() {
+                out[ti * refs.len() + ri] = self.dist(t, r);
+            }
+        }
+    }
+
+    /// Short engine name for logs/reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust engine: optimized dense kernels + Zhang–Shasha, thread-sharded
+/// blocks, optional Appendix-2.2 pairwise cache.
+pub struct NativeBackend<'a> {
+    points: &'a Points,
+    metric: Metric,
+    counter: DistanceCounter,
+    cache: Option<Arc<DistanceCache>>,
+    /// Thread count for [`DistanceBackend::block`]; 1 disables sharding.
+    threads: usize,
+}
+
+impl<'a> NativeBackend<'a> {
+    /// New engine over `points` with `metric`. Panics on an incompatible
+    /// metric/storage combination.
+    pub fn new(points: &'a Points, metric: Metric) -> Self {
+        assert!(
+            metric.supports(points),
+            "metric {metric} does not support {} points",
+            points.kind()
+        );
+        NativeBackend {
+            points,
+            metric,
+            counter: DistanceCounter::new(),
+            cache: None,
+            threads: 1,
+        }
+    }
+
+    /// Enable the pairwise cache with a soft entry capacity.
+    pub fn with_cache(mut self, capacity: usize) -> Self {
+        self.cache = Some(Arc::new(DistanceCache::new(capacity)));
+        self
+    }
+
+    /// Enable thread-sharded block evaluation.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Cache statistics, when the cache is enabled: (hits, misses).
+    pub fn cache_stats(&self) -> Option<(u64, u64)> {
+        self.cache.as_ref().map(|c| c.stats())
+    }
+
+    #[inline]
+    fn raw(&self, i: usize, j: usize) -> f64 {
+        match &self.cache {
+            None => {
+                self.counter.add(1);
+                evaluate(self.metric, self.points, i, j)
+            }
+            Some(cache) => cache.get_or_compute(i, j, || {
+                self.counter.add(1);
+                evaluate(self.metric, self.points, i, j)
+            }),
+        }
+    }
+
+    /// Per-element work heuristic used to decide when threading pays off.
+    fn elem_cost(&self) -> usize {
+        match (self.metric, self.points) {
+            (Metric::TreeEdit, _) => 400,
+            (_, Points::Dense(m)) => m.cols().max(1),
+            _ => 64,
+        }
+    }
+}
+
+impl<'a> DistanceBackend for NativeBackend<'a> {
+    fn points(&self) -> &Points {
+        self.points
+    }
+
+    fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    fn counter(&self) -> &DistanceCounter {
+        &self.counter
+    }
+
+    fn dist(&self, i: usize, j: usize) -> f64 {
+        self.raw(i, j)
+    }
+
+    fn block(&self, targets: &[usize], refs: &[usize], out: &mut [f64]) {
+        assert_eq!(out.len(), targets.len() * refs.len());
+        // Cache-less fast path: count the whole block with one atomic add
+        // instead of one per distance (measurable on the hot loop — see
+        // EXPERIMENTS.md §Perf) and skip the per-element counter code.
+        if self.cache.is_none() && self.threads <= 1 {
+            self.counter.add((targets.len() * refs.len()) as u64);
+            for (ti, &t) in targets.iter().enumerate() {
+                for (ri, &r) in refs.iter().enumerate() {
+                    out[ti * refs.len() + ri] = evaluate(self.metric, self.points, t, r);
+                }
+            }
+            return;
+        }
+        let work = targets.len() * refs.len() * self.elem_cost();
+        // Threading threshold: below ~1M scalar ops the spawn overhead wins.
+        if self.threads <= 1 || work < 1_000_000 || targets.len() < 2 {
+            for (ti, &t) in targets.iter().enumerate() {
+                for (ri, &r) in refs.iter().enumerate() {
+                    out[ti * refs.len() + ri] = self.raw(t, r);
+                }
+            }
+            return;
+        }
+        let shard = targets.len().div_ceil(self.threads);
+        let rn = refs.len();
+        std::thread::scope(|scope| {
+            let mut rest = out;
+            let mut start = 0usize;
+            while start < targets.len() {
+                let end = (start + shard).min(targets.len());
+                let rows = end - start;
+                let (chunk, tail) = rest.split_at_mut(rows * rn);
+                rest = tail;
+                let tgt = &targets[start..end];
+                let this = &*self;
+                scope.spawn(move || {
+                    for (ti, &t) in tgt.iter().enumerate() {
+                        for (ri, &r) in refs.iter().enumerate() {
+                            chunk[ti * rn + ri] = this.raw(t, r);
+                        }
+                    }
+                });
+                start = end;
+            }
+        });
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Compute the k-medoids loss (Eq. 1) and point assignments for a medoid
+/// set: each point contributes its distance to the nearest medoid.
+pub fn loss_and_assignments(
+    backend: &dyn DistanceBackend,
+    medoids: &[usize],
+) -> (f64, Vec<usize>) {
+    assert!(!medoids.is_empty());
+    let n = backend.n();
+    let mut loss = 0.0;
+    let mut assign = vec![0usize; n];
+    for i in 0..n {
+        let mut best = f64::INFINITY;
+        let mut who = 0;
+        for (mi, &m) in medoids.iter().enumerate() {
+            let d = backend.dist(m, i);
+            if d < best {
+                best = d;
+                who = mi;
+            }
+        }
+        loss += best;
+        assign[i] = who;
+    }
+    (loss, assign)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::util::rng::Rng;
+
+    fn dataset() -> crate::data::Dataset {
+        synthetic::gmm(&mut Rng::seed_from(1), 40, 8, 3, 3.0)
+    }
+
+    #[test]
+    fn dist_counts_evaluations() {
+        let ds = dataset();
+        let b = NativeBackend::new(&ds.points, Metric::L2);
+        b.dist(0, 1);
+        b.dist(2, 3);
+        assert_eq!(b.counter().get(), 2);
+    }
+
+    #[test]
+    fn cache_avoids_recomputation() {
+        let ds = dataset();
+        let b = NativeBackend::new(&ds.points, Metric::L2).with_cache(10_000);
+        let d1 = b.dist(0, 1);
+        let d2 = b.dist(1, 0);
+        assert_eq!(d1, d2);
+        assert_eq!(b.counter().get(), 1, "second lookup must hit the cache");
+        assert_eq!(b.cache_stats(), Some((1, 1)));
+    }
+
+    #[test]
+    fn block_matches_dist_single_thread() {
+        let ds = dataset();
+        let b = NativeBackend::new(&ds.points, Metric::L1);
+        let targets = [0, 5, 7];
+        let refs = [1, 2, 3, 4];
+        let mut out = vec![0.0; 12];
+        b.block(&targets, &refs, &mut out);
+        for (ti, &t) in targets.iter().enumerate() {
+            for (ri, &r) in refs.iter().enumerate() {
+                assert_eq!(out[ti * 4 + ri], b.dist(t, r));
+            }
+        }
+    }
+
+    #[test]
+    fn block_threaded_matches_serial() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(2), 200, 64, 3, 2.0);
+        let serial = NativeBackend::new(&ds.points, Metric::L2);
+        let threaded = NativeBackend::new(&ds.points, Metric::L2).with_threads(4);
+        let targets: Vec<usize> = (0..150).collect();
+        let refs: Vec<usize> = (50..200).collect();
+        let mut a = vec![0.0; targets.len() * refs.len()];
+        let mut b = vec![0.0; targets.len() * refs.len()];
+        serial.block(&targets, &refs, &mut a);
+        threaded.block(&targets, &refs, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(serial.counter().get(), threaded.counter().get());
+    }
+
+    #[test]
+    fn loss_and_assignments_basics() {
+        let ds = dataset();
+        let b = NativeBackend::new(&ds.points, Metric::L2);
+        let (loss, assign) = loss_and_assignments(&b, &[0, 1]);
+        assert!(loss > 0.0);
+        assert_eq!(assign.len(), 40);
+        // medoids are assigned to themselves with distance zero
+        assert_eq!(assign[0], 0);
+        assert_eq!(assign[1], 1);
+        // every assignment is the argmin over medoids
+        for i in 0..40 {
+            let d0 = b.dist(0, i);
+            let d1 = b.dist(1, i);
+            let want = if d0 <= d1 { 0 } else { 1 };
+            assert_eq!(assign[i], want, "point {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "does not support")]
+    fn incompatible_metric_panics() {
+        let ds = dataset();
+        NativeBackend::new(&ds.points, Metric::TreeEdit);
+    }
+}

@@ -1,0 +1,115 @@
+//! PJRT executable loading: HLO text -> compiled, callable computation.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: the interchange format is
+//! HLO **text** (jax >= 0.5 emits 64-bit instruction ids in serialized
+//! protos, which xla_extension 0.5.1 rejects; the text parser reassigns
+//! ids). Each artifact compiles once and is then executed with concrete
+//! `f32` buffers from the Rust hot path.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Shared PJRT CPU client (one per process is plenty).
+pub struct Client {
+    inner: xla::PjRtClient,
+}
+
+impl Client {
+    /// Create the PJRT CPU client.
+    pub fn cpu() -> Result<Client> {
+        let inner = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Client { inner })
+    }
+
+    /// Platform string, e.g. "cpu" (for logs).
+    pub fn platform(&self) -> String {
+        self.inner.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it on this client.
+    pub fn compile_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-UTF-8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .inner
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe })
+    }
+}
+
+/// A compiled computation plus its buffer plumbing.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl std::fmt::Debug for Executable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executable").finish_non_exhaustive()
+    }
+}
+
+/// A concrete f32 input tensor.
+pub struct Input<'a> {
+    pub data: &'a [f32],
+    pub shape: &'a [i64],
+}
+
+impl Executable {
+    /// Execute with f32 inputs; returns the flattened f32 outputs of the
+    /// (single-tuple) result, one `Vec` per tuple element.
+    pub fn run_f32(&self, inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for inp in inputs {
+            let expect: i64 = inp.shape.iter().product();
+            anyhow::ensure!(
+                expect as usize == inp.data.len(),
+                "input shape {:?} does not match buffer length {}",
+                inp.shape,
+                inp.data.len()
+            );
+            let lit = xla::Literal::vec1(inp.data)
+                .reshape(inp.shape)
+                .context("reshaping input literal")?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .context("executing PJRT computation")?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let elems = result.to_tuple().context("untupling result")?;
+        let mut out = Vec::with_capacity(elems.len());
+        for e in elems {
+            out.push(e.to_vec::<f32>().context("reading f32 output")?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Compiling real artifacts is covered by `rust/tests/integration_runtime.rs`
+    //! (it needs `make artifacts` to have run). Here we only check error paths
+    //! that do not require a PJRT client.
+
+    use super::*;
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        let client = match Client::cpu() {
+            Ok(c) => c,
+            Err(_) => return, // PJRT unavailable in this environment
+        };
+        let err = client
+            .compile_hlo_text(Path::new("/nonexistent/foo.hlo.txt"))
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("foo.hlo.txt"), "{msg}");
+    }
+}

@@ -1,0 +1,162 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. `artifacts/manifest.json` lists every lowered HLO module
+//! with its graph kind, metric and fixed tile shape.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub kind: String,
+    pub metric: String,
+    /// Target tile rows.
+    pub t: usize,
+    /// Reference tile rows.
+    pub r: usize,
+    /// Feature dimension.
+    pub d: usize,
+    /// Medoid-count axis for `swap_delta` artifacts (0 otherwise).
+    pub k: usize,
+    pub name: String,
+    /// Absolute path to the `.hlo.txt` file.
+    pub path: PathBuf,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let version = j
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing version"))?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts array"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let field = |k: &str| -> Result<&Json> {
+                a.get(k).ok_or_else(|| anyhow!("artifact missing field {k:?}"))
+            };
+            let spec = ArtifactSpec {
+                kind: field("kind")?.as_str().unwrap_or_default().to_string(),
+                metric: field("metric")?.as_str().unwrap_or_default().to_string(),
+                t: field("t")?.as_usize().ok_or_else(|| anyhow!("bad t"))?,
+                r: field("r")?.as_usize().ok_or_else(|| anyhow!("bad r"))?,
+                d: field("d")?.as_usize().ok_or_else(|| anyhow!("bad d"))?,
+                k: a.get("k").and_then(Json::as_usize).unwrap_or(0),
+                name: field("name")?.as_str().unwrap_or_default().to_string(),
+                path: dir.join(
+                    field("file")?.as_str().ok_or_else(|| anyhow!("bad file"))?,
+                ),
+            };
+            artifacts.push(spec);
+        }
+        Ok(Manifest { artifacts, dir: dir.to_path_buf() })
+    }
+
+    /// Default artifact directory: `$BANDITPAM_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("BANDITPAM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Best `pairwise` artifact for `metric` and feature dim `d`: the one
+    /// with the smallest artifact dim `>= d` (inputs are zero-padded up).
+    pub fn find_pairwise(&self, metric: &str, d: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == "pairwise" && a.metric == metric && a.d >= d)
+            .min_by_key(|a| a.d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("banditpam_manifest_{tag}_{}", std::process::id()));
+        p
+    }
+
+    const GOOD: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"kind": "pairwise", "metric": "l2", "t": 64, "r": 128, "d": 16,
+         "name": "p16", "file": "p16.hlo.txt"},
+        {"kind": "pairwise", "metric": "l2", "t": 64, "r": 128, "d": 784,
+         "name": "p784", "file": "p784.hlo.txt"},
+        {"kind": "swap_delta", "metric": "l2", "t": 64, "r": 128, "d": 784,
+         "k": 8, "name": "sd", "file": "sd.hlo.txt"}
+      ]
+    }"#;
+
+    #[test]
+    fn load_and_select() {
+        let dir = tmpdir("good");
+        write_manifest(&dir, GOOD);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        // d=10 should pick the 16-dim artifact, not 784
+        let a = m.find_pairwise("l2", 10).unwrap();
+        assert_eq!(a.d, 16);
+        let b = m.find_pairwise("l2", 100).unwrap();
+        assert_eq!(b.d, 784);
+        assert!(m.find_pairwise("l2", 1000).is_none());
+        assert!(m.find_pairwise("l1", 4).is_none());
+        assert_eq!(m.artifacts[2].k, 8);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let dir = tmpdir("badver");
+        write_manifest(&dir, r#"{"version": 2, "artifacts": []}"#);
+        assert!(Manifest::load(&dir).unwrap_err().to_string().contains("version"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let dir = tmpdir("missing");
+        write_manifest(
+            &dir,
+            r#"{"version": 1, "artifacts": [{"kind": "pairwise"}]}"#,
+        );
+        assert!(Manifest::load(&dir).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn missing_file_mentions_make_artifacts() {
+        let dir = tmpdir("nofile");
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,21 @@
+//! Runtime: distance backends and the PJRT bridge to the AOT artifacts.
+//!
+//! Two interchangeable engines implement [`backend::DistanceBackend`]:
+//!
+//! * [`backend::NativeBackend`] — optimized in-process Rust kernels
+//!   (required for tree edit distance; used by the large benchmark sweeps).
+//!   Parallelizes big blocks across threads internally and optionally
+//!   consults the Appendix-2.2 pairwise cache.
+//! * [`xla_backend::XlaBackend`] — routes dense-vector metrics through the
+//!   HLO-text artifacts produced by `python/compile/aot.py` (Pallas kernels
+//!   lowered at build time), executed on the PJRT CPU client via the `xla`
+//!   crate. Python is never on this path.
+//!
+//! Both count every evaluated distance through the same
+//! [`crate::distance::counter::DistanceCounter`], so the paper's
+//! distance-evaluation metrics are backend-invariant.
+
+pub mod backend;
+pub mod executable;
+pub mod manifest;
+pub mod xla_backend;

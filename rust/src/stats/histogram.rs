@@ -1,0 +1,135 @@
+//! Fixed-bin histograms with terminal rendering.
+//!
+//! Used by the Appendix-Figure-2/3/4 experiments (distribution of true arm
+//! parameters and of per-arm rewards) to print the paper's histograms as
+//! ASCII bars.
+
+/// Equal-width histogram over `[lo, hi]`.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+    n: u64,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    /// Create with `bins` equal-width bins spanning `[lo, hi]`.
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(bins > 0 && hi > lo, "bad histogram spec");
+        Histogram { lo, hi, counts: vec![0; bins], n: 0, underflow: 0, overflow: 0 }
+    }
+
+    /// Create spanning the observed min/max of `xs`, then fill.
+    pub fn fit(xs: &[f64], bins: usize) -> Self {
+        assert!(!xs.is_empty());
+        let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let hi = if hi > lo { hi } else { lo + 1.0 };
+        let mut h = Histogram::new(lo, hi, bins);
+        xs.iter().for_each(|&x| h.push(x));
+        h
+    }
+
+    /// Record one observation.
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        if x < self.lo {
+            self.underflow += 1;
+            return;
+        }
+        if x > self.hi {
+            self.overflow += 1;
+            return;
+        }
+        let bins = self.counts.len();
+        let idx = (((x - self.lo) / (self.hi - self.lo)) * bins as f64) as usize;
+        self.counts[idx.min(bins - 1)] += 1;
+    }
+
+    /// Bin counts.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Total observations (including under/overflow).
+    pub fn total(&self) -> u64 {
+        self.n
+    }
+
+    /// Center of bin `i`.
+    pub fn bin_center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        self.lo + w * (i as f64 + 0.5)
+    }
+
+    /// ASCII rendering: one line per bin, bars scaled to `width` chars.
+    pub fn render(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let bar = "#".repeat((c as usize * width) / max as usize);
+            out.push_str(&format!(
+                "{:>12.4} | {:<w$} {}\n",
+                self.bin_center(i),
+                bar,
+                c,
+                w = width
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bins_fill_correctly() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.push(i as f64 + 0.5);
+        }
+        assert!(h.counts().iter().all(|&c| c == 1));
+        assert_eq!(h.total(), 10);
+    }
+
+    #[test]
+    fn boundary_values() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.push(0.0); // first bin
+        h.push(1.0); // clamped into last bin
+        h.push(-0.1); // underflow
+        h.push(1.1); // overflow
+        assert_eq!(h.counts()[0], 1);
+        assert_eq!(h.counts()[3], 1);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+    }
+
+    #[test]
+    fn fit_spans_data() {
+        let xs = [-2.0, 0.0, 4.0, 4.0];
+        let h = Histogram::fit(&xs, 3);
+        assert_eq!(h.total(), 4);
+        assert_eq!(h.underflow + h.overflow, 0);
+        assert_eq!(h.counts().iter().sum::<u64>(), 4);
+    }
+
+    #[test]
+    fn render_contains_bars() {
+        let h = Histogram::fit(&[1.0, 1.0, 1.0, 5.0], 2);
+        let s = h.render(10);
+        assert!(s.contains('#'));
+        assert_eq!(s.lines().count(), 2);
+    }
+
+    #[test]
+    fn constant_data_does_not_panic() {
+        let h = Histogram::fit(&[3.0, 3.0, 3.0], 4);
+        assert_eq!(h.total(), 3);
+    }
+}

@@ -1,0 +1,13 @@
+//! Statistics substrate: running moments, summaries, CIs, regression,
+//! histograms — everything the experiment harness needs to report the
+//! paper's tables/figures (means ± 95% CI, log–log slopes, boxplots).
+
+pub mod histogram;
+pub mod regression;
+pub mod running;
+pub mod summary;
+
+pub use histogram::Histogram;
+pub use regression::{loglog_slope, LinearFit};
+pub use running::Running;
+pub use summary::{mean_ci95, quantile, Summary};

@@ -1,0 +1,98 @@
+//! Least-squares line fitting.
+//!
+//! The paper's scaling claims are stated as slopes of lines of best fit on
+//! log–log plots (e.g. Figure 2: slope 0.984 for MNIST/l2/k=5, Appendix
+//! Figure 5: slope 1.204 for scRNA-PCA). [`loglog_slope`] reproduces that
+//! readout for our benchmark sweeps.
+
+/// Result of a simple linear regression `y = slope * x + intercept`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinearFit {
+    pub slope: f64,
+    pub intercept: f64,
+    /// Coefficient of determination.
+    pub r2: f64,
+}
+
+/// Ordinary least squares on `(x, y)` pairs. Panics if `xs.len() < 2` or
+/// lengths disagree.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> LinearFit {
+    assert_eq!(xs.len(), ys.len(), "length mismatch");
+    assert!(xs.len() >= 2, "need at least two points");
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    let mut syy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+        syy += (y - my) * (y - my);
+    }
+    assert!(sxx > 0.0, "degenerate x values");
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    LinearFit { slope, intercept, r2 }
+}
+
+/// Slope of the line of best fit on the log–log plot of `(x, y)` —
+/// the empirical scaling exponent. All values must be positive.
+pub fn loglog_slope(xs: &[f64], ys: &[f64]) -> LinearFit {
+    let lx: Vec<f64> = xs.iter().map(|&x| {
+        assert!(x > 0.0, "loglog_slope needs positive x");
+        x.ln()
+    }).collect();
+    let ly: Vec<f64> = ys.iter().map(|&y| {
+        assert!(y > 0.0, "loglog_slope needs positive y");
+        y.ln()
+    }).collect();
+    linear_fit(&lx, &ly)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [3.0, 5.0, 7.0, 9.0];
+        let f = linear_fit(&xs, &ys);
+        assert!((f.slope - 2.0).abs() < 1e-12);
+        assert!((f.intercept - 1.0).abs() < 1e-12);
+        assert!((f.r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn power_law_recovered_by_loglog() {
+        // y = 3 x^1.7
+        let xs: Vec<f64> = (1..=10).map(|i| i as f64 * 100.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| 3.0 * x.powf(1.7)).collect();
+        let f = loglog_slope(&xs, &ys);
+        assert!((f.slope - 1.7).abs() < 1e-9, "slope {}", f.slope);
+        assert!((f.intercept - 3f64.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn noisy_fit_r2_below_one() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let ys = [1.1, 1.9, 3.2, 3.8, 5.1];
+        let f = linear_fit(&xs, &ys);
+        assert!(f.r2 > 0.97 && f.r2 < 1.0);
+        assert!((f.slope - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least two")]
+    fn single_point_panics() {
+        linear_fit(&[1.0], &[1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive x")]
+    fn loglog_rejects_nonpositive() {
+        loglog_slope(&[0.0, 1.0], &[1.0, 2.0]);
+    }
+}

@@ -1,0 +1,163 @@
+//! Numerically stable running mean/variance (Welford), the estimator behind
+//! every bandit arm in Algorithm 1 (`mu_hat_x`, `sigma_hat_x`).
+
+/// Welford running moments accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Running {
+    /// Empty accumulator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one observation.
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    /// Add many observations.
+    pub fn extend(&mut self, xs: impl IntoIterator<Item = f64>) {
+        for x in xs {
+            self.push(x);
+        }
+    }
+
+    /// Number of observations.
+    #[inline]
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Sample mean (0 when empty).
+    #[inline]
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance (divide by n). 0 when n < 1.
+    #[inline]
+    pub fn var_pop(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Sample variance (divide by n-1). 0 when n < 2.
+    #[inline]
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    /// Sample standard deviation.
+    #[inline]
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// Population standard deviation (what the paper's Eq. 11 uses for
+    /// `sigma_x = STD_{y in batch} g_x(y)`).
+    #[inline]
+    pub fn std_pop(&self) -> f64 {
+        self.var_pop().sqrt()
+    }
+
+    /// Merge another accumulator (parallel reduction; Chan et al.).
+    pub fn merge(&mut self, other: &Running) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let delta = other.mean - self.mean;
+        let n = n1 + n2;
+        self.mean += delta * n2 / n;
+        self.m2 += other.m2 + delta * delta * n1 * n2 / n;
+        self.n += other.n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_naive_moments() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut r = Running::new();
+        r.extend(xs.iter().copied());
+        assert_eq!(r.count(), 8);
+        assert!((r.mean() - 5.0).abs() < 1e-12);
+        assert!((r.var_pop() - 4.0).abs() < 1e-12);
+        assert!((r.std_pop() - 2.0).abs() < 1e-12);
+        assert!((r.var() - 32.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let mut r = Running::new();
+        assert_eq!(r.mean(), 0.0);
+        assert_eq!(r.var(), 0.0);
+        r.push(3.5);
+        assert_eq!(r.mean(), 3.5);
+        assert_eq!(r.var(), 0.0);
+        assert_eq!(r.var_pop(), 0.0);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut whole = Running::new();
+        whole.extend(xs.iter().copied());
+        let mut a = Running::new();
+        let mut b = Running::new();
+        a.extend(xs[..37].iter().copied());
+        b.extend(xs[37..].iter().copied());
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-10);
+        assert!((a.var() - whole.var()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_with_empty() {
+        let mut a = Running::new();
+        a.extend([1.0, 2.0]);
+        let b = Running::new();
+        let mut a2 = a.clone();
+        a2.merge(&b);
+        assert!((a2.mean() - a.mean()).abs() < 1e-15);
+        let mut c = Running::new();
+        c.merge(&a);
+        assert!((c.mean() - a.mean()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn stable_for_large_offset() {
+        // Catastrophic-cancellation check: variance of tiny noise on a huge
+        // offset should still be ~variance of the noise.
+        let mut r = Running::new();
+        for i in 0..1000 {
+            r.push(1e9 + (i % 2) as f64);
+        }
+        assert!((r.var_pop() - 0.25).abs() < 1e-6, "var {}", r.var_pop());
+    }
+}

@@ -1,0 +1,132 @@
+//! Batch summaries: quantiles, five-number boxplot summaries, 95% CIs.
+//!
+//! Used by the experiment harness for the paper's "each parameter setting
+//! was repeated 10 times … 95% confidence intervals are provided" protocol
+//! and by the Appendix-Figure-1 sigma boxplots.
+
+/// Five-number summary + mean (boxplot data).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub max: f64,
+    pub mean: f64,
+}
+
+/// Linear-interpolation quantile of a sorted slice (q in [0, 1]).
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "quantile of empty slice");
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = pos - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Quantile of an unsorted slice (copies + sorts).
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&v, q)
+}
+
+impl Summary {
+    /// Compute from raw observations. Panics on empty input.
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary of empty slice");
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        Summary {
+            n: v.len(),
+            min: v[0],
+            q1: quantile_sorted(&v, 0.25),
+            median: quantile_sorted(&v, 0.5),
+            q3: quantile_sorted(&v, 0.75),
+            max: *v.last().unwrap(),
+            mean,
+        }
+    }
+}
+
+/// Mean and normal-approximation 95% confidence half-width.
+///
+/// Returns `(mean, half_width)`; half-width is `1.96 * s / sqrt(n)`
+/// (0 when n < 2). With the paper's 10 repeats the normal approximation is
+/// what the reference plots use.
+pub fn mean_ci95(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+    (mean, 1.96 * (var / n).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_of_known_sequence() {
+        let xs: Vec<f64> = (1..=5).map(|i| i as f64).collect();
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 0.5), 3.0);
+        assert_eq!(quantile(&xs, 1.0), 5.0);
+        assert_eq!(quantile(&xs, 0.25), 2.0);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((quantile(&xs, 0.3) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_five_numbers() {
+        let xs = [7.0, 1.0, 3.0, 5.0, 9.0];
+        let s = Summary::of(&xs);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.median, 5.0);
+        assert_eq!(s.max, 9.0);
+        assert_eq!(s.mean, 5.0);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn summary_empty_panics() {
+        Summary::of(&[]);
+    }
+
+    #[test]
+    fn ci_shrinks_with_n() {
+        let a: Vec<f64> = (0..10).map(|i| (i % 2) as f64).collect();
+        let b: Vec<f64> = (0..1000).map(|i| (i % 2) as f64).collect();
+        let (_, wa) = mean_ci95(&a);
+        let (_, wb) = mean_ci95(&b);
+        assert!(wb < wa);
+        assert!(wa > 0.0);
+    }
+
+    #[test]
+    fn ci_degenerate_cases() {
+        assert_eq!(mean_ci95(&[]), (0.0, 0.0));
+        assert_eq!(mean_ci95(&[2.0]), (2.0, 0.0));
+        let (m, w) = mean_ci95(&[3.0, 3.0, 3.0]);
+        assert_eq!(m, 3.0);
+        assert_eq!(w, 0.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! In-tree property-testing framework (no `proptest` in the offline cache).
+//!
+//! [`prop::check`] runs a predicate over many seeded random cases and, on
+//! failure, reports the seed and case index so the exact failing input can
+//! be replayed deterministically (`Rng::seed_from(reported_seed)`).
+
+pub mod prop;

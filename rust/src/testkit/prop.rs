@@ -1,0 +1,116 @@
+//! Seeded randomized property checking.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct PropConfig {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed; case `i` uses `Rng::seed_from(base_seed + i)`.
+    pub base_seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // Honors BANDITPAM_PROP_CASES for heavier local runs.
+        let cases = std::env::var("BANDITPAM_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(25);
+        PropConfig { cases, base_seed: 0xBAD5EED }
+    }
+}
+
+/// Run `property` over `cfg.cases` seeded RNGs; panic with the replayable
+/// seed on the first failure. The property returns `Err(reason)` to fail.
+pub fn check<F>(name: &str, cfg: &PropConfig, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed + case as u64;
+        let mut rng = Rng::seed_from(seed);
+        if let Err(reason) = property(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case}/{} (replay with \
+                 Rng::seed_from({seed})): {reason}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+/// Convenience assertion macro for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Random generators for common test inputs.
+pub mod gen {
+    use crate::data::ast::{self, Tree};
+    use crate::data::Dataset;
+    use crate::util::rng::Rng;
+
+    /// A small GMM dataset with randomized (n, d, k, separation).
+    pub fn small_dataset(rng: &mut Rng) -> Dataset {
+        let n = rng.range(10, 60);
+        let d = rng.range(2, 12);
+        let k = rng.range(1, 5);
+        let sep = 0.5 + rng.f64() * 5.0;
+        crate::data::synthetic::gmm(rng, n, d, k, sep)
+    }
+
+    /// A random AST of bounded size.
+    pub fn small_tree(rng: &mut Rng) -> Tree {
+        let mut t = ast::prototypes()[rng.below(4)].clone();
+        for _ in 0..rng.below(8) {
+            ast::mutate(&mut t, rng);
+        }
+        t
+    }
+
+    /// A random f32 vector.
+    pub fn vector(rng: &mut Rng, d: usize) -> Vec<f32> {
+        (0..d).map(|_| rng.normal() as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("always-ok", &PropConfig { cases: 7, base_seed: 1 }, |_rng| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with")]
+    fn failing_property_reports_seed() {
+        check("always-bad", &PropConfig { cases: 3, base_seed: 2 }, |_rng| {
+            Err("nope".to_string())
+        });
+    }
+
+    #[test]
+    fn generators_produce_valid_shapes() {
+        let mut rng = Rng::seed_from(5);
+        for _ in 0..10 {
+            let ds = gen::small_dataset(&mut rng);
+            assert!(ds.len() >= 10 && ds.len() < 60);
+            let t = gen::small_tree(&mut rng);
+            assert!(t.size() >= 1);
+        }
+    }
+}

@@ -1,0 +1,181 @@
+//! Hand-rolled CLI argument parsing (no `clap` in the offline cache).
+//!
+//! Supports the subset the `banditpam` binary needs:
+//! `prog <subcommand> [--flag] [--key value] [--key=value] [positional...]`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parsed command line: a subcommand, `--key value` options, bare `--flag`s
+/// and positional arguments, in order.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Error produced when an option value fails to parse.
+#[derive(Debug)]
+pub struct ParseError {
+    pub key: String,
+    pub value: String,
+    pub expected: &'static str,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "invalid value {:?} for --{} (expected {})",
+            self.value, self.key, self.expected
+        )
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Options that never take a value (`--verbose file.csv` must not consume
+/// `file.csv`). Everything else uses `--key value` / `--key=value`.
+const BOOLEAN_FLAGS: &[&str] = &["verbose", "csv", "force", "help", "quiet"];
+
+impl Args {
+    /// Parse from an iterator of argument strings (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if !BOOLEAN_FLAGS.contains(&stripped)
+                    && it
+                        .peek()
+                        .map(|nxt| !nxt.starts_with("--"))
+                        .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Is the bare flag present?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Raw option value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Option value parsed as `T`, with a default.
+    pub fn get_parsed<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: T,
+    ) -> Result<T, ParseError> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| ParseError {
+                key: key.to_string(),
+                value: v.clone(),
+                expected: std::any::type_name::<T>(),
+            }),
+        }
+    }
+
+    /// Comma-separated list option parsed as `Vec<T>`.
+    pub fn get_list<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: &[T],
+    ) -> Result<Vec<T>, ParseError>
+    where
+        T: Clone,
+    {
+        match self.options.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim().parse().map_err(|_| ParseError {
+                        key: key.to_string(),
+                        value: s.to_string(),
+                        expected: std::any::type_name::<T>(),
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("cluster --n 500 --metric l2 --verbose data.csv");
+        assert_eq!(a.subcommand.as_deref(), Some("cluster"));
+        assert_eq!(a.get("n"), Some("500"));
+        assert_eq!(a.get("metric"), Some("l2"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["data.csv"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("bench --k=10 --delta=0.001");
+        assert_eq!(a.get_parsed("k", 0usize).unwrap(), 10);
+        assert!((a.get_parsed("delta", 0.0f64).unwrap() - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("x --n abc");
+        assert_eq!(a.get_parsed("missing", 7usize).unwrap(), 7);
+        let err = a.get_parsed("n", 0usize).unwrap_err();
+        assert!(err.to_string().contains("invalid value"));
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_value() {
+        let a = parse("run --fast --n 3");
+        assert!(a.flag("fast"));
+        assert_eq!(a.get_parsed("n", 0usize).unwrap(), 3);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse("sweep --sizes 100,200,300");
+        assert_eq!(a.get_list("sizes", &[1usize]).unwrap(), vec![100, 200, 300]);
+        assert_eq!(a.get_list("other", &[5usize]).unwrap(), vec![5]);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+}

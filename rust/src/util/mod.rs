@@ -1,0 +1,11 @@
+//! Small shared substrates: RNG, matrices, CLI parsing, timing.
+//!
+//! These exist because the build is fully offline and the crate cache lacks
+//! `rand`, `clap`, `ndarray` etc. — so the repo carries its own minimal,
+//! tested implementations.
+
+pub mod cli;
+pub mod json;
+pub mod matrix;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,131 @@
+//! Cross-algorithm integration tests: every solver on shared datasets,
+//! checking the quality ordering the paper's Figure 1a establishes.
+
+use banditpam::algorithms::{
+    clara::Clara, clarans::Clarans, fastpam::FastPam, fastpam1::FastPam1,
+    pam::Pam, voronoi::VoronoiIteration, KMedoids,
+};
+use banditpam::coordinator::banditpam::BanditPam;
+use banditpam::data::synthetic;
+use banditpam::distance::Metric;
+use banditpam::runtime::backend::{DistanceBackend, NativeBackend};
+use banditpam::util::rng::Rng;
+
+fn fit(
+    algo: &mut dyn KMedoids,
+    ds: &banditpam::data::Dataset,
+    metric: Metric,
+    k: usize,
+    seed: u64,
+) -> banditpam::algorithms::Clustering {
+    let backend = NativeBackend::new(&ds.points, metric);
+    algo.fit(&backend, k, &mut Rng::seed_from(seed)).unwrap()
+}
+
+#[test]
+fn all_algorithms_produce_valid_clusterings() {
+    let ds = synthetic::gmm(&mut Rng::seed_from(1), 120, 8, 4, 3.0);
+    let algos: Vec<Box<dyn KMedoids>> = vec![
+        Box::new(BanditPam::default_paper()),
+        Box::new(Pam::new()),
+        Box::new(FastPam1::new()),
+        Box::new(FastPam::new()),
+        Box::new(Clara::new()),
+        Box::new(Clarans::new()),
+        Box::new(VoronoiIteration::new()),
+    ];
+    for mut algo in algos {
+        let c = fit(algo.as_mut(), &ds, Metric::L2, 4, 7);
+        assert_eq!(c.medoids.len(), 4, "{}", algo.name());
+        // medoids distinct, sorted, in range
+        assert!(c.medoids.windows(2).all(|w| w[0] < w[1]), "{}", algo.name());
+        assert!(c.medoids.iter().all(|&m| m < 120), "{}", algo.name());
+        assert_eq!(c.assignments.len(), 120);
+        assert!(c.loss.is_finite() && c.loss > 0.0);
+        // every point assigned to its genuinely nearest medoid
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        for i in 0..120 {
+            let d_assigned = backend.dist(c.medoids[c.assignments[i]], i);
+            for &m in &c.medoids {
+                assert!(
+                    d_assigned <= backend.dist(m, i) + 1e-9,
+                    "{}: point {i} misassigned",
+                    algo.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn quality_ordering_matches_figure_1a() {
+    // PAM (== FastPAM1 == BanditPAM whp) <= FastPAM <~ CLARANS/Voronoi.
+    let mut pam_loss = 0.0;
+    let mut bandit_loss = 0.0;
+    let mut fastpam_loss = 0.0;
+    let mut clarans_loss = 0.0;
+    let mut voronoi_loss = 0.0;
+    let reps = 4;
+    for seed in 0..reps {
+        let ds = synthetic::gmm(&mut Rng::seed_from(900 + seed), 150, 6, 4, 2.0);
+        pam_loss += fit(&mut Pam::new(), &ds, Metric::L2, 4, seed).loss;
+        bandit_loss += fit(&mut BanditPam::default_paper(), &ds, Metric::L2, 4, seed).loss;
+        fastpam_loss += fit(&mut FastPam::new(), &ds, Metric::L2, 4, seed).loss;
+        clarans_loss += fit(&mut Clarans::new(), &ds, Metric::L2, 4, seed).loss;
+        voronoi_loss += fit(&mut VoronoiIteration::new(), &ds, Metric::L2, 4, seed).loss;
+    }
+    assert!(bandit_loss <= pam_loss * 1.01, "banditpam must match PAM quality");
+    assert!(fastpam_loss <= pam_loss * 1.10, "fastpam comparable to PAM");
+    assert!(clarans_loss >= pam_loss * 0.999, "PAM is the quality reference");
+    assert!(voronoi_loss >= pam_loss * 0.999);
+}
+
+#[test]
+fn banditpam_matches_pam_across_metrics() {
+    for metric in [Metric::L2, Metric::L1, Metric::Cosine] {
+        let ds = synthetic::gmm(&mut Rng::seed_from(77), 80, 6, 3, 3.0);
+        let pam = fit(&mut Pam::new(), &ds, metric, 3, 0);
+        let bp = fit(&mut BanditPam::default_paper(), &ds, metric, 3, 5);
+        assert!(
+            bp.medoids == pam.medoids || bp.loss <= pam.loss * 1.02,
+            "{metric}: {:?} vs {:?} (loss {} vs {})",
+            bp.medoids,
+            pam.medoids,
+            bp.loss,
+            pam.loss
+        );
+    }
+}
+
+#[test]
+fn banditpam_on_trees_matches_pam() {
+    let ds = synthetic::hoc4_like(&mut Rng::seed_from(5), 70);
+    let pam = fit(&mut Pam::new(), &ds, Metric::TreeEdit, 2, 0);
+    let bp = fit(&mut BanditPam::default_paper(), &ds, Metric::TreeEdit, 2, 3);
+    assert!(
+        bp.medoids == pam.medoids || (bp.loss - pam.loss).abs() < 1e-9,
+        "tree medoids {:?} vs {:?}",
+        bp.medoids,
+        pam.medoids
+    );
+}
+
+#[test]
+fn k_equals_one_agrees_with_meddit_and_pam() {
+    use banditpam::algorithms::meddit::Meddit;
+    let ds = synthetic::gmm(&mut Rng::seed_from(6), 90, 4, 1, 1.0);
+    let pam = fit(&mut Pam::new(), &ds, Metric::L2, 1, 0);
+    let meddit = fit(&mut Meddit::new(), &ds, Metric::L2, 1, 1);
+    let bp = fit(&mut BanditPam::default_paper(), &ds, Metric::L2, 1, 2);
+    assert_eq!(pam.medoids, meddit.medoids);
+    assert_eq!(pam.medoids, bp.medoids);
+}
+
+#[test]
+fn subsampled_fits_are_deterministic_given_seed() {
+    let ds = synthetic::mnist_like(&mut Rng::seed_from(9), 150);
+    let a = fit(&mut BanditPam::default_paper(), &ds, Metric::L2, 3, 42);
+    let b = fit(&mut BanditPam::default_paper(), &ds, Metric::L2, 3, 42);
+    assert_eq!(a.medoids, b.medoids);
+    assert_eq!(a.stats.distance_evals, b.stats.distance_evals);
+}

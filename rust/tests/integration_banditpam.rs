@@ -1,0 +1,148 @@
+//! BanditPAM-specific integration tests: the paper's complexity and
+//! fidelity claims at test scale.
+
+use banditpam::algorithms::{fastpam1::FastPam1, KMedoids};
+use banditpam::bandits::adaptive::{SamplingMode, SigmaMode};
+use banditpam::bandits::confidence::CiKind;
+use banditpam::coordinator::banditpam::BanditPam;
+use banditpam::coordinator::config::{BanditPamConfig, DeltaMode};
+use banditpam::data::synthetic;
+use banditpam::distance::Metric;
+use banditpam::runtime::backend::NativeBackend;
+use banditpam::util::rng::Rng;
+
+#[test]
+fn evals_scale_subquadratically() {
+    // Theorem 2 at test scale: per-iteration evals grow far slower than
+    // quadratically. 4x the sample size must cost well under 16x; the
+    // paper's almost-linear regime gives ~4-6x (constant-dominated at
+    // these small n, so we allow margin).
+    let base = synthetic::mnist_like(&mut Rng::seed_from(1), 4800);
+    let mut per_iter = Vec::new();
+    for &n in &[1200usize, 4800] {
+        let sub = base.subsample(n, &mut Rng::seed_from(2));
+        let backend = NativeBackend::new(&sub.points, Metric::L2);
+        let fit = BanditPam::default_paper()
+            .fit(&backend, 3, &mut Rng::seed_from(3))
+            .unwrap();
+        per_iter.push(fit.stats.evals_per_iter());
+    }
+    let growth = per_iter[1] / per_iter[0];
+    assert!(
+        growth < 12.0,
+        "4x n gave {growth:.1}x evals/iter (quadratic would be 16x)"
+    );
+}
+
+#[test]
+fn banditpam_beats_pam_per_iteration_at_moderate_n() {
+    // Paper accounting (§5.2): PAM needs exactly k*n^2 evaluations per
+    // iteration; BanditPAM's measured per-iteration count must be well
+    // below that already at n ~ 2000 (the paper's Fig 1b crossover region).
+    let ds = synthetic::mnist_like(&mut Rng::seed_from(4), 2000);
+    let k = 4;
+    let b1 = NativeBackend::new(&ds.points, Metric::L2);
+    let bp = BanditPam::default_paper().fit(&b1, k, &mut Rng::seed_from(5)).unwrap();
+    let pam_per_iter = (k * 2000 * 2000) as f64;
+    assert!(
+        bp.stats.evals_per_iter() * 2.0 < pam_per_iter,
+        "bandit {}/iter vs pam {}/iter",
+        bp.stats.evals_per_iter(),
+        pam_per_iter
+    );
+    // and the quality matches the exact reference
+    let b2 = NativeBackend::new(&ds.points, Metric::L2);
+    let fp = FastPam1::new().fit(&b2, k, &mut Rng::seed_from(0)).unwrap();
+    assert!(bp.loss <= fp.loss * 1.01);
+}
+
+#[test]
+fn all_config_variants_return_sane_results() {
+    let ds = synthetic::gmm(&mut Rng::seed_from(6), 150, 6, 3, 3.0);
+    let reference = {
+        let b = NativeBackend::new(&ds.points, Metric::L2);
+        FastPam1::new().fit(&b, 3, &mut Rng::seed_from(0)).unwrap()
+    };
+    let variants: Vec<BanditPamConfig> = vec![
+        BanditPamConfig { ci: CiKind::EmpiricalBernstein, ..Default::default() },
+        BanditPamConfig { sampling: SamplingMode::FixedPermutation, ..Default::default() },
+        BanditPamConfig { sigma_mode: SigmaMode::PerArmRunning, ..Default::default() },
+        BanditPamConfig { sigma_mode: SigmaMode::GlobalFirstBatch, ..Default::default() },
+        BanditPamConfig { delta: DeltaMode::NCubed, ..Default::default() },
+        BanditPamConfig { fastpam1_swap: false, ..Default::default() },
+        BanditPamConfig { batch_size: 17, ..Default::default() },
+    ];
+    for (i, cfg) in variants.into_iter().enumerate() {
+        let b = NativeBackend::new(&ds.points, Metric::L2);
+        let fit = BanditPam::new(cfg.clone())
+            .fit(&b, 3, &mut Rng::seed_from(7))
+            .unwrap_or_else(|e| panic!("variant {i} failed: {e}"));
+        assert!(
+            fit.loss <= reference.loss * 1.05,
+            "variant {i} ({cfg:?}) loss {} vs {}",
+            fit.loss,
+            reference.loss
+        );
+    }
+}
+
+#[test]
+fn approximate_mode_trades_loss_for_evals() {
+    // Appendix 2.3: very loose delta must not use more evals than tight.
+    let ds = synthetic::mnist_like(&mut Rng::seed_from(8), 300);
+    let run = |delta: f64| {
+        let b = NativeBackend::new(&ds.points, Metric::L2);
+        let fit = BanditPam::new(BanditPamConfig {
+            delta: DeltaMode::Fixed(delta),
+            ..Default::default()
+        })
+        .fit(&b, 4, &mut Rng::seed_from(9))
+        .unwrap();
+        (fit.stats.distance_evals, fit.loss)
+    };
+    let (tight_evals, tight_loss) = run(1e-8);
+    let (loose_evals, loose_loss) = run(0.2);
+    assert!(loose_evals <= tight_evals);
+    assert!(loose_loss >= tight_loss * 0.999, "looser cannot be better than exact-tracking");
+    assert!(loose_loss <= tight_loss * 1.5, "approximate mode collapsed");
+}
+
+#[test]
+fn cache_reduces_counted_evals_with_fixed_permutation() {
+    let ds = synthetic::gmm(&mut Rng::seed_from(10), 400, 8, 3, 3.0);
+    let cfg = BanditPamConfig {
+        sampling: SamplingMode::FixedPermutation,
+        ..Default::default()
+    };
+    let plain = {
+        let b = NativeBackend::new(&ds.points, Metric::L2);
+        BanditPam::new(cfg.clone()).fit(&b, 3, &mut Rng::seed_from(11)).unwrap()
+    };
+    let cached = {
+        let b = NativeBackend::new(&ds.points, Metric::L2).with_cache(4_000_000);
+        BanditPam::new(cfg).fit(&b, 3, &mut Rng::seed_from(11)).unwrap()
+    };
+    assert_eq!(plain.medoids, cached.medoids, "cache must not change results");
+    assert!(
+        cached.stats.distance_evals < plain.stats.distance_evals,
+        "cache: {} vs plain: {}",
+        cached.stats.distance_evals,
+        plain.stats.distance_evals
+    );
+}
+
+#[test]
+fn trace_telemetry_is_consistent() {
+    let ds = synthetic::gmm(&mut Rng::seed_from(12), 200, 6, 3, 3.0);
+    let b = NativeBackend::new(&ds.points, Metric::L2);
+    let mut algo = BanditPam::default_paper();
+    let fit = algo.fit(&b, 3, &mut Rng::seed_from(13)).unwrap();
+    let traced: u64 = algo.trace.iter().map(|t| t.distance_evals).sum();
+    // trace covers build + swap search evals; fit.stats additionally counts
+    // state maintenance, so traced <= total.
+    assert!(traced <= fit.stats.distance_evals + 1);
+    assert_eq!(
+        algo.trace.iter().filter(|t| t.phase == "swap").count(),
+        fit.stats.swap_iters
+    );
+}

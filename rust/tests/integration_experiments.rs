@@ -1,0 +1,38 @@
+//! Smoke-run every registered experiment end to end (tiny scale): the
+//! bench/CLI surface must never rot.
+
+use banditpam::bench::Scale;
+use banditpam::experiments;
+
+#[test]
+fn every_experiment_runs_at_smoke_scale() {
+    // The heavier ones have their own dedicated smoke tests in-module;
+    // here we go through the public registry exactly as the CLI does.
+    for id in ["appfig1", "appfig34", "fig1b"] {
+        let tables = experiments::run(id, Scale::Smoke, 5)
+            .unwrap_or_else(|e| panic!("{id}: {e}"));
+        assert!(!tables.is_empty(), "{id} produced no tables");
+        for t in &tables {
+            assert!(!t.rows.is_empty(), "{id}: empty table {}", t.title);
+            let rendered = t.render();
+            assert!(rendered.contains("=="), "{id}: bad render");
+            assert!(!t.to_csv().is_empty());
+        }
+    }
+}
+
+#[test]
+fn unknown_experiment_is_an_error() {
+    let err = experiments::run("fig99", Scale::Smoke, 1).unwrap_err();
+    assert!(err.to_string().contains("unknown experiment"));
+    assert!(err.to_string().contains("fig1a"), "lists available ids");
+}
+
+#[test]
+fn registry_covers_every_paper_artifact() {
+    // DESIGN.md experiment index: one entry per paper figure + extras.
+    for id in ["fig1a", "fig1b", "fig2", "fig3", "appfig1", "appfig2",
+               "appfig34", "appfig5", "headline", "ablations"] {
+        assert!(experiments::ALL.contains(&id), "missing {id}");
+    }
+}

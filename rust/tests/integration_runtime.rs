@@ -1,0 +1,129 @@
+//! Runtime integration: the AOT artifacts load through PJRT and the XLA
+//! distance backend agrees with the native kernels.
+//!
+//! Requires `make artifacts` (skips gracefully when artifacts are absent,
+//! e.g. on a fresh checkout, but the Makefile `test` target always builds
+//! them first).
+
+use banditpam::algorithms::KMedoids;
+use banditpam::coordinator::banditpam::BanditPam;
+use banditpam::data::synthetic;
+use banditpam::distance::Metric;
+use banditpam::runtime::backend::{DistanceBackend, NativeBackend};
+use banditpam::runtime::executable::Client;
+use banditpam::runtime::manifest::Manifest;
+use banditpam::runtime::xla_backend::XlaBackend;
+use banditpam::util::rng::Rng;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    // Tests run from the crate root, so ./artifacts is the default.
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        None
+    }
+}
+
+#[test]
+fn manifest_covers_all_three_metrics() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    for metric in ["l2", "l1", "cosine"] {
+        assert!(
+            m.find_pairwise(metric, 16).is_some(),
+            "missing {metric} artifact"
+        );
+        assert!(m.find_pairwise(metric, 784).is_some());
+    }
+}
+
+#[test]
+fn xla_backend_matches_native_for_all_metrics() {
+    let Some(dir) = artifacts_dir() else { return };
+    let client = Client::cpu().expect("PJRT CPU client");
+    for (metric, tol) in [
+        (Metric::L2, 2e-2),    // norm-trick cancellation at small distances
+        (Metric::L1, 1e-3),
+        (Metric::Cosine, 1e-3),
+    ] {
+        let ds = synthetic::gmm(&mut Rng::seed_from(3), 50, 24, 3, 3.0);
+        let native = NativeBackend::new(&ds.points, metric);
+        let xla = XlaBackend::new(&client, &dir, &ds.points, metric).unwrap();
+        // block path (the hot path)
+        let targets: Vec<usize> = (0..10).collect();
+        let refs: Vec<usize> = (20..50).collect();
+        let mut want = vec![0.0; targets.len() * refs.len()];
+        let mut got = vec![0.0; targets.len() * refs.len()];
+        native.block(&targets, &refs, &mut want);
+        xla.block(&targets, &refs, &mut got);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() <= tol * (1.0 + w.abs()),
+                "{metric} block[{i}]: {g} vs {w}"
+            );
+        }
+        // counters agree on the number of evaluations
+        assert_eq!(native.counter().get(), xla.counter().get());
+        // single-distance path
+        let g = xla.dist(1, 2);
+        let w = native.dist(1, 2);
+        assert!((g - w).abs() <= tol * (1.0 + w.abs()), "{metric} dist: {g} vs {w}");
+    }
+}
+
+#[test]
+fn xla_backend_pads_mnist_dimension() {
+    let Some(dir) = artifacts_dir() else { return };
+    let client = Client::cpu().expect("PJRT CPU client");
+    // d = 300 forces padding up to the 784 artifact.
+    let ds = synthetic::gmm(&mut Rng::seed_from(4), 20, 300, 2, 2.0);
+    let xla = XlaBackend::new(&client, &dir, &ds.points, Metric::L2).unwrap();
+    assert_eq!(xla.artifact().d, 784);
+    let native = NativeBackend::new(&ds.points, Metric::L2);
+    for (i, j) in [(0, 1), (3, 17), (19, 0)] {
+        let g = xla.dist(i, j);
+        let w = native.dist(i, j);
+        assert!((g - w).abs() < 2e-2 * (1.0 + w), "d({i},{j}): {g} vs {w}");
+    }
+}
+
+#[test]
+fn xla_backend_rejects_unsupported_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let client = Client::cpu().expect("PJRT CPU client");
+    // d larger than any artifact
+    let ds = synthetic::gmm(&mut Rng::seed_from(5), 10, 2000, 2, 2.0);
+    let err = XlaBackend::new(&client, &dir, &ds.points, Metric::L2).unwrap_err();
+    assert!(err.to_string().contains("no pairwise artifact"), "{err}");
+    // tree points
+    let trees = synthetic::hoc4_like(&mut Rng::seed_from(6), 10);
+    let err = XlaBackend::new(&client, &dir, &trees.points, Metric::TreeEdit).unwrap_err();
+    assert!(err.to_string().contains("dense"), "{err}");
+}
+
+#[test]
+fn banditpam_through_xla_backend_matches_native_end_to_end() {
+    let Some(dir) = artifacts_dir() else { return };
+    let client = Client::cpu().expect("PJRT CPU client");
+    let ds = synthetic::gmm(&mut Rng::seed_from(7), 120, 16, 3, 4.0);
+
+    let xla = XlaBackend::new(&client, &dir, &ds.points, Metric::L2).unwrap();
+    let fit_xla = BanditPam::default_paper()
+        .fit(&xla, 3, &mut Rng::seed_from(8))
+        .unwrap();
+
+    let native = NativeBackend::new(&ds.points, Metric::L2);
+    let fit_native = BanditPam::default_paper()
+        .fit(&native, 3, &mut Rng::seed_from(8))
+        .unwrap();
+
+    assert_eq!(
+        fit_xla.medoids, fit_native.medoids,
+        "the three-layer stack must reproduce the native result"
+    );
+    assert!((fit_xla.loss - fit_native.loss).abs() < 1e-2 * fit_native.loss);
+    assert!(xla.executions() > 0, "PJRT was actually exercised");
+}

@@ -1,0 +1,243 @@
+//! Property-based suite over the coordinator's invariants (DESIGN.md:
+//! "proptest on coordinator invariants — routing, batching, state").
+//! Uses the in-tree `testkit::prop` framework; failures report a replay
+//! seed.
+
+use banditpam::algorithms::matrix_cache::{exact_build, FullMatrix, MatState};
+use banditpam::algorithms::{fastpam1::FastPam1, pam::Pam, KMedoids};
+use banditpam::coordinator::banditpam::BanditPam;
+use banditpam::coordinator::scheduler;
+use banditpam::coordinator::state::MedoidState;
+use banditpam::data::Points;
+use banditpam::distance::{dense, tree_edit, Metric};
+use banditpam::prop_assert;
+use banditpam::runtime::backend::{DistanceBackend, NativeBackend};
+use banditpam::testkit::prop::{check, gen, PropConfig};
+use banditpam::util::rng::Rng;
+
+fn cfg(cases: usize) -> PropConfig {
+    PropConfig { cases, ..Default::default() }
+}
+
+#[test]
+fn prop_dense_metrics_are_metrics() {
+    check("dense-metric-axioms", &cfg(40), |rng| {
+        let d = rng.range(1, 40);
+        let a = gen::vector(rng, d);
+        let b = gen::vector(rng, d);
+        let c = gen::vector(rng, d);
+        for (name, f) in [
+            ("l2", dense::l2 as fn(&[f32], &[f32]) -> f64),
+            ("l1", dense::l1),
+        ] {
+            let dab = f(&a, &b);
+            prop_assert!(dab >= 0.0, "{name} negative");
+            prop_assert!((dab - f(&b, &a)).abs() < 1e-12, "{name} asymmetric");
+            prop_assert!(f(&a, &a) < 1e-12, "{name} identity");
+            let (dac, dbc) = (f(&a, &c), f(&b, &c));
+            // relative tolerance: the sqrt/sum rounding error scales with
+            // the magnitudes involved
+            let tol = 1e-6 * (1.0 + dab + dbc);
+            prop_assert!(
+                dac <= dab + dbc + tol,
+                "{name} triangle violated: {dac} > {dab} + {dbc}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tree_edit_is_a_metric() {
+    check("tree-edit-axioms", &cfg(30), |rng| {
+        let a = gen::small_tree(rng);
+        let b = gen::small_tree(rng);
+        let c = gen::small_tree(rng);
+        let dab = tree_edit::ted(&a, &b);
+        prop_assert!(dab >= 0.0, "negative");
+        prop_assert!(tree_edit::ted(&a, &a) == 0.0, "identity");
+        prop_assert!(
+            (dab - tree_edit::ted(&b, &a)).abs() < 1e-12,
+            "asymmetric: {dab}"
+        );
+        let dac = tree_edit::ted(&a, &c);
+        let dbc = tree_edit::ted(&b, &c);
+        prop_assert!(dac <= dab + dbc + 1e-9, "triangle: {dac} > {dab}+{dbc}");
+        // edit distance bounded by total sizes
+        prop_assert!(
+            dab <= (a.size() + b.size()) as f64,
+            "bound: {dab} > {} + {}",
+            a.size(),
+            b.size()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_medoid_state_invariants_under_random_ops() {
+    check("state-invariants", &cfg(20), |rng| {
+        let ds = gen::small_dataset(rng);
+        let n = ds.len();
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let mut state = MedoidState::empty(n);
+        let k = rng.range(1, 4.min(n));
+        for m in rng.sample_indices(n, k) {
+            state.add_medoid(&backend, m);
+        }
+        for _ in 0..3 {
+            let pos = rng.below(state.k());
+            let x = rng.below(n);
+            if state.medoids.contains(&x) {
+                continue;
+            }
+            state.apply_swap(&backend, pos, x);
+        }
+        for j in 0..n {
+            prop_assert!(state.d1[j] <= state.d2[j] + 1e-9, "d1 > d2 at {j}");
+            let true_min = state
+                .medoids
+                .iter()
+                .map(|&m| backend.dist(m, j))
+                .fold(f64::INFINITY, f64::min);
+            prop_assert!(
+                (state.d1[j] - true_min).abs() < 1e-9,
+                "stale d1 at {j}"
+            );
+            prop_assert!(state.a1[j] < state.k(), "bad a1 at {j}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_swap_loop_monotone_loss() {
+    check("pam-swap-monotone", &cfg(15), |rng| {
+        let ds = gen::small_dataset(rng);
+        let n = ds.len();
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let m = FullMatrix::compute(&backend);
+        let mut st = MatState::empty(n);
+        let k = rng.range(1, 4.min(n));
+        exact_build(&m, k, &mut st);
+        let mut prev = st.loss();
+        for _ in 0..5 {
+            let (delta, x, pos) =
+                banditpam::algorithms::fastpam1::best_swap_eq12(&m, &st, &mut Vec::new());
+            if !(delta < -1e-12) {
+                break;
+            }
+            st.medoids[pos] = x;
+            st.rebuild(&m);
+            let now = st.loss();
+            prop_assert!(now <= prev + 1e-9, "loss rose {prev} -> {now}");
+            prop_assert!(
+                (now - (prev + delta)).abs() < 1e-6,
+                "delta prediction off: {} vs {}",
+                now - prev,
+                delta
+            );
+            prev = now;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fastpam1_equals_pam() {
+    check("fastpam1-eq-pam", &cfg(12), |rng| {
+        let ds = gen::small_dataset(rng);
+        let k = rng.range(1, 4.min(ds.len() - 1).max(2));
+        let b1 = NativeBackend::new(&ds.points, Metric::L2);
+        let pam = Pam::new().fit(&b1, k, &mut Rng::seed_from(0)).unwrap();
+        let b2 = NativeBackend::new(&ds.points, Metric::L2);
+        let fp1 = FastPam1::new().fit(&b2, k, &mut Rng::seed_from(0)).unwrap();
+        prop_assert!(
+            pam.medoids == fp1.medoids,
+            "diverged: {:?} vs {:?}",
+            pam.medoids,
+            fp1.medoids
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_banditpam_loss_matches_pam_loss() {
+    check("banditpam-quality", &cfg(10), |rng| {
+        let ds = gen::small_dataset(rng);
+        if ds.len() < 15 {
+            return Ok(());
+        }
+        let k = rng.range(1, 4);
+        let b1 = NativeBackend::new(&ds.points, Metric::L2);
+        let pam = Pam::new().fit(&b1, k, &mut Rng::seed_from(0)).unwrap();
+        let b2 = NativeBackend::new(&ds.points, Metric::L2);
+        let bp = BanditPam::default_paper().fit(&b2, k, rng).unwrap();
+        prop_assert!(
+            bp.loss <= pam.loss * 1.05,
+            "loss {} vs PAM {}",
+            bp.loss,
+            pam.loss
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scheduler_dedup_is_lossless() {
+    check("scheduler-dedup", &cfg(30), |rng| {
+        let n = rng.range(2, 50);
+        let reqs: Vec<usize> = (0..rng.range(1, 80)).map(|_| rng.below(n)).collect();
+        let d = scheduler::dedup(&reqs);
+        prop_assert!(d.row_of.len() == reqs.len(), "row map length");
+        let unique_set: std::collections::HashSet<_> = d.unique.iter().collect();
+        prop_assert!(unique_set.len() == d.unique.len(), "dup in unique");
+        for (req, &row) in reqs.iter().zip(&d.row_of) {
+            prop_assert!(d.unique[row] == *req, "row map wrong");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_assignments_are_nearest_medoid() {
+    check("assignment-optimality", &cfg(10), |rng| {
+        let ds = gen::small_dataset(rng);
+        if ds.len() < 10 {
+            return Ok(());
+        }
+        let backend = NativeBackend::new(&ds.points, Metric::L1);
+        let k = rng.range(1, 4);
+        let fit = BanditPam::default_paper().fit(&backend, k, rng).unwrap();
+        for i in 0..ds.len() {
+            let assigned = backend.dist(fit.medoids[fit.assignments[i]], i);
+            for &m in &fit.medoids {
+                prop_assert!(
+                    assigned <= backend.dist(m, i) + 1e-9,
+                    "point {i} not nearest-assigned"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_subsample_preserves_point_identity() {
+    check("subsample-identity", &cfg(20), |rng| {
+        let ds = gen::small_dataset(rng);
+        let n = ds.len();
+        let take = rng.range(1, n + 1);
+        let sub = ds.subsample(take, rng);
+        prop_assert!(sub.len() == take, "size");
+        if let (Points::Dense(orig), Points::Dense(s)) = (&ds.points, &sub.points) {
+            // every subsampled row must exist in the original
+            for i in 0..s.rows() {
+                let found = (0..orig.rows()).any(|j| orig.row(j) == s.row(i));
+                prop_assert!(found, "row {i} not from original");
+            }
+        }
+        Ok(())
+    });
+}
