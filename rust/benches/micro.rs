@@ -27,20 +27,50 @@ fn main() {
         println!("{}", r.line());
     }
 
-    // --- distance block (the batched arm pull shape) ----------------------
-    let ds = synthetic::mnist_like(&mut Rng::seed_from(2), 600);
+    // --- distance block throughput (the batched arm pull shape) -----------
+    //
+    // Baseline "per-pair dispatch" reproduces the seed's block inner loop:
+    // per-pair enum dispatch through `evaluate` plus one counter bump per
+    // distance. The pooled rows are the current hot path (PERF.md); the
+    // acceptance target is >= 2x at threads=4 for dense L2/cosine and no
+    // regression at threads=1.
+    let nblk = scale.pick(1_000, 4_000, 10_000);
+    let ds = synthetic::mnist_like(&mut Rng::seed_from(2), nblk);
     let targets: Vec<usize> = (0..64).collect();
-    let refs: Vec<usize> = (64..192).collect();
-    let mut out = vec![0.0f64; targets.len() * refs.len()];
-    for threads in [1usize, 4] {
-        let backend = NativeBackend::new(&ds.points, Metric::L2).with_threads(threads);
-        let r = bench_fn(
-            &format!("native block 64x128 d=784 threads={threads}"),
-            2,
-            iters,
-            || backend.block(&targets, &refs, &mut out),
+    let refs: Vec<usize> = (64..nblk.min(64 + 2048)).collect();
+    let rn = refs.len();
+    let mut out = vec![0.0f64; targets.len() * rn];
+    let counter = banditpam::distance::counter::DistanceCounter::new();
+    for metric in [Metric::L2, Metric::Cosine] {
+        let base = bench_fn(
+            &format!("block 64x{rn} d=784 {metric} per-pair dispatch"),
+            1,
+            iters.min(10),
+            || {
+                for (ti, &t) in targets.iter().enumerate() {
+                    for (ri, &r) in refs.iter().enumerate() {
+                        counter.add(1);
+                        out[ti * rn + ri] =
+                            banditpam::distance::evaluate(metric, &ds.points, t, r);
+                    }
+                }
+            },
         );
-        println!("{}", r.line());
+        println!("{}", base.line());
+        for threads in [1usize, 4] {
+            let backend = NativeBackend::new(&ds.points, metric).with_threads(threads);
+            let r = bench_fn(
+                &format!("block 64x{rn} d=784 {metric} pooled threads={threads}"),
+                1,
+                iters.min(10),
+                || backend.block(&targets, &refs, &mut out),
+            );
+            println!("{}", r.line());
+            println!(
+                "    -> {:.2}x vs per-pair dispatch",
+                base.mean_secs / r.mean_secs.max(1e-12)
+            );
+        }
     }
 
     // --- tree edit distance ------------------------------------------------

@@ -7,7 +7,10 @@
 //! updates per-arm means and confidence intervals, and eliminates arms
 //! whose lower confidence bound exceeds the best upper bound. When the
 //! sample budget reaches `|S_ref|` the survivors are computed exactly
-//! (Algorithm 1, lines 11–15).
+//! (Algorithm 1, lines 11–15). Both the batched pulls and the exact
+//! fallback are dense `block` requests, so on the native engine they run
+//! through the pooled tiled row kernels (each exact survivor is a `1 x n`
+//! block sharded along the reference axis — see `rust/PERF.md`).
 
 use crate::bandits::confidence::{half_width, CiKind};
 use crate::bandits::estimator::ArmEstimator;

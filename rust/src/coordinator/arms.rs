@@ -8,12 +8,20 @@ use crate::runtime::backend::DistanceBackend;
 /// BUILD-step arms (Eq. 9): one arm per candidate point x, with
 /// `g_x(j) = min(d(x, x_j) - d1_j, 0)` — or plain `d(x, x_j)` for the very
 /// first medoid (empty medoid set).
+///
+/// All working buffers (`scratch`, the arm-to-point remap, the full
+/// reference list for `exact`) are owned by the arm set and reused, so
+/// repeated `pull_many` calls allocate nothing in steady state.
 pub struct BuildArms<'a> {
     backend: &'a dyn DistanceBackend,
     /// Candidate point ids (non-medoids).
     pub candidates: Vec<usize>,
     d1: &'a [f64],
     scratch: Vec<f64>,
+    /// Reused arm-index -> point-id remap for `pull_many`.
+    targets: Vec<usize>,
+    /// Reused full reference list (0..n) for `exact`.
+    all_refs: Vec<usize>,
 }
 
 impl<'a> BuildArms<'a> {
@@ -23,7 +31,14 @@ impl<'a> BuildArms<'a> {
             state.medoids.iter().copied().collect();
         let candidates: Vec<usize> =
             (0..backend.n()).filter(|i| !medoids.contains(i)).collect();
-        BuildArms { backend, candidates, d1: &state.d1, scratch: Vec::new() }
+        BuildArms {
+            backend,
+            candidates,
+            d1: &state.d1,
+            scratch: Vec::new(),
+            targets: Vec::new(),
+            all_refs: (0..backend.n()).collect(),
+        }
     }
 
     #[inline]
@@ -47,9 +62,13 @@ impl<'a> ArmSet for BuildArms<'a> {
     }
 
     fn pull_many(&mut self, arms: &[usize], refs: &[usize], out: &mut [f64]) {
-        let targets: Vec<usize> = arms.iter().map(|&a| self.candidates[a]).collect();
-        self.scratch.resize(targets.len() * refs.len(), 0.0);
-        self.backend.block(&targets, refs, &mut self.scratch);
+        self.targets.clear();
+        self.targets.extend(arms.iter().map(|&a| self.candidates[a]));
+        let need = arms.len() * refs.len();
+        if self.scratch.len() < need {
+            self.scratch.resize(need, 0.0);
+        }
+        self.backend.block(&self.targets, refs, &mut self.scratch[..need]);
         let rn = refs.len();
         for ai in 0..arms.len() {
             for (ri, &j) in refs.iter().enumerate() {
@@ -61,9 +80,10 @@ impl<'a> ArmSet for BuildArms<'a> {
     fn exact(&mut self, arm: usize) -> f64 {
         let x = self.candidates[arm];
         let n = self.backend.n();
-        let refs: Vec<usize> = (0..n).collect();
-        self.scratch.resize(n, 0.0);
-        self.backend.block(&[x], &refs, &mut self.scratch);
+        if self.scratch.len() < n {
+            self.scratch.resize(n, 0.0);
+        }
+        self.backend.block(&[x], &self.all_refs, &mut self.scratch[..n]);
         let mut acc = 0.0;
         for j in 0..n {
             acc += self.g(self.scratch[j], j);
@@ -91,6 +111,12 @@ pub struct SwapArms<'a> {
     /// every arm evaluates its own row — PAM-style O(k n^2) counting.
     share_rows: bool,
     scratch: Vec<f64>,
+    /// Reused arm-index -> candidate-point remap for `pull_many`.
+    cand_pts: Vec<usize>,
+    /// Reused dedup state (unique candidates + row map).
+    dd: scheduler::Dedup,
+    /// Reused full reference list (0..n) for `exact`.
+    all_refs: Vec<usize>,
     /// Last full distance row computed by `exact` (candidate, row):
     /// Algorithm 1's exact fallback visits arms in id order, so arms of
     /// the same candidate are consecutive and share this row.
@@ -117,6 +143,9 @@ impl<'a> SwapArms<'a> {
             a1: &state.a1,
             share_rows,
             scratch: Vec::new(),
+            cand_pts: Vec::new(),
+            dd: scheduler::Dedup::new(),
+            all_refs: (0..backend.n()).collect(),
             exact_row: None,
         }
     }
@@ -151,24 +180,31 @@ impl<'a> ArmSet for SwapArms<'a> {
     fn pull_many(&mut self, arms: &[usize], refs: &[usize], out: &mut [f64]) {
         let rn = refs.len();
         if self.share_rows {
-            let cand_pts: Vec<usize> =
-                arms.iter().map(|&a| self.candidates[a / self.k]).collect();
-            let mut scratch = std::mem::take(&mut self.scratch);
-            let dd = scheduler::block_dedup(self.backend, &cand_pts, refs, &mut scratch);
+            self.cand_pts.clear();
+            self.cand_pts
+                .extend(arms.iter().map(|&a| self.candidates[a / self.k]));
+            scheduler::block_dedup_into(
+                self.backend,
+                &self.cand_pts,
+                refs,
+                &mut self.scratch,
+                &mut self.dd,
+            );
             for (ai, &arm) in arms.iter().enumerate() {
                 let m_pos = arm % self.k;
-                let row = dd.row_of[ai];
+                let row = self.dd.row_of[ai];
                 for (ri, &j) in refs.iter().enumerate() {
-                    out[ai * rn + ri] = self.g(m_pos, scratch[row * rn + ri], j);
+                    out[ai * rn + ri] = self.g(m_pos, self.scratch[row * rn + ri], j);
                 }
             }
-            self.scratch = scratch;
         } else {
             // Ablation: each arm computes its own row (PAM-style counting).
+            if self.scratch.len() < rn {
+                self.scratch.resize(rn, 0.0);
+            }
             for (ai, &arm) in arms.iter().enumerate() {
                 let (x, m_pos) = self.decode(arm);
-                self.scratch.resize(rn, 0.0);
-                self.backend.block(&[x], refs, &mut self.scratch);
+                self.backend.block(&[x], refs, &mut self.scratch[..rn]);
                 for (ri, &j) in refs.iter().enumerate() {
                     out[ai * rn + ri] = self.g(m_pos, self.scratch[ri], j);
                 }
@@ -181,9 +217,13 @@ impl<'a> ArmSet for SwapArms<'a> {
         let n = self.backend.n();
         let reuse = matches!(&self.exact_row, Some((c, _)) if *c == x && self.share_rows);
         if !reuse {
-            let refs: Vec<usize> = (0..n).collect();
-            let mut row = vec![0.0f64; n];
-            self.backend.block(&[x], &refs, &mut row);
+            // Reuse the previous row buffer when present (the exact
+            // fallback visits many arms in sequence).
+            let mut row = match self.exact_row.take() {
+                Some((_, row)) => row,
+                None => vec![0.0f64; n],
+            };
+            self.backend.block(&[x], &self.all_refs, &mut row);
             self.exact_row = Some((x, row));
         }
         let row = &self.exact_row.as_ref().unwrap().1;

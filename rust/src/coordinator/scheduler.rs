@@ -14,26 +14,63 @@ use crate::runtime::backend::DistanceBackend;
 use std::collections::HashMap;
 
 /// A deduplicated block request: unique point ids and, for each original
-/// request, the row of the block it maps to.
-#[derive(Debug)]
+/// request, the row of the block it maps to. Reusable: the internal index
+/// map and both vectors keep their capacity across [`dedup_into`] calls,
+/// so the steady state of an Algorithm-1 run is allocation-free.
+#[derive(Debug, Default)]
 pub struct Dedup {
     pub unique: Vec<usize>,
     pub row_of: Vec<usize>,
+    index: HashMap<usize, usize>,
+}
+
+impl Dedup {
+    /// Empty, reusable dedup state.
+    pub fn new() -> Dedup {
+        Dedup::default()
+    }
+}
+
+/// Deduplicate `requested` point ids into `out`, preserving first-seen
+/// order. Clears previous contents but keeps allocated capacity.
+pub fn dedup_into(requested: &[usize], out: &mut Dedup) {
+    out.unique.clear();
+    out.row_of.clear();
+    out.index.clear();
+    for &p in requested {
+        let unique = &mut out.unique;
+        let row = *out.index.entry(p).or_insert_with(|| {
+            unique.push(p);
+            unique.len() - 1
+        });
+        out.row_of.push(row);
+    }
 }
 
 /// Deduplicate `requested` point ids, preserving first-seen order.
 pub fn dedup(requested: &[usize]) -> Dedup {
-    let mut index: HashMap<usize, usize> = HashMap::with_capacity(requested.len());
-    let mut unique = Vec::new();
-    let mut row_of = Vec::with_capacity(requested.len());
-    for &p in requested {
-        let row = *index.entry(p).or_insert_with(|| {
-            unique.push(p);
-            unique.len() - 1
-        });
-        row_of.push(row);
+    let mut out = Dedup::new();
+    dedup_into(requested, &mut out);
+    out
+}
+
+/// Evaluate the distance block for (possibly duplicated) `targets` over
+/// `refs` into `out`/`scratch`, computing each unique target row once.
+/// `scratch` receives the *unique* block (row-major `[unique x refs]`);
+/// both buffers are reused across calls without reallocating.
+pub fn block_dedup_into(
+    backend: &dyn DistanceBackend,
+    targets: &[usize],
+    refs: &[usize],
+    scratch: &mut Vec<f64>,
+    out: &mut Dedup,
+) {
+    dedup_into(targets, out);
+    let need = out.unique.len() * refs.len();
+    if scratch.len() < need {
+        scratch.resize(need, 0.0);
     }
-    Dedup { unique, row_of }
+    backend.block(&out.unique, refs, &mut scratch[..need]);
 }
 
 /// Evaluate the distance block for (possibly duplicated) `targets` over
@@ -45,9 +82,8 @@ pub fn block_dedup(
     refs: &[usize],
     scratch: &mut Vec<f64>,
 ) -> Dedup {
-    let d = dedup(targets);
-    scratch.resize(d.unique.len() * refs.len(), 0.0);
-    backend.block(&d.unique, refs, scratch);
+    let mut d = Dedup::new();
+    block_dedup_into(backend, targets, refs, scratch, &mut d);
     d
 }
 
@@ -71,6 +107,17 @@ mod tests {
         let d = dedup(&[1, 2, 3]);
         assert_eq!(d.unique, vec![1, 2, 3]);
         assert_eq!(d.row_of, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn dedup_into_reuses_state_across_calls() {
+        let mut d = Dedup::new();
+        dedup_into(&[1, 1, 2], &mut d);
+        assert_eq!(d.unique, vec![1, 2]);
+        assert_eq!(d.row_of, vec![0, 0, 1]);
+        dedup_into(&[9, 8, 9], &mut d);
+        assert_eq!(d.unique, vec![9, 8]);
+        assert_eq!(d.row_of, vec![0, 1, 0]);
     }
 
     #[test]

@@ -142,18 +142,17 @@ mod tests {
 
     #[test]
     fn concurrent_access_consistent() {
+        // 4 pool lanes x 1000 probes each, through the persistent pool the
+        // backend itself uses for sharded blocks.
         let c = DistanceCache::new(100_000);
-        std::thread::scope(|s| {
-            for t in 0..4 {
-                let c = &c;
-                s.spawn(move || {
-                    for i in 0..1000usize {
-                        let d = c.get_or_compute(i % 50, (i + t) % 50, || {
-                            ((i % 50) * 100 + (i + t) % 50) as f64
-                        });
-                        assert!(d >= 0.0);
-                    }
+        let pool = crate::runtime::pool::ThreadPool::new(4);
+        pool.run(4000, 250, &|start, end| {
+            for idx in start..end {
+                let (t, i) = (idx / 1000, idx % 1000);
+                let d = c.get_or_compute(i % 50, (i + t) % 50, || {
+                    ((i % 50) * 100 + (i + t) % 50) as f64
                 });
+                assert!(d >= 0.0);
             }
         });
         assert!(c.len() <= 50 * 50);

@@ -65,14 +65,10 @@ mod tests {
     #[test]
     fn concurrent_increments() {
         let c = DistanceCounter::new();
-        std::thread::scope(|s| {
-            for _ in 0..8 {
-                let c = c.clone();
-                s.spawn(move || {
-                    for _ in 0..10_000 {
-                        c.add(1);
-                    }
-                });
+        let pool = crate::runtime::pool::ThreadPool::new(8);
+        pool.run(80_000, 1_000, &|start, end| {
+            for _ in start..end {
+                c.add(1);
             }
         });
         assert_eq!(c.get(), 80_000);

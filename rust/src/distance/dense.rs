@@ -8,6 +8,17 @@
 //! f64-lane accumulation, with worst-case relative error (d/16)*f32-eps
 //! ~ 6e-6 at d = 784 — far below any clustering-relevant scale and applied
 //! identically by every algorithm (see EXPERIMENTS.md §Perf).
+//!
+//! Besides the pairwise kernels, this module provides **one-to-many row
+//! kernels** ([`l2_row`], [`l1_row`], [`cosine_row`]) that evaluate
+//! `d(target, refs[..])` in a single pass: the target row stays resident
+//! while the references stream through, and the metric dispatch happens
+//! once per row instead of once per pair. Cosine additionally accepts
+//! **precomputed squared norms** ([`sq_norm`]) so each pair costs one dot
+//! product instead of three reductions; the per-lane accumulation order is
+//! identical to [`cosine`]'s internal norms, so the norm-table path is
+//! bit-for-bit equal to the three-pass kernel. Architecture and measured
+//! numbers: `rust/PERF.md`.
 
 /// Euclidean distance `||a - b||_2`.
 #[inline]
@@ -84,6 +95,85 @@ pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
     } else {
         1.0
     }
+}
+
+/// Dot product `a . b` (16-lane f32 accumulation, f64 fold — the same
+/// scheme and per-lane operation order as the partial sums inside
+/// [`cosine`], which makes [`cosine_from_parts`] bitwise-consistent).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n16 = a.len() - a.len() % 16;
+    let mut acc = [0.0f32; 16];
+    for (ca, cb) in a[..n16].chunks_exact(16).zip(b[..n16].chunks_exact(16)) {
+        for l in 0..16 {
+            acc[l] += ca[l] * cb[l];
+        }
+    }
+    let mut s = acc.iter().map(|&v| v as f64).sum::<f64>();
+    for (x, y) in a[n16..].iter().zip(&b[n16..]) {
+        s += *x as f64 * *y as f64;
+    }
+    s
+}
+
+/// Squared L2 norm `|a|^2` for the cosine norm table (see `rust/PERF.md`).
+#[inline]
+pub fn sq_norm(a: &[f32]) -> f64 {
+    dot(a, a)
+}
+
+/// Cosine distance from a precomputed dot product and squared norms.
+/// Combines them exactly as [`cosine`] does (zero vectors get distance 1).
+#[inline]
+pub fn cosine_from_parts(dot: f64, sq_a: f64, sq_b: f64) -> f64 {
+    let denom = (sq_a * sq_b).sqrt();
+    if denom > 0.0 {
+        1.0 - dot / denom
+    } else {
+        1.0
+    }
+}
+
+/// One-to-many L2 row kernel: `out[r] = l2(a, refs[r])`.
+///
+/// `out.len()` must equal the number of reference rows yielded.
+#[inline]
+pub fn l2_row<'r>(a: &[f32], refs: impl Iterator<Item = &'r [f32]>, out: &mut [f64]) {
+    let mut n = 0;
+    for (o, b) in out.iter_mut().zip(refs) {
+        *o = l2(a, b);
+        n += 1;
+    }
+    debug_assert_eq!(n, out.len(), "row kernel output length mismatch");
+}
+
+/// One-to-many L1 row kernel: `out[r] = l1(a, refs[r])`.
+#[inline]
+pub fn l1_row<'r>(a: &[f32], refs: impl Iterator<Item = &'r [f32]>, out: &mut [f64]) {
+    let mut n = 0;
+    for (o, b) in out.iter_mut().zip(refs) {
+        *o = l1(a, b);
+        n += 1;
+    }
+    debug_assert_eq!(n, out.len(), "row kernel output length mismatch");
+}
+
+/// One-to-many cosine row kernel over a squared-norm table: each reference
+/// arrives with its precomputed `|b|^2`, so the pair costs one [`dot`].
+#[inline]
+pub fn cosine_row<'r>(
+    a: &[f32],
+    sq_a: f64,
+    refs: impl Iterator<Item = (&'r [f32], f64)>,
+    out: &mut [f64],
+) {
+    let mut n = 0;
+    for (o, (b, sq_b)) in out.iter_mut().zip(refs) {
+        *o = cosine_from_parts(dot(a, b), sq_a, sq_b);
+        n += 1;
+    }
+    debug_assert_eq!(n, out.len(), "row kernel output length mismatch");
 }
 
 #[cfg(test)]
@@ -167,5 +257,62 @@ mod tests {
         assert_eq!(l2(&[], &[]), 0.0);
         assert_eq!(l1(&[], &[]), 0.0);
         assert_eq!(cosine(&[], &[]), 1.0);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Rng::seed_from(21);
+        for d in [0, 1, 7, 16, 31, 100, 784] {
+            let a = randvec(&mut rng, d);
+            let b = randvec(&mut rng, d);
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
+            let tol = 2e-5 * (1.0 + naive.abs());
+            assert!((dot(&a, &b) - naive).abs() < tol, "d={d}");
+        }
+    }
+
+    #[test]
+    fn cosine_from_parts_is_bitwise_equal_to_cosine() {
+        let mut rng = Rng::seed_from(22);
+        for d in [1, 2, 7, 16, 31, 100, 784] {
+            let a = randvec(&mut rng, d);
+            let b = randvec(&mut rng, d);
+            let direct = cosine(&a, &b);
+            let parts = cosine_from_parts(dot(&a, &b), sq_norm(&a), sq_norm(&b));
+            assert_eq!(direct, parts, "d={d}");
+        }
+        // zero-vector semantics preserved
+        assert_eq!(cosine_from_parts(0.0, 0.0, 5.0), 1.0);
+    }
+
+    #[test]
+    fn row_kernels_match_pairwise_kernels() {
+        let mut rng = Rng::seed_from(23);
+        for d in [1, 7, 31, 784] {
+            let a = randvec(&mut rng, d);
+            let refs: Vec<Vec<f32>> = (0..9).map(|_| randvec(&mut rng, d)).collect();
+            let mut out = vec![0.0; refs.len()];
+
+            l2_row(&a, refs.iter().map(Vec::as_slice), &mut out);
+            for (o, b) in out.iter().zip(&refs) {
+                assert_eq!(*o, l2(&a, b), "l2 d={d}");
+            }
+
+            l1_row(&a, refs.iter().map(Vec::as_slice), &mut out);
+            for (o, b) in out.iter().zip(&refs) {
+                assert_eq!(*o, l1(&a, b), "l1 d={d}");
+            }
+
+            let sq_a = sq_norm(&a);
+            cosine_row(
+                &a,
+                sq_a,
+                refs.iter().map(|b| (b.as_slice(), sq_norm(b))),
+                &mut out,
+            );
+            for (o, b) in out.iter().zip(&refs) {
+                assert_eq!(*o, cosine(&a, b), "cosine d={d}");
+            }
+        }
     }
 }

@@ -5,52 +5,13 @@
 //! protos, which xla_extension 0.5.1 rejects; the text parser reassigns
 //! ids). Each artifact compiles once and is then executed with concrete
 //! `f32` buffers from the Rust hot path.
-
-use anyhow::{Context, Result};
-use std::path::Path;
-
-/// Shared PJRT CPU client (one per process is plenty).
-pub struct Client {
-    inner: xla::PjRtClient,
-}
-
-impl Client {
-    /// Create the PJRT CPU client.
-    pub fn cpu() -> Result<Client> {
-        let inner = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Client { inner })
-    }
-
-    /// Platform string, e.g. "cpu" (for logs).
-    pub fn platform(&self) -> String {
-        self.inner.platform_name()
-    }
-
-    /// Load an HLO-text artifact and compile it on this client.
-    pub fn compile_hlo_text(&self, path: &Path) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-UTF-8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .inner
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Executable { exe })
-    }
-}
-
-/// A compiled computation plus its buffer plumbing.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl std::fmt::Debug for Executable {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("Executable").finish_non_exhaustive()
-    }
-}
+//!
+//! The `xla` crate is not in the offline build cache, so the PJRT bridge
+//! is gated behind the `xla` cargo feature. The default build substitutes
+//! a stub whose constructors return errors; everything that consumes this
+//! module ([`crate::runtime::xla_backend`], the CLI `info` command, the
+//! benches) already handles "PJRT unavailable" gracefully, so the native
+//! engine remains fully functional.
 
 /// A concrete f32 input tensor.
 pub struct Input<'a> {
@@ -58,39 +19,142 @@ pub struct Input<'a> {
     pub shape: &'a [i64],
 }
 
-impl Executable {
-    /// Execute with f32 inputs; returns the flattened f32 outputs of the
-    /// (single-tuple) result, one `Vec` per tuple element.
-    pub fn run_f32(&self, inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
-        let mut literals = Vec::with_capacity(inputs.len());
-        for inp in inputs {
-            let expect: i64 = inp.shape.iter().product();
-            anyhow::ensure!(
-                expect as usize == inp.data.len(),
-                "input shape {:?} does not match buffer length {}",
-                inp.shape,
-                inp.data.len()
-            );
-            let lit = xla::Literal::vec1(inp.data)
-                .reshape(inp.shape)
-                .context("reshaping input literal")?;
-            literals.push(lit);
+#[cfg(feature = "xla")]
+mod pjrt {
+    use super::Input;
+    use anyhow::{Context, Result};
+    use std::path::Path;
+
+    /// Shared PJRT CPU client (one per process is plenty).
+    pub struct Client {
+        inner: xla::PjRtClient,
+    }
+
+    impl Client {
+        /// Create the PJRT CPU client.
+        pub fn cpu() -> Result<Client> {
+            let inner = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Client { inner })
         }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .context("executing PJRT computation")?[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        // aot.py lowers with return_tuple=True: unpack the tuple.
-        let elems = result.to_tuple().context("untupling result")?;
-        let mut out = Vec::with_capacity(elems.len());
-        for e in elems {
-            out.push(e.to_vec::<f32>().context("reading f32 output")?);
+
+        /// Platform string, e.g. "cpu" (for logs).
+        pub fn platform(&self) -> String {
+            self.inner.platform_name()
         }
-        Ok(out)
+
+        /// Load an HLO-text artifact and compile it on this client.
+        pub fn compile_hlo_text(&self, path: &Path) -> Result<Executable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-UTF-8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .inner
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            Ok(Executable { exe })
+        }
+    }
+
+    /// A compiled computation plus its buffer plumbing.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl std::fmt::Debug for Executable {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("Executable").finish_non_exhaustive()
+        }
+    }
+
+    impl Executable {
+        /// Execute with f32 inputs; returns the flattened f32 outputs of the
+        /// (single-tuple) result, one `Vec` per tuple element.
+        pub fn run_f32(&self, inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
+            let mut literals = Vec::with_capacity(inputs.len());
+            for inp in inputs {
+                let expect: i64 = inp.shape.iter().product();
+                anyhow::ensure!(
+                    expect as usize == inp.data.len(),
+                    "input shape {:?} does not match buffer length {}",
+                    inp.shape,
+                    inp.data.len()
+                );
+                let lit = xla::Literal::vec1(inp.data)
+                    .reshape(inp.shape)
+                    .context("reshaping input literal")?;
+                literals.push(lit);
+            }
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .context("executing PJRT computation")?[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            // aot.py lowers with return_tuple=True: unpack the tuple.
+            let elems = result.to_tuple().context("untupling result")?;
+            let mut out = Vec::with_capacity(elems.len());
+            for e in elems {
+                out.push(e.to_vec::<f32>().context("reading f32 output")?);
+            }
+            Ok(out)
+        }
     }
 }
+
+#[cfg(feature = "xla")]
+pub use pjrt::{Client, Executable};
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use super::Input;
+    use anyhow::{anyhow, Result};
+    use std::path::Path;
+
+    const UNAVAILABLE: &str = "PJRT/XLA support is not compiled into this \
+        binary (the `xla` crate is unavailable offline; build with \
+        `--features xla` once it is vendored)";
+
+    /// Stub PJRT client: every constructor reports XLA as unavailable.
+    pub struct Client;
+
+    impl Client {
+        /// Always fails in the default (offline) build.
+        pub fn cpu() -> Result<Client> {
+            Err(anyhow!("{UNAVAILABLE}"))
+        }
+
+        /// Platform string placeholder.
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        /// Always fails in the default (offline) build.
+        pub fn compile_hlo_text(&self, _path: &Path) -> Result<Executable> {
+            Err(anyhow!("{UNAVAILABLE}"))
+        }
+    }
+
+    /// Stub compiled computation; cannot be constructed through [`Client`].
+    pub struct Executable;
+
+    impl std::fmt::Debug for Executable {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("Executable").finish_non_exhaustive()
+        }
+    }
+
+    impl Executable {
+        /// Always fails in the default (offline) build.
+        pub fn run_f32(&self, _inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
+            Err(anyhow!("{UNAVAILABLE}"))
+        }
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+pub use stub::{Client, Executable};
 
 #[cfg(test)]
 mod tests {
@@ -99,6 +163,7 @@ mod tests {
     //! that do not require a PJRT client.
 
     use super::*;
+    use std::path::Path;
 
     #[test]
     fn missing_artifact_is_an_error() {

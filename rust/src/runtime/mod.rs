@@ -15,7 +15,12 @@
 //! [`crate::distance::counter::DistanceCounter`], so the paper's
 //! distance-evaluation metrics are backend-invariant.
 
+//! Block-level parallelism is provided by [`pool`]: a persistent worker
+//! pool owned by the native backend (one spawn per backend, not one per
+//! block — see `rust/PERF.md` for the architecture and measurements).
+
 pub mod backend;
 pub mod executable;
 pub mod manifest;
+pub mod pool;
 pub mod xla_backend;

@@ -1,0 +1,334 @@
+//! Persistent worker pool for the block hot path (see `rust/PERF.md`).
+//!
+//! The seed implementation spawned fresh OS threads via
+//! `std::thread::scope` on **every** batched distance pull; at BanditPAM's
+//! batch cadence (hundreds of `block` calls per Algorithm-1 invocation)
+//! the spawn/join cost rivalled the kernel work for mid-sized blocks.
+//! This pool is created once per [`crate::runtime::backend::NativeBackend`]
+//! and reused across all `block` calls: workers park on a condvar between
+//! tasks, and dispatching a task costs one mutex lock plus a wakeup.
+//!
+//! Scheduling is dynamic ("work-stealing-ish" without per-thread deques):
+//! a task is an index range `0..items` cut into fixed-size chunks, and
+//! every participant — the submitting thread included — claims the next
+//! chunk from a shared atomic cursor until the range is exhausted. Uneven
+//! per-chunk cost (e.g. tree-edit distances of wildly different tree
+//! sizes) therefore balances automatically.
+//!
+//! # Borrowed closures
+//!
+//! [`ThreadPool::run`] accepts a closure borrowing stack data (the output
+//! block, the point matrix). Internally the reference is lifetime-erased
+//! to hand it to the persistent workers; this is sound because `run` does
+//! not return until every chunk has finished executing, so the erased
+//! reference never outlives the borrow it came from. Panics inside a
+//! chunk are caught, the task still completes, and `run` re-panics on the
+//! submitting thread.
+//!
+//! `run` must not be called from inside a running task (the nested call
+//! would wait for the current task to retire while holding one of its
+//! chunks — deadlock). The backend's kernels never re-enter the pool.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+/// Lifetime-erased shared closure: `f(start, end)` processes items
+/// `start..end` of the current task.
+type RawJob = *const (dyn Fn(usize, usize) + Sync);
+
+/// One submitted task: the erased closure plus its claim/completion state.
+struct Task {
+    job: RawJob,
+    items: usize,
+    chunk: usize,
+    epoch: u64,
+    /// Next unclaimed item index (grows by `chunk` per claim).
+    next: AtomicUsize,
+    /// Items whose chunk has finished executing.
+    done: AtomicUsize,
+}
+
+// SAFETY: `job` points at a `Sync` closure, and the pool guarantees (by
+// blocking in `run`) that the pointee outlives every dereference.
+unsafe impl Send for Task {}
+unsafe impl Sync for Task {}
+
+struct State {
+    /// The in-flight task, if any. At most one task runs at a time;
+    /// further submitters wait on `done` for the slot.
+    task: Option<Arc<Task>>,
+    /// Epoch of the most recently installed task.
+    epoch: u64,
+    /// Epoch of the most recently completed task.
+    done_epoch: u64,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for a new task (or shutdown).
+    work: Condvar,
+    /// Submitters wait here for task completion / a free slot.
+    done: Condvar,
+    /// Set when any chunk panicked; `run` re-panics after completion.
+    panicked: AtomicBool,
+}
+
+/// Persistent thread pool executing chunked index-range tasks.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Vec<thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Pool with `threads` total execution lanes. The submitting thread
+    /// participates in every task, so `threads - 1` workers are spawned;
+    /// `threads <= 1` spawns none and [`ThreadPool::run`] executes inline.
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                task: None,
+                epoch: 0,
+                done_epoch: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        let handles = (1..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("banditpam-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawning pool worker thread")
+            })
+            .collect();
+        ThreadPool { shared, handles, threads }
+    }
+
+    /// Total execution lanes (spawned workers + the submitting thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute `f(start, end)` over `0..items` in chunks of `chunk`
+    /// items, in parallel across the pool. Blocks until every chunk has
+    /// run; re-panics here if any chunk panicked.
+    pub fn run(&self, items: usize, chunk: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+        if items == 0 {
+            return;
+        }
+        let chunk = chunk.max(1);
+        if self.handles.is_empty() {
+            // No workers: run inline (still chunked, for identical
+            // traversal order and panic behavior).
+            let mut start = 0;
+            while start < items {
+                let end = (start + chunk).min(items);
+                f(start, end);
+                start = end;
+            }
+            return;
+        }
+        // SAFETY: erase the borrow's lifetime to store it in the shared
+        // task slot. `run` blocks below until `done_epoch` covers this
+        // task, i.e. until no worker can touch `job` again, so the
+        // reference never outlives `f`.
+        let job: RawJob =
+            unsafe { std::mem::transmute::<&(dyn Fn(usize, usize) + Sync), RawJob>(f) };
+        let (task, my_epoch) = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.task.is_some() {
+                st = self.shared.done.wait(st).unwrap();
+            }
+            st.epoch += 1;
+            let task = Arc::new(Task {
+                job,
+                items,
+                chunk,
+                epoch: st.epoch,
+                next: AtomicUsize::new(0),
+                done: AtomicUsize::new(0),
+            });
+            st.task = Some(Arc::clone(&task));
+            self.shared.work.notify_all();
+            (task, st.epoch)
+        };
+        // The submitter is a full participant: claim chunks like a worker.
+        execute(&self.shared, &task);
+        let mut st = self.shared.state.lock().unwrap();
+        while st.done_epoch < my_epoch {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        drop(st);
+        if self.shared.panicked.swap(false, Ordering::SeqCst) {
+            panic!("ThreadPool: a parallel block chunk panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Claim and execute chunks of `task` until its range is exhausted. The
+/// participant that finishes the final chunk retires the task and wakes
+/// submitters.
+fn execute(shared: &Shared, task: &Arc<Task>) {
+    loop {
+        let start = task.next.fetch_add(task.chunk, Ordering::Relaxed);
+        if start >= task.items {
+            return;
+        }
+        let end = (start + task.chunk).min(task.items);
+        // SAFETY: the reference is materialized only after a successful
+        // chunk claim. A claimed-but-uncompleted chunk keeps `done` below
+        // `items`, so the task cannot retire and `run` cannot return —
+        // the pointee (and the `Sync` closure behind it) is still alive.
+        // A stale worker whose task already completed gets `start >=
+        // items` above and never touches `job`.
+        let f = unsafe { &*task.job };
+        if catch_unwind(AssertUnwindSafe(|| f(start, end))).is_err() {
+            shared.panicked.store(true, Ordering::SeqCst);
+        }
+        // AcqRel: the final increment must observe (and order after) every
+        // other chunk's writes, so the submitter's post-`run` reads of the
+        // output buffer see all of them.
+        let finished = task.done.fetch_add(end - start, Ordering::AcqRel) + (end - start);
+        if finished == task.items {
+            let mut st = shared.state.lock().unwrap();
+            if st.task.as_ref().is_some_and(|t| Arc::ptr_eq(t, task)) {
+                st.task = None;
+            }
+            st.done_epoch = st.done_epoch.max(task.epoch);
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// Worker body: wait for an unseen task, help execute it, repeat.
+fn worker_loop(shared: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        let task = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(t) = st.task.as_ref() {
+                    if t.epoch > seen {
+                        break Arc::clone(t);
+                    }
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        seen = task.epoch;
+        execute(shared, &task);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let sum = AtomicU64::new(0);
+        pool.run(100, 7, &|start, end| {
+            sum.fetch_add((start..end).map(|i| i as u64).sum(), Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn parallel_sum_covers_every_item_exactly_once() {
+        let pool = ThreadPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        let sum = AtomicU64::new(0);
+        let chunks = AtomicU64::new(0);
+        pool.run(10_001, 13, &|start, end| {
+            chunks.fetch_add(1, Ordering::Relaxed);
+            sum.fetch_add((start..end).map(|i| i as u64).sum(), Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 10_000 * 10_001 / 2);
+        assert_eq!(chunks.load(Ordering::Relaxed), 10_001u64.div_ceil(13));
+    }
+
+    #[test]
+    fn writes_to_disjoint_output_ranges_are_visible_after_run() {
+        let pool = ThreadPool::new(3);
+        let mut out = vec![0u64; 5000];
+        struct Ptr(*mut u64);
+        unsafe impl Send for Ptr {}
+        unsafe impl Sync for Ptr {}
+        let ptr = Ptr(out.as_mut_ptr());
+        pool.run(out.len(), 17, &|start, end| {
+            // SAFETY: chunks are disjoint index ranges of `out`.
+            let chunk =
+                unsafe { std::slice::from_raw_parts_mut(ptr.0.add(start), end - start) };
+            for (off, v) in chunk.iter_mut().enumerate() {
+                *v = (start + off) as u64 * 3;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as u64 * 3, "item {i}");
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_tasks() {
+        let pool = ThreadPool::new(4);
+        let total = AtomicU64::new(0);
+        for _ in 0..200 {
+            pool.run(97, 5, &|start, end| {
+                total.fetch_add((end - start) as u64, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 200 * 97);
+    }
+
+    #[test]
+    fn chunk_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(4);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(100, 10, &|start, _end| {
+                if start == 50 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic must propagate to the submitter");
+        // The pool must remain fully functional afterwards.
+        let sum = AtomicU64::new(0);
+        pool.run(64, 8, &|start, end| {
+            sum.fetch_add((end - start) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn zero_items_is_a_no_op() {
+        let pool = ThreadPool::new(2);
+        pool.run(0, 16, &|_s, _e| panic!("must not be called"));
+    }
+}

@@ -19,7 +19,7 @@ use crate::runtime::backend::DistanceBackend;
 use crate::runtime::executable::{Client, Executable, Input};
 use crate::runtime::manifest::{ArtifactSpec, Manifest};
 use crate::util::matrix::Matrix;
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 use std::cell::RefCell;
 use std::path::Path;
 
@@ -90,7 +90,7 @@ impl<'a> XlaBackend<'a> {
             .clone();
         let exe = client
             .compile_hlo_text(&spec.path)
-            .with_context(|| format!("loading artifact {}", spec.name))?;
+            .map_err(|e| e.context(format!("loading artifact {}", spec.name)))?;
         let stage = Stage {
             x: vec![0.0; spec.t * spec.d],
             y: vec![0.0; spec.r * spec.d],

@@ -1,0 +1,219 @@
+//! Offline stand-in for the `anyhow` crate: the subset of its API this
+//! workspace uses, with compatible semantics.
+//!
+//! The real crate is not available in the offline build cache, so this
+//! shim provides: [`Error`] (a context chain), [`Result`], the
+//! [`anyhow!`] / [`bail!`] / [`ensure!`] macros and the [`Context`]
+//! extension trait for `Result` and `Option`. Error's `Display` shows the
+//! outermost message; the alternate form (`{:#}`) joins the whole chain
+//! with `": "`, matching anyhow's formatting contract that the test suite
+//! and CLI rely on.
+
+use std::fmt;
+
+/// Error with a chain of context messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `Result` defaulting to [`Error`], like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build from a printable message.
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, context: impl fmt::Display) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context/cause messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.chain.split_first() {
+            None => Ok(()),
+            Some((head, [])) => f.write_str(head),
+            Some((head, rest)) => {
+                writeln!(f, "{head}")?;
+                writeln!(f)?;
+                writeln!(f, "Caused by:")?;
+                for (i, cause) in rest.iter().enumerate() {
+                    writeln!(f, "    {i}: {cause}")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension methods for attaching context, as in `anyhow::Context`.
+pub trait Context<T, E> {
+    /// Attach a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Attach a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let e: Error = std::result::Result::<(), _>::Err(io_err())
+            .context("reading manifest")
+            .unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        let some: Option<u32> = Some(7);
+        assert_eq!(some.with_context(|| "unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.to_string(), "gone");
+    }
+
+    #[test]
+    fn macros_build_and_bail() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert!(f(12).unwrap_err().to_string().contains("too big"));
+        assert!(f(3).unwrap_err().to_string().contains("right out"));
+        let e = anyhow!("coord {},{}", 4, 5);
+        assert_eq!(e.to_string(), "coord 4,5");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = Error::msg("inner").context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer") && dbg.contains("Caused by"), "{dbg}");
+    }
+
+    #[test]
+    fn chain_and_root_cause() {
+        let e = Error::msg("inner").context("mid").context("outer");
+        assert_eq!(e.chain().collect::<Vec<_>>(), vec!["outer", "mid", "inner"]);
+        assert_eq!(e.root_cause(), "inner");
+    }
+}
