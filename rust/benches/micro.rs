@@ -2,12 +2,16 @@
 //! mean ± 95% CI). These are the numbers the §Perf optimization loop in
 //! EXPERIMENTS.md tracks.
 
+use banditpam::algorithms::KMedoids;
 use banditpam::bench::bench_fn;
+use banditpam::coordinator::banditpam::BanditPam;
+use banditpam::coordinator::config::BanditPamConfig;
 use banditpam::coordinator::state::MedoidState;
 use banditpam::data::synthetic;
 use banditpam::distance::{dense, tree_edit, Metric};
 use banditpam::runtime::backend::{DistanceBackend, NativeBackend};
 use banditpam::util::rng::Rng;
+use banditpam::util::timer::Timer;
 
 fn main() {
     let scale = banditpam::bench::Scale::from_env();
@@ -95,6 +99,59 @@ fn main() {
         )
     });
     println!("{}", r.line());
+
+    // --- SWAP reuse (BanditPAM++ virtual arms + cross-iteration rows) ------
+    //
+    // Full fits with the session row cache off vs on; identical medoids by
+    // construction (tests/property_swap_reuse.rs), so the comparison is
+    // purely evals + wall time. Results land in BENCH_swap.json for CI.
+    let nsw = scale.pick(300, 1500, 4800);
+    let ksw = 5;
+    let ds_swap = synthetic::mnist_like(&mut Rng::seed_from(6), nsw);
+    let mut json_rows: Vec<String> = Vec::new();
+    let mut swap_evals_by_mode = Vec::new();
+    for (name, reuse) in [("off", false), ("on", true)] {
+        let backend = NativeBackend::new(&ds_swap.points, Metric::L2).with_threads(4);
+        let mut algo = BanditPam::new(BanditPamConfig {
+            swap_reuse: reuse,
+            ..Default::default()
+        });
+        let t = Timer::start();
+        let fit = algo
+            .fit(&backend, ksw, &mut Rng::seed_from(7))
+            .expect("swap-reuse bench fit");
+        let secs = t.secs();
+        println!(
+            "swap-reuse {name:>3}: swap_evals={} saved={} total={} loss={:.3} {:.3}s",
+            fit.stats.swap_evals,
+            fit.stats.swap_evals_saved,
+            fit.stats.distance_evals,
+            fit.loss,
+            secs
+        );
+        swap_evals_by_mode.push(fit.stats.swap_evals);
+        json_rows.push(format!(
+            "{{\"reuse\": \"{name}\", \"n\": {nsw}, \"k\": {ksw}, \
+             \"swap_evals\": {}, \"swap_evals_saved\": {}, \
+             \"total_evals\": {}, \"loss\": {}, \"wall_secs\": {}}}",
+            fit.stats.swap_evals,
+            fit.stats.swap_evals_saved,
+            fit.stats.distance_evals,
+            fit.loss,
+            secs
+        ));
+    }
+    if swap_evals_by_mode.len() == 2 && swap_evals_by_mode[1] > 0 {
+        println!(
+            "    -> {:.2}x fewer SWAP evals with reuse",
+            swap_evals_by_mode[0] as f64 / swap_evals_by_mode[1] as f64
+        );
+    }
+    let doc = format!("[\n  {}\n]\n", json_rows.join(",\n  "));
+    match std::fs::write("BENCH_swap.json", &doc) {
+        Ok(()) => println!("wrote BENCH_swap.json"),
+        Err(e) => println!("BENCH_swap.json: write failed ({e})"),
+    }
 
     // --- XLA vs native block (needs artifacts) ------------------------------
     let dir = banditpam::runtime::manifest::Manifest::default_dir();

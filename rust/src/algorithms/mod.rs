@@ -29,6 +29,9 @@ pub struct FitStats {
     pub build_evals: u64,
     /// Evaluations spent in SWAP / refinement.
     pub swap_evals: u64,
+    /// Evaluations the SWAP session served from its cross-iteration row
+    /// cache instead of recomputing (0 for algorithms without one).
+    pub swap_evals_saved: u64,
     /// SWAP (or refinement) iterations executed.
     pub swap_iters: usize,
     /// Swaps actually applied.

@@ -33,6 +33,31 @@ pub trait ArmSet {
 
     /// Exact mean `mu_x` over the whole reference set (line 14).
     fn exact(&mut self, arm: usize) -> f64;
+
+    /// Cross-search reference permutation (BanditPAM++-style SWAP reuse).
+    /// When `Some`, [`SamplingMode::FixedPermutation`] uses this
+    /// permutation instead of drawing a fresh one — and consumes no rng —
+    /// so consecutive searches see the same reference order and cached
+    /// distance rows stay aligned. Must have length `n_ref()`.
+    /// Default: `None` (a fresh permutation per search, the seed behavior).
+    fn shared_permutation(&self) -> Option<&[usize]> {
+        None
+    }
+
+    /// Estimator carried over from an earlier search on the same shared
+    /// permutation (BanditPAM++ "PI" carry-over). The contract: the
+    /// returned estimator must equal what re-pulling the arm on the first
+    /// `count()` references of the shared permutation *under the current
+    /// arm values* would produce. Algorithm 1 then skips the batches that
+    /// prefix already covers. Default: start every arm cold.
+    fn warm_estimator(&mut self, _arm: usize) -> Option<ArmEstimator> {
+        None
+    }
+
+    /// Called once at the end of `adaptive_search` with every arm's final
+    /// estimator, so stateful arm sets can persist them for the next
+    /// search. Default: drop them.
+    fn finish(&mut self, _est: &[ArmEstimator]) {}
 }
 
 /// How each arm's sub-Gaussianity parameter `sigma_x` is obtained.
@@ -123,21 +148,38 @@ pub fn adaptive_search(
     let n_ref = arms.n_ref();
     assert!(n_ref > 0, "adaptive_search with empty reference set");
 
-    let mut est: Vec<ArmEstimator> = vec![ArmEstimator::default(); n_arms];
+    // Warm-started estimators (BanditPAM++ carry-over) resume where the
+    // previous search on the same shared permutation left off; stateless
+    // arm sets return None everywhere and start cold exactly as before.
+    let mut est: Vec<ArmEstimator> = Vec::with_capacity(n_arms);
+    for a in 0..n_arms {
+        est.push(arms.warm_estimator(a).unwrap_or_default());
+    }
     let mut live: Vec<usize> = (0..n_arms).collect();
     let mut n_used: usize = 0;
     let mut rounds = 0usize;
     let mut pulls: u64 = 0;
     let mut early_stopped = false;
 
-    // Fixed permutation for SamplingMode::FixedPermutation.
+    // Fixed permutation for SamplingMode::FixedPermutation: the arm set's
+    // shared (cross-search) permutation when it offers one, else a fresh
+    // draw. Copied locally because `arms` is mutably borrowed by the pulls.
     let mut perm: Vec<usize> = Vec::new();
     if cfg.sampling == SamplingMode::FixedPermutation {
-        perm = (0..n_ref).collect();
-        rng.shuffle(&mut perm);
+        match arms.shared_permutation() {
+            Some(p) => {
+                debug_assert_eq!(p.len(), n_ref, "shared permutation length");
+                perm.extend_from_slice(p);
+            }
+            None => {
+                perm = (0..n_ref).collect();
+                rng.shuffle(&mut perm);
+            }
+        }
     }
 
     let mut batch: Vec<usize> = Vec::with_capacity(cfg.batch_size);
+    let mut pull_arms: Vec<usize> = Vec::new();
     let mut values: Vec<f64> = Vec::new();
 
     while n_used < n_ref && live.len() > 1 {
@@ -153,12 +195,19 @@ pub fn adaptive_search(
             }
         }
 
-        // --- Lines 6-7: evaluate all live arms on the common batch.
-        values.resize(live.len() * b, 0.0);
-        arms.pull_many(&live, &batch, &mut values);
-        pulls += (live.len() * b) as u64;
-        for (row, &a) in live.iter().enumerate() {
-            est[a].update(&values[row * b..(row + 1) * b]);
+        // --- Lines 6-7: evaluate on the common batch every live arm whose
+        // estimator does not already cover this prefix (warm-started arms
+        // skip the batches they absorbed last search; batch boundaries are
+        // deterministic in B and n_ref, so carried counts always align).
+        pull_arms.clear();
+        pull_arms.extend(live.iter().copied().filter(|&a| est[a].count() < (n_used + b) as u64));
+        if !pull_arms.is_empty() {
+            values.resize(pull_arms.len() * b, 0.0);
+            arms.pull_many(&pull_arms, &batch, &mut values);
+            pulls += (pull_arms.len() * b) as u64;
+            for (row, &a) in pull_arms.iter().enumerate() {
+                est[a].update(&values[row * b..(row + 1) * b]);
+            }
         }
         n_used += b;
         rounds += 1;
@@ -168,7 +217,10 @@ pub fn adaptive_search(
             SigmaMode::PerArmFirstBatch => {
                 if rounds == 1 {
                     for &a in &live {
-                        est[a].sigma = Some(est[a].std_pop());
+                        // Warm arms keep their carried first-batch sigma.
+                        if est[a].sigma.is_none() {
+                            est[a].sigma = Some(est[a].std_pop());
+                        }
                     }
                 }
             }
@@ -241,6 +293,10 @@ pub fn adaptive_search(
         .iter()
         .min_by(|&&a, &&b| est[a].mean().partial_cmp(&est[b].mean()).unwrap())
         .unwrap();
+
+    // Hand the final estimators back to stateful arm sets (the SWAP
+    // session persists them for the next iteration's warm start).
+    arms.finish(&est);
 
     AdaptiveOutcome {
         best,
@@ -425,5 +481,76 @@ mod tests {
     fn empty_arm_set_panics() {
         let mut arms = SyntheticArms { means: vec![], noise: 0.0, n_ref: 10 };
         adaptive_search(&mut arms, &AdaptiveConfig::default(), &mut Rng::seed_from(0));
+    }
+
+    /// Stateful wrapper exercising the cross-search API: a shared
+    /// permutation plus estimator carry-over between two searches.
+    struct CarryArms {
+        inner: SyntheticArms,
+        perm: Vec<usize>,
+        carried: Vec<Option<ArmEstimator>>,
+        finished: Vec<ArmEstimator>,
+    }
+
+    impl ArmSet for CarryArms {
+        fn n_arms(&self) -> usize {
+            self.inner.n_arms()
+        }
+        fn n_ref(&self) -> usize {
+            self.inner.n_ref()
+        }
+        fn pull_many(&mut self, arms: &[usize], refs: &[usize], out: &mut [f64]) {
+            self.inner.pull_many(arms, refs, out);
+        }
+        fn exact(&mut self, arm: usize) -> f64 {
+            self.inner.exact(arm)
+        }
+        fn shared_permutation(&self) -> Option<&[usize]> {
+            Some(&self.perm)
+        }
+        fn warm_estimator(&mut self, arm: usize) -> Option<ArmEstimator> {
+            self.carried[arm].take()
+        }
+        fn finish(&mut self, est: &[ArmEstimator]) {
+            self.finished = est.to_vec();
+        }
+    }
+
+    #[test]
+    fn warm_resume_skips_covered_batches_and_agrees() {
+        let means: Vec<f64> = vec![1.0, 0.2, 1.5, 0.9, 1.1, 0.8, 1.3];
+        let n_arms = means.len();
+        let make = |carried: Vec<Option<ArmEstimator>>| CarryArms {
+            inner: SyntheticArms { means: means.clone(), noise: 0.4, n_ref: 3_000 },
+            perm: {
+                let mut p: Vec<usize> = (0..3_000).collect();
+                Rng::seed_from(7).shuffle(&mut p);
+                p
+            },
+            carried,
+            finished: Vec::new(),
+        };
+        let cfg = AdaptiveConfig {
+            sampling: SamplingMode::FixedPermutation,
+            ..Default::default()
+        };
+        let mut cold = make(vec![None; n_arms]);
+        let out_cold = adaptive_search(&mut cold, &cfg, &mut Rng::seed_from(1));
+        assert_eq!(out_cold.best, 1);
+        assert!(!cold.finished.is_empty(), "finish hook must run");
+
+        // Resume: carry every arm's final estimator. The g-values are a
+        // deterministic function of (arm, ref), so the carry contract
+        // (bitwise-equal to re-pulling the same prefix) holds exactly.
+        let carried = cold.finished.iter().map(|e| Some(e.carry())).collect();
+        let mut warm = make(carried);
+        let out_warm = adaptive_search(&mut warm, &cfg, &mut Rng::seed_from(2));
+        assert_eq!(out_warm.best, out_cold.best);
+        assert!(
+            out_warm.pulls < out_cold.pulls,
+            "warm resume must skip covered batches: {} vs {}",
+            out_warm.pulls,
+            out_cold.pulls
+        );
     }
 }

@@ -70,6 +70,15 @@ impl ArmEstimator {
             (self.max_seen - self.min_seen).max(0.0)
         }
     }
+
+    /// Copy for cross-search carry-over (BanditPAM++-style SWAP reuse):
+    /// keeps the running moments, sigma and observed range — which remain
+    /// valid when the arm's g-values over the consumed reference prefix are
+    /// unchanged — but clears `exact`, which was computed under the *old*
+    /// medoid state and must not suppress the new search's CIs.
+    pub fn carry(&self) -> ArmEstimator {
+        ArmEstimator { exact: None, ..self.clone() }
+    }
 }
 
 #[cfg(test)]
@@ -101,6 +110,21 @@ mod tests {
         assert_eq!(a.range(), 0.0);
         a.update(&[4.0]);
         assert_eq!(a.range(), 0.0);
+    }
+
+    #[test]
+    fn carry_keeps_moments_but_clears_exact() {
+        let mut a = ArmEstimator::default();
+        a.update(&[1.0, 2.0, 3.0, 4.0]);
+        a.sigma = Some(0.7);
+        a.exact = Some(2.5);
+        let c = a.carry();
+        assert_eq!(c.count(), 4);
+        assert!((c.mean() - 2.5).abs() < 1e-12); // stats mean, not `exact`
+        assert_eq!(c.sigma, Some(0.7));
+        assert_eq!(c.min_seen, 1.0);
+        assert_eq!(c.max_seen, 4.0);
+        assert!(c.exact.is_none());
     }
 
     #[test]

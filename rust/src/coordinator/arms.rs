@@ -1,9 +1,28 @@
-//! Concrete arm sets for the two PAM search problems (paper Eqs. 9–10).
+//! Concrete arm sets for the two PAM search problems (paper Eqs. 9–10),
+//! plus the session-backed virtual SWAP arms (BanditPAM++ reuse).
 
 use crate::bandits::adaptive::ArmSet;
+use crate::bandits::estimator::ArmEstimator;
 use crate::coordinator::scheduler;
+use crate::coordinator::session::SwapSession;
 use crate::coordinator::state::MedoidState;
 use crate::runtime::backend::DistanceBackend;
+
+/// The FastPAM1 swap objective (Eq. 12): loss delta contributed by
+/// reference `j` when candidate `x` (whose distance to `j` is `d`)
+/// replaces the medoid at position `m_pos`. Shared by [`SwapArms`] and
+/// [`VirtualSwapArms`] so the two paths are bitwise-identical by
+/// construction.
+#[inline]
+fn swap_g(d1: &[f64], d2: &[f64], a1: &[usize], m_pos: usize, d: f64, j: usize) -> f64 {
+    let base = if a1[j] == m_pos {
+        // j's nearest medoid is being removed: falls back to d2 or d(x,j)
+        d2[j].min(d)
+    } else {
+        d1[j].min(d)
+    };
+    base - d1[j]
+}
 
 /// BUILD-step arms (Eq. 9): one arm per candidate point x, with
 /// `g_x(j) = min(d(x, x_j) - d1_j, 0)` — or plain `d(x, x_j)` for the very
@@ -121,6 +140,9 @@ pub struct SwapArms<'a> {
     /// Algorithm 1's exact fallback visits arms in id order, so arms of
     /// the same candidate are consecutive and share this row.
     exact_row: Option<(usize, Vec<f64>)>,
+    /// Cross-iteration reference permutation supplied by a [`SwapSession`]
+    /// (see `ArmSet::shared_permutation`); `None` outside a session.
+    shared_perm: Option<&'a [usize]>,
 }
 
 impl<'a> SwapArms<'a> {
@@ -147,7 +169,16 @@ impl<'a> SwapArms<'a> {
             dd: scheduler::Dedup::new(),
             all_refs: (0..backend.n()).collect(),
             exact_row: None,
+            shared_perm: None,
         }
+    }
+
+    /// Attach a cross-iteration reference permutation (the non-reuse leg of
+    /// a [`SwapSession`]-driven SWAP phase: same permutation as the reuse
+    /// leg, so the two trajectories are identical by construction).
+    pub fn with_shared_perm(mut self, perm: &'a [usize]) -> Self {
+        self.shared_perm = Some(perm);
+        self
     }
 
     /// Arm id encoding: `arm = cand_idx * k + medoid_pos`.
@@ -158,13 +189,7 @@ impl<'a> SwapArms<'a> {
 
     #[inline]
     fn g(&self, m_pos: usize, d: f64, j: usize) -> f64 {
-        let base = if self.a1[j] == m_pos {
-            // j's nearest medoid is being removed: falls back to d2 or d(x,j)
-            self.d2[j].min(d)
-        } else {
-            self.d1[j].min(d)
-        };
-        base - self.d1[j]
+        swap_g(self.d1, self.d2, self.a1, m_pos, d, j)
     }
 }
 
@@ -232,6 +257,138 @@ impl<'a> ArmSet for SwapArms<'a> {
             acc += self.g(m_pos, d, j);
         }
         acc / n as f64
+    }
+
+    fn shared_permutation(&self) -> Option<&[usize]> {
+        self.shared_perm
+    }
+}
+
+/// Session-backed SWAP arms ("virtual arms", BanditPAM++ §3): the same
+/// k·(n−k) arm space and the same g-values as [`SwapArms`], but every pull
+/// is served from the [`SwapSession`] row cache — one candidate row feeds
+/// all k `(candidate, medoid-slot)` arms *and* stays valid across SWAP
+/// iterations, so a re-pulled batch costs zero distance evaluations. With
+/// `swap_warm_start` the session additionally carries each arm's estimator
+/// between iterations (`ArmSet::warm_estimator` / `finish`).
+pub struct VirtualSwapArms<'a> {
+    backend: &'a dyn DistanceBackend,
+    session: &'a mut SwapSession,
+    pub candidates: Vec<usize>,
+    pub k: usize,
+    d1: &'a [f64],
+    d2: &'a [f64],
+    a1: &'a [usize],
+    /// Distinct candidate points of the current pull (run-collapsed: the
+    /// live set is ascending, so arms of one candidate are adjacent).
+    group: Vec<usize>,
+    /// Last candidate served by `exact` (consecutive exact calls on the
+    /// same candidate charge the non-reuse baseline only once, mirroring
+    /// `SwapArms`' row reuse).
+    last_exact: Option<usize>,
+}
+
+impl<'a> VirtualSwapArms<'a> {
+    /// Arms over all (medoid, non-medoid) pairs of `state`, pulling
+    /// through `session`'s cross-iteration row cache.
+    pub fn new(
+        backend: &'a dyn DistanceBackend,
+        state: &'a MedoidState,
+        session: &'a mut SwapSession,
+    ) -> Self {
+        let medoids: std::collections::HashSet<usize> =
+            state.medoids.iter().copied().collect();
+        let candidates: Vec<usize> =
+            (0..backend.n()).filter(|i| !medoids.contains(i)).collect();
+        VirtualSwapArms {
+            backend,
+            session,
+            candidates,
+            k: state.medoids.len(),
+            d1: &state.d1,
+            d2: &state.d2,
+            a1: &state.a1,
+            group: Vec::new(),
+            last_exact: None,
+        }
+    }
+
+    /// Arm id encoding: `arm = cand_idx * k + medoid_pos` (same as
+    /// [`SwapArms::decode`]).
+    #[inline]
+    pub fn decode(&self, arm: usize) -> (usize, usize) {
+        (self.candidates[arm / self.k], arm % self.k)
+    }
+}
+
+impl<'a> ArmSet for VirtualSwapArms<'a> {
+    fn n_arms(&self) -> usize {
+        self.candidates.len() * self.k
+    }
+
+    fn n_ref(&self) -> usize {
+        self.backend.n()
+    }
+
+    fn pull_many(&mut self, arms: &[usize], refs: &[usize], out: &mut [f64]) {
+        let rn = refs.len();
+        // One row per distinct candidate. Algorithm 1 passes live arms in
+        // ascending id order, so a run-collapse deduplicates; out-of-order
+        // repeats would only cost a redundant (idempotent) fill request.
+        self.group.clear();
+        for &arm in arms {
+            let c = self.candidates[arm / self.k];
+            if self.group.last() != Some(&c) {
+                self.group.push(c);
+            }
+        }
+        self.session.pull_rows(self.backend, &self.group, refs);
+        for (ai, &arm) in arms.iter().enumerate() {
+            let c = self.candidates[arm / self.k];
+            let m_pos = arm % self.k;
+            let row = self.session.row(c);
+            for (ri, &j) in refs.iter().enumerate() {
+                let d = row[self.session.pos(j)];
+                out[ai * rn + ri] = swap_g(self.d1, self.d2, self.a1, m_pos, d, j);
+            }
+        }
+    }
+
+    fn exact(&mut self, arm: usize) -> f64 {
+        let (x, m_pos) = self.decode(arm);
+        let n = self.backend.n();
+        let fresh_candidate = self.last_exact != Some(x);
+        self.session.ensure_full_row(self.backend, x, fresh_candidate);
+        self.last_exact = Some(x);
+        let row = self.session.row(x);
+        let mut acc = 0.0;
+        // Natural point order, exactly like `SwapArms::exact`, so the
+        // floating-point sum is bitwise-identical.
+        for j in 0..n {
+            let d = row[self.session.pos(j)];
+            acc += swap_g(self.d1, self.d2, self.a1, m_pos, d, j);
+        }
+        acc / n as f64
+    }
+
+    fn shared_permutation(&self) -> Option<&[usize]> {
+        Some(self.session.shared_perm())
+    }
+
+    fn warm_estimator(&mut self, arm: usize) -> Option<ArmEstimator> {
+        let (x, m_pos) = self.decode(arm);
+        self.session.warm(x, m_pos)
+    }
+
+    fn finish(&mut self, est: &[ArmEstimator]) {
+        if !self.session.warm_enabled() {
+            return;
+        }
+        debug_assert_eq!(est.len(), self.n_arms());
+        for (arm, e) in est.iter().enumerate() {
+            let (x, m_pos) = self.decode(arm);
+            self.session.store_carry(x, m_pos, e);
+        }
     }
 }
 

@@ -4,8 +4,9 @@
 use crate::algorithms::{check_fit_args, Clustering, FitStats, KMedoids};
 use crate::coordinator::build::build_step;
 use crate::coordinator::config::BanditPamConfig;
+use crate::coordinator::session::SwapSession;
 use crate::coordinator::state::MedoidState;
-use crate::coordinator::swap::swap_step;
+use crate::coordinator::swap::swap_step_session;
 use crate::runtime::backend::DistanceBackend;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
@@ -21,8 +22,9 @@ pub struct BanditPam {
     pub trace: Vec<SearchTrace>,
 }
 
-/// One Algorithm-1 invocation's telemetry.
-#[derive(Debug, Clone)]
+/// One Algorithm-1 invocation's telemetry. `PartialEq` so determinism
+/// tests can compare whole traces byte-for-byte.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SearchTrace {
     /// "build" or "swap".
     pub phase: &'static str,
@@ -30,6 +32,9 @@ pub struct SearchTrace {
     pub rounds: usize,
     pub exact_fallbacks: usize,
     pub distance_evals: u64,
+    /// Distance evaluations the SWAP session served from its
+    /// cross-iteration row cache (0 for BUILD and for reuse-off runs).
+    pub evals_saved: u64,
 }
 
 impl BanditPam {
@@ -66,6 +71,7 @@ impl BanditPam {
                 rounds: outcome.rounds,
                 exact_fallbacks: outcome.exact_fallbacks,
                 distance_evals: backend.counter().get() - before,
+                evals_saved: 0,
             });
         }
         Ok(state)
@@ -89,9 +95,14 @@ impl KMedoids for BanditPam {
         let build_evals = backend.counter().get() - start_evals;
 
         let mut stats = FitStats { build_evals, ..Default::default() };
+        // One session per SWAP phase: it pins the reference permutation
+        // (drawn here, identically whether reuse is on or off) and carries
+        // the row cache / bandit state across iterations.
+        let mut session = SwapSession::new(backend.n(), k, &self.config, rng);
         for _ in 0..self.config.max_swap_iters {
             let before = backend.counter().get();
-            let step = swap_step(backend, &mut state, &self.config, rng);
+            let saved_before = session.evals_saved();
+            let step = swap_step_session(backend, &mut state, &mut session, &self.config, rng);
             stats.swap_iters += 1;
             self.trace.push(SearchTrace {
                 phase: "swap",
@@ -99,12 +110,14 @@ impl KMedoids for BanditPam {
                 rounds: step.outcome.rounds,
                 exact_fallbacks: step.outcome.exact_fallbacks,
                 distance_evals: backend.counter().get() - before,
+                evals_saved: session.evals_saved().saturating_sub(saved_before),
             });
             match step.applied {
                 Some(_) => stats.swaps_applied += 1,
                 None => break,
             }
         }
+        stats.swap_evals_saved = session.evals_saved();
         stats.swap_evals = backend.counter().get() - start_evals - build_evals;
         stats.iters_plus_one = stats.swap_iters + 1;
         stats.wall_secs = timer.secs();

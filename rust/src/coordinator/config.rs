@@ -46,6 +46,23 @@ pub struct BanditPamConfig {
     pub record_sigmas: bool,
     /// Minimum exact loss improvement required to accept a swap.
     pub swap_tolerance: f64,
+    /// Reuse candidate distance rows across SWAP iterations through a
+    /// [`crate::coordinator::session::SwapSession`] (BanditPAM++ "virtual
+    /// arms"): distance rows are medoid-independent, so one fixed reference
+    /// permutation lets every iteration after the first serve most pulls
+    /// from cache. Requires `SamplingMode::FixedPermutation` and
+    /// `fastpam1_swap` (silently inactive otherwise). The clustering is
+    /// bitwise-identical with this on or off — only the evaluation count
+    /// changes (`tests/property_swap_reuse.rs` asserts it).
+    pub swap_reuse: bool,
+    /// Carry per-arm bandit estimators across SWAP iterations, re-admitting
+    /// cold only the arms whose g-values the applied swap could have
+    /// changed (BanditPAM++ "PI"). Skips re-pulling, so it changes the
+    /// search trajectory; the result keeps Algorithm 1's usual
+    /// high-probability guarantee rather than bitwise parity. Off by
+    /// default; requires `swap_reuse`. The `abl-swap-reuse` ablation
+    /// measures it.
+    pub swap_warm_start: bool,
 }
 
 impl Default for BanditPamConfig {
@@ -66,6 +83,8 @@ impl Default for BanditPamConfig {
             fastpam1_swap: true,
             record_sigmas: false,
             swap_tolerance: 1e-12,
+            swap_reuse: true,
+            swap_warm_start: false,
         }
     }
 }
@@ -115,6 +134,8 @@ mod tests {
         assert_eq!(c.batch_size, 100);
         assert_eq!(c.delta, DeltaMode::PaperDefault);
         assert!(c.fastpam1_swap);
+        assert!(c.swap_reuse, "SWAP row reuse is the default (BanditPAM++)");
+        assert!(!c.swap_warm_start, "estimator carry-over is opt-in");
         let a = c.adaptive(200, 1000, None);
         assert_eq!(a.batch_size, 100);
         assert!((a.delta - 1.0 / 200_000.0).abs() < 1e-15);

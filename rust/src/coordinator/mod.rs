@@ -10,6 +10,9 @@
 //!   (medoid, candidate) pairs with the FastPAM1 row-sharing (Eq. 12);
 //! * [`scheduler`] — batches arm pulls into deduplicated dense distance
 //!   blocks for the backend (this is where the XLA tile shape comes from);
+//! * [`session`]  — cross-iteration SWAP state (BanditPAM++-style reuse):
+//!   the fixed reference permutation, the candidate-row cache that makes
+//!   repeated pulls free, and the per-arm estimator carry-over;
 //! * [`build`] / [`swap`] — one PAM step each, as a bandit search;
 //! * [`banditpam`] — the public driver implementing
 //!   [`crate::algorithms::KMedoids`];
@@ -21,5 +24,6 @@ pub mod banditpam;
 pub mod build;
 pub mod config;
 pub mod scheduler;
+pub mod session;
 pub mod state;
 pub mod swap;

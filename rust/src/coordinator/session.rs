@@ -1,0 +1,454 @@
+//! Cross-iteration SWAP state: the BanditPAM++-style reuse subsystem.
+//!
+//! BanditPAM re-runs Algorithm 1 from scratch for every SWAP iteration, so
+//! consecutive iterations re-evaluate the same candidate distance rows
+//! against the same reference points. BanditPAM++ (Tiwari et al., 2023)
+//! observes that almost all of that work is redundant and removes it with
+//! two mechanisms, both implemented here:
+//!
+//! * **Virtual arms / shared rows** — all k `(candidate, medoid-slot)` arms
+//!   of one candidate read the same distance row `d(candidate, ·)`
+//!   (FastPAM1, Eq. 12), and the row itself is *medoid-independent*, so
+//!   once computed it stays valid for the whole SWAP phase. The session
+//!   caches each point's row as a prefix in the order of one **fixed
+//!   reference permutation** shared by every iteration; re-pulling a
+//!   previously seen batch therefore costs zero distance evaluations.
+//!   Medoid rows computed by the post-swap rebuild land in the same cache,
+//!   so a swapped-out medoid re-enters candidacy fully cached.
+//! * **Estimator carry-over** (opt-in, `swap_warm_start`) — per-arm bandit
+//!   state survives the iteration boundary. After a swap, only arms whose
+//!   g-values the swap could have changed (some reference inside their
+//!   consumed permutation prefix had `d1`/`d2`/`a1` change) are re-admitted
+//!   cold; every other arm resumes its estimator, and Algorithm 1 skips the
+//!   batches that estimator already covers (`ArmSet::warm_estimator`).
+//!
+//! **Parity.** The permutation is drawn exactly once per session, whether
+//! row reuse is enabled or not, and a cached distance is bitwise equal to a
+//! recomputed one (the block kernels are per-pair deterministic — see
+//! `rust/PERF.md`). A fit with row reuse on therefore follows the
+//! *identical* search trajectory as one with it off and returns identical
+//! medoids; only the distance-evaluation count changes. This is asserted by
+//! `tests/property_swap_reuse.rs`. Warm starts intentionally change the
+//! trajectory (fewer pulls) and preserve the result only with Algorithm 1's
+//! usual high-probability guarantee, which is why they are off by default.
+
+use crate::bandits::adaptive::SamplingMode;
+use crate::bandits::estimator::ArmEstimator;
+use crate::coordinator::config::BanditPamConfig;
+use crate::coordinator::state::MedoidState;
+use crate::runtime::backend::DistanceBackend;
+use crate::util::rng::Rng;
+
+/// State shared by every SWAP iteration of one fit.
+pub struct SwapSession {
+    n: usize,
+    k: usize,
+    /// Row caching active (requires `swap_reuse`, fixed-permutation
+    /// sampling and the FastPAM1 decomposition).
+    reuse_rows: bool,
+    /// Estimator carry-over active (requires `reuse_rows`).
+    warm_start: bool,
+    /// The fixed reference permutation shared by every iteration.
+    perm: Vec<usize>,
+    /// Inverse permutation: `pos_of[j]` = position of point `j` in `perm`.
+    pos_of: Vec<usize>,
+    /// Per-point cached distance-row prefix in *permutation order*:
+    /// `rows[p][t] = d(p, perm[t])`. Grows monotonically; empty until the
+    /// point is first pulled. Medoid-independent, hence iteration-stable.
+    rows: Vec<Vec<f64>>,
+    /// Carried per-arm estimators, keyed `point * k + slot`, stamped with
+    /// the iteration that stored them.
+    carried: Vec<Option<(u64, ArmEstimator)>>,
+    /// Current SWAP iteration (1-based once `begin_iteration` runs).
+    iteration: u64,
+    /// Longest permutation prefix whose references all kept their
+    /// `d1`/`d2`/`a1` through the last applied swap; carried estimators
+    /// with a longer consumed prefix are re-admitted cold.
+    valid_prefix: usize,
+    /// Distance evaluations the non-reuse path would have performed.
+    requested: u64,
+    /// Distance evaluations actually issued to the backend.
+    issued: u64,
+    // Reused scratch (allocation-free steady state, like the arm sets).
+    fill_plan: Vec<(usize, usize)>,
+    fill_targets: Vec<usize>,
+    fill_scratch: Vec<f64>,
+    nat_buf: Vec<f64>,
+    prev_d1: Vec<f64>,
+    prev_d2: Vec<f64>,
+    prev_a1: Vec<usize>,
+}
+
+impl SwapSession {
+    /// Create the session for a SWAP phase over `n` points and `k` medoids.
+    /// Under fixed-permutation sampling this draws the shared reference
+    /// permutation (one shuffle — the only rng consumption, performed
+    /// identically whether reuse is enabled or not, so enabling/disabling
+    /// reuse cannot shift the rng stream). `WithReplacement` sampling never
+    /// reads the permutation, so nothing is drawn and the rng stream stays
+    /// byte-compatible with the session-less code path.
+    pub fn new(n: usize, k: usize, cfg: &BanditPamConfig, rng: &mut Rng) -> SwapSession {
+        assert!(k >= 1 && k < n, "need 1 <= k < n (k={k}, n={n})");
+        let fixed = cfg.sampling == SamplingMode::FixedPermutation;
+        let mut perm: Vec<usize> = (0..n).collect();
+        if fixed {
+            rng.shuffle(&mut perm);
+        }
+        let mut pos_of = vec![0usize; n];
+        for (p, &j) in perm.iter().enumerate() {
+            pos_of[j] = p;
+        }
+        let reuse_rows = cfg.swap_reuse && fixed && cfg.fastpam1_swap;
+        let warm_start = cfg.swap_warm_start && reuse_rows;
+        SwapSession {
+            n,
+            k,
+            reuse_rows,
+            warm_start,
+            perm,
+            pos_of,
+            rows: if reuse_rows { vec![Vec::new(); n] } else { Vec::new() },
+            carried: if warm_start { vec![None; n * k] } else { Vec::new() },
+            iteration: 0,
+            valid_prefix: 0,
+            requested: 0,
+            issued: 0,
+            fill_plan: Vec::new(),
+            fill_targets: Vec::new(),
+            fill_scratch: Vec::new(),
+            nat_buf: Vec::new(),
+            prev_d1: Vec::new(),
+            prev_d2: Vec::new(),
+            prev_a1: Vec::new(),
+        }
+    }
+
+    /// Row caching active for this session?
+    pub fn rows_enabled(&self) -> bool {
+        self.reuse_rows
+    }
+
+    /// Estimator carry-over active for this session?
+    pub fn warm_enabled(&self) -> bool {
+        self.warm_start
+    }
+
+    /// The fixed reference permutation (length n).
+    pub fn shared_perm(&self) -> &[usize] {
+        &self.perm
+    }
+
+    /// Position of point `j` inside the shared permutation.
+    #[inline]
+    pub fn pos(&self, j: usize) -> usize {
+        self.pos_of[j]
+    }
+
+    /// Cached row prefix of point `p`, in permutation order.
+    #[inline]
+    pub fn row(&self, p: usize) -> &[f64] {
+        &self.rows[p]
+    }
+
+    /// Distance evaluations avoided so far relative to the non-reuse path.
+    pub fn evals_saved(&self) -> u64 {
+        self.requested.saturating_sub(self.issued)
+    }
+
+    /// Mark the start of the next SWAP iteration (bumps the carry stamp).
+    pub fn begin_iteration(&mut self) {
+        self.iteration += 1;
+    }
+
+    /// Serve the distance rows of `points` over the reference batch `refs`
+    /// (typically a slice of the shared permutation), filling only the
+    /// permutation prefix not yet cached. Counts what the non-reuse path
+    /// would have paid for telemetry.
+    pub fn pull_rows(&mut self, backend: &dyn DistanceBackend, points: &[usize], refs: &[usize]) {
+        debug_assert!(self.reuse_rows);
+        let end = refs.iter().map(|&j| self.pos_of[j] + 1).max().unwrap_or(0);
+        self.requested += (points.len() * refs.len()) as u64;
+        self.fill_rows_to(backend, points, end);
+    }
+
+    /// Ensure point `p`'s row covers the whole permutation (the exact-mean
+    /// path). `count_request` charges the telemetry with the n evaluations
+    /// the non-reuse path would pay for a fresh candidate.
+    pub fn ensure_full_row(
+        &mut self,
+        backend: &dyn DistanceBackend,
+        p: usize,
+        count_request: bool,
+    ) {
+        debug_assert!(self.reuse_rows);
+        if count_request {
+            self.requested += self.n as u64;
+        }
+        let n = self.n;
+        self.fill_rows_to(backend, &[p], n);
+    }
+
+    /// Extend the cached rows of `points` through permutation position
+    /// `end`, batching points with equal fill fronts into single dense
+    /// blocks so the backend sees the same multi-target shapes as the
+    /// non-reuse path (pooled row kernels apply).
+    fn fill_rows_to(&mut self, backend: &dyn DistanceBackend, points: &[usize], end: usize) {
+        let end = end.min(self.n);
+        self.fill_plan.clear();
+        for &p in points {
+            let cur = self.rows[p].len();
+            if cur < end {
+                self.fill_plan.push((cur, p));
+            }
+        }
+        if self.fill_plan.is_empty() {
+            return;
+        }
+        self.fill_plan.sort_unstable();
+        self.fill_plan.dedup();
+        let mut i = 0;
+        while i < self.fill_plan.len() {
+            let start = self.fill_plan[i].0;
+            let mut stop = i;
+            while stop < self.fill_plan.len() && self.fill_plan[stop].0 == start {
+                stop += 1;
+            }
+            self.fill_targets.clear();
+            self.fill_targets.extend(self.fill_plan[i..stop].iter().map(|&(_, p)| p));
+            let rn = end - start;
+            let need = self.fill_targets.len() * rn;
+            if self.fill_scratch.len() < need {
+                self.fill_scratch.resize(need, 0.0);
+            }
+            backend.block(
+                &self.fill_targets,
+                &self.perm[start..end],
+                &mut self.fill_scratch[..need],
+            );
+            for (ti, &p) in self.fill_targets.iter().enumerate() {
+                self.rows[p].extend_from_slice(&self.fill_scratch[ti * rn..(ti + 1) * rn]);
+                debug_assert_eq!(self.rows[p].len(), end);
+            }
+            self.issued += need as u64;
+            i = stop;
+        }
+    }
+
+    /// Carried estimator for arm `(point, slot)` if it is still valid:
+    /// stored by the immediately preceding iteration, and its consumed
+    /// permutation prefix untouched by the last swap. The returned copy has
+    /// its (stale) exact mean cleared.
+    pub fn warm(&self, point: usize, slot: usize) -> Option<ArmEstimator> {
+        if !self.warm_start {
+            return None;
+        }
+        let (stamp, est) = self.carried[point * self.k + slot].as_ref()?;
+        if *stamp + 1 != self.iteration {
+            return None;
+        }
+        let prefix = est.count() as usize;
+        if prefix == 0 || prefix > self.valid_prefix {
+            return None;
+        }
+        Some(est.carry())
+    }
+
+    /// Persist arm `(point, slot)`'s final estimator for the next iteration.
+    pub fn store_carry(&mut self, point: usize, slot: usize, est: &ArmEstimator) {
+        if !self.warm_start {
+            return;
+        }
+        self.carried[point * self.k + slot] = Some((self.iteration, est.clone()));
+    }
+
+    /// Apply the swap `medoids[pos] <- x` and rebuild `state`'s d1/d2/a1
+    /// from session-cached medoid rows — bitwise-identical to
+    /// [`MedoidState::apply_swap`], which recomputes every row — then
+    /// record which permutation prefix survived unchanged (for carry-over).
+    pub fn apply_swap(
+        &mut self,
+        backend: &dyn DistanceBackend,
+        state: &mut MedoidState,
+        pos: usize,
+        x: usize,
+    ) {
+        debug_assert!(self.reuse_rows);
+        assert_eq!(state.medoids.len(), self.k);
+        assert!(pos < self.k);
+        let n = self.n;
+        if self.warm_start {
+            self.prev_d1.clone_from(&state.d1);
+            self.prev_d2.clone_from(&state.d2);
+            self.prev_a1.clone_from(&state.a1);
+        }
+        state.medoids[pos] = x;
+        self.requested += (self.k * n) as u64;
+        let meds = state.medoids.clone();
+        self.fill_rows_to(backend, &meds, n);
+        // Re-emit the cached (permutation-order) rows in natural point
+        // order so the cache update folds them in exactly like a fresh
+        // `rebuild` block would.
+        self.nat_buf.clear();
+        self.nat_buf.resize(self.k * n, 0.0);
+        for (mi, &m) in meds.iter().enumerate() {
+            let row = &self.rows[m];
+            let dst = &mut self.nat_buf[mi * n..(mi + 1) * n];
+            for (j, d) in dst.iter_mut().enumerate() {
+                *d = row[self.pos_of[j]];
+            }
+        }
+        state.ingest_rows(&self.nat_buf, n);
+        if self.warm_start {
+            let mut valid = n;
+            for j in 0..n {
+                if self.prev_d1[j].to_bits() != state.d1[j].to_bits()
+                    || self.prev_a1[j] != state.a1[j]
+                    || self.prev_d2[j].to_bits() != state.d2[j].to_bits()
+                {
+                    valid = valid.min(self.pos_of[j]);
+                }
+            }
+            self.valid_prefix = valid;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::distance::Metric;
+    use crate::runtime::backend::NativeBackend;
+
+    fn fixture() -> (crate::data::Dataset, MedoidState) {
+        let ds = synthetic::gmm(&mut Rng::seed_from(31), 40, 6, 3, 3.0);
+        (ds, MedoidState::empty(40))
+    }
+
+    fn default_session(n: usize, k: usize, seed: u64) -> SwapSession {
+        SwapSession::new(n, k, &BanditPamConfig::default(), &mut Rng::seed_from(seed))
+    }
+
+    #[test]
+    fn permutation_is_a_permutation_and_inverse_is_consistent() {
+        let s = default_session(40, 3, 1);
+        let mut sorted = s.shared_perm().to_vec();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..40).collect::<Vec<_>>());
+        for j in 0..40 {
+            assert_eq!(s.shared_perm()[s.pos(j)], j);
+        }
+    }
+
+    #[test]
+    fn pull_rows_caches_and_saves_on_repeat() {
+        let (ds, _) = fixture();
+        let b = NativeBackend::new(&ds.points, Metric::L2);
+        let mut s = default_session(40, 3, 2);
+        let refs: Vec<usize> = s.shared_perm()[..10].to_vec();
+        s.pull_rows(&b, &[5, 7], &refs);
+        assert_eq!(b.counter().get(), 2 * 10);
+        assert_eq!(s.evals_saved(), 0);
+        // identical repeat: fully served from cache
+        s.pull_rows(&b, &[5, 7], &refs);
+        assert_eq!(b.counter().get(), 2 * 10);
+        assert_eq!(s.evals_saved(), 2 * 10);
+        // cached values match direct evaluation
+        for &p in &[5usize, 7] {
+            for (t, &j) in refs.iter().enumerate() {
+                assert_eq!(s.row(p)[t], b.dist(p, j));
+            }
+        }
+    }
+
+    #[test]
+    fn fill_extends_prefix_without_recomputation() {
+        let (ds, _) = fixture();
+        let b = NativeBackend::new(&ds.points, Metric::L2);
+        let mut s = default_session(40, 3, 3);
+        let first: Vec<usize> = s.shared_perm()[..8].to_vec();
+        let wider: Vec<usize> = s.shared_perm()[..20].to_vec();
+        s.pull_rows(&b, &[4], &first);
+        s.pull_rows(&b, &[4], &wider);
+        // only the 12 new positions were evaluated
+        assert_eq!(b.counter().get(), 20);
+        assert_eq!(s.row(4).len(), 20);
+    }
+
+    #[test]
+    fn ensure_full_row_completes_the_prefix() {
+        let (ds, _) = fixture();
+        let b = NativeBackend::new(&ds.points, Metric::L2);
+        let mut s = default_session(40, 3, 4);
+        let first: Vec<usize> = s.shared_perm()[..15].to_vec();
+        s.pull_rows(&b, &[9], &first);
+        s.ensure_full_row(&b, 9, true);
+        assert_eq!(s.row(9).len(), 40);
+        assert_eq!(b.counter().get(), 40);
+        for j in 0..40 {
+            assert_eq!(s.row(9)[s.pos(j)], b.dist(9, j));
+        }
+    }
+
+    #[test]
+    fn session_apply_swap_matches_legacy_rebuild_bitwise() {
+        let (ds, mut state) = fixture();
+        let b = NativeBackend::new(&ds.points, Metric::L2);
+        for m in [0usize, 11, 22] {
+            state.add_medoid(&b, m);
+        }
+        let mut legacy = state.clone();
+        let mut s = default_session(40, 3, 5);
+        s.begin_iteration();
+        s.apply_swap(&b, &mut state, 1, 33);
+        legacy.apply_swap(&b, 1, 33);
+        assert_eq!(state.medoids, legacy.medoids);
+        for j in 0..40 {
+            assert_eq!(state.d1[j].to_bits(), legacy.d1[j].to_bits(), "d1[{j}]");
+            assert_eq!(state.d2[j].to_bits(), legacy.d2[j].to_bits(), "d2[{j}]");
+            assert_eq!(state.a1[j], legacy.a1[j], "a1[{j}]");
+        }
+        state.check_invariants(&b);
+    }
+
+    #[test]
+    fn warm_carry_respects_stamp_and_valid_prefix() {
+        let cfg = BanditPamConfig {
+            swap_warm_start: true,
+            ..Default::default()
+        };
+        let mut s = SwapSession::new(30, 2, &cfg, &mut Rng::seed_from(6));
+        assert!(s.warm_enabled());
+        s.begin_iteration(); // iteration 1
+        let mut est = ArmEstimator::default();
+        est.update(&[1.0, 2.0, 3.0]);
+        s.store_carry(7, 1, &est);
+        // same iteration: not yet offered
+        assert!(s.warm(7, 1).is_none());
+        s.begin_iteration(); // iteration 2
+        // valid_prefix defaults to 0 until a swap computes it
+        assert!(s.warm(7, 1).is_none());
+        s.valid_prefix = 3;
+        let w = s.warm(7, 1).expect("valid carry");
+        assert_eq!(w.count(), 3);
+        assert!(w.exact.is_none());
+        // prefix longer than the surviving one: re-admitted cold
+        s.valid_prefix = 2;
+        assert!(s.warm(7, 1).is_none());
+        // two iterations later: stale stamp
+        s.valid_prefix = 3;
+        s.begin_iteration(); // iteration 3
+        assert!(s.warm(7, 1).is_none());
+    }
+
+    #[test]
+    fn reuse_disabled_under_with_replacement_sampling() {
+        let cfg = BanditPamConfig {
+            sampling: SamplingMode::WithReplacement,
+            ..Default::default()
+        };
+        let s = SwapSession::new(20, 2, &cfg, &mut Rng::seed_from(7));
+        assert!(!s.rows_enabled());
+        assert!(!s.warm_enabled());
+    }
+}

@@ -73,15 +73,24 @@ impl MedoidState {
     pub fn rebuild(&mut self, backend: &dyn DistanceBackend) {
         let n = backend.n();
         let k = self.medoids.len();
+        let mut rows = vec![0.0f64; k * n];
+        if k > 0 {
+            let refs: Vec<usize> = (0..n).collect();
+            backend.block(&self.medoids, &refs, &mut rows);
+        }
+        self.ingest_rows(&rows, n);
+    }
+
+    /// Reset d₁/a₁/d₂ and fold in per-medoid distance rows — row-major
+    /// `[k x n]`, natural point order, `rows[pos * n + j] = d(medoids[pos], j)`.
+    /// The shared second half of [`MedoidState::rebuild`]; the SWAP session
+    /// calls it with cached rows instead of a fresh block
+    /// ([`crate::coordinator::session::SwapSession::apply_swap`]).
+    pub fn ingest_rows(&mut self, rows: &[f64], n: usize) {
+        assert_eq!(rows.len(), self.medoids.len() * n);
         self.d1.iter_mut().for_each(|v| *v = f64::INFINITY);
         self.d2.iter_mut().for_each(|v| *v = f64::INFINITY);
         self.a1.iter_mut().for_each(|v| *v = usize::MAX);
-        if k == 0 {
-            return;
-        }
-        let refs: Vec<usize> = (0..n).collect();
-        let mut rows = vec![0.0f64; k * n];
-        backend.block(&self.medoids, &refs, &mut rows);
         for (pos, row) in rows.chunks(n).enumerate() {
             for (j, &d) in row.iter().enumerate() {
                 if d < self.d1[j] {

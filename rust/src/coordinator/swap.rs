@@ -1,8 +1,16 @@
 //! One SWAP iteration (paper Eq. 7) as a bandit search.
+//!
+//! Two entry points: [`swap_step`] is the standalone (seed-compatible)
+//! iteration that draws a fresh reference permutation per call;
+//! [`swap_step_session`] runs the same search through a [`SwapSession`],
+//! which pins one permutation for the whole SWAP phase and — when reuse is
+//! enabled — serves repeated pulls from its cross-iteration row cache
+//! (BanditPAM++-style; see `coordinator::session`).
 
 use crate::bandits::adaptive::{adaptive_search, AdaptiveOutcome, ArmSet};
-use crate::coordinator::arms::SwapArms;
+use crate::coordinator::arms::{SwapArms, VirtualSwapArms};
 use crate::coordinator::config::BanditPamConfig;
+use crate::coordinator::session::SwapSession;
 use crate::coordinator::state::MedoidState;
 use crate::runtime::backend::DistanceBackend;
 use crate::util::rng::Rng;
@@ -18,6 +26,25 @@ pub struct SwapStep {
     pub outcome: AdaptiveOutcome,
 }
 
+/// Shared search tail of both entry points: run Algorithm 1 over `arms`,
+/// verify the winner exactly (the sampled estimate can be noisy near
+/// convergence, and PAM's termination rule — "swap while it improves" —
+/// needs the true sign), and decode it. One implementation so the reuse
+/// and non-reuse legs cannot silently diverge.
+fn search_winner<A: ArmSet>(
+    arms: &mut A,
+    decode: fn(&A, usize) -> (usize, usize),
+    n: usize,
+    cfg: &BanditPamConfig,
+    rng: &mut Rng,
+) -> (usize, usize, f64, AdaptiveOutcome) {
+    let acfg = cfg.adaptive(arms.n_arms(), n, Some(-cfg.swap_tolerance));
+    let outcome = adaptive_search(arms, &acfg, rng);
+    let best_delta = arms.exact(outcome.best);
+    let (x, m_pos) = decode(arms, outcome.best);
+    (m_pos, x, best_delta, outcome)
+}
+
 /// Find the best (medoid, candidate) swap with Algorithm 1; verify the
 /// winner's exact loss delta; apply it when it improves by more than
 /// `cfg.swap_tolerance`.
@@ -29,17 +56,46 @@ pub fn swap_step(
 ) -> SwapStep {
     let (m_pos, x, best_delta, outcome) = {
         let mut arms = SwapArms::new(backend, state, cfg.fastpam1_swap);
-        let acfg = cfg.adaptive(arms.n_arms(), backend.n(), Some(-cfg.swap_tolerance));
-        let outcome = adaptive_search(&mut arms, &acfg, rng);
-        // Verify exactly before committing (n evaluations) — the sampled
-        // estimate can be noisy near convergence, and PAM's termination
-        // rule ("swap while it improves") needs the true sign.
-        let best_delta = arms.exact(outcome.best);
-        let (x, m_pos) = arms.decode(outcome.best);
-        (m_pos, x, best_delta, outcome)
+        search_winner(&mut arms, SwapArms::decode, backend.n(), cfg, rng)
     };
     if best_delta < -cfg.swap_tolerance {
         state.apply_swap(backend, m_pos, x);
+        SwapStep { applied: Some((m_pos, x)), best_delta, outcome }
+    } else {
+        SwapStep { applied: None, best_delta, outcome }
+    }
+}
+
+/// One SWAP iteration through a [`SwapSession`]: the same Algorithm-1
+/// search and exact winner verification as [`swap_step`], but the
+/// reference permutation is the session's (fixed for the whole SWAP
+/// phase), and with reuse enabled the pulls, the exact means and the
+/// post-swap rebuild are all served from the session's cross-iteration
+/// row cache. Enabling/disabling reuse changes only the evaluation
+/// count, never the trajectory (see `coordinator::session`).
+pub fn swap_step_session(
+    backend: &dyn DistanceBackend,
+    state: &mut MedoidState,
+    session: &mut SwapSession,
+    cfg: &BanditPamConfig,
+    rng: &mut Rng,
+) -> SwapStep {
+    session.begin_iteration();
+    let reuse = session.rows_enabled();
+    let (m_pos, x, best_delta, outcome) = if reuse {
+        let mut arms = VirtualSwapArms::new(backend, state, session);
+        search_winner(&mut arms, VirtualSwapArms::decode, backend.n(), cfg, rng)
+    } else {
+        let mut arms = SwapArms::new(backend, state, cfg.fastpam1_swap)
+            .with_shared_perm(session.shared_perm());
+        search_winner(&mut arms, SwapArms::decode, backend.n(), cfg, rng)
+    };
+    if best_delta < -cfg.swap_tolerance {
+        if reuse {
+            session.apply_swap(backend, state, m_pos, x);
+        } else {
+            state.apply_swap(backend, m_pos, x);
+        }
         SwapStep { applied: Some((m_pos, x)), best_delta, outcome }
     } else {
         SwapStep { applied: None, best_delta, outcome }
@@ -70,6 +126,66 @@ mod tests {
             let step = swap_step(&backend, &mut state, &cfg, &mut rng);
             let now = state.loss();
             assert!(now <= prev + 1e-9, "loss increased: {prev} -> {now}");
+            prev = now;
+            if step.applied.is_none() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn session_swap_matches_non_reuse_session_swap_exactly() {
+        // The tentpole parity claim at unit scale: the same SwapSession
+        // permutation with row reuse on vs off yields bitwise-identical
+        // trajectories; reuse only reduces the evaluation count.
+        let ds = synthetic::gmm(&mut Rng::seed_from(14), 60, 5, 3, 2.0);
+        let run = |reuse: bool| {
+            let backend = NativeBackend::new(&ds.points, Metric::L2);
+            let cfg = BanditPamConfig { swap_reuse: reuse, ..BanditPamConfig::default() };
+            let mut state = MedoidState::empty(60);
+            for m in 0..3 {
+                state.add_medoid(&backend, m);
+            }
+            let mut rng = Rng::seed_from(4);
+            let mut session = SwapSession::new(60, 3, &cfg, &mut rng);
+            let mut applied = Vec::new();
+            for _ in 0..12 {
+                let step = swap_step_session(&backend, &mut state, &mut session, &cfg, &mut rng);
+                match step.applied {
+                    Some(s) => applied.push(s),
+                    None => break,
+                }
+            }
+            (applied, state.medoids.clone(), state.loss(), backend.counter().get())
+        };
+        let (applied_on, meds_on, loss_on, evals_on) = run(true);
+        let (applied_off, meds_off, loss_off, evals_off) = run(false);
+        assert_eq!(applied_on, applied_off, "identical swap sequences");
+        assert_eq!(meds_on, meds_off);
+        assert_eq!(loss_on.to_bits(), loss_off.to_bits());
+        assert!(
+            evals_on <= evals_off,
+            "reuse must not cost extra evals: {evals_on} vs {evals_off}"
+        );
+    }
+
+    #[test]
+    fn session_swap_never_increases_loss() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(15), 50, 4, 3, 3.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let cfg = BanditPamConfig::default();
+        let mut state = MedoidState::empty(50);
+        for m in 0..3 {
+            state.add_medoid(&backend, m);
+        }
+        let mut rng = Rng::seed_from(5);
+        let mut session = SwapSession::new(50, 3, &cfg, &mut rng);
+        let mut prev = state.loss();
+        for _ in 0..10 {
+            let step = swap_step_session(&backend, &mut state, &mut session, &cfg, &mut rng);
+            let now = state.loss();
+            assert!(now <= prev + 1e-9, "loss increased: {prev} -> {now}");
+            state.check_invariants(&backend);
             prev = now;
             if step.applied.is_none() {
                 break;

@@ -6,7 +6,15 @@
 //! n² matrix PAM/FastPAM1 precompute) captures most reuse — especially when
 //! reference batches come from a **fixed permutation** so different arms
 //! share reference points. The coordinator enables that mode via
-//! [`crate::coordinator::config::SamplingMode::FixedPermutation`].
+//! [`crate::bandits::adaptive::SamplingMode::FixedPermutation`].
+//!
+//! Within the SWAP phase this pairwise cache is now largely subsumed by
+//! the dense per-candidate row cache in
+//! [`crate::coordinator::session::SwapSession`], which exploits the same
+//! fixed ordering without per-probe locking; the hash cache remains the
+//! general mechanism for BUILD, the baselines and arbitrary access
+//! patterns, and composes with the session (a session fill that misses
+//! here computes once and seeds both).
 //!
 //! Sharded `HashMap` protected by mutexes: the hot path takes one lock per
 //! evaluation, but only on the (cheap) cache probe; misses compute outside
@@ -69,6 +77,26 @@ impl DistanceCache {
         (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
     }
 
+    /// Cache hits so far (evaluations avoided).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache misses so far (evaluations actually computed).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of probes served from the cache (0 when never probed).
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = self.stats();
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
     /// Number of stored entries.
     pub fn len(&self) -> usize {
         self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
@@ -129,6 +157,18 @@ mod tests {
         // values already stored remain correct
         let d = c.get_or_compute(0, 1, || panic!("evicted"));
         assert_eq!(d, 0.0);
+    }
+
+    #[test]
+    fn hit_rate_tracks_probes() {
+        let c = DistanceCache::new(1000);
+        assert_eq!(c.hit_rate(), 0.0);
+        c.get_or_compute(1, 2, || 1.0);
+        c.get_or_compute(1, 2, || 1.0);
+        c.get_or_compute(2, 1, || 1.0);
+        assert_eq!(c.hits(), 2);
+        assert_eq!(c.misses(), 1);
+        assert!((c.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
     }
 
     #[test]

@@ -10,6 +10,9 @@
 //!   cache trades memory for recomputation.
 //! * **FastPAM1 row sharing** (paper Appendix 1.1): disabling the Eq. 12
 //!   sharing makes each SWAP arm pay its own distance row.
+//! * **SWAP reuse** (BanditPAM++, `abl-swap-reuse`): cross-iteration
+//!   candidate-row caching (bitwise-identical results, fewer evals) and
+//!   opt-in estimator carry-over (same w.h.p. guarantee, fewer pulls).
 
 use crate::algorithms::{fastpam1::FastPam1, KMedoids};
 use crate::bandits::adaptive::{SamplingMode, SigmaMode};
@@ -33,6 +36,8 @@ pub fn params(scale: Scale) -> (usize, usize, usize) {
 
 struct RunResult {
     evals: f64,
+    swap_evals: f64,
+    swap_saved: f64,
     loss: f64,
     same_as_pam: usize,
 }
@@ -47,6 +52,8 @@ fn run_config(
 ) -> RunResult {
     let base = synthetic::mnist_like(&mut Rng::seed_from(seed), n * 2);
     let mut evals = 0.0;
+    let mut swap_evals = 0.0;
+    let mut swap_saved = 0.0;
     let mut loss = 0.0;
     let mut same = 0;
     for rep in 0..repeats {
@@ -66,12 +73,14 @@ fn run_config(
             .fit(&pam_backend, k, &mut Rng::seed_from(0))
             .unwrap();
         evals += fit.stats.distance_evals as f64 / repeats as f64;
+        swap_evals += fit.stats.swap_evals as f64 / repeats as f64;
+        swap_saved += fit.stats.swap_evals_saved as f64 / repeats as f64;
         loss += fit.loss / pam.loss / repeats as f64;
         if fit.medoids == pam.medoids {
             same += 1;
         }
     }
-    RunResult { evals, loss, same_as_pam: same }
+    RunResult { evals, swap_evals, swap_saved, loss, same_as_pam: same }
 }
 
 pub fn run(scale: Scale, seed: u64) -> Vec<Table> {
@@ -153,6 +162,40 @@ pub fn run(scale: Scale, seed: u64) -> Vec<Table> {
         ]);
     }
     out.push(t);
+
+    // --- abl-swap-reuse ----------------------------------------------------
+    let mut t = Table::new(
+        "Ablation: SWAP reuse (BanditPAM++ virtual arms + carry-over)",
+        &[
+            "config",
+            "mean evals",
+            "mean swap evals",
+            "swap evals saved",
+            "loss ratio",
+            "same medoids",
+        ],
+    );
+    for (name, reuse, warm) in [
+        ("no reuse (BanditPAM)", false, false),
+        ("row reuse (virtual arms)", true, false),
+        ("row reuse + warm estimators", true, true),
+    ] {
+        let cfg = BanditPamConfig {
+            swap_reuse: reuse,
+            swap_warm_start: warm,
+            ..Default::default()
+        };
+        let r = run_config(cfg, n, k, repeats, seed, false);
+        t.row(vec![
+            name.into(),
+            fnum(r.evals),
+            fnum(r.swap_evals),
+            fnum(r.swap_saved),
+            fnum(r.loss),
+            format!("{}/{repeats}", r.same_as_pam),
+        ]);
+    }
+    out.push(t);
     out
 }
 
@@ -163,7 +206,7 @@ mod tests {
     #[test]
     fn smoke_ablations_run_and_delta_monotonicity_holds() {
         let tables = run(Scale::Smoke, 43);
-        assert_eq!(tables.len(), 4);
+        assert_eq!(tables.len(), 5);
         // delta sweep: evals at delta=1e-1 <= evals at delta=1e-8
         let d = &tables[1].rows;
         let tight: f64 = d[0][1].parse().unwrap();
@@ -172,5 +215,16 @@ mod tests {
             loose <= tight * 1.05,
             "looser delta should not cost more evals: {tight} -> {loose}"
         );
+        // abl-swap-reuse: row reuse must not add swap evals and must not
+        // change the clustering (identical loss ratio by bitwise parity).
+        let r = &tables[4].rows;
+        let off_swap: f64 = r[0][2].parse().unwrap();
+        let on_swap: f64 = r[1][2].parse().unwrap();
+        assert!(
+            on_swap <= off_swap + 1e-9,
+            "row reuse added swap evals: {off_swap} -> {on_swap}"
+        );
+        assert_eq!(r[0][4], r[1][4], "row reuse changed the loss ratio");
+        assert_eq!(r[0][5], r[1][5], "row reuse changed the medoid agreement");
     }
 }

@@ -6,9 +6,12 @@ use banditpam::bandits::adaptive::{SamplingMode, SigmaMode};
 use banditpam::bandits::confidence::CiKind;
 use banditpam::coordinator::banditpam::BanditPam;
 use banditpam::coordinator::config::{BanditPamConfig, DeltaMode};
+use banditpam::coordinator::session::SwapSession;
+use banditpam::coordinator::state::MedoidState;
+use banditpam::coordinator::swap::swap_step_session;
 use banditpam::data::synthetic;
 use banditpam::distance::Metric;
-use banditpam::runtime::backend::NativeBackend;
+use banditpam::runtime::backend::{DistanceBackend, NativeBackend};
 use banditpam::util::rng::Rng;
 
 #[test]
@@ -128,6 +131,60 @@ fn cache_reduces_counted_evals_with_fixed_permutation() {
         "cache: {} vs plain: {}",
         cached.stats.distance_evals,
         plain.stats.distance_evals
+    );
+}
+
+#[test]
+fn swap_reuse_halves_swap_phase_evals_at_mnist_scale() {
+    // ISSUE 2 acceptance: mnist_like n=4800 k=5 — SWAP-phase distance
+    // evaluations with reuse enabled are <= 0.5x the non-reuse path while
+    // the final medoids and loss are identical. An adversarial init (point
+    // 0 plus its 4 nearest neighbours: one tight clump) forces several
+    // improving swaps, which is exactly the regime the cross-iteration
+    // cache targets — with I SWAP iterations only the first pays full
+    // price, so the expected reduction is ~I-fold.
+    const N: usize = 4800;
+    const K: usize = 5;
+    let ds = synthetic::mnist_like(&mut Rng::seed_from(30), N);
+    let run = |reuse: bool| {
+        let backend = NativeBackend::new(&ds.points, Metric::L2).with_threads(8);
+        let cfg = BanditPamConfig {
+            swap_reuse: reuse,
+            max_swap_iters: 10,
+            ..Default::default()
+        };
+        let mut rng = Rng::seed_from(31);
+        let mut state = MedoidState::empty(N);
+        let refs: Vec<usize> = (0..N).collect();
+        let mut row = vec![0.0f64; N];
+        backend.block(&[0], &refs, &mut row);
+        let mut by_dist: Vec<usize> = (0..N).collect();
+        by_dist.sort_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap());
+        for &m in by_dist.iter().take(K) {
+            state.add_medoid(&backend, m);
+        }
+        let mut session = SwapSession::new(N, K, &cfg, &mut rng);
+        let swap_start = backend.counter().get();
+        let mut swaps = 0usize;
+        for _ in 0..cfg.max_swap_iters {
+            let step = swap_step_session(&backend, &mut state, &mut session, &cfg, &mut rng);
+            if step.applied.is_none() {
+                break;
+            }
+            swaps += 1;
+        }
+        let swap_evals = backend.counter().get() - swap_start;
+        (state.medoids.clone(), state.loss(), swap_evals, swaps)
+    };
+    let (med_on, loss_on, evals_on, swaps_on) = run(true);
+    let (med_off, loss_off, evals_off, swaps_off) = run(false);
+    assert_eq!(med_on, med_off, "reuse must not change the medoids");
+    assert_eq!(loss_on.to_bits(), loss_off.to_bits(), "loss must be identical");
+    assert_eq!(swaps_on, swaps_off, "identical swap sequences");
+    assert!(swaps_on >= 2, "clumped init must force several swaps");
+    assert!(
+        2 * evals_on <= evals_off,
+        "SWAP-phase evals with reuse must drop >= 2x: {evals_on} vs {evals_off}"
     );
 }
 

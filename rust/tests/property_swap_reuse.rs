@@ -1,0 +1,216 @@
+//! Parity suite for the SWAP reuse subsystem (ISSUE 2): the session-backed
+//! virtual arms must be *bitwise* interchangeable with the per-arm
+//! `SwapArms` path — same g-values from `pull_many`, same exact means, and
+//! a seeded end-to-end fit must return identical medoids with reuse on vs
+//! off — across all four metrics, k, thread counts, and the pairwise cache.
+
+use banditpam::algorithms::KMedoids;
+use banditpam::bandits::adaptive::ArmSet;
+use banditpam::coordinator::arms::{SwapArms, VirtualSwapArms};
+use banditpam::coordinator::banditpam::BanditPam;
+use banditpam::coordinator::config::BanditPamConfig;
+use banditpam::coordinator::session::SwapSession;
+use banditpam::coordinator::state::MedoidState;
+use banditpam::data::{synthetic, Dataset};
+use banditpam::distance::Metric;
+use banditpam::runtime::backend::{DistanceBackend, NativeBackend};
+use banditpam::util::rng::Rng;
+
+/// All four metrics the repository supports.
+const METRICS: &[Metric] = &[Metric::L2, Metric::L1, Metric::Cosine, Metric::TreeEdit];
+const KS: &[usize] = &[1, 3, 10];
+const THREADS: &[usize] = &[1, 8];
+
+fn dataset_for(metric: Metric) -> Dataset {
+    let mut rng = Rng::seed_from(0xDA7A);
+    match metric {
+        Metric::TreeEdit => synthetic::hoc4_like(&mut rng, 40),
+        _ => synthetic::gmm(&mut rng, 40, 16, 4, 3.0),
+    }
+}
+
+fn backend_for(ds: &Dataset, metric: Metric, threads: usize, cached: bool) -> NativeBackend<'_> {
+    let mut b = NativeBackend::new(&ds.points, metric)
+        .with_threads(threads)
+        .with_pool_min_work(0); // force pooled execution even on tiny blocks
+    if cached {
+        b = b.with_cache(1 << 16);
+    }
+    b
+}
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn virtual_arm_pulls_and_exact_match_swap_arms_bitwise() {
+    for &metric in METRICS {
+        let ds = dataset_for(metric);
+        let n = ds.len();
+        for &k in KS {
+            for &threads in THREADS {
+                for cached in [false, true] {
+                    // Two identically-configured backends so evaluation
+                    // counters and caches stay independent per path.
+                    let b_virt = backend_for(&ds, metric, threads, cached);
+                    let b_legacy = backend_for(&ds, metric, threads, cached);
+                    let mut state = MedoidState::empty(n);
+                    for m in 0..k {
+                        state.add_medoid(&b_legacy, (m * 3) % n);
+                    }
+                    let cfg = BanditPamConfig::default();
+                    let mut session =
+                        SwapSession::new(n, k, &cfg, &mut Rng::seed_from(99));
+                    // Reference batches: a shared-permutation prefix (the
+                    // real Algorithm-1 access pattern) and an arbitrary
+                    // subset (API generality).
+                    let refs_prefix: Vec<usize> = session.shared_perm()[..17].to_vec();
+                    let refs_arbitrary: Vec<usize> =
+                        Rng::seed_from(5).sample_indices(n, 11);
+
+                    let mut virt = VirtualSwapArms::new(&b_virt, &state, &mut session);
+                    let mut legacy = SwapArms::new(&b_legacy, &state, true);
+                    assert_eq!(virt.n_arms(), legacy.n_arms());
+                    assert_eq!(virt.n_arms(), (n - k) * k);
+                    let all_arms: Vec<usize> = (0..virt.n_arms()).collect();
+
+                    for refs in [&refs_prefix, &refs_arbitrary] {
+                        let mut out_v = vec![0.0; all_arms.len() * refs.len()];
+                        let mut out_l = out_v.clone();
+                        virt.pull_many(&all_arms, refs, &mut out_v);
+                        legacy.pull_many(&all_arms, refs, &mut out_l);
+                        assert_eq!(
+                            bits(&out_v),
+                            bits(&out_l),
+                            "{metric} k={k} threads={threads} cached={cached}: \
+                             pull_many diverged"
+                        );
+                    }
+
+                    // Exact means, including consecutive same-candidate arms
+                    // (the Algorithm-1 fallback pattern) and a far arm.
+                    let probes = [0usize, 1.min(virt.n_arms() - 1), virt.n_arms() - 1];
+                    for &arm in &probes {
+                        let ev = virt.exact(arm);
+                        let el = legacy.exact(arm);
+                        assert_eq!(
+                            ev.to_bits(),
+                            el.to_bits(),
+                            "{metric} k={k} threads={threads} cached={cached}: \
+                             exact({arm}) {ev} vs {el}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn repeated_virtual_pull_costs_zero_extra_evals() {
+    // The reuse claim itself, at the unit level: the second identical pull
+    // round is served entirely from the session row cache.
+    let ds = dataset_for(Metric::L2);
+    let n = ds.len();
+    let b = backend_for(&ds, Metric::L2, 1, false);
+    let mut state = MedoidState::empty(n);
+    for m in 0..3 {
+        state.add_medoid(&b, m);
+    }
+    let cfg = BanditPamConfig::default();
+    let mut session = SwapSession::new(n, 3, &cfg, &mut Rng::seed_from(1));
+    let refs: Vec<usize> = session.shared_perm()[..20].to_vec();
+    let mut virt = VirtualSwapArms::new(&b, &state, &mut session);
+    let all_arms: Vec<usize> = (0..virt.n_arms()).collect();
+    let mut out = vec![0.0; all_arms.len() * refs.len()];
+
+    let before = b.counter().get();
+    virt.pull_many(&all_arms, &refs, &mut out);
+    let first_cost = b.counter().get() - before;
+    assert_eq!(first_cost, ((n - 3) * 20) as u64, "one row per candidate");
+
+    let out_first = out.clone();
+    let before = b.counter().get();
+    virt.pull_many(&all_arms, &refs, &mut out);
+    assert_eq!(b.counter().get() - before, 0, "second pull must be free");
+    assert_eq!(bits(&out), bits(&out_first));
+}
+
+#[test]
+fn seeded_fit_identical_with_reuse_on_and_off() {
+    // End-to-end parity: same seed, reuse on vs off -> identical medoids,
+    // bitwise-identical loss, identical search trajectory (trace modulo
+    // evaluation counts), and no extra evaluations with reuse.
+    for (seed, metric, n, k) in [
+        (1u64, Metric::L2, 400usize, 4usize),
+        (2, Metric::Cosine, 300, 3),
+        (3, Metric::L1, 250, 5),
+    ] {
+        let ds = synthetic::mnist_like(&mut Rng::seed_from(100 + seed), n);
+        let run = |reuse: bool| {
+            let backend = NativeBackend::new(&ds.points, metric);
+            let mut algo = BanditPam::new(BanditPamConfig {
+                swap_reuse: reuse,
+                ..Default::default()
+            });
+            let fit = algo.fit(&backend, k, &mut Rng::seed_from(seed)).unwrap();
+            (fit, algo.trace)
+        };
+        let (fit_on, trace_on) = run(true);
+        let (fit_off, trace_off) = run(false);
+        assert_eq!(fit_on.medoids, fit_off.medoids, "{metric} seed {seed}");
+        assert_eq!(fit_on.loss.to_bits(), fit_off.loss.to_bits());
+        assert_eq!(fit_on.stats.swaps_applied, fit_off.stats.swaps_applied);
+        assert_eq!(fit_on.stats.swap_iters, fit_off.stats.swap_iters);
+        assert_eq!(trace_on.len(), trace_off.len());
+        for (a, b) in trace_on.iter().zip(&trace_off) {
+            assert_eq!(
+                (a.phase, a.arms, a.rounds, a.exact_fallbacks),
+                (b.phase, b.arms, b.rounds, b.exact_fallbacks),
+                "{metric} seed {seed}: trajectory diverged"
+            );
+        }
+        assert!(
+            fit_on.stats.swap_evals <= fit_off.stats.swap_evals,
+            "{metric} seed {seed}: reuse cost extra evals ({} vs {})",
+            fit_on.stats.swap_evals,
+            fit_off.stats.swap_evals
+        );
+        assert_eq!(
+            fit_off.stats.swap_evals_saved, 0,
+            "reuse-off must not report savings"
+        );
+    }
+}
+
+#[test]
+fn warm_start_preserves_quality() {
+    // Estimator carry-over changes the trajectory (that is the point), so
+    // the guarantee is statistical, not bitwise: same-quality clustering,
+    // no eval blow-up.
+    let ds = synthetic::mnist_like(&mut Rng::seed_from(55), 500);
+    let run = |warm: bool| {
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let mut algo = BanditPam::new(BanditPamConfig {
+            swap_reuse: true,
+            swap_warm_start: warm,
+            ..Default::default()
+        });
+        algo.fit(&backend, 4, &mut Rng::seed_from(8)).unwrap()
+    };
+    let cold = run(false);
+    let warm = run(true);
+    assert!(
+        warm.loss <= cold.loss * 1.02,
+        "warm start degraded the clustering: {} vs {}",
+        warm.loss,
+        cold.loss
+    );
+    assert!(
+        warm.stats.swap_evals <= cold.stats.swap_evals + cold.stats.swap_evals / 4,
+        "warm start blew up the eval count: {} vs {}",
+        warm.stats.swap_evals,
+        cold.stats.swap_evals
+    );
+}
