@@ -1,6 +1,11 @@
 //! Bench target for paper experiment `appfig5` (see DESIGN.md experiment
 //! index). Scale via BANDITPAM_BENCH_SCALE=smoke|quick|paper (default
-//! quick). Prints the same rows the paper's figure plots.
+//! quick). Prints the same rows the paper's figure plots, then runs the
+//! raw (un-projected) scRNA workload through the sparse CSR path — the
+//! regime the PCA pathology contrasts against, and the one where the
+//! O(nnz) kernels apply (the 10-PC projection is inherently dense).
+
+use banditpam::prelude::*;
 
 fn main() {
     let scale = banditpam::bench::Scale::from_env();
@@ -8,5 +13,31 @@ fn main() {
     for table in banditpam::experiments::run("appfig5", scale, 42).expect("experiment failed") {
         table.print();
     }
-    println!("\n[appfig5_scrna_pca] total {:.1}s at {scale:?} scale", t0.elapsed().as_secs_f64());
+
+    // --- sparse end-to-end: raw scRNA under l1, CSR storage ---------------
+    let (n, genes) = match scale {
+        banditpam::bench::Scale::Smoke => (300, 256),
+        banditpam::bench::Scale::Quick => (1000, 512),
+        banditpam::bench::Scale::Paper => (4000, 1024),
+    };
+    let ds = banditpam::data::synthetic::scrna_sparse(&mut Rng::seed_from(42), n, genes, 0.10);
+    let Points::Sparse(csr) = &ds.points else { unreachable!() };
+    let threads = banditpam::experiments::harness::default_threads();
+    let backend = NativeBackend::new(&ds.points, Metric::L1).with_threads(threads);
+    let t1 = std::time::Instant::now();
+    let fit = BanditPam::new(BanditPamConfig::default())
+        .fit(&backend, 5, &mut Rng::seed_from(7))
+        .expect("sparse scrna fit");
+    println!(
+        "\n[sparse scrna l1] n={n} d={genes} density={:.3} loss={:.1} evals={} {:.2}s",
+        csr.density(),
+        fit.loss,
+        fit.stats.distance_evals,
+        t1.elapsed().as_secs_f64()
+    );
+
+    println!(
+        "\n[appfig5_scrna_pca] total {:.1}s at {scale:?} scale",
+        t0.elapsed().as_secs_f64()
+    );
 }

@@ -1,0 +1,105 @@
+//! Sparse (CSR) subsystem micro-bench: one-to-many row-kernel throughput
+//! sparse vs densified at scRNA-like density, plus an end-to-end fit
+//! parity check. Emits `BENCH_sparse.json` for CI.
+//!
+//! Acceptance target (ISSUE 3): >= 3x block throughput vs the same data
+//! densified, at density <= 0.1. The kernels stream O(nnz) per pair
+//! instead of O(d), so the expected headroom at density ~0.08 is ~d/nnz
+//! ~ 10x minus scatter/format overhead.
+
+use banditpam::bench::bench_fn;
+use banditpam::data::synthetic;
+use banditpam::prelude::*;
+use banditpam::util::timer::Timer;
+
+fn main() {
+    let scale = banditpam::bench::Scale::from_env();
+    let iters = scale.pick(3, 10, 20);
+    println!("== sparse benches ({scale:?}, {iters} iters) ==");
+
+    // --- block throughput: sparse vs densified ----------------------------
+    let n = scale.pick(1_200, 4_000, 8_000);
+    let genes = 1024;
+    let sp = synthetic::scrna_sparse(&mut Rng::seed_from(42), n, genes, 0.10);
+    let dn = sp.to_dense().expect("densify");
+    let Points::Sparse(csr) = &sp.points else { unreachable!() };
+    let density = csr.density();
+    println!(
+        "dataset: {} nnz={} density={:.4} (d={genes})",
+        sp.name,
+        csr.nnz(),
+        density
+    );
+
+    let targets: Vec<usize> = (0..64).collect();
+    let refs: Vec<usize> = (64..n.min(64 + 2048)).collect();
+    let rn = refs.len();
+    let mut out = vec![0.0f64; targets.len() * rn];
+    let mut json_rows: Vec<String> = Vec::new();
+    for metric in [Metric::L1, Metric::L2, Metric::Cosine] {
+        for threads in [1usize, 4] {
+            let dense_backend = NativeBackend::new(&dn.points, metric).with_threads(threads);
+            let base = bench_fn(
+                &format!("block 64x{rn} {metric} dense threads={threads}"),
+                1,
+                iters,
+                || dense_backend.block(&targets, &refs, &mut out),
+            );
+            println!("{}", base.line());
+            let sparse_backend = NativeBackend::new(&sp.points, metric).with_threads(threads);
+            let r = bench_fn(
+                &format!("block 64x{rn} {metric} sparse threads={threads}"),
+                1,
+                iters,
+                || sparse_backend.block(&targets, &refs, &mut out),
+            );
+            println!("{}", r.line());
+            let speedup = base.mean_secs / r.mean_secs.max(1e-12);
+            println!("    -> {speedup:.2}x vs densified input");
+            json_rows.push(format!(
+                "{{\"kind\": \"block\", \"metric\": \"{metric}\", \"threads\": {threads}, \
+                 \"n\": {n}, \"d\": {genes}, \"density\": {density:.6}, \
+                 \"dense_secs\": {:.9}, \"sparse_secs\": {:.9}, \"speedup\": {speedup:.3}}}",
+                base.mean_secs, r.mean_secs
+            ));
+        }
+    }
+
+    // --- end-to-end fit parity (sparse vs densified, same seed) -----------
+    let nf = scale.pick(300, 1000, 2000);
+    let k = 5;
+    let genes_fit = scale.pick(256, 512, 1024);
+    let sp_fit = synthetic::scrna_sparse(&mut Rng::seed_from(7), nf, genes_fit, 0.10);
+    let dn_fit = sp_fit.to_dense().expect("densify");
+    let mut results = Vec::new();
+    for (name, points) in [("sparse", &sp_fit.points), ("dense", &dn_fit.points)] {
+        let backend = NativeBackend::new(points, Metric::L1).with_threads(4);
+        let t = Timer::start();
+        let fit = BanditPam::new(BanditPamConfig::default())
+            .fit(&backend, k, &mut Rng::seed_from(9))
+            .expect("fit");
+        let secs = t.secs();
+        println!(
+            "fit {name:>6}: n={nf} k={k} loss={:.3} evals={} {:.3}s",
+            fit.loss, fit.stats.distance_evals, secs
+        );
+        json_rows.push(format!(
+            "{{\"kind\": \"fit\", \"storage\": \"{name}\", \"n\": {nf}, \"k\": {k}, \
+             \"loss\": {}, \"evals\": {}, \"wall_secs\": {secs:.6}}}",
+            fit.loss, fit.stats.distance_evals
+        ));
+        results.push(fit);
+    }
+    let parity = results[0].medoids == results[1].medoids;
+    println!(
+        "medoid parity sparse vs densified: {}",
+        if parity { "identical" } else { "MISMATCH" }
+    );
+    assert!(parity, "sparse and densified fits must return identical medoids");
+
+    let doc = format!("[\n  {}\n]\n", json_rows.join(",\n  "));
+    match std::fs::write("BENCH_sparse.json", &doc) {
+        Ok(()) => println!("wrote BENCH_sparse.json"),
+        Err(e) => println!("BENCH_sparse.json: write failed ({e})"),
+    }
+}

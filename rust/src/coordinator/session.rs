@@ -55,6 +55,10 @@ pub struct SwapSession {
     /// Per-point cached distance-row prefix in *permutation order*:
     /// `rows[p][t] = d(p, perm[t])`. Grows monotonically; empty until the
     /// point is first pulled. Medoid-independent, hence iteration-stable.
+    /// A prefix's length is the number of *references consumed*, never the
+    /// feature dimension, so the cache is storage-agnostic — dense, sparse
+    /// (CSR) and tree points all go through it unchanged
+    /// (`tests/property_sparse.rs` pins the sparse case).
     rows: Vec<Vec<f64>>,
     /// Carried per-arm estimators, keyed `point * k + slot`, stamped with
     /// the iteration that stored them.

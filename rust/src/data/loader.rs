@@ -1,10 +1,14 @@
-//! File loaders: CSV feature matrices and MNIST IDX images.
+//! File loaders: CSV feature matrices, MNIST IDX images and Matrix Market
+//! (`.mtx`) sparse triplets.
 //!
 //! The bench suite runs on the synthetic generators, but real data drops in
-//! via these loaders: `banditpam cluster --data points.csv` or an IDX file
-//! (`train-images-idx3-ubyte`) if the user supplies the original MNIST.
+//! via these loaders: `banditpam cluster --data points.csv`, an IDX file
+//! (`train-images-idx3-ubyte`) if the user supplies the original MNIST, or
+//! a 10x Genomics-style `matrix.mtx` (`--format mtx`, typically with
+//! `--transpose` since 10x ships genes x cells) for the scRNA workload.
 
-use crate::data::Dataset;
+use crate::data::sparse::CsrMatrix;
+use crate::data::{Dataset, Points};
 use crate::util::matrix::Matrix;
 use anyhow::{bail, Context, Result};
 use std::io::Read;
@@ -59,6 +63,113 @@ pub fn save_csv(ds: &Dataset, path: &Path) -> Result<()> {
     for i in 0..m.rows() {
         let row: Vec<String> = m.row(i).iter().map(|v| format!("{v}")).collect();
         writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Load a Matrix Market coordinate (triplet) file as a sparse dataset.
+///
+/// Supports the 10x Genomics flavor: `%%MatrixMarket matrix coordinate
+/// {real|integer|pattern} general`, `%`-comment lines, a `rows cols nnz`
+/// size line, then 1-based `row col [value]` entries (`pattern` files get
+/// value 1). Duplicate coordinates are summed and explicit zeros dropped
+/// ([`CsrMatrix::from_triplets`] semantics). `transpose` swaps the axes on
+/// ingest — 10x matrices are genes x cells, and points must be rows.
+pub fn load_mtx(path: &Path, transpose: bool) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut lines = text.lines().enumerate();
+    let (_, header) = lines.next().context("empty .mtx file")?;
+    let header = header.to_ascii_lowercase();
+    if !header.starts_with("%%matrixmarket") {
+        bail!("{}: missing %%MatrixMarket header", path.display());
+    }
+    if !header.contains("coordinate") {
+        bail!("{}: only coordinate (triplet) .mtx is supported", path.display());
+    }
+    if header.contains("symmetric") || header.contains("skew") || header.contains("hermitian") {
+        bail!("{}: only `general` symmetry is supported", path.display());
+    }
+    if header.contains("complex") {
+        bail!("{}: complex values are not supported", path.display());
+    }
+    let pattern = header.contains("pattern");
+
+    let mut size: Option<(usize, usize, usize)> = None;
+    let mut triplets: Vec<(usize, usize, f32)> = Vec::new();
+    for (lineno, line) in lines {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('%') {
+            continue;
+        }
+        let mut fields = line.split_whitespace();
+        let at = |f: Option<&str>| {
+            f.with_context(|| format!("line {} of {}: missing field", lineno + 1, path.display()))
+        };
+        if size.is_none() {
+            let r: usize = at(fields.next())?.parse().context("size line rows")?;
+            let c: usize = at(fields.next())?.parse().context("size line cols")?;
+            let nnz: usize = at(fields.next())?.parse().context("size line nnz")?;
+            size = Some((r, c, nnz));
+            triplets.reserve(nnz);
+            continue;
+        }
+        let Some((rows, cols, _)) = size else { unreachable!() };
+        let i: usize = at(fields.next())?.parse().context("entry row")?;
+        let j: usize = at(fields.next())?.parse().context("entry col")?;
+        let v: f32 = if pattern {
+            1.0
+        } else {
+            at(fields.next())?.parse().context("entry value")?
+        };
+        if i == 0 || j == 0 || i > rows || j > cols {
+            bail!(
+                "line {} of {}: entry ({i}, {j}) outside 1..={rows} x 1..={cols}",
+                lineno + 1,
+                path.display()
+            );
+        }
+        // to 0-based, transposing on ingest if requested
+        if transpose {
+            triplets.push((j - 1, i - 1, v));
+        } else {
+            triplets.push((i - 1, j - 1, v));
+        }
+    }
+    let (rows, cols, nnz) = size.with_context(|| format!("{}: missing size line", path.display()))?;
+    if triplets.len() != nnz {
+        bail!(
+            "{}: size line promises {nnz} entries, found {}",
+            path.display(),
+            triplets.len()
+        );
+    }
+    let (rows, cols) = if transpose { (cols, rows) } else { (rows, cols) };
+    let csr = CsrMatrix::from_triplets(rows, cols, &triplets);
+    Ok(Dataset::sparse(csr, format!("{}[{}x{}]", path.display(), rows, cols)))
+}
+
+/// Save a dataset as a Matrix Market coordinate file (points = rows).
+/// Dense datasets are compressed on the way out; trees are rejected.
+pub fn save_mtx(ds: &Dataset, path: &Path) -> Result<()> {
+    use std::io::Write;
+    let owned;
+    let m = match &ds.points {
+        Points::Sparse(m) => m,
+        Points::Dense(d) => {
+            owned = CsrMatrix::from_dense(d);
+            &owned
+        }
+        _ => bail!("save_mtx supports vector datasets only (got {})", ds.points.kind()),
+    };
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    writeln!(f, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(f, "% written by banditpam (points = rows)")?;
+    writeln!(f, "{} {} {}", m.rows(), m.cols(), m.nnz())?;
+    for (i, j, v) in m.triplets() {
+        writeln!(f, "{} {} {v}", i + 1, j + 1)?;
     }
     Ok(())
 }
@@ -160,5 +271,92 @@ mod tests {
         let p = tmpfile("bad.idx", &[0u8; 16]);
         assert!(load_idx_images(&p, 0).is_err());
         let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn mtx_loads_coordinate_real() {
+        let p = tmpfile(
+            "a.mtx",
+            b"%%MatrixMarket matrix coordinate real general\n\
+              % a comment\n\
+              3 4 3\n\
+              1 1 1.5\n\
+              3 4 -2\n\
+              2 2 0.25\n",
+        );
+        let d = load_mtx(&p, false).unwrap();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.points.dim(), Some(4));
+        let Points::Sparse(m) = &d.points else { unreachable!() };
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.row(0), (&[0u32][..], &[1.5f32][..]));
+        assert_eq!(m.row(1), (&[1u32][..], &[0.25f32][..]));
+        assert_eq!(m.row(2), (&[3u32][..], &[-2.0f32][..]));
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn mtx_transpose_swaps_axes() {
+        // 10x layout: genes x cells; transpose makes cells the points
+        let p = tmpfile(
+            "t.mtx",
+            b"%%MatrixMarket matrix coordinate integer general\n2 3 2\n1 3 7\n2 1 5\n",
+        );
+        let d = load_mtx(&p, true).unwrap();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.points.dim(), Some(2));
+        let Points::Sparse(m) = &d.points else { unreachable!() };
+        assert_eq!(m.row(0), (&[1u32][..], &[5.0f32][..]));
+        assert_eq!(m.row_nnz(1), 0);
+        assert_eq!(m.row(2), (&[0u32][..], &[7.0f32][..]));
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn mtx_pattern_entries_get_unit_values() {
+        let p = tmpfile(
+            "p.mtx",
+            b"%%MatrixMarket matrix coordinate pattern general\n2 2 2\n1 2\n2 1\n",
+        );
+        let d = load_mtx(&p, false).unwrap();
+        let Points::Sparse(m) = &d.points else { unreachable!() };
+        assert_eq!(m.row(0), (&[1u32][..], &[1.0f32][..]));
+        assert_eq!(m.row(1), (&[0u32][..], &[1.0f32][..]));
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn mtx_roundtrip_sparse_and_dense() {
+        let mut rng = crate::util::rng::Rng::seed_from(17);
+        let ds = crate::data::synthetic::scrna_sparse(&mut rng, 12, 40, 0.10);
+        let p = tmpfile("rt.mtx", b"");
+        save_mtx(&ds, &p).unwrap();
+        let back = load_mtx(&p, false).unwrap();
+        let (Points::Sparse(a), Points::Sparse(b)) = (&ds.points, &back.points) else {
+            unreachable!()
+        };
+        assert_eq!(a, b);
+        // dense datasets are compressed on save
+        let dn = ds.to_dense().unwrap();
+        save_mtx(&dn, &p).unwrap();
+        let back2 = load_mtx(&p, false).unwrap();
+        let Points::Sparse(c) = &back2.points else { unreachable!() };
+        assert_eq!(a, c);
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn mtx_rejects_bad_headers_and_counts() {
+        for (name, contents) in [
+            ("h1.mtx", &b"not a header\n1 1 0\n"[..]),
+            ("h2.mtx", b"%%MatrixMarket matrix array real general\n1 1\n1\n"),
+            ("h3.mtx", b"%%MatrixMarket matrix coordinate real symmetric\n1 1 0\n"),
+            ("h4.mtx", b"%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1\n"),
+            ("h5.mtx", b"%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1\n"),
+        ] {
+            let p = tmpfile(name, contents);
+            assert!(load_mtx(&p, false).is_err(), "{name} should be rejected");
+            let _ = std::fs::remove_file(p);
+        }
     }
 }

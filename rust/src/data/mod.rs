@@ -11,16 +11,22 @@
 pub mod ast;
 pub mod loader;
 pub mod pca;
+pub mod sparse;
 pub mod synthetic;
 
 use crate::util::matrix::Matrix;
 use ast::Tree;
+use sparse::CsrMatrix;
 
-/// Point storage: dense feature vectors or ASTs.
+/// Point storage: dense feature vectors, sparse (CSR) feature vectors,
+/// or ASTs.
 #[derive(Debug, Clone)]
 pub enum Points {
     /// `n x d` dense matrix (one point per row).
     Dense(Matrix),
+    /// `n x d` compressed sparse row matrix (one point per row); the
+    /// scRNA-seq regime, where >90% of entries are zeros.
+    Sparse(CsrMatrix),
     /// Ordered labelled trees (HOC4-like).
     Trees(Vec<Tree>),
 }
@@ -30,6 +36,7 @@ impl Points {
     pub fn len(&self) -> usize {
         match self {
             Points::Dense(m) => m.rows(),
+            Points::Sparse(m) => m.rows(),
             Points::Trees(t) => t.len(),
         }
     }
@@ -39,10 +46,20 @@ impl Points {
         self.len() == 0
     }
 
-    /// Feature dimensionality (dense only).
+    /// Feature dimensionality.
+    ///
+    /// Contract: `Some(d)` for vector storage (`Dense`, `Sparse`) and
+    /// `None` for storage without a fixed feature space (`Trees`). The
+    /// shape is a property of the *storage*, not of the points in it, so
+    /// an **empty** dense/sparse dataset still reports its column count
+    /// (`Matrix::zeros(0, d).cols() == d`) and an empty tree corpus still
+    /// reports `None`. Callers must not use `dim()` as an emptiness or
+    /// storage-kind probe — that is what [`Points::is_empty`] and
+    /// [`Points::kind`] are for.
     pub fn dim(&self) -> Option<usize> {
         match self {
             Points::Dense(m) => Some(m.cols()),
+            Points::Sparse(m) => Some(m.cols()),
             Points::Trees(_) => None,
         }
     }
@@ -51,7 +68,29 @@ impl Points {
     pub fn kind(&self) -> &'static str {
         match self {
             Points::Dense(_) => "dense",
+            Points::Sparse(_) => "sparse",
             Points::Trees(_) => "trees",
+        }
+    }
+
+    /// Convert dense storage to CSR (`None` for trees; sparse is returned
+    /// as a clone). Exact zeros are dropped; `to_dense` restores them, so
+    /// the round trip is lossless.
+    pub fn to_sparse(&self) -> Option<Points> {
+        match self {
+            Points::Dense(m) => Some(Points::Sparse(CsrMatrix::from_dense(m))),
+            Points::Sparse(m) => Some(Points::Sparse(m.clone())),
+            Points::Trees(_) => None,
+        }
+    }
+
+    /// Convert sparse storage to dense (`None` for trees; dense is
+    /// returned as a clone).
+    pub fn to_dense(&self) -> Option<Points> {
+        match self {
+            Points::Dense(m) => Some(Points::Dense(m.clone())),
+            Points::Sparse(m) => Some(Points::Dense(m.to_dense())),
+            Points::Trees(_) => None,
         }
     }
 }
@@ -71,6 +110,31 @@ impl Dataset {
     /// Wrap a dense matrix with no labels.
     pub fn dense(m: Matrix, name: impl Into<String>) -> Dataset {
         Dataset { points: Points::Dense(m), labels: None, name: name.into() }
+    }
+
+    /// Wrap a CSR matrix with no labels.
+    pub fn sparse(m: CsrMatrix, name: impl Into<String>) -> Dataset {
+        Dataset { points: Points::Sparse(m), labels: None, name: name.into() }
+    }
+
+    /// This dataset with its points converted to CSR storage (`None` for
+    /// trees). Labels and name are preserved.
+    pub fn to_sparse(&self) -> Option<Dataset> {
+        Some(Dataset {
+            points: self.points.to_sparse()?,
+            labels: self.labels.clone(),
+            name: self.name.clone(),
+        })
+    }
+
+    /// This dataset with its points converted to dense storage (`None`
+    /// for trees). Labels and name are preserved.
+    pub fn to_dense(&self) -> Option<Dataset> {
+        Some(Dataset {
+            points: self.points.to_dense()?,
+            labels: self.labels.clone(),
+            name: self.name.clone(),
+        })
     }
 
     /// Wrap existing points with no labels (name "anonymous").
@@ -100,6 +164,7 @@ impl Dataset {
     pub fn select(&self, idx: &[usize]) -> Dataset {
         let points = match &self.points {
             Points::Dense(m) => Points::Dense(m.select_rows(idx)),
+            Points::Sparse(m) => Points::Sparse(m.select_rows(idx)),
             Points::Trees(t) => {
                 Points::Trees(idx.iter().map(|&i| t[i].clone()).collect())
             }
@@ -146,5 +211,61 @@ mod tests {
     fn oversample_panics() {
         let d = Dataset::dense(Matrix::zeros(3, 1), "t");
         d.subsample(4, &mut Rng::seed_from(0));
+    }
+
+    /// The `dim()` contract (see the method docs): `Some(cols)` for vector
+    /// storage even with zero points, `None` for trees always.
+    #[test]
+    fn dim_contract_across_variants_and_empty_datasets() {
+        // non-empty
+        assert_eq!(Points::Dense(Matrix::zeros(5, 3)).dim(), Some(3));
+        assert_eq!(Points::Sparse(CsrMatrix::zeros(5, 7)).dim(), Some(7));
+        assert_eq!(Points::Trees(vec![ast::Tree::leaf(0)]).dim(), None);
+        // empty datasets keep their feature space
+        let empty_dense = Points::Dense(Matrix::zeros(0, 3));
+        assert!(empty_dense.is_empty());
+        assert_eq!(empty_dense.dim(), Some(3));
+        let empty_sparse = Points::Sparse(CsrMatrix::zeros(0, 9));
+        assert!(empty_sparse.is_empty());
+        assert_eq!(empty_sparse.dim(), Some(9));
+        let empty_trees = Points::Trees(Vec::new());
+        assert!(empty_trees.is_empty());
+        assert_eq!(empty_trees.dim(), None);
+        // kind() is the storage probe, not dim()
+        assert_eq!(empty_sparse.kind(), "sparse");
+    }
+
+    #[test]
+    fn sparse_select_and_subsample_preserve_rows_and_labels() {
+        let dense = Matrix::from_fn(10, 4, |i, j| if j == 0 { i as f32 } else { 0.0 });
+        let mut d = Dataset::sparse(CsrMatrix::from_dense(&dense), "s");
+        d.labels = Some((0..10).collect());
+        let s = d.select(&[7, 2, 0]);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.labels, Some(vec![7, 2, 0]));
+        let Points::Sparse(m) = &s.points else { unreachable!() };
+        assert_eq!(m.row(0), (&[0u32][..], &[7.0f32][..]));
+        assert_eq!(m.row_nnz(2), 0); // row 0 of the source is all-zero
+        let sub = d.subsample(4, &mut Rng::seed_from(3));
+        assert_eq!(sub.len(), 4);
+        assert_eq!(sub.points.kind(), "sparse");
+    }
+
+    #[test]
+    fn dense_sparse_roundtrip_via_dataset() {
+        let mut rng = Rng::seed_from(11);
+        let base = synthetic::scrna_like(&mut rng, 12, 64);
+        let sp = base.to_sparse().unwrap();
+        assert_eq!(sp.points.kind(), "sparse");
+        assert_eq!(sp.labels, base.labels);
+        let back = sp.to_dense().unwrap();
+        let (Points::Dense(a), Points::Dense(b)) = (&base.points, &back.points) else {
+            unreachable!()
+        };
+        assert_eq!(a.as_slice(), b.as_slice());
+        // trees have no vector form
+        let trees = synthetic::hoc4_like(&mut rng, 3);
+        assert!(trees.to_sparse().is_none());
+        assert!(trees.to_dense().is_none());
     }
 }

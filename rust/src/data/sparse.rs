@@ -1,0 +1,318 @@
+//! Compressed sparse row (CSR) storage for high-dimensional sparse points.
+//!
+//! The paper's flagship large-scale workload — the 10x Genomics 68k PBMC
+//! scRNA-seq dataset under l1 — is >90% zeros, so dense `O(d)` kernels
+//! waste most of their cycles multiplying zeros. [`CsrMatrix`] stores only
+//! the nonzeros (one sorted `(column, value)` run per row) and the sparse
+//! kernels in [`crate::distance::sparse`] evaluate a pair in
+//! `O(nnz_a + nnz_b)` (merge) or `O(nnz_b)` (scatter/gather row path) —
+//! see `rust/PERF.md` §7.
+//!
+//! Invariants (enforced by [`CsrMatrix::from_parts`], preserved by every
+//! constructor):
+//!
+//! * `indptr` has `rows + 1` monotonically non-decreasing entries with
+//!   `indptr[0] == 0` and `indptr[rows] == indices.len() == values.len()`;
+//! * within each row, column indices are strictly increasing (sorted,
+//!   no duplicates) and `< cols`;
+//! * stored values are nonzero (constructors strip explicit zeros — the
+//!   kernels stay correct with them, but they waste space and cycles).
+
+use crate::util::matrix::Matrix;
+
+/// Row-major compressed sparse row matrix (`f32` values, `u32` columns).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    /// Row start offsets into `indices`/`values`; `rows + 1` entries.
+    indptr: Vec<usize>,
+    /// Column index of each stored value, strictly increasing per row.
+    indices: Vec<u32>,
+    /// Stored (nonzero) values.
+    values: Vec<f32>,
+    rows: usize,
+    cols: usize,
+}
+
+impl CsrMatrix {
+    /// Build from raw CSR arrays, validating every invariant listed in the
+    /// module docs. Panics on violation (programmer error, not input
+    /// error — file loaders go through [`CsrMatrix::from_triplets`]).
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    ) -> CsrMatrix {
+        assert!(cols <= u32::MAX as usize, "cols {cols} exceeds u32 column space");
+        assert_eq!(indptr.len(), rows + 1, "indptr must have rows+1 entries");
+        assert_eq!(indptr[0], 0, "indptr[0] must be 0");
+        assert_eq!(*indptr.last().unwrap(), indices.len(), "indptr end/nnz mismatch");
+        assert_eq!(indices.len(), values.len(), "indices/values length mismatch");
+        for r in 0..rows {
+            assert!(indptr[r] <= indptr[r + 1], "indptr must be non-decreasing");
+            let row = &indices[indptr[r]..indptr[r + 1]];
+            for w in row.windows(2) {
+                assert!(w[0] < w[1], "row {r}: columns must be strictly increasing");
+            }
+            if let Some(&last) = row.last() {
+                assert!((last as usize) < cols, "row {r}: column {last} >= cols {cols}");
+            }
+        }
+        // No explicit zeros: nnz()/density()/PartialEq all assume stored
+        // values are structural nonzeros (the kernels would stay correct,
+        // but two equal-data matrices would compare unequal).
+        assert!(
+            values.iter().all(|&v| v != 0.0),
+            "explicit zero value stored (strip zeros before from_parts)"
+        );
+        CsrMatrix { indptr, indices, values, rows, cols }
+    }
+
+    /// Empty matrix (no stored values).
+    pub fn zeros(rows: usize, cols: usize) -> CsrMatrix {
+        CsrMatrix::from_parts(rows, cols, vec![0; rows + 1], Vec::new(), Vec::new())
+    }
+
+    /// Build from `(row, col, value)` triplets in any order. Duplicate
+    /// coordinates are summed (Matrix Market semantics); entries that are
+    /// (or sum to) zero are dropped. Panics on out-of-bounds coordinates.
+    pub fn from_triplets(rows: usize, cols: usize, triplets: &[(usize, usize, f32)]) -> CsrMatrix {
+        let mut sorted: Vec<(usize, usize, f32)> = triplets.to_vec();
+        sorted.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices = Vec::with_capacity(sorted.len());
+        let mut values: Vec<f32> = Vec::with_capacity(sorted.len());
+        let mut prev: Option<(usize, usize)> = None;
+        // Close out a (possibly zero-sum) coordinate run.
+        let finish_run = |prev: Option<(usize, usize)>,
+                          indptr: &mut Vec<usize>,
+                          indices: &mut Vec<u32>,
+                          values: &mut Vec<f32>| {
+            if let Some((pr, _)) = prev {
+                if values.last() == Some(&0.0) {
+                    values.pop();
+                    indices.pop();
+                    indptr[pr + 1] -= 1;
+                }
+            }
+        };
+        for &(r, c, v) in &sorted {
+            assert!(r < rows && c < cols, "triplet ({r}, {c}) out of {rows}x{cols}");
+            if prev == Some((r, c)) {
+                *values.last_mut().unwrap() += v;
+                continue;
+            }
+            finish_run(prev, &mut indptr, &mut indices, &mut values);
+            indptr[r + 1] += 1;
+            indices.push(c as u32);
+            values.push(v);
+            prev = Some((r, c));
+        }
+        finish_run(prev, &mut indptr, &mut indices, &mut values);
+        for r in 0..rows {
+            indptr[r + 1] += indptr[r];
+        }
+        CsrMatrix::from_parts(rows, cols, indptr, indices, values)
+    }
+
+    /// Compress a dense matrix (exact zeros are dropped).
+    pub fn from_dense(m: &Matrix) -> CsrMatrix {
+        let mut indptr = Vec::with_capacity(m.rows() + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for i in 0..m.rows() {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(j as u32);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        CsrMatrix::from_parts(m.rows(), m.cols(), indptr, indices, values)
+    }
+
+    /// Expand to a dense matrix.
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (idx, val) = self.row(i);
+            let row = m.row_mut(i);
+            for (&j, &v) in idx.iter().zip(val) {
+                row[j as usize] = v;
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Total stored values.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Stored values of row `i`.
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.indptr[i + 1] - self.indptr[i]
+    }
+
+    /// Fraction of entries stored (0 for a degenerate 0-entry shape).
+    pub fn density(&self) -> f64 {
+        let total = self.rows * self.cols;
+        if total == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / total as f64
+        }
+    }
+
+    /// Row `i` as parallel `(column indices, values)` slices, columns
+    /// strictly increasing.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        debug_assert!(i < self.rows);
+        let (a, b) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
+    /// Select a subset of rows into a new matrix (same column space).
+    pub fn select_rows(&self, idx: &[usize]) -> CsrMatrix {
+        let nnz: usize = idx.iter().map(|&i| self.row_nnz(i)).sum();
+        let mut indptr = Vec::with_capacity(idx.len() + 1);
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        indptr.push(0);
+        for &i in idx {
+            let (ci, cv) = self.row(i);
+            indices.extend_from_slice(ci);
+            values.extend_from_slice(cv);
+            indptr.push(indices.len());
+        }
+        CsrMatrix::from_parts(idx.len(), self.cols, indptr, indices, values)
+    }
+
+    /// Iterate all stored entries as `(row, col, value)` in row-major order
+    /// (the Matrix Market writer's canonical order).
+    pub fn triplets(&self) -> impl Iterator<Item = (usize, usize, f32)> + '_ {
+        (0..self.rows).flat_map(move |i| {
+            let (idx, val) = self.row(i);
+            idx.iter().zip(val).map(move |(&j, &v)| (i, j as usize, v))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture() -> CsrMatrix {
+        // [[1, 0, 2], [0, 0, 0], [0, 3, 0], [4, 5, 6]]
+        CsrMatrix::from_triplets(
+            4,
+            3,
+            &[(0, 0, 1.0), (0, 2, 2.0), (2, 1, 3.0), (3, 0, 4.0), (3, 1, 5.0), (3, 2, 6.0)],
+        )
+    }
+
+    #[test]
+    fn triplet_construction_sorts_and_shapes() {
+        let m = CsrMatrix::from_triplets(2, 3, &[(1, 2, 5.0), (0, 1, 1.0), (1, 0, 2.0)]);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.row(0), (&[1u32][..], &[1.0f32][..]));
+        assert_eq!(m.row(1), (&[0u32, 2][..], &[2.0f32, 5.0][..]));
+    }
+
+    #[test]
+    fn duplicate_triplets_sum_and_zero_sums_drop() {
+        let m = CsrMatrix::from_triplets(
+            2,
+            2,
+            &[(0, 0, 1.5), (0, 0, 0.5), (1, 1, 2.0), (1, 1, -2.0), (1, 0, 3.0)],
+        );
+        assert_eq!(m.row(0), (&[0u32][..], &[2.0f32][..]));
+        assert_eq!(m.row(1), (&[0u32][..], &[3.0f32][..]));
+        assert_eq!(m.nnz(), 2);
+    }
+
+    #[test]
+    fn explicit_zero_triplets_are_dropped() {
+        let m = CsrMatrix::from_triplets(2, 2, &[(0, 0, 0.0), (1, 1, 1.0)]);
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.row_nnz(0), 0);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let d = Matrix::from_vec(vec![1.0, 0.0, 2.0, 0.0, 0.0, 0.0, 0.0, 3.0, 0.0], 3, 3);
+        let s = CsrMatrix::from_dense(&d);
+        assert_eq!(s.nnz(), 3);
+        assert_eq!(s.row_nnz(1), 0);
+        assert_eq!(s.to_dense(), d);
+        assert!((s.density() - 3.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn select_rows_preserves_content() {
+        let m = fixture();
+        let s = m.select_rows(&[3, 1, 0]);
+        assert_eq!(s.rows(), 3);
+        assert_eq!(s.cols(), 3);
+        assert_eq!(s.row(0), m.row(3));
+        assert_eq!(s.row_nnz(1), 0);
+        assert_eq!(s.row(2), m.row(0));
+    }
+
+    #[test]
+    fn triplets_iterate_row_major() {
+        let m = fixture();
+        let t: Vec<_> = m.triplets().collect();
+        assert_eq!(
+            t,
+            vec![(0, 0, 1.0), (0, 2, 2.0), (2, 1, 3.0), (3, 0, 4.0), (3, 1, 5.0), (3, 2, 6.0)]
+        );
+        let rebuilt = CsrMatrix::from_triplets(4, 3, &t);
+        assert_eq!(rebuilt, m);
+    }
+
+    #[test]
+    fn zeros_is_empty() {
+        let m = CsrMatrix::zeros(5, 7);
+        assert_eq!(m.rows(), 5);
+        assert_eq!(m.cols(), 7);
+        assert_eq!(m.nnz(), 0);
+        assert_eq!(m.density(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn unsorted_row_rejected() {
+        CsrMatrix::from_parts(1, 4, vec![0, 2], vec![2, 1], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "explicit zero")]
+    fn explicit_zero_value_rejected() {
+        CsrMatrix::from_parts(1, 4, vec![0, 2], vec![1, 2], vec![1.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of")]
+    fn out_of_bounds_triplet_rejected() {
+        CsrMatrix::from_triplets(2, 2, &[(0, 5, 1.0)]);
+    }
+}

@@ -5,6 +5,7 @@
 //! sub-Gaussian parameters `sigma_x` (paper Appendix Figures 1–4) — not the
 //! semantic content of the original data. See DESIGN.md §Substitutions.
 
+use crate::data::sparse::CsrMatrix;
 use crate::data::{ast, Dataset, Points};
 use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
@@ -169,6 +170,70 @@ pub fn scrna_like(rng: &mut Rng, n: usize, genes: usize) -> Dataset {
     }
 }
 
+/// CSR-native scRNA-seq-like generator: the same distribution as
+/// [`scrna_like`] — log-normal expression, marker genes, dropout — built
+/// directly in compressed sparse row form, without ever materializing the
+/// `n x genes` dense matrix (the point for 68k-cell / 10k-gene scale).
+///
+/// `express_p` is the per-gene expression probability of the prototype
+/// stage (pre-dropout); [`scrna_like`] hardcodes `0.10`, and at that value
+/// this generator consumes the **identical rng stream** and produces the
+/// exact same data (`to_dense()` equals the [`scrna_like`] matrix
+/// bit-for-bit) — the sparse-vs-densified parity tests depend on this.
+/// Observed density lands near `0.65 * express_p` plus markers/background.
+pub fn scrna_sparse(rng: &mut Rng, n: usize, genes: usize, express_p: f64) -> Dataset {
+    const K: usize = 11;
+    let mut protos = vec![vec![0.0f64; genes]; K];
+    for proto in protos.iter_mut() {
+        for v in proto.iter_mut() {
+            if rng.bool(express_p) {
+                *v = rng.lognormal(1.2, 0.6); // expressed gene
+            }
+        }
+        // strong markers
+        for _ in 0..(genes / 64).max(4) {
+            let g = rng.below(genes);
+            proto[g] = rng.lognormal(2.2, 0.4);
+        }
+    }
+    let mut indptr = Vec::with_capacity(n + 1);
+    let mut indices = Vec::new();
+    let mut values: Vec<f32> = Vec::new();
+    let mut labels = Vec::with_capacity(n);
+    indptr.push(0);
+    for _ in 0..n {
+        let c = rng.below(K);
+        labels.push(c);
+        for (g, &base) in protos[c].iter().enumerate() {
+            let v = if base == 0.0 {
+                // background noise: rare spurious counts
+                if !rng.bool(0.01) {
+                    continue;
+                }
+                rng.lognormal(0.0, 0.5) as f32
+            } else {
+                // dropout: observed zero despite expression
+                if rng.bool(0.35) {
+                    continue;
+                }
+                (base * rng.lognormal(0.0, 0.35)) as f32
+            };
+            // lognormal draws are strictly positive, but guard the f32
+            // cast underflow so the CSR no-stored-zeros invariant holds
+            if v != 0.0 {
+                indices.push(g as u32);
+                values.push(v);
+            }
+        }
+        indptr.push(indices.len());
+    }
+    Dataset {
+        points: Points::Sparse(CsrMatrix::from_parts(n, genes, indptr, indices, values)),
+        labels: Some(labels),
+        name: format!("scrna_sparse(n={n}, g={genes}, p={express_p})"),
+    }
+}
+
 /// HOC4-like AST corpus wrapped as a [`Dataset`].
 pub fn hoc4_like(rng: &mut Rng, n: usize) -> Dataset {
     let (trees, labels) = ast::generate(n, 2.5, rng);
@@ -275,6 +340,28 @@ mod tests {
             }
         }
         assert!(nonzero > 0);
+    }
+
+    #[test]
+    fn scrna_sparse_is_bitwise_the_csr_of_scrna_like() {
+        let dense = scrna_like(&mut Rng::seed_from(9), 50, 128);
+        let sp = scrna_sparse(&mut Rng::seed_from(9), 50, 128, 0.10);
+        assert_eq!(sp.labels, dense.labels);
+        let (Points::Dense(dm), Points::Sparse(sm)) = (&dense.points, &sp.points) else {
+            unreachable!()
+        };
+        assert_eq!(sm.to_dense().as_slice(), dm.as_slice());
+        assert!(sm.density() < 0.35, "density {}", sm.density());
+    }
+
+    #[test]
+    fn scrna_sparse_density_knob_scales_nnz() {
+        let lo = scrna_sparse(&mut Rng::seed_from(10), 40, 256, 0.02);
+        let hi = scrna_sparse(&mut Rng::seed_from(10), 40, 256, 0.40);
+        let (Points::Sparse(lm), Points::Sparse(hm)) = (&lo.points, &hi.points) else {
+            unreachable!()
+        };
+        assert!(lm.nnz() * 3 < hm.nnz(), "{} vs {}", lm.nnz(), hm.nnz());
     }
 
     #[test]

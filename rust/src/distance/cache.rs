@@ -27,6 +27,16 @@ use std::sync::Mutex;
 const SHARDS: usize = 64;
 
 /// Thread-safe (i, j)-keyed distance cache with hit/miss statistics.
+///
+/// Keys are **point indices into the backend's fixed `Points`**, not row
+/// storage: nothing here assumes dense rows, a row length, or any
+/// particular feature representation, so the cache is correct verbatim
+/// for `Points::Sparse` (CSR) — provided the engine's `dist` and `block`
+/// paths return bit-identical values for a pair, which the sparse kernels
+/// guarantee (see `distance/sparse.rs` §bitwise parity and the
+/// `sparse_cache_path_matches_uncached_bitwise` / `tests/property_sparse`
+/// coverage). A cache must never be shared across *different* `Points`
+/// instances; `NativeBackend` owns one per backend, which enforces that.
 pub struct DistanceCache {
     shards: Vec<Mutex<HashMap<u64, f64>>>,
     hits: AtomicU64,

@@ -10,6 +10,7 @@
 pub mod cache;
 pub mod counter;
 pub mod dense;
+pub mod sparse;
 pub mod tree_edit;
 
 use crate::data::Points;
@@ -57,7 +58,7 @@ impl Metric {
         match (self, points) {
             (Metric::TreeEdit, Points::Trees(_)) => true,
             (Metric::TreeEdit, _) => false,
-            (_, Points::Dense(_)) => true,
+            (_, Points::Dense(_) | Points::Sparse(_)) => true,
             (_, Points::Trees(_)) => false,
         }
     }
@@ -78,6 +79,18 @@ pub fn evaluate(metric: Metric, points: &Points, i: usize, j: usize) -> f64 {
         (Metric::L2, Points::Dense(m)) => dense::l2(m.row(i), m.row(j)),
         (Metric::L1, Points::Dense(m)) => dense::l1(m.row(i), m.row(j)),
         (Metric::Cosine, Points::Dense(m)) => dense::cosine(m.row(i), m.row(j)),
+        (Metric::L2, Points::Sparse(m)) => {
+            let ((ai, av), (bi, bv)) = (m.row(i), m.row(j));
+            sparse::l2(ai, av, bi, bv)
+        }
+        (Metric::L1, Points::Sparse(m)) => {
+            let ((ai, av), (bi, bv)) = (m.row(i), m.row(j));
+            sparse::l1(ai, av, bi, bv)
+        }
+        (Metric::Cosine, Points::Sparse(m)) => {
+            let ((ai, av), (bi, bv)) = (m.row(i), m.row(j));
+            sparse::cosine(ai, av, bi, bv)
+        }
         (Metric::TreeEdit, Points::Trees(ts)) => tree_edit::ted(&ts[i], &ts[j]),
         (m, p) => panic!("metric {m} not supported for {}", p.kind()),
     }
@@ -102,6 +115,23 @@ mod tests {
         let dense = Points::Dense(Matrix::zeros(2, 2));
         assert!(Metric::L2.supports(&dense));
         assert!(!Metric::TreeEdit.supports(&dense));
+    }
+
+    #[test]
+    fn supports_and_evaluates_sparse() {
+        let csr = crate::data::sparse::CsrMatrix::from_triplets(
+            2,
+            2,
+            &[(1, 0, 3.0), (1, 1, 4.0)],
+        );
+        let pts = Points::Sparse(csr);
+        for m in [Metric::L2, Metric::L1, Metric::Cosine] {
+            assert!(m.supports(&pts), "{m}");
+        }
+        assert!(!Metric::TreeEdit.supports(&pts));
+        assert_eq!(evaluate(Metric::L2, &pts, 0, 1), 5.0);
+        assert_eq!(evaluate(Metric::L1, &pts, 0, 1), 7.0);
+        assert_eq!(evaluate(Metric::Cosine, &pts, 0, 1), 1.0);
     }
 
     #[test]

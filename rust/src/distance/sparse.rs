@@ -1,0 +1,378 @@
+//! Sparse (CSR) distance kernels: merge pair kernels and scatter/gather
+//! one-to-many row kernels.
+//!
+//! Every kernel is built from three *parts* per metric — a per-row
+//! reduction table plus a cross term accumulated over stored entries:
+//!
+//! | metric | row table                 | cross term                       |
+//! |--------|---------------------------|----------------------------------|
+//! | l2     | `|x|^2` ([`sq_norm`])     | `x . y` ([`dot`])                |
+//! | cosine | `|x|^2` ([`sq_norm`])     | `x . y` ([`dot`])                |
+//! | l1     | `||x||_1` ([`abs_sum`])   | Σ over overlap of [`l1_term`]    |
+//!
+//! so a pair costs `O(nnz_a + nnz_b)` through the two-pointer merge, and
+//! the hot one-to-many row path (see PR 1 / `rust/PERF.md` §7) costs
+//! `O(nnz_b)` per reference: the target row is **scattered** once into a
+//! dense scratch buffer and each reference streams its stored entries,
+//! **gathering** target values by direct indexing.
+//!
+//! **Bitwise parity between the merge and scatter paths.** Both accumulate
+//! sequentially in f64 over the reference row's stored entries in column
+//! order. For a column the target does not store, the scratch holds
+//! `0.0f32`, and both cross terms are *exactly* zero there (`v * 0.0` is a
+//! signed zero; `l1_term(0, v) = (|0-v| - |0|) - |v| = 0.0`), and adding a
+//! zero to a finite f64 accumulator does not change its bits. The merge
+//! path simply skips those columns, so both paths produce bit-identical
+//! sums — `NativeBackend::dist` (merge) and `NativeBackend::block`
+//! (scatter) agree exactly, which the SWAP-reuse row cache and the
+//! pairwise [`crate::distance::cache::DistanceCache`] rely on.
+//!
+//! Unlike the dense kernels (16-lane f32 accumulation), the sparse kernels
+//! accumulate entirely in f64: stored runs are short (`nnz << d`), so lane
+//! tricks buy little, and exact-zero semantics keep the scatter/merge
+//! parity argument airtight. Sparse-vs-dense agreement is therefore only
+//! within the *dense* kernels' f32 error (~1e-6 relative at d = 784), which
+//! is what `tests/property_sparse.rs` asserts.
+
+use crate::data::sparse::CsrMatrix;
+use crate::distance::dense::cosine_from_parts;
+use std::cell::RefCell;
+
+/// `||x||_1` over stored values, sequential f64 (the l1 row table).
+pub fn abs_sum(values: &[f32]) -> f64 {
+    let mut s = 0.0f64;
+    for &v in values {
+        s += (v as f64).abs();
+    }
+    s
+}
+
+/// `|x|^2` over stored values, sequential f64 (the l2/cosine row table).
+pub fn sq_norm(values: &[f32]) -> f64 {
+    let mut s = 0.0f64;
+    for &v in values {
+        s += v as f64 * v as f64;
+    }
+    s
+}
+
+/// Sparse dot product via two-pointer merge over the column intersection,
+/// accumulated sequentially in f64 in column order.
+pub fn dot(ai: &[u32], av: &[f32], bi: &[u32], bv: &[f32]) -> f64 {
+    debug_assert_eq!(ai.len(), av.len());
+    debug_assert_eq!(bi.len(), bv.len());
+    let (mut p, mut q) = (0usize, 0usize);
+    let mut s = 0.0f64;
+    while p < ai.len() && q < bi.len() {
+        match ai[p].cmp(&bi[q]) {
+            std::cmp::Ordering::Less => p += 1,
+            std::cmp::Ordering::Greater => q += 1,
+            std::cmp::Ordering::Equal => {
+                s += av[p] as f64 * bv[q] as f64;
+                p += 1;
+                q += 1;
+            }
+        }
+    }
+    s
+}
+
+/// The l1 overlap correction for one shared column: what `|x - v|`
+/// contributes *beyond* the `|x| + |v|` already counted by the two row
+/// tables. Exactly `0.0` when either side is zero — the scatter path adds
+/// it for every stored reference column and stays bit-identical to the
+/// merge path, which only visits the intersection.
+#[inline]
+pub fn l1_term(x: f64, v: f64) -> f64 {
+    ((x - v).abs() - x.abs()) - v.abs()
+}
+
+/// Σ [`l1_term`] over the column intersection (two-pointer merge,
+/// sequential f64 in column order).
+pub fn l1_corr(ai: &[u32], av: &[f32], bi: &[u32], bv: &[f32]) -> f64 {
+    let (mut p, mut q) = (0usize, 0usize);
+    let mut s = 0.0f64;
+    while p < ai.len() && q < bi.len() {
+        match ai[p].cmp(&bi[q]) {
+            std::cmp::Ordering::Less => p += 1,
+            std::cmp::Ordering::Greater => q += 1,
+            std::cmp::Ordering::Equal => {
+                s += l1_term(av[p] as f64, bv[q] as f64);
+                p += 1;
+                q += 1;
+            }
+        }
+    }
+    s
+}
+
+/// l1 distance from the parts: row tables plus overlap correction. The
+/// clamp absorbs the last-ulp negative that rounding can produce for
+/// near-identical rows.
+#[inline]
+pub fn l1_from_parts(abs_a: f64, abs_b: f64, corr: f64) -> f64 {
+    ((abs_a + abs_b) + corr).max(0.0)
+}
+
+/// l2 distance from the parts: `sqrt(|a|^2 + |b|^2 - 2 a.b)`, clamped at
+/// zero before the square root (cancellation for near-identical rows).
+#[inline]
+pub fn l2_from_parts(sq_a: f64, sq_b: f64, dot: f64) -> f64 {
+    ((sq_a + sq_b) - 2.0 * dot).max(0.0).sqrt()
+}
+
+/// Pairwise sparse l1 (Manhattan) distance.
+pub fn l1(ai: &[u32], av: &[f32], bi: &[u32], bv: &[f32]) -> f64 {
+    l1_from_parts(abs_sum(av), abs_sum(bv), l1_corr(ai, av, bi, bv))
+}
+
+/// Pairwise sparse l2 (Euclidean) distance.
+pub fn l2(ai: &[u32], av: &[f32], bi: &[u32], bv: &[f32]) -> f64 {
+    l2_from_parts(sq_norm(av), sq_norm(bv), dot(ai, av, bi, bv))
+}
+
+/// Pairwise sparse cosine distance (zero rows get distance 1, matching
+/// [`crate::distance::dense::cosine`]).
+pub fn cosine(ai: &[u32], av: &[f32], bi: &[u32], bv: &[f32]) -> f64 {
+    cosine_from_parts(dot(ai, av, bi, bv), sq_norm(av), sq_norm(bv))
+}
+
+thread_local! {
+    /// Per-thread dense scratch for the scatter/gather row kernels. Kept
+    /// all-zero between calls: [`with_scattered_row`] scatters the target's
+    /// stored values in and un-scatters exactly those columns on the way
+    /// out, so reuse never pays an O(d) clear.
+    static SCATTER: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Run `body` with row `t` of `m` scattered into the thread-local dense
+/// scratch buffer (length >= `m.cols()`, zero everywhere `t` stores
+/// nothing).
+fn with_scattered_row<R>(m: &CsrMatrix, t: usize, body: impl FnOnce(&[f32]) -> R) -> R {
+    /// Un-scatters on drop, so the all-zero invariant survives a panic in
+    /// `body`: pool workers outlive chunk panics, and a poisoned scratch
+    /// would silently corrupt every later block on that thread.
+    struct Unscatter<'a> {
+        scratch: &'a mut Vec<f32>,
+        cols: &'a [u32],
+    }
+    impl Drop for Unscatter<'_> {
+        fn drop(&mut self) {
+            for &j in self.cols {
+                self.scratch[j as usize] = 0.0;
+            }
+        }
+    }
+    SCATTER.with(|cell| {
+        let mut scratch = cell.borrow_mut();
+        if scratch.len() < m.cols() {
+            scratch.resize(m.cols(), 0.0);
+        }
+        let (ti, tv) = m.row(t);
+        for (&j, &v) in ti.iter().zip(tv) {
+            scratch[j as usize] = v;
+        }
+        let guard = Unscatter { scratch: &mut *scratch, cols: ti };
+        body(&*guard.scratch)
+    })
+}
+
+/// One-to-many sparse l2 row kernel: `out[r] = l2(row t, row refs[r])`
+/// against the precomputed squared-norm table (`sq_norms[i] = |row i|^2`,
+/// as produced by [`sq_norm`]). `O(nnz_ref)` per reference via
+/// scatter/gather; bit-identical to the pairwise [`l2`].
+pub fn l2_row(m: &CsrMatrix, t: usize, sq_norms: &[f64], refs: &[usize], out: &mut [f64]) {
+    debug_assert_eq!(refs.len(), out.len());
+    with_scattered_row(m, t, |scratch| {
+        let sq_t = sq_norms[t];
+        for (o, &r) in out.iter_mut().zip(refs) {
+            let (ri, rv) = m.row(r);
+            let mut d = 0.0f64;
+            for (&j, &v) in ri.iter().zip(rv) {
+                d += v as f64 * scratch[j as usize] as f64;
+            }
+            *o = l2_from_parts(sq_t, sq_norms[r], d);
+        }
+    })
+}
+
+/// One-to-many sparse l1 row kernel against the precomputed abs-sum table
+/// (`abs_sums[i] = ||row i||_1`, as produced by [`abs_sum`]).
+/// Bit-identical to the pairwise [`l1`].
+pub fn l1_row(m: &CsrMatrix, t: usize, abs_sums: &[f64], refs: &[usize], out: &mut [f64]) {
+    debug_assert_eq!(refs.len(), out.len());
+    with_scattered_row(m, t, |scratch| {
+        let abs_t = abs_sums[t];
+        for (o, &r) in out.iter_mut().zip(refs) {
+            let (ri, rv) = m.row(r);
+            let mut corr = 0.0f64;
+            for (&j, &v) in ri.iter().zip(rv) {
+                corr += l1_term(scratch[j as usize] as f64, v as f64);
+            }
+            *o = l1_from_parts(abs_t, abs_sums[r], corr);
+        }
+    })
+}
+
+/// One-to-many sparse cosine row kernel against the precomputed
+/// squared-norm table. Bit-identical to the pairwise [`cosine`].
+pub fn cosine_row(m: &CsrMatrix, t: usize, sq_norms: &[f64], refs: &[usize], out: &mut [f64]) {
+    debug_assert_eq!(refs.len(), out.len());
+    with_scattered_row(m, t, |scratch| {
+        let sq_t = sq_norms[t];
+        for (o, &r) in out.iter_mut().zip(refs) {
+            let (ri, rv) = m.row(r);
+            let mut d = 0.0f64;
+            for (&j, &v) in ri.iter().zip(rv) {
+                d += v as f64 * scratch[j as usize] as f64;
+            }
+            *o = cosine_from_parts(d, sq_t, sq_norms[r]);
+        }
+    })
+}
+
+/// Per-row l1 table for a whole matrix (`abs_sums[i] = ||row i||_1`).
+pub fn abs_sum_table(m: &CsrMatrix) -> Vec<f64> {
+    (0..m.rows()).map(|i| abs_sum(m.row(i).1)).collect()
+}
+
+/// Per-row squared-norm table for a whole matrix (`sq_norms[i] = |row i|^2`).
+pub fn sq_norm_table(m: &CsrMatrix) -> Vec<f64> {
+    (0..m.rows()).map(|i| sq_norm(m.row(i).1)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distance::dense;
+    use crate::util::matrix::Matrix;
+    use crate::util::rng::Rng;
+
+    /// Random sparse matrix with the requested density, via its dense twin
+    /// (returned for reference comparisons).
+    fn random_pair(rng: &mut Rng, n: usize, d: usize, density: f64) -> (CsrMatrix, Matrix) {
+        let dense = Matrix::from_fn(n, d, |_, _| {
+            if rng.bool(density) {
+                let v = rng.normal() as f32;
+                if v == 0.0 {
+                    1.0
+                } else {
+                    v
+                }
+            } else {
+                0.0
+            }
+        });
+        (CsrMatrix::from_dense(&dense), dense)
+    }
+
+    #[test]
+    fn merge_kernels_match_dense_kernels() {
+        let mut rng = Rng::seed_from(51);
+        for d in [1usize, 7, 31, 784] {
+            let (sp, dn) = random_pair(&mut rng, 6, d, 0.3);
+            for i in 0..6 {
+                for j in 0..6 {
+                    let (ai, av) = sp.row(i);
+                    let (bi, bv) = sp.row(j);
+                    let cases = [
+                        (l1(ai, av, bi, bv), dense::l1(dn.row(i), dn.row(j)), "l1"),
+                        (l2(ai, av, bi, bv), dense::l2(dn.row(i), dn.row(j)), "l2"),
+                        (cosine(ai, av, bi, bv), dense::cosine(dn.row(i), dn.row(j)), "cos"),
+                    ];
+                    for (got, want, name) in cases {
+                        let tol = 2e-5 * (1.0 + want.abs());
+                        assert!((got - want).abs() <= tol, "{name} d={d} i={i} j={j}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_kernels_bitwise_equal_pairwise() {
+        let mut rng = Rng::seed_from(52);
+        for density in [0.05, 0.4] {
+            let (sp, _) = random_pair(&mut rng, 10, 63, density);
+            let refs: Vec<usize> = (0..10).collect();
+            let mut out = vec![0.0f64; refs.len()];
+            let abs = abs_sum_table(&sp);
+            let sq = sq_norm_table(&sp);
+            for t in 0..10 {
+                let (ti, tv) = sp.row(t);
+                l1_row(&sp, t, &abs, &refs, &mut out);
+                for (&r, &o) in refs.iter().zip(&out) {
+                    let (ri, rv) = sp.row(r);
+                    assert_eq!(o, l1(ti, tv, ri, rv), "l1 t={t} r={r}");
+                }
+                l2_row(&sp, t, &sq, &refs, &mut out);
+                for (&r, &o) in refs.iter().zip(&out) {
+                    let (ri, rv) = sp.row(r);
+                    assert_eq!(o, l2(ti, tv, ri, rv), "l2 t={t} r={r}");
+                }
+                cosine_row(&sp, t, &sq, &refs, &mut out);
+                for (&r, &o) in refs.iter().zip(&out) {
+                    let (ri, rv) = sp.row(r);
+                    assert_eq!(o, cosine(ti, tv, ri, rv), "cos t={t} r={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_scratch_resets_between_rows() {
+        // Re-running with a different target must not see stale values:
+        // give row 0 wide support and row 1 disjoint support.
+        let m = CsrMatrix::from_triplets(
+            3,
+            5,
+            &[(0, 0, 1.0), (0, 2, 2.0), (0, 4, 3.0), (1, 1, 4.0), (2, 2, 5.0)],
+        );
+        let abs = abs_sum_table(&m);
+        let refs = [2usize];
+        let mut out = [0.0f64];
+        l1_row(&m, 0, &abs, &refs, &mut out);
+        assert_eq!(out[0], (1.0 + 3.0) + 3.0); // |1|+|2-5|+|3|
+        l1_row(&m, 1, &abs, &refs, &mut out);
+        // target 1 shares no columns with ref 2: pure abs-sum distance
+        assert_eq!(out[0], 4.0 + 5.0);
+    }
+
+    #[test]
+    fn identical_rows_have_zero_distance() {
+        let m = CsrMatrix::from_triplets(
+            2,
+            10,
+            &[(0, 3, 1.5), (0, 7, -2.0), (1, 3, 1.5), (1, 7, -2.0)],
+        );
+        let (ai, av) = m.row(0);
+        let (bi, bv) = m.row(1);
+        assert_eq!(l1(ai, av, bi, bv), 0.0);
+        assert_eq!(l2(ai, av, bi, bv), 0.0);
+        assert!(cosine(ai, av, bi, bv).abs() < 1e-15);
+    }
+
+    #[test]
+    fn zero_rows_match_dense_semantics() {
+        let m = CsrMatrix::from_triplets(2, 4, &[(1, 0, 3.0), (1, 1, 4.0)]);
+        let (ai, av) = m.row(0); // empty
+        let (bi, bv) = m.row(1);
+        assert_eq!(l1(ai, av, bi, bv), 7.0);
+        assert_eq!(l2(ai, av, bi, bv), 5.0);
+        assert_eq!(cosine(ai, av, bi, bv), 1.0); // zero vector convention
+        assert_eq!(cosine(ai, av, ai, av), 1.0);
+    }
+
+    #[test]
+    fn tables_match_scalar_reductions() {
+        let mut rng = Rng::seed_from(53);
+        let (sp, _) = random_pair(&mut rng, 8, 40, 0.25);
+        let abs = abs_sum_table(&sp);
+        let sq = sq_norm_table(&sp);
+        for i in 0..8 {
+            let (_, v) = sp.row(i);
+            assert_eq!(abs[i], abs_sum(v));
+            assert_eq!(sq[i], sq_norm(v));
+        }
+    }
+}

@@ -57,6 +57,7 @@ pub mod prelude {
         KMedoids,
     };
     pub use crate::coordinator::{banditpam::BanditPam, config::BanditPamConfig};
+    pub use crate::data::sparse::CsrMatrix;
     pub use crate::data::{synthetic, Dataset, Points};
     pub use crate::distance::{counter::DistanceCounter, Metric};
     pub use crate::runtime::backend::{DistanceBackend, NativeBackend};

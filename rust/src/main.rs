@@ -15,13 +15,13 @@ use banditpam::algorithms::{
 };
 use banditpam::bench::Scale;
 use banditpam::coordinator::banditpam::BanditPam;
-use banditpam::data::{loader, synthetic, Dataset};
+use banditpam::data::{loader, synthetic, Dataset, Points};
 use banditpam::distance::Metric;
 use banditpam::runtime::backend::NativeBackend;
 use banditpam::runtime::executable::Client;
 use banditpam::runtime::manifest::Manifest;
 use banditpam::runtime::xla_backend::XlaBackend;
-use banditpam::util::cli::Args;
+use banditpam::util::cli::{Args, DataFormat};
 use banditpam::util::rng::Rng;
 use std::path::PathBuf;
 
@@ -29,16 +29,23 @@ const HELP: &str = "\
 banditpam — almost linear time k-medoids clustering via multi-armed bandits
 
 USAGE:
-  banditpam cluster [--data FILE.csv | --synthetic NAME] [--n N] [--k K]
+  banditpam cluster [--data FILE | --synthetic NAME] [--format csv|mtx|idx]
+                    [--limit L] [--transpose] [--sparse] [--density P]
+                    [--n N] [--k K]
                     [--metric l2|l1|cosine|tree] [--algo NAME] [--seed S]
                     [--backend native|xla] [--threads T] [--verbose]
   banditpam experiment <id|all> [--scale smoke|quick|paper] [--seed S] [--csv]
-  banditpam generate-data --synthetic NAME --n N --out FILE.csv [--seed S]
+  banditpam generate-data --synthetic NAME --n N --out FILE[.csv|.mtx]
+                    [--format csv|mtx] [--seed S]
   banditpam info
 
 ALGORITHMS: banditpam (default), pam, fastpam1, fastpam, clara, clarans,
             voronoi, meddit (k=1 only)
-SYNTHETIC DATASETS: gmm, mnist, scrna, scrna-pca, hoc4
+SYNTHETIC DATASETS: gmm, mnist, scrna, scrna-sparse, scrna-pca, hoc4
+SPARSE DATA: --format mtx loads Matrix Market triplets as CSR points
+             (--transpose for 10x genes x cells files); --sparse converts
+             any dense dataset to CSR; --density P sets the scrna-sparse
+             generator's expression probability (default 0.10)
 EXPERIMENTS: fig1a fig1b fig2 fig3 appfig1 appfig2 appfig34 appfig5
              headline ablations (see DESIGN.md for the paper mapping)
 ";
@@ -59,18 +66,40 @@ fn make_algo(name: &str) -> Result<Box<dyn KMedoids>> {
 
 fn make_dataset(args: &Args, rng: &mut Rng) -> Result<Dataset> {
     let n: usize = args.get_parsed("n", 1000usize)?;
-    if let Some(path) = args.get("data") {
-        return loader::load_csv(&PathBuf::from(path));
+    let density: f64 = args.get_parsed("density", 0.10)?;
+    let ds = if let Some(path) = args.get("data") {
+        let format = match args.get("format") {
+            Some(s) => DataFormat::parse(s)
+                .with_context(|| format!("bad --format {s:?} (csv|mtx|idx)"))?,
+            None => DataFormat::infer(path),
+        };
+        let path = PathBuf::from(path);
+        // `--limit` caps how many points a file loader reads (0 = all);
+        // `--n` is the synthetic-size knob and is ignored for files.
+        let limit: usize = args.get_parsed("limit", 0usize)?;
+        match format {
+            DataFormat::Csv => loader::load_csv(&path)?,
+            DataFormat::Mtx => loader::load_mtx(&path, args.flag("transpose"))?,
+            DataFormat::Idx => loader::load_idx_images(&path, limit)?,
+        }
+    } else {
+        let name = args.get("synthetic").unwrap_or("gmm");
+        match name {
+            "gmm" => synthetic::gmm(rng, n, 16, 5, 3.0),
+            "mnist" => synthetic::mnist_like(rng, n),
+            "scrna" => synthetic::scrna_like(rng, n, 1024),
+            "scrna-sparse" => synthetic::scrna_sparse(rng, n, 1024, density),
+            "scrna-pca" => synthetic::scrna_pca(rng, n, 1024, 10),
+            "hoc4" => synthetic::hoc4_like(rng, n),
+            other => bail!("unknown synthetic dataset {other:?}"),
+        }
+    };
+    if args.flag("sparse") && !matches!(ds.points, Points::Sparse(_)) {
+        return ds
+            .to_sparse()
+            .with_context(|| format!("--sparse: {} points have no CSR form", ds.points.kind()));
     }
-    let name = args.get("synthetic").unwrap_or("gmm");
-    Ok(match name {
-        "gmm" => synthetic::gmm(rng, n, 16, 5, 3.0),
-        "mnist" => synthetic::mnist_like(rng, n),
-        "scrna" => synthetic::scrna_like(rng, n, 1024),
-        "scrna-pca" => synthetic::scrna_pca(rng, n, 1024, 10),
-        "hoc4" => synthetic::hoc4_like(rng, n),
-        other => bail!("unknown synthetic dataset {other:?}"),
-    })
+    Ok(ds)
 }
 
 fn cmd_cluster(args: &Args) -> Result<()> {
@@ -93,6 +122,13 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         ds.name,
         ds.len()
     );
+    if let Points::Sparse(m) = &ds.points {
+        println!(
+            "sparse storage: {} nnz, density {:.2}% (CSR kernels active)",
+            m.nnz(),
+            100.0 * m.density()
+        );
+    }
     let fit = match backend_kind {
         "native" => {
             let backend = NativeBackend::new(&ds.points, metric).with_threads(threads);
@@ -162,12 +198,30 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
-    let out = args.get("out").context("--out FILE.csv required")?;
+    let out = args.get("out").context("--out FILE.csv|FILE.mtx required")?;
     let seed: u64 = args.get_parsed("seed", 42u64)?;
     let mut rng = Rng::seed_from(seed);
     let ds = make_dataset(args, &mut rng)?;
-    loader::save_csv(&ds, &PathBuf::from(out))?;
-    println!("wrote {} points to {out}", ds.len());
+    let format = match args.get("format") {
+        Some(s) => {
+            DataFormat::parse(s).with_context(|| format!("bad --format {s:?} (csv|mtx)"))?
+        }
+        None => DataFormat::infer(out),
+    };
+    match format {
+        DataFormat::Csv if matches!(ds.points, Points::Dense(_)) => {
+            loader::save_csv(&ds, &PathBuf::from(out))?;
+        }
+        DataFormat::Csv => {
+            let dense = ds
+                .to_dense()
+                .with_context(|| format!("CSV output needs vector points ({})", ds.points.kind()))?;
+            loader::save_csv(&dense, &PathBuf::from(out))?;
+        }
+        DataFormat::Mtx => loader::save_mtx(&ds, &PathBuf::from(out))?,
+        DataFormat::Idx => bail!("generate-data cannot write IDX; use csv or mtx"),
+    }
+    println!("wrote {} points to {out} ({format})", ds.len());
     Ok(())
 }
 

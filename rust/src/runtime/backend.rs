@@ -17,10 +17,11 @@
 //! Evaluation counting is batched: one atomic add per block (cache-less)
 //! or one per shard of cache misses, never one per distance.
 
+use crate::data::sparse::CsrMatrix;
 use crate::data::Points;
 use crate::distance::cache::DistanceCache;
 use crate::distance::counter::DistanceCounter;
-use crate::distance::{dense, evaluate, Metric};
+use crate::distance::{dense, evaluate, sparse, Metric};
 use crate::runtime::pool::ThreadPool;
 use crate::util::matrix::Matrix;
 use std::sync::Arc;
@@ -74,7 +75,13 @@ enum PairKernel<'m> {
     L1(&'m Matrix),
     /// Cosine over the precomputed squared-norm table.
     Cosine { m: &'m Matrix, sq_norms: &'m [f64] },
-    /// Anything without a dense fast path (tree edit distance).
+    /// Sparse l2 over the squared-norm table (`norms[i] = |row i|^2`).
+    SparseL2 { m: &'m CsrMatrix, sq_norms: &'m [f64] },
+    /// Sparse l1 over the abs-sum table (`norms[i] = ||row i||_1`).
+    SparseL1 { m: &'m CsrMatrix, abs_sums: &'m [f64] },
+    /// Sparse cosine over the squared-norm table.
+    SparseCosine { m: &'m CsrMatrix, sq_norms: &'m [f64] },
+    /// Anything without a dense/sparse fast path (tree edit distance).
     Generic,
 }
 
@@ -97,9 +104,12 @@ pub struct NativeBackend<'a> {
     threads: usize,
     /// Minimum block work (scalar ops) before the pool is used.
     pool_min_work: usize,
-    /// Squared L2 norms per point (cosine over dense points only; empty
-    /// otherwise). One dot product per cosine pair instead of three.
-    sq_norms: Vec<f64>,
+    /// Per-point reduction table for the from-parts kernels; empty when the
+    /// metric/storage combination has none. Dense cosine and sparse
+    /// l2/cosine: squared L2 norms (one dot product per pair instead of
+    /// three reductions). Sparse l1: abs sums (the overlap-correction
+    /// kernel — see `distance/sparse.rs`).
+    norms: Vec<f64>,
 }
 
 impl<'a> NativeBackend<'a> {
@@ -111,10 +121,12 @@ impl<'a> NativeBackend<'a> {
             "metric {metric} does not support {} points",
             points.kind()
         );
-        let sq_norms = match (metric, points) {
+        let norms = match (metric, points) {
             (Metric::Cosine, Points::Dense(m)) => {
                 (0..m.rows()).map(|i| dense::sq_norm(m.row(i))).collect()
             }
+            (Metric::L2 | Metric::Cosine, Points::Sparse(m)) => sparse::sq_norm_table(m),
+            (Metric::L1, Points::Sparse(m)) => sparse::abs_sum_table(m),
             _ => Vec::new(),
         };
         NativeBackend {
@@ -125,7 +137,7 @@ impl<'a> NativeBackend<'a> {
             pool: None,
             threads: 1,
             pool_min_work: POOL_MIN_WORK,
-            sq_norms,
+            norms,
         }
     }
 
@@ -167,7 +179,16 @@ impl<'a> NativeBackend<'a> {
             (Metric::L2, Points::Dense(m)) => PairKernel::L2(m),
             (Metric::L1, Points::Dense(m)) => PairKernel::L1(m),
             (Metric::Cosine, Points::Dense(m)) => {
-                PairKernel::Cosine { m, sq_norms: &self.sq_norms }
+                PairKernel::Cosine { m, sq_norms: &self.norms }
+            }
+            (Metric::L2, Points::Sparse(m)) => {
+                PairKernel::SparseL2 { m, sq_norms: &self.norms }
+            }
+            (Metric::L1, Points::Sparse(m)) => {
+                PairKernel::SparseL1 { m, abs_sums: &self.norms }
+            }
+            (Metric::Cosine, Points::Sparse(m)) => {
+                PairKernel::SparseCosine { m, sq_norms: &self.norms }
             }
             _ => PairKernel::Generic,
         }
@@ -175,8 +196,10 @@ impl<'a> NativeBackend<'a> {
 
     /// One uncounted pair evaluation through the resolved kernel. The
     /// cosine norm-table path is bitwise-identical to `dense::cosine`
-    /// (same per-lane accumulation order), so `dist` and `block` agree
-    /// exactly.
+    /// (same per-lane accumulation order), and the sparse merge kernels
+    /// are bitwise-identical to the sparse scatter row kernels (see
+    /// `distance/sparse.rs`), so `dist` and `block` agree exactly for
+    /// every metric/storage combination.
     #[inline]
     fn pair(&self, kern: &PairKernel<'_>, i: usize, j: usize) -> f64 {
         match *kern {
@@ -187,6 +210,18 @@ impl<'a> NativeBackend<'a> {
                 sq_norms[i],
                 sq_norms[j],
             ),
+            PairKernel::SparseL2 { m, sq_norms } => {
+                let ((ai, av), (bi, bv)) = (m.row(i), m.row(j));
+                sparse::l2_from_parts(sq_norms[i], sq_norms[j], sparse::dot(ai, av, bi, bv))
+            }
+            PairKernel::SparseL1 { m, abs_sums } => {
+                let ((ai, av), (bi, bv)) = (m.row(i), m.row(j));
+                sparse::l1_from_parts(abs_sums[i], abs_sums[j], sparse::l1_corr(ai, av, bi, bv))
+            }
+            PairKernel::SparseCosine { m, sq_norms } => {
+                let ((ai, av), (bi, bv)) = (m.row(i), m.row(j));
+                dense::cosine_from_parts(sparse::dot(ai, av, bi, bv), sq_norms[i], sq_norms[j])
+            }
             PairKernel::Generic => evaluate(self.metric, self.points, i, j),
         }
     }
@@ -211,6 +246,15 @@ impl<'a> NativeBackend<'a> {
                         refs.iter().map(|&r| (m.row(r), sq_norms[r])),
                         out,
                     ),
+                    PairKernel::SparseL2 { m, sq_norms } => {
+                        sparse::l2_row(m, t, sq_norms, refs, out)
+                    }
+                    PairKernel::SparseL1 { m, abs_sums } => {
+                        sparse::l1_row(m, t, abs_sums, refs, out)
+                    }
+                    PairKernel::SparseCosine { m, sq_norms } => {
+                        sparse::cosine_row(m, t, sq_norms, refs, out)
+                    }
                     PairKernel::Generic => {
                         for (o, &r) in out.iter_mut().zip(refs) {
                             *o = evaluate(self.metric, self.points, t, r);
@@ -252,6 +296,8 @@ impl<'a> NativeBackend<'a> {
         match (self.metric, self.points) {
             (Metric::TreeEdit, _) => 400,
             (_, Points::Dense(m)) => m.cols().max(1),
+            // Scatter/gather row kernels stream O(nnz/row) per pair.
+            (_, Points::Sparse(m)) => (m.nnz() / m.rows().max(1)).max(1),
             _ => 64,
         }
     }
@@ -533,5 +579,90 @@ mod tests {
     fn incompatible_metric_panics() {
         let ds = dataset();
         NativeBackend::new(&ds.points, Metric::TreeEdit);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not support")]
+    fn tree_edit_rejects_sparse_points() {
+        let pts = Points::Sparse(CsrMatrix::zeros(4, 4));
+        NativeBackend::new(&pts, Metric::TreeEdit);
+    }
+
+    fn sparse_dataset() -> crate::data::Dataset {
+        synthetic::scrna_like(&mut Rng::seed_from(14), 60, 96)
+            .to_sparse()
+            .unwrap()
+    }
+
+    #[test]
+    fn sparse_block_matches_dist_bitwise() {
+        let ds = sparse_dataset();
+        for metric in [Metric::L1, Metric::L2, Metric::Cosine] {
+            let b = NativeBackend::new(&ds.points, metric);
+            let targets = [0usize, 9, 33];
+            let refs: Vec<usize> = (0..60).collect();
+            let mut out = vec![0.0; targets.len() * refs.len()];
+            b.block(&targets, &refs, &mut out);
+            for (ti, &t) in targets.iter().enumerate() {
+                for (ri, &r) in refs.iter().enumerate() {
+                    // merge pair kernel == scatter row kernel, bit for bit
+                    assert_eq!(out[ti * 60 + ri], b.dist(t, r), "{metric} t={t} r={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_pooled_matches_serial() {
+        let ds = sparse_dataset();
+        for metric in [Metric::L1, Metric::Cosine] {
+            let serial = NativeBackend::new(&ds.points, metric);
+            let pooled = NativeBackend::new(&ds.points, metric)
+                .with_threads(4)
+                .with_pool_min_work(0);
+            let targets: Vec<usize> = (0..40).collect();
+            let refs: Vec<usize> = (10..60).collect();
+            let mut a = vec![0.0; targets.len() * refs.len()];
+            let mut b = vec![0.0; targets.len() * refs.len()];
+            serial.block(&targets, &refs, &mut a);
+            pooled.block(&targets, &refs, &mut b);
+            assert_eq!(a, b, "{metric}");
+            assert_eq!(serial.counter().get(), pooled.counter().get());
+        }
+    }
+
+    #[test]
+    fn sparse_cache_path_matches_uncached_bitwise() {
+        // The cached path computes through the merge pair kernel, the
+        // uncached block through the scatter row kernel; the two must be
+        // bit-identical or cache warm-up order would leak into results.
+        let ds = sparse_dataset();
+        let plain = NativeBackend::new(&ds.points, Metric::L1);
+        let cached = NativeBackend::new(&ds.points, Metric::L1).with_cache(1 << 16);
+        let targets = [3usize, 48];
+        let refs: Vec<usize> = (0..60).collect();
+        let mut a = vec![0.0; targets.len() * refs.len()];
+        let mut b = vec![0.0; targets.len() * refs.len()];
+        plain.block(&targets, &refs, &mut a);
+        cached.block(&targets, &refs, &mut b);
+        assert_eq!(a, b);
+        // repeat is served from the cache without new evaluations
+        let evals = cached.counter().get();
+        cached.block(&targets, &refs, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(cached.counter().get(), evals);
+    }
+
+    #[test]
+    fn sparse_loss_and_assignments_close_to_densified() {
+        let sp = sparse_dataset();
+        let dn = sp.to_dense().unwrap();
+        let bs = NativeBackend::new(&sp.points, Metric::L1);
+        let bd = NativeBackend::new(&dn.points, Metric::L1);
+        let (ls, asg_s) = loss_and_assignments(&bs, &[0, 20, 40]);
+        let (ld, asg_d) = loss_and_assignments(&bd, &[0, 20, 40]);
+        assert!((ls - ld).abs() <= 1e-5 * (1.0 + ld.abs()), "{ls} vs {ld}");
+        assert_eq!(asg_s, asg_d);
+        assert_eq!(bs.counter().get(), bd.counter().get());
     }
 }

@@ -38,7 +38,58 @@ impl std::error::Error for ParseError {}
 
 /// Options that never take a value (`--verbose file.csv` must not consume
 /// `file.csv`). Everything else uses `--key value` / `--key=value`.
-const BOOLEAN_FLAGS: &[&str] = &["verbose", "csv", "force", "help", "quiet"];
+const BOOLEAN_FLAGS: &[&str] =
+    &["verbose", "csv", "force", "help", "quiet", "sparse", "transpose"];
+
+/// On-disk dataset formats the `--data` loaders understand.
+///
+/// Spelled on the command line as `--format {csv,mtx,idx}`; when the flag
+/// is absent, [`DataFormat::infer`] falls back to the file extension
+/// (defaulting to CSV), so sparse Matrix Market datasets are selectable
+/// from `main.rs` without code edits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataFormat {
+    /// Headerless dense CSV (rows = points).
+    Csv,
+    /// Matrix Market coordinate triplets (sparse; 10x Genomics style).
+    Mtx,
+    /// MNIST IDX3 images.
+    Idx,
+}
+
+impl DataFormat {
+    /// Parse the CLI spelling.
+    pub fn parse(s: &str) -> Option<DataFormat> {
+        match s.to_ascii_lowercase().as_str() {
+            "csv" => Some(DataFormat::Csv),
+            "mtx" | "matrixmarket" | "matrix-market" => Some(DataFormat::Mtx),
+            "idx" | "idx3" | "mnist" => Some(DataFormat::Idx),
+            _ => None,
+        }
+    }
+
+    /// Infer from a path's extension; CSV when unrecognized (the
+    /// historical default).
+    pub fn infer(path: &str) -> DataFormat {
+        let ext = path.rsplit('.').next().unwrap_or("");
+        DataFormat::parse(ext).unwrap_or(DataFormat::Csv)
+    }
+
+    /// Canonical CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DataFormat::Csv => "csv",
+            DataFormat::Mtx => "mtx",
+            DataFormat::Idx => "idx",
+        }
+    }
+}
+
+impl fmt::Display for DataFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
 
 impl Args {
     /// Parse from an iterator of argument strings (exclusive of argv[0]).
@@ -177,5 +228,29 @@ mod tests {
         let a = parse("--help");
         assert_eq!(a.subcommand, None);
         assert!(a.flag("help"));
+    }
+
+    #[test]
+    fn data_format_parse_and_infer() {
+        assert_eq!(DataFormat::parse("csv"), Some(DataFormat::Csv));
+        assert_eq!(DataFormat::parse("MTX"), Some(DataFormat::Mtx));
+        assert_eq!(DataFormat::parse("idx3"), Some(DataFormat::Idx));
+        assert_eq!(DataFormat::parse("parquet"), None);
+        assert_eq!(DataFormat::infer("data/matrix.mtx"), DataFormat::Mtx);
+        assert_eq!(DataFormat::infer("points.csv"), DataFormat::Csv);
+        assert_eq!(DataFormat::infer("train-images-idx3-ubyte"), DataFormat::Csv);
+        for f in [DataFormat::Csv, DataFormat::Mtx, DataFormat::Idx] {
+            assert_eq!(DataFormat::parse(f.name()), Some(f));
+            assert_eq!(f.to_string(), f.name());
+        }
+    }
+
+    #[test]
+    fn sparse_flags_do_not_eat_values() {
+        let a = parse("cluster --sparse --density 0.05 --transpose data.mtx");
+        assert!(a.flag("sparse"));
+        assert!(a.flag("transpose"));
+        assert!((a.get_parsed("density", 0.0f64).unwrap() - 0.05).abs() < 1e-12);
+        assert_eq!(a.positional, vec!["data.mtx"]);
     }
 }

@@ -1,0 +1,390 @@
+//! Property suite for the sparse (CSR) subsystem.
+//!
+//! Three layers of agreement, in decreasing strictness:
+//!
+//! 1. **Bitwise vs the naive sparse reference.** The optimized merge pair
+//!    kernels and the scatter/gather row kernels (through the backend's
+//!    `block`) must equal an obviously-correct quadratic-scan reference
+//!    bit for bit: both accumulate the cross term sequentially in f64 over
+//!    the reference row's stored columns in order, so there is no rounding
+//!    excuse — any difference is a logic bug.
+//! 2. **Bitwise across execution strategies.** threads 1 vs 8, cache on
+//!    vs off, `dist` vs `block`, and `SwapSession` cached prefixes must
+//!    all produce identical bits, or caching order would leak into
+//!    results.
+//! 3. **Tolerance vs the densified dense kernels.** The dense kernels
+//!    accumulate in 16 f32 lanes (worst-case relative error ~6e-6 at
+//!    d = 784 — see `distance/dense.rs`); the sparse kernels are exact
+//!    f64, so agreement is bounded by the *dense* error, checked at
+//!    2e-5 * (1 + |d|) like the dense property suite.
+//!
+//! Grid: metric in {l1, l2, cosine} x d in {7, 31, 784} x density in
+//! {0.01, 0.1, 0.5} x threads in {1, 8}, plus a seeded end-to-end fit at
+//! scrna-like n ~ 2k asserting sparse and densified runs return identical
+//! medoids.
+
+use banditpam::coordinator::config::BanditPamConfig;
+use banditpam::coordinator::session::SwapSession;
+use banditpam::data::sparse::CsrMatrix;
+use banditpam::data::{synthetic, Dataset, Points};
+use banditpam::distance::{dense, sparse, Metric};
+use banditpam::prelude::*;
+use banditpam::prop_assert;
+use banditpam::testkit::prop::{check, PropConfig};
+use banditpam::util::matrix::Matrix;
+
+const DIMS: &[usize] = &[7, 31, 784];
+const DENSITIES: &[f64] = &[0.01, 0.1, 0.5];
+const THREADS: &[usize] = &[1, 8];
+const METRICS: &[Metric] = &[Metric::L1, Metric::L2, Metric::Cosine];
+
+fn cfg(cases: usize) -> PropConfig {
+    PropConfig { cases, ..Default::default() }
+}
+
+/// Random sparse points with a dense twin holding exactly the same data.
+fn random_points(rng: &mut Rng, n: usize, d: usize, density: f64) -> (Dataset, Dataset) {
+    let m = Matrix::from_fn(n, d, |_, _| {
+        if rng.bool(density) {
+            let v = rng.normal() as f32;
+            if v == 0.0 {
+                1.0
+            } else {
+                v
+            }
+        } else {
+            0.0
+        }
+    });
+    let sp = Dataset::sparse(CsrMatrix::from_dense(&m), "sparse-twin");
+    (sp, Dataset::dense(m, "dense-twin"))
+}
+
+/// Obviously-correct quadratic-scan dot: for every stored reference
+/// column (in order), linear-search the target row. Accumulation order
+/// matches the merge/gather kernels, so equality is bitwise.
+fn naive_dot(ai: &[u32], av: &[f32], bi: &[u32], bv: &[f32]) -> f64 {
+    let mut s = 0.0f64;
+    for (q, &bj) in bi.iter().enumerate() {
+        for (p, &aj) in ai.iter().enumerate() {
+            if aj == bj {
+                s += av[p] as f64 * bv[q] as f64;
+            }
+        }
+    }
+    s
+}
+
+/// Quadratic-scan l1 overlap correction (same order argument as
+/// [`naive_dot`]).
+fn naive_l1_corr(ai: &[u32], av: &[f32], bi: &[u32], bv: &[f32]) -> f64 {
+    let mut s = 0.0f64;
+    for (q, &bj) in bi.iter().enumerate() {
+        for (p, &aj) in ai.iter().enumerate() {
+            if aj == bj {
+                s += sparse::l1_term(av[p] as f64, bv[q] as f64);
+            }
+        }
+    }
+    s
+}
+
+fn naive_abs_sum(v: &[f32]) -> f64 {
+    let mut s = 0.0f64;
+    for &x in v {
+        s += (x as f64).abs();
+    }
+    s
+}
+
+fn naive_sq_norm(v: &[f32]) -> f64 {
+    let mut s = 0.0f64;
+    for &x in v {
+        s += x as f64 * x as f64;
+    }
+    s
+}
+
+/// The naive per-pair sparse distance for `metric`.
+fn naive_pair(metric: Metric, m: &CsrMatrix, i: usize, j: usize) -> f64 {
+    let ((ai, av), (bi, bv)) = (m.row(i), m.row(j));
+    match metric {
+        Metric::L1 => sparse::l1_from_parts(
+            naive_abs_sum(av),
+            naive_abs_sum(bv),
+            naive_l1_corr(ai, av, bi, bv),
+        ),
+        Metric::L2 => sparse::l2_from_parts(
+            naive_sq_norm(av),
+            naive_sq_norm(bv),
+            naive_dot(ai, av, bi, bv),
+        ),
+        Metric::Cosine => dense::cosine_from_parts(
+            naive_dot(ai, av, bi, bv),
+            naive_sq_norm(av),
+            naive_sq_norm(bv),
+        ),
+        Metric::TreeEdit => unreachable!(),
+    }
+}
+
+fn dense_pair(metric: Metric, m: &Matrix, i: usize, j: usize) -> f64 {
+    match metric {
+        Metric::L1 => dense::l1(m.row(i), m.row(j)),
+        Metric::L2 => dense::l2(m.row(i), m.row(j)),
+        Metric::Cosine => dense::cosine(m.row(i), m.row(j)),
+        Metric::TreeEdit => unreachable!(),
+    }
+}
+
+fn block_of(backend: &dyn DistanceBackend, targets: &[usize], refs: &[usize]) -> Vec<f64> {
+    let mut out = vec![0.0; targets.len() * refs.len()];
+    backend.block(targets, refs, &mut out);
+    out
+}
+
+#[test]
+fn prop_sparse_pair_kernels_match_naive_reference_bitwise() {
+    check("sparse-pair-vs-naive", &cfg(8), |rng| {
+        for &d in DIMS {
+            for &density in DENSITIES {
+                let n = rng.range(6, 14);
+                let (sp, _) = random_points(rng, n, d, density);
+                let Points::Sparse(m) = &sp.points else { unreachable!() };
+                for &metric in METRICS {
+                    for i in 0..n {
+                        for j in 0..n {
+                            let ((ai, av), (bi, bv)) = (m.row(i), m.row(j));
+                            let got = match metric {
+                                Metric::L1 => sparse::l1(ai, av, bi, bv),
+                                Metric::L2 => sparse::l2(ai, av, bi, bv),
+                                Metric::Cosine => sparse::cosine(ai, av, bi, bv),
+                                Metric::TreeEdit => unreachable!(),
+                            };
+                            let want = naive_pair(metric, m, i, j);
+                            prop_assert!(
+                                got.to_bits() == want.to_bits(),
+                                "{metric} d={d} density={density} ({i},{j}): {got} != {want}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse_kernels_match_densified_dense_kernels() {
+    check("sparse-vs-densified", &cfg(8), |rng| {
+        for &d in DIMS {
+            for &density in DENSITIES {
+                let n = rng.range(6, 14);
+                let (sp, dn) = random_points(rng, n, d, density);
+                let (Points::Sparse(sm), Points::Dense(dm)) = (&sp.points, &dn.points) else {
+                    unreachable!()
+                };
+                for &metric in METRICS {
+                    for i in 0..n {
+                        for j in 0..n {
+                            let ((ai, av), (bi, bv)) = (sm.row(i), sm.row(j));
+                            let got = match metric {
+                                Metric::L1 => sparse::l1(ai, av, bi, bv),
+                                Metric::L2 => sparse::l2(ai, av, bi, bv),
+                                Metric::Cosine => sparse::cosine(ai, av, bi, bv),
+                                Metric::TreeEdit => unreachable!(),
+                            };
+                            let want = dense_pair(metric, dm, i, j);
+                            let tol = 2e-5 * (1.0 + want.abs());
+                            prop_assert!(
+                                (got - want).abs() <= tol,
+                                "{metric} d={d} density={density} ({i},{j}): \
+                                 sparse {got} vs dense {want}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse_block_matches_naive_and_densified_across_threads_and_cache() {
+    check("sparse-block-grid", &cfg(4), |rng| {
+        for &d in DIMS {
+            for &density in DENSITIES {
+                let n = rng.range(16, 32);
+                let (sp, dn) = random_points(rng, n, d, density);
+                let Points::Sparse(sm) = &sp.points else { unreachable!() };
+                let tn = rng.range(1, 5);
+                let targets = rng.sample_indices(n, tn);
+                let rn = rng.range(2, n.min(20));
+                let refs = rng.sample_indices(n, rn);
+                for &metric in METRICS {
+                    // bitwise reference from the naive pair kernel
+                    let mut want = vec![0.0; targets.len() * refs.len()];
+                    for (ti, &t) in targets.iter().enumerate() {
+                        for (ri, &r) in refs.iter().enumerate() {
+                            want[ti * refs.len() + ri] = naive_pair(metric, sm, t, r);
+                        }
+                    }
+                    let dense_backend = NativeBackend::new(&dn.points, metric);
+                    let dense_out = block_of(&dense_backend, &targets, &refs);
+                    for &threads in THREADS {
+                        for cached in [false, true] {
+                            let mut b = NativeBackend::new(&sp.points, metric)
+                                .with_threads(threads)
+                                .with_pool_min_work(0); // force pooling
+                            if cached {
+                                b = b.with_cache(1 << 16);
+                            }
+                            let got = block_of(&b, &targets, &refs);
+                            for (x, (g, w)) in got.iter().zip(&want).enumerate() {
+                                prop_assert!(
+                                    g.to_bits() == w.to_bits(),
+                                    "{metric} d={d} density={density} threads={threads} \
+                                     cached={cached} elem {x}: {g} != {w}"
+                                );
+                            }
+                            // eval accounting identical to the dense engine
+                            // (the cache dedups symmetric pairs within a
+                            // block, so only the uncached count is exact)
+                            if !cached {
+                                prop_assert!(
+                                    b.counter().get() == dense_backend.counter().get(),
+                                    "{metric} d={d} threads={threads}: counted {} evals, \
+                                     dense counted {}",
+                                    b.counter().get(),
+                                    dense_backend.counter().get()
+                                );
+                            }
+                            for (g, w) in got.iter().zip(&dense_out) {
+                                let tol = 2e-5 * (1.0 + w.abs());
+                                prop_assert!(
+                                    (g - w).abs() <= tol,
+                                    "{metric} d={d} density={density}: block {g} vs dense {w}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// `dist` (merge pair kernel) and `block` (scatter row kernel) must agree
+/// bitwise — the DistanceCache stores whichever computes first, so any
+/// divergence would make results depend on cache warm-up order.
+#[test]
+fn prop_sparse_dist_equals_block_bitwise() {
+    check("sparse-dist-vs-block", &cfg(6), |rng| {
+        let n = 24;
+        let (sp, _) = random_points(rng, n, 100, 0.15);
+        for &metric in METRICS {
+            let b = NativeBackend::new(&sp.points, metric);
+            let refs: Vec<usize> = (0..n).collect();
+            let got = block_of(&b, &[3, 17], &refs);
+            for (ri, &r) in refs.iter().enumerate() {
+                prop_assert!(
+                    got[ri].to_bits() == b.dist(3, r).to_bits(),
+                    "{metric} t=3 r={r}"
+                );
+                prop_assert!(
+                    got[n + ri].to_bits() == b.dist(17, r).to_bits(),
+                    "{metric} t=17 r={r}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The SwapSession per-candidate row cache stores permutation-order
+/// prefixes whose length is the number of consumed references — nothing
+/// about the feature storage — so it must serve sparse points verbatim:
+/// cached values bitwise-equal direct evaluation, and re-pulls cost zero.
+#[test]
+fn swap_session_prefix_rows_are_correct_for_sparse_points() {
+    let ds = synthetic::scrna_sparse(&mut Rng::seed_from(71), 50, 128, 0.10);
+    for cached in [false, true] {
+        let mut b = NativeBackend::new(&ds.points, Metric::L1);
+        if cached {
+            b = b.with_cache(1 << 14);
+        }
+        let mut s = SwapSession::new(50, 3, &BanditPamConfig::default(), &mut Rng::seed_from(5));
+        assert!(s.rows_enabled());
+        let first: Vec<usize> = s.shared_perm()[..20].to_vec();
+        s.pull_rows(&b, &[2, 31], &first);
+        let evals = b.counter().get();
+        // identical re-pull is served entirely from the session cache
+        s.pull_rows(&b, &[2, 31], &first);
+        assert_eq!(b.counter().get(), evals, "cached={cached}");
+        assert_eq!(s.evals_saved(), 2 * 20);
+        for &p in &[2usize, 31] {
+            for (t, &j) in first.iter().enumerate() {
+                assert_eq!(
+                    s.row(p)[t].to_bits(),
+                    b.dist(p, j).to_bits(),
+                    "cached={cached} p={p} j={j}"
+                );
+            }
+        }
+        s.ensure_full_row(&b, 2, true);
+        assert_eq!(s.row(2).len(), 50);
+    }
+}
+
+/// End-to-end parity: a seeded BanditPAM fit over sparse scRNA-like data
+/// must return the same medoids as the identical data run densely. The
+/// kernels differ only by the dense engine's f32 lane error, far below
+/// the arm-mean gaps of separated cell types.
+#[test]
+fn banditpam_fit_sparse_equals_densified_medoids() {
+    let n = 2000;
+    let sp = synthetic::scrna_sparse(&mut Rng::seed_from(2024), n, 256, 0.10);
+    let dn = sp.to_dense().unwrap();
+    let Points::Sparse(m) = &sp.points else { unreachable!() };
+    assert!(m.density() < 0.25, "scrna-like density, got {}", m.density());
+
+    let fit_sp = {
+        let backend = NativeBackend::new(&sp.points, Metric::L1).with_threads(2);
+        BanditPam::new(BanditPamConfig::default())
+            .fit(&backend, 5, &mut Rng::seed_from(9))
+            .expect("sparse fit")
+    };
+    let fit_dn = {
+        let backend = NativeBackend::new(&dn.points, Metric::L1).with_threads(2);
+        BanditPam::new(BanditPamConfig::default())
+            .fit(&backend, 5, &mut Rng::seed_from(9))
+            .expect("dense fit")
+    };
+    assert_eq!(fit_sp.medoids, fit_dn.medoids, "sparse vs densified medoids");
+    assert_eq!(fit_sp.assignments, fit_dn.assignments);
+    let tol = 1e-6 * (1.0 + fit_dn.loss.abs());
+    assert!(
+        (fit_sp.loss - fit_dn.loss).abs() <= tol,
+        "loss {} vs {}",
+        fit_sp.loss,
+        fit_dn.loss
+    );
+}
+
+/// Subsampling a sparse dataset (the paper's per-repetition protocol)
+/// selects the same points as subsampling its dense twin.
+#[test]
+fn sparse_subsample_matches_dense_subsample() {
+    let sp = synthetic::scrna_sparse(&mut Rng::seed_from(12), 200, 64, 0.10);
+    let dn = sp.to_dense().unwrap();
+    let a = sp.subsample(50, &mut Rng::seed_from(3));
+    let b = dn.subsample(50, &mut Rng::seed_from(3));
+    assert_eq!(a.labels, b.labels);
+    let (Points::Sparse(am), Points::Dense(bm)) = (&a.points, &b.points) else {
+        unreachable!()
+    };
+    assert_eq!(am.to_dense().as_slice(), bm.as_slice());
+}
