@@ -1,0 +1,182 @@
+//! Out-of-core CSR streaming bench: in-memory vs chunked `.mtx` load at
+//! several window budgets, the transpose (row-bucketing spill) path, and
+//! the streamed-subsample protocol end to end. Emits `BENCH_stream.json`
+//! for CI with peak-window nnz and wall times.
+//!
+//! Acceptance (ISSUE 4): every streamed result is **bitwise identical**
+//! to the in-memory path, and the chunked reader's recorded peak-window
+//! nnz stays under 25% of the file's total nnz at the default sweep
+//! budget — the bounded-memory claim, asserted here so CI enforces it.
+
+use banditpam::bench::bench_fn;
+use banditpam::data::stream::{self, StreamOptions};
+use banditpam::data::{loader, synthetic, Points};
+use banditpam::prelude::*;
+use banditpam::util::timer::Timer;
+
+fn main() {
+    let scale = banditpam::bench::Scale::from_env();
+    let iters = scale.pick(2, 5, 10);
+    println!("== streaming benches ({scale:?}, {iters} iters) ==");
+
+    let n = scale.pick(1_000, 6_000, 20_000);
+    let genes = scale.pick(256, 1024, 2048);
+    let ds = synthetic::scrna_sparse(&mut Rng::seed_from(42), n, genes, 0.10);
+    let Points::Sparse(csr) = &ds.points else { unreachable!() };
+    let total_nnz = csr.nnz();
+    let mtx = std::env::temp_dir().join(format!(
+        "banditpam_bench_stream_{}.mtx",
+        std::process::id()
+    ));
+    loader::save_mtx(&ds, &mtx).expect("write bench .mtx");
+    let bytes = std::fs::metadata(&mtx).map(|m| m.len()).unwrap_or(0);
+    println!("dataset: {} -> {} ({bytes} bytes, {total_nnz} nnz)", ds.name, mtx.display());
+
+    let mut json_rows: Vec<String> = Vec::new();
+
+    // --- full load: in-memory baseline --------------------------------
+    let mem = bench_fn("load mtx in-memory", 1, iters, || {
+        loader::load_mtx(&mtx, false, 0).expect("in-memory load")
+    });
+    println!("{}", mem.line());
+    json_rows.push(format!(
+        "{{\"kind\": \"load\", \"mode\": \"in-memory\", \"n\": {n}, \"d\": {genes}, \
+         \"total_nnz\": {total_nnz}, \"secs\": {:.9}}}",
+        mem.mean_secs
+    ));
+    let mem_ds = loader::load_mtx(&mtx, false, 0).expect("in-memory load");
+    let Points::Sparse(mem_csr) = &mem_ds.points else { unreachable!() };
+
+    // --- full load: streamed at bounded window budgets -----------------
+    for denom in [8usize, 32] {
+        let chunk = (total_nnz / denom).max(1);
+        let opts = StreamOptions { chunk_nnz: chunk, ..Default::default() };
+        let r = bench_fn(&format!("load mtx streamed chunk=nnz/{denom}"), 1, iters, || {
+            stream::load_mtx_streamed(&mtx, &opts).expect("streamed load").0
+        });
+        println!("{}", r.line());
+        let (st_ds, stats) = stream::load_mtx_streamed(&mtx, &opts).expect("streamed load");
+        let Points::Sparse(st_csr) = &st_ds.points else { unreachable!() };
+        assert_eq!(st_csr, mem_csr, "streamed load must be bitwise in-memory");
+        // Bounded memory: the per-window working set stays well under the
+        // full matrix (<25% of total nnz at these budgets).
+        assert!(
+            stats.peak_window_nnz * 4 < total_nnz,
+            "peak window {} nnz >= 25% of total {total_nnz}",
+            stats.peak_window_nnz
+        );
+        println!(
+            "    -> {} windows, peak window {} nnz ({:.1}% of total)",
+            stats.windows,
+            stats.peak_window_nnz,
+            100.0 * stats.peak_window_nnz as f64 / total_nnz as f64
+        );
+        json_rows.push(format!(
+            "{{\"kind\": \"load\", \"mode\": \"streamed\", \"n\": {n}, \"d\": {genes}, \
+             \"total_nnz\": {total_nnz}, \"chunk_nnz\": {chunk}, \"windows\": {}, \
+             \"peak_window_nnz\": {}, \"spilled\": {}, \"secs\": {:.9}}}",
+            stats.windows, stats.peak_window_nnz, stats.spilled, r.mean_secs
+        ));
+    }
+
+    // --- transpose: the on-disk row-bucketing spill path ---------------
+    {
+        let chunk = (total_nnz / 8).max(1);
+        let opts = StreamOptions { chunk_nnz: chunk, transpose: true, limit: 0 };
+        let t = Timer::start();
+        let (st_ds, stats) = stream::load_mtx_streamed(&mtx, &opts).expect("spill load");
+        let secs = t.secs();
+        let mem_t = loader::load_mtx(&mtx, true, 0).expect("in-memory transpose");
+        let (Points::Sparse(a), Points::Sparse(b)) = (&st_ds.points, &mem_t.points) else {
+            unreachable!()
+        };
+        assert_eq!(a, b, "transpose spill must be bitwise in-memory");
+        assert!(stats.spilled, "row-major input under transpose must spill");
+        println!(
+            "load mtx streamed --transpose (spill): {secs:.3}s, {} windows, peak window {} nnz",
+            stats.windows, stats.peak_window_nnz
+        );
+        json_rows.push(format!(
+            "{{\"kind\": \"load\", \"mode\": \"streamed-transpose-spill\", \"n\": {n}, \
+             \"d\": {genes}, \"total_nnz\": {total_nnz}, \"chunk_nnz\": {chunk}, \
+             \"windows\": {}, \"peak_window_nnz\": {}, \"spilled\": true, \"secs\": {secs:.9}}}",
+            stats.windows, stats.peak_window_nnz
+        ));
+    }
+
+    // --- the experimental protocol: subsample + fit --------------------
+    let sub_n = (n / 4).max(1);
+    let k = 5;
+    let mut rng_mem = Rng::seed_from(9);
+    let t = Timer::start();
+    let sub_mem = mem_ds.subsample(sub_n, &mut rng_mem);
+    let mem_secs = t.secs();
+    let chunk = (total_nnz / 8).max(1);
+    let mut rng_st = Rng::seed_from(9);
+    let t = Timer::start();
+    let (sub_st, stats) = stream::subsample_mtx_streamed(
+        &mtx,
+        &StreamOptions { chunk_nnz: chunk, ..Default::default() },
+        sub_n,
+        &mut rng_st,
+    )
+    .expect("streamed subsample");
+    let st_secs = t.secs();
+    {
+        let (Points::Sparse(a), Points::Sparse(b)) = (&sub_mem.points, &sub_st.points) else {
+            unreachable!()
+        };
+        assert_eq!(a, b, "streamed subsample must be bitwise in-memory");
+        assert!(
+            stats.peak_resident_nnz <= a.nnz() + stats.peak_window_nnz,
+            "subsample residency bound"
+        );
+    }
+    println!(
+        "subsample {sub_n}/{n}: in-memory {mem_secs:.3}s vs streamed {st_secs:.3}s \
+         (peak resident {} nnz vs {} total)",
+        stats.peak_resident_nnz, total_nnz
+    );
+    json_rows.push(format!(
+        "{{\"kind\": \"subsample\", \"n\": {n}, \"sub_n\": {sub_n}, \"total_nnz\": {total_nnz}, \
+         \"chunk_nnz\": {chunk}, \"peak_resident_nnz\": {}, \"peak_window_nnz\": {}, \
+         \"mem_secs\": {mem_secs:.9}, \"stream_secs\": {st_secs:.9}}}",
+        stats.peak_resident_nnz, stats.peak_window_nnz
+    ));
+
+    let mut fits = Vec::new();
+    for (name, points, rng) in
+        [("in-memory", &sub_mem.points, &mut rng_mem), ("streamed", &sub_st.points, &mut rng_st)]
+    {
+        let backend = NativeBackend::new(points, Metric::L1).with_threads(4);
+        let t = Timer::start();
+        let fit = BanditPam::new(BanditPamConfig::default())
+            .fit(&backend, k, rng)
+            .expect("fit");
+        let secs = t.secs();
+        println!(
+            "fit {name:>9}: n={sub_n} k={k} loss={:.3} evals={} {secs:.3}s",
+            fit.loss, fit.stats.distance_evals
+        );
+        json_rows.push(format!(
+            "{{\"kind\": \"fit\", \"source\": \"{name}\", \"n\": {sub_n}, \"k\": {k}, \
+             \"loss\": {}, \"evals\": {}, \"wall_secs\": {secs:.6}}}",
+            fit.loss, fit.stats.distance_evals
+        ));
+        fits.push(fit);
+    }
+    assert_eq!(fits[0].medoids, fits[1].medoids, "medoid parity");
+    assert_eq!(fits[0].assignments, fits[1].assignments, "assignment parity");
+    assert_eq!(
+        fits[0].stats.distance_evals, fits[1].stats.distance_evals,
+        "eval counter parity"
+    );
+    println!("fit parity in-memory vs streamed-subsample: identical");
+
+    let doc = format!("[\n  {}\n]\n", json_rows.join(",\n  "));
+    match std::fs::write("BENCH_stream.json", &doc) {
+        Ok(()) => println!("wrote BENCH_stream.json"),
+        Err(e) => println!("BENCH_stream.json: write failed ({e})"),
+    }
+    let _ = std::fs::remove_file(&mtx);
+}

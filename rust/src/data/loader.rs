@@ -8,7 +8,7 @@
 //! `--transpose` since 10x ships genes x cells) for the scRNA workload.
 
 use crate::data::sparse::CsrMatrix;
-use crate::data::{Dataset, Points};
+use crate::data::{stream, Dataset, Points};
 use crate::util::matrix::Matrix;
 use anyhow::{bail, Context, Result};
 use std::io::Read;
@@ -67,86 +67,67 @@ pub fn save_csv(ds: &Dataset, path: &Path) -> Result<()> {
     Ok(())
 }
 
-/// Load a Matrix Market coordinate (triplet) file as a sparse dataset.
+/// Load a Matrix Market coordinate (triplet) file as a sparse dataset,
+/// materializing every triplet in memory.
 ///
 /// Supports the 10x Genomics flavor: `%%MatrixMarket matrix coordinate
 /// {real|integer|pattern} general`, `%`-comment lines, a `rows cols nnz`
 /// size line, then 1-based `row col [value]` entries (`pattern` files get
-/// value 1). Duplicate coordinates are summed and explicit zeros dropped
-/// ([`CsrMatrix::from_triplets`] semantics). `transpose` swaps the axes on
-/// ingest — 10x matrices are genes x cells, and points must be rows.
-pub fn load_mtx(path: &Path, transpose: bool) -> Result<Dataset> {
-    let text = std::fs::read_to_string(path)
-        .with_context(|| format!("reading {}", path.display()))?;
-    let mut lines = text.lines().enumerate();
-    let (_, header) = lines.next().context("empty .mtx file")?;
-    let header = header.to_ascii_lowercase();
-    if !header.starts_with("%%matrixmarket") {
-        bail!("{}: missing %%MatrixMarket header", path.display());
+/// value 1). Duplicate coordinates are summed in file order and explicit
+/// zeros dropped ([`CsrMatrix::from_triplets`] semantics). `transpose`
+/// swaps the axes on ingest — 10x matrices are genes x cells, and points
+/// must be rows. `limit` caps the output rows (**post-transpose**, so it
+/// counts cells, not genes, on a transposed 10x file; 0 = all) — the
+/// chunked reader in [`crate::data::stream`] applies it identically.
+///
+/// The grammar (and every accept/reject decision) is shared with the
+/// out-of-core reader via [`stream::MtxScanner`]; the two paths are
+/// bitwise-interchangeable, and [`load_mtx_auto`] picks between them by
+/// file size.
+pub fn load_mtx(path: &Path, transpose: bool, limit: usize) -> Result<Dataset> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut scanner = stream::MtxScanner::open(std::io::BufReader::new(file), path)?;
+    let (full_rows, cols) = if transpose {
+        (scanner.cols(), scanner.rows())
+    } else {
+        (scanner.rows(), scanner.cols())
+    };
+    let rows = stream::effective_rows(full_rows, limit);
+    // Cap the reserve so a lying size line cannot force a huge allocation
+    // before the (validating) scan finds the mismatch.
+    let mut triplets: Vec<(usize, usize, f32)> =
+        Vec::with_capacity(scanner.nnz().min(1 << 24));
+    while let Some((i, j, v)) = scanner.next_entry()? {
+        let (r, c) = if transpose { (j, i) } else { (i, j) };
+        if r < rows {
+            triplets.push((r, c, v));
+        }
     }
-    if !header.contains("coordinate") {
-        bail!("{}: only coordinate (triplet) .mtx is supported", path.display());
-    }
-    if header.contains("symmetric") || header.contains("skew") || header.contains("hermitian") {
-        bail!("{}: only `general` symmetry is supported", path.display());
-    }
-    if header.contains("complex") {
-        bail!("{}: complex values are not supported", path.display());
-    }
-    let pattern = header.contains("pattern");
+    let csr = CsrMatrix::from_triplet_vec(rows, cols, triplets);
+    Ok(Dataset::sparse(csr, stream::mtx_name(path, rows, cols)))
+}
 
-    let mut size: Option<(usize, usize, usize)> = None;
-    let mut triplets: Vec<(usize, usize, f32)> = Vec::new();
-    for (lineno, line) in lines {
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('%') {
-            continue;
-        }
-        let mut fields = line.split_whitespace();
-        let at = |f: Option<&str>| {
-            f.with_context(|| format!("line {} of {}: missing field", lineno + 1, path.display()))
-        };
-        if size.is_none() {
-            let r: usize = at(fields.next())?.parse().context("size line rows")?;
-            let c: usize = at(fields.next())?.parse().context("size line cols")?;
-            let nnz: usize = at(fields.next())?.parse().context("size line nnz")?;
-            size = Some((r, c, nnz));
-            triplets.reserve(nnz);
-            continue;
-        }
-        let Some((rows, cols, _)) = size else { unreachable!() };
-        let i: usize = at(fields.next())?.parse().context("entry row")?;
-        let j: usize = at(fields.next())?.parse().context("entry col")?;
-        let v: f32 = if pattern {
-            1.0
-        } else {
-            at(fields.next())?.parse().context("entry value")?
-        };
-        if i == 0 || j == 0 || i > rows || j > cols {
-            bail!(
-                "line {} of {}: entry ({i}, {j}) outside 1..={rows} x 1..={cols}",
-                lineno + 1,
-                path.display()
-            );
-        }
-        // to 0-based, transposing on ingest if requested
-        if transpose {
-            triplets.push((j - 1, i - 1, v));
-        } else {
-            triplets.push((i - 1, j - 1, v));
-        }
+/// `.mtx` files at or above this many bytes stream through the chunked
+/// out-of-core reader by default instead of materializing every triplet
+/// (see [`load_mtx_auto`]).
+pub const MTX_STREAM_THRESHOLD_BYTES: u64 = 256 << 20;
+
+/// Load a `.mtx` file, picking the in-memory reader for small files and
+/// the chunked streaming reader (default window budget) once the file
+/// size reaches [`MTX_STREAM_THRESHOLD_BYTES`]. The two paths return
+/// bitwise-identical datasets, so the switch is purely a memory-profile
+/// decision; `--stream` on the CLI forces the chunked path regardless.
+pub fn load_mtx_auto(path: &Path, transpose: bool, limit: usize) -> Result<Dataset> {
+    let bytes = std::fs::metadata(path)
+        .with_context(|| format!("reading {}", path.display()))?
+        .len();
+    if bytes >= MTX_STREAM_THRESHOLD_BYTES {
+        let opts = stream::StreamOptions { transpose, limit, ..Default::default() };
+        Ok(stream::load_mtx_streamed(path, &opts)?.0)
+    } else {
+        load_mtx(path, transpose, limit)
     }
-    let (rows, cols, nnz) = size.with_context(|| format!("{}: missing size line", path.display()))?;
-    if triplets.len() != nnz {
-        bail!(
-            "{}: size line promises {nnz} entries, found {}",
-            path.display(),
-            triplets.len()
-        );
-    }
-    let (rows, cols) = if transpose { (cols, rows) } else { (rows, cols) };
-    let csr = CsrMatrix::from_triplets(rows, cols, &triplets);
-    Ok(Dataset::sparse(csr, format!("{}[{}x{}]", path.display(), rows, cols)))
 }
 
 /// Save a dataset as a Matrix Market coordinate file (points = rows).
@@ -284,7 +265,7 @@ mod tests {
               3 4 -2\n\
               2 2 0.25\n",
         );
-        let d = load_mtx(&p, false).unwrap();
+        let d = load_mtx(&p, false, 0).unwrap();
         assert_eq!(d.len(), 3);
         assert_eq!(d.points.dim(), Some(4));
         let Points::Sparse(m) = &d.points else { unreachable!() };
@@ -302,7 +283,7 @@ mod tests {
             "t.mtx",
             b"%%MatrixMarket matrix coordinate integer general\n2 3 2\n1 3 7\n2 1 5\n",
         );
-        let d = load_mtx(&p, true).unwrap();
+        let d = load_mtx(&p, true, 0).unwrap();
         assert_eq!(d.len(), 3);
         assert_eq!(d.points.dim(), Some(2));
         let Points::Sparse(m) = &d.points else { unreachable!() };
@@ -318,7 +299,7 @@ mod tests {
             "p.mtx",
             b"%%MatrixMarket matrix coordinate pattern general\n2 2 2\n1 2\n2 1\n",
         );
-        let d = load_mtx(&p, false).unwrap();
+        let d = load_mtx(&p, false, 0).unwrap();
         let Points::Sparse(m) = &d.points else { unreachable!() };
         assert_eq!(m.row(0), (&[1u32][..], &[1.0f32][..]));
         assert_eq!(m.row(1), (&[0u32][..], &[1.0f32][..]));
@@ -331,7 +312,7 @@ mod tests {
         let ds = crate::data::synthetic::scrna_sparse(&mut rng, 12, 40, 0.10);
         let p = tmpfile("rt.mtx", b"");
         save_mtx(&ds, &p).unwrap();
-        let back = load_mtx(&p, false).unwrap();
+        let back = load_mtx(&p, false, 0).unwrap();
         let (Points::Sparse(a), Points::Sparse(b)) = (&ds.points, &back.points) else {
             unreachable!()
         };
@@ -339,7 +320,7 @@ mod tests {
         // dense datasets are compressed on save
         let dn = ds.to_dense().unwrap();
         save_mtx(&dn, &p).unwrap();
-        let back2 = load_mtx(&p, false).unwrap();
+        let back2 = load_mtx(&p, false, 0).unwrap();
         let Points::Sparse(c) = &back2.points else { unreachable!() };
         assert_eq!(a, c);
         let _ = std::fs::remove_file(p);
@@ -355,7 +336,7 @@ mod tests {
             ("h5.mtx", b"%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1\n"),
         ] {
             let p = tmpfile(name, contents);
-            assert!(load_mtx(&p, false).is_err(), "{name} should be rejected");
+            assert!(load_mtx(&p, false, 0).is_err(), "{name} should be rejected");
             let _ = std::fs::remove_file(p);
         }
     }

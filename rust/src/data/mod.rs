@@ -12,6 +12,7 @@ pub mod ast;
 pub mod loader;
 pub mod pca;
 pub mod sparse;
+pub mod stream;
 pub mod synthetic;
 
 use crate::util::matrix::Matrix;
@@ -140,6 +141,15 @@ impl Dataset {
     /// Wrap existing points with no labels (name "anonymous").
     pub fn dense_from_points(points: Points) -> Dataset {
         Dataset { points, labels: None, name: "anonymous".into() }
+    }
+
+    /// Assemble a dataset from an out-of-core chunked reader
+    /// ([`stream::CsrChunkReader`]), window by window — bitwise-identical
+    /// to loading the same file in memory, but only ever holding one
+    /// row-window of values beyond the growing result.
+    pub fn from_stream(reader: &mut stream::CsrChunkReader) -> anyhow::Result<Dataset> {
+        let name = reader.source_name();
+        Ok(Dataset::sparse(reader.read_all()?, name))
     }
 
     /// Number of points.

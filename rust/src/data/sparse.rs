@@ -77,9 +77,30 @@ impl CsrMatrix {
     /// Build from `(row, col, value)` triplets in any order. Duplicate
     /// coordinates are summed (Matrix Market semantics); entries that are
     /// (or sum to) zero are dropped. Panics on out-of-bounds coordinates.
+    ///
+    /// The sort is **stable**, so duplicate coordinates sum in input
+    /// order. This makes the result a function of the triplet *sequence*
+    /// restricted to each row: partitioning the rows, building each part
+    /// from its own triplet subsequence and concatenating yields the same
+    /// bits as one global build. The out-of-core window reader
+    /// ([`crate::data::stream`]) is bitwise-identical to the in-memory
+    /// loader because of exactly this property.
     pub fn from_triplets(rows: usize, cols: usize, triplets: &[(usize, usize, f32)]) -> CsrMatrix {
-        let mut sorted: Vec<(usize, usize, f32)> = triplets.to_vec();
-        sorted.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        CsrMatrix::from_triplet_vec(rows, cols, triplets.to_vec())
+    }
+
+    /// Owning variant of [`CsrMatrix::from_triplets`]: sorts the vector in
+    /// place instead of cloning it first. The loaders use this on the
+    /// memory-sensitive `.mtx` paths; peak transient triplet memory is
+    /// ~1.5 copies (the parity-critical *stable* sort allocates an
+    /// auxiliary buffer of up to half the slice), not the 2 copies the
+    /// borrow-then-clone form costs.
+    pub fn from_triplet_vec(
+        rows: usize,
+        cols: usize,
+        mut sorted: Vec<(usize, usize, f32)>,
+    ) -> CsrMatrix {
+        sorted.sort_by_key(|&(r, c, _)| (r, c));
         let mut indptr = vec![0usize; rows + 1];
         let mut indices = Vec::with_capacity(sorted.len());
         let mut values: Vec<f32> = Vec::with_capacity(sorted.len());
@@ -204,6 +225,13 @@ impl CsrMatrix {
         CsrMatrix::from_parts(idx.len(), self.cols, indptr, indices, values)
     }
 
+    /// The raw CSR arrays as `(indptr, indices, values)` slices — the
+    /// inverse of [`CsrMatrix::from_parts`]. Used by the out-of-core
+    /// window assembler and the bitwise parity tests.
+    pub fn parts(&self) -> (&[usize], &[u32], &[f32]) {
+        (&self.indptr, &self.indices, &self.values)
+    }
+
     /// Iterate all stored entries as `(row, col, value)` in row-major order
     /// (the Matrix Market writer's canonical order).
     pub fn triplets(&self) -> impl Iterator<Item = (usize, usize, f32)> + '_ {
@@ -235,6 +263,9 @@ mod tests {
         assert_eq!(m.nnz(), 3);
         assert_eq!(m.row(0), (&[1u32][..], &[1.0f32][..]));
         assert_eq!(m.row(1), (&[0u32, 2][..], &[2.0f32, 5.0][..]));
+        // the owning (no-clone) variant is the same constructor
+        let v = CsrMatrix::from_triplet_vec(2, 3, vec![(1, 2, 5.0), (0, 1, 1.0), (1, 0, 2.0)]);
+        assert_eq!(v, m);
     }
 
     #[test]
@@ -247,6 +278,35 @@ mod tests {
         assert_eq!(m.row(0), (&[0u32][..], &[2.0f32][..]));
         assert_eq!(m.row(1), (&[0u32][..], &[3.0f32][..]));
         assert_eq!(m.nnz(), 2);
+    }
+
+    /// Duplicate summation is order-sensitive in f32; the stable sort pins
+    /// it to input order. 1e8 + 1.0 rounds back to 1e8, so summing in input
+    /// order cancels to exactly zero (run dropped); any reordering that
+    /// sums 1e8 - 1e8 first would keep a 1.0.
+    #[test]
+    fn duplicate_summation_is_input_ordered() {
+        let m = CsrMatrix::from_triplets(
+            1,
+            2,
+            &[(0, 0, 1e8), (0, 0, 1.0), (0, 0, -1e8), (0, 1, 5.0)],
+        );
+        assert_eq!(m.row(0), (&[1u32][..], &[5.0f32][..]));
+        assert_eq!(m.nnz(), 1);
+    }
+
+    #[test]
+    fn parts_roundtrip_through_from_parts() {
+        let m = fixture();
+        let (indptr, indices, values) = m.parts();
+        let rebuilt = CsrMatrix::from_parts(
+            m.rows(),
+            m.cols(),
+            indptr.to_vec(),
+            indices.to_vec(),
+            values.to_vec(),
+        );
+        assert_eq!(rebuilt, m);
     }
 
     #[test]

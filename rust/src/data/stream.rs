@@ -1,0 +1,904 @@
+//! Out-of-core (chunked) streaming for Matrix Market sparse data.
+//!
+//! The paper's headline sparse workload — 10x Genomics-style scRNA-seq
+//! matrices — is exactly the data that stops fitting in memory first, yet
+//! the in-memory loader ([`crate::data::loader::load_mtx`]) materializes
+//! every triplet before `subsample` ever runs. BanditPAM itself only needs
+//! a bounded working set per iteration, and the experimental protocol only
+//! ever fits a *subsample* per repetition, so the data plane can match the
+//! algorithm's memory profile: [`CsrChunkReader`] reads the `.mtx` header,
+//! then yields validated [`CsrMatrix`] **row-windows** under a configurable
+//! raw-entry budget ([`StreamOptions::chunk_nnz`]); the streamed
+//! subsampler ([`CsrChunkReader::subsample_rows`]) pre-draws the identical
+//! index set as [`crate::data::Dataset::subsample`] (same rng stream) and
+//! collects it in one forward pass, holding only
+//! `selected nnz + current window nnz` values.
+//!
+//! Window invariants (see `rust/PERF.md` §8 for the design rationale):
+//!
+//! * windows partition the output row range `[0, rows)` in order; a window
+//!   never splits a row, always contains at least one row, and its raw
+//!   entry count exceeds `chunk_nnz` only when a single row does;
+//! * each window's triplet subsequence preserves **file order**, so
+//!   per-window [`CsrMatrix::from_triplets`] (stable sort + input-order
+//!   duplicate summation) concatenates to the exact bits the in-memory
+//!   loader produces from one global build;
+//! * `transpose` (10x files are genes x cells) and any row `limit` are
+//!   applied on ingest, *before* windowing, so the streamed and in-memory
+//!   readers agree on what a "row" is.
+//!
+//! Files whose (post-transpose) entries already arrive grouped by
+//! non-decreasing output row — our own writer's row-major output, or a
+//! column-major 10x file read with `--transpose` — stream straight off a
+//! second text pass. Anything else goes through an on-disk two-pass
+//! row-bucketing spill: pass 1 counts entries per output row (an O(rows)
+//! index array, no values), pass 2 scatters fixed-width binary records
+//! into per-window byte ranges of a temp file, preserving file order
+//! within each window; windows are then read back sequentially.
+
+use crate::data::sparse::CsrMatrix;
+use crate::data::Dataset;
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::{HashMap, HashSet};
+use std::fs::File;
+use std::io::{BufRead, BufReader, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Default per-window raw-entry budget: ~12 MiB of spill records, a few
+/// hundred thousand cells' worth of a 10x matrix per window.
+pub const DEFAULT_CHUNK_NNZ: usize = 1 << 20;
+
+/// Largest accepted `.mtx` dimension per axis (rows or columns). Loading
+/// a matrix takes O(rows) index memory no matter the path (`indptr` alone
+/// is rows+1 words), so a lying size line must be rejected before it can
+/// force an allocation-failure abort; 2^27 is ~2000x the paper's largest
+/// corpus while capping `indptr` near 1 GiB.
+pub const MAX_DIM: usize = 1 << 27;
+
+/// How the chunked reader ingests a `.mtx` file.
+#[derive(Debug, Clone)]
+pub struct StreamOptions {
+    /// Raw-entry budget per row-window (clamped to >= 1). A window may
+    /// exceed it only when one row alone does — rows are never split.
+    pub chunk_nnz: usize,
+    /// Swap the axes on ingest (10x files are genes x cells; points must
+    /// be rows).
+    pub transpose: bool,
+    /// Cap on output rows (**post-transpose**, matching the in-memory
+    /// loader); 0 = all rows.
+    pub limit: usize,
+}
+
+impl Default for StreamOptions {
+    fn default() -> StreamOptions {
+        StreamOptions { chunk_nnz: DEFAULT_CHUNK_NNZ, transpose: false, limit: 0 }
+    }
+}
+
+/// Counters describing a completed streaming pass.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StreamStats {
+    /// Row-windows the reader planned (and yields).
+    pub windows: usize,
+    /// The raw-entry budget the plan used.
+    pub chunk_nnz: usize,
+    /// Entries the size line declared (pre-limit).
+    pub total_nnz: usize,
+    /// Raw entries within the row limit (what the windows cover).
+    pub kept_nnz: usize,
+    /// Largest raw entry count of any single window — the per-window
+    /// working set the bounded-memory claim is about.
+    pub peak_window_nnz: usize,
+    /// For [`CsrChunkReader::subsample_rows`]: the largest
+    /// `selected-so-far + current-window` value count held at once. For
+    /// [`CsrChunkReader::read_all`] this is the final assembled nnz (the
+    /// full matrix is the deliverable there).
+    pub peak_resident_nnz: usize,
+    /// Whether the on-disk row-bucketing spill was needed (entries not
+    /// already grouped by output row).
+    pub spilled: bool,
+}
+
+/// One yielded row-window: rows `[start_row, start_row + matrix.rows())`
+/// of the full (post-transpose, post-limit) matrix, full column space.
+#[derive(Debug, Clone)]
+pub struct CsrWindow {
+    pub start_row: usize,
+    pub matrix: CsrMatrix,
+}
+
+/// `rows` capped by a `limit` option (0 = uncapped).
+pub(crate) fn effective_rows(rows: usize, limit: usize) -> usize {
+    if limit == 0 {
+        rows
+    } else {
+        rows.min(limit)
+    }
+}
+
+/// The canonical dataset name both loaders use: `"{path}[{rows}x{cols}]"`.
+pub(crate) fn mtx_name(path: &Path, rows: usize, cols: usize) -> String {
+    format!("{}[{}x{}]", path.display(), rows, cols)
+}
+
+fn parse_field<T: std::str::FromStr>(
+    field: Option<&str>,
+    what: &str,
+    lineno: usize,
+    display: &str,
+) -> Result<T> {
+    let s = field
+        .with_context(|| format!("line {lineno} of {display}: missing {what}"))?;
+    s.parse::<T>()
+        .map_err(|_| anyhow::anyhow!("line {lineno} of {display}: bad {what} {s:?}"))
+}
+
+/// Incremental Matrix Market coordinate parser: the single grammar both
+/// the in-memory and chunked readers consume, so they accept and reject
+/// exactly the same files. Yields 0-based `(row, col, value)` entries in
+/// **file coordinates** (callers apply `transpose`/`limit`), validating
+/// the header, the size line (shape within the [`MAX_DIM`] per-axis
+/// ceiling; an unparseable nnz is a clean error), every entry's range, and the
+/// promised-vs-found entry count (truncated or over-full bodies are
+/// errors, not panics).
+pub(crate) struct MtxScanner<B: BufRead> {
+    src: B,
+    line: String,
+    lineno: usize,
+    display: String,
+    pattern: bool,
+    rows: usize,
+    cols: usize,
+    nnz: usize,
+    read: usize,
+}
+
+impl<B: BufRead> MtxScanner<B> {
+    pub(crate) fn open(mut src: B, path: &Path) -> Result<MtxScanner<B>> {
+        let display = path.display().to_string();
+        let mut line = String::new();
+        let mut lineno = 1usize;
+        if src.read_line(&mut line)? == 0 {
+            bail!("empty .mtx file {display}");
+        }
+        let header = line.trim().to_ascii_lowercase();
+        if !header.starts_with("%%matrixmarket") {
+            bail!("{display}: missing %%MatrixMarket header");
+        }
+        if !header.contains("coordinate") {
+            bail!("{display}: only coordinate (triplet) .mtx is supported");
+        }
+        if header.contains("symmetric") || header.contains("skew") || header.contains("hermitian")
+        {
+            bail!("{display}: only `general` symmetry is supported");
+        }
+        if header.contains("complex") {
+            bail!("{display}: complex values are not supported");
+        }
+        let pattern = header.contains("pattern");
+
+        // Size line: first non-comment, non-blank line after the header.
+        let (rows, cols, nnz) = loop {
+            line.clear();
+            lineno += 1;
+            if src.read_line(&mut line)? == 0 {
+                bail!("{display}: missing size line");
+            }
+            let trimmed = line.trim();
+            if trimmed.is_empty() || trimmed.starts_with('%') {
+                continue;
+            }
+            let mut fields = trimmed.split_whitespace();
+            let rows: usize = parse_field(fields.next(), "size line rows", lineno, &display)?;
+            let cols: usize = parse_field(fields.next(), "size line cols", lineno, &display)?;
+            let nnz: usize = parse_field(fields.next(), "size line nnz", lineno, &display)?;
+            break (rows, cols, nnz);
+        };
+        // Guard the declared shape before any O(rows) allocation: both
+        // readers eventually build rows+1 `indptr` entries (and the
+        // chunked reader an O(rows) counting pass), so a lying size line
+        // must not force a multi-GB allocation from a 50-byte file —
+        // that aborts, not Errs. `MAX_DIM` (2^27 per axis, ~1 GiB of
+        // indptr at the ceiling) is far above any workload this crate
+        // targets and keeps either axis within the CSR's u32 column
+        // space under --transpose. A declared nnz larger than rows*cols
+        // is *not* rejected — duplicate coordinates are legal and summed
+        // — and a lying nnz cannot force allocation either: neither
+        // reader sizes a buffer by the declared count (the in-memory
+        // loader caps its reserve; the chunked reader counts actual
+        // entries), and an unparseable nnz already failed above.
+        if rows > MAX_DIM || cols > MAX_DIM {
+            bail!(
+                "{display}: shape {rows} x {cols} exceeds the supported {MAX_DIM} per-axis ceiling"
+            );
+        }
+        Ok(MtxScanner { src, line, lineno, display, pattern, rows, cols, nnz, read: 0 })
+    }
+
+    pub(crate) fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub(crate) fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub(crate) fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Next 0-based `(row, col, value)` entry in file coordinates, or
+    /// `None` at a well-formed end of body.
+    pub(crate) fn next_entry(&mut self) -> Result<Option<(usize, usize, f32)>> {
+        loop {
+            self.line.clear();
+            self.lineno += 1;
+            if self.src.read_line(&mut self.line)? == 0 {
+                if self.read != self.nnz {
+                    bail!(
+                        "{}: size line promises {} entries, found {}",
+                        self.display,
+                        self.nnz,
+                        self.read
+                    );
+                }
+                return Ok(None);
+            }
+            let trimmed = self.line.trim();
+            if trimmed.is_empty() || trimmed.starts_with('%') {
+                continue;
+            }
+            if self.read == self.nnz {
+                bail!(
+                    "{}: size line promises {} entries, found more at line {}",
+                    self.display,
+                    self.nnz,
+                    self.lineno
+                );
+            }
+            let lineno = self.lineno;
+            let mut fields = trimmed.split_whitespace();
+            let i: usize = parse_field(fields.next(), "entry row", lineno, &self.display)?;
+            let j: usize = parse_field(fields.next(), "entry col", lineno, &self.display)?;
+            let v: f32 = if self.pattern {
+                1.0
+            } else {
+                parse_field(fields.next(), "entry value", lineno, &self.display)?
+            };
+            if i == 0 || j == 0 || i > self.rows || j > self.cols {
+                bail!(
+                    "line {lineno} of {}: entry ({i}, {j}) outside 1..={} x 1..={}",
+                    self.display,
+                    self.rows,
+                    self.cols
+                );
+            }
+            self.read += 1;
+            return Ok(Some((i - 1, j - 1, v)));
+        }
+    }
+}
+
+/// One planned row-window: output rows `[start, end)` holding `raw`
+/// pre-dedup entries.
+#[derive(Debug, Clone, Copy)]
+struct Window {
+    start: usize,
+    end: usize,
+    raw: usize,
+}
+
+/// Spill record layout: `row: u32 | col: u32 | value: f32`, little-endian.
+const SPILL_REC: usize = 12;
+
+static SPILL_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+enum Body {
+    /// Entries arrive grouped by non-decreasing output row: window `w+1`'s
+    /// entries follow window `w`'s in the text itself, so a second
+    /// sequential parse suffices.
+    Ordered(MtxScanner<BufReader<File>>),
+    /// Row-bucketed binary spill (sequential per-window byte ranges).
+    Spill(BufReader<File>),
+}
+
+/// Chunked `.mtx` reader: parses the header eagerly, plans row-windows
+/// under the `chunk_nnz` budget from an O(rows) counting pass, then yields
+/// validated [`CsrMatrix`] windows one at a time. Peak *value* residency
+/// is one window (plus its raw triplet buffer) — never the full matrix.
+pub struct CsrChunkReader {
+    path: PathBuf,
+    opts: StreamOptions,
+    rows: usize,
+    cols: usize,
+    total_nnz: usize,
+    kept_nnz: usize,
+    windows: Vec<Window>,
+    body: Body,
+    cursor: usize,
+    peak_window_nnz: usize,
+    peak_resident_nnz: usize,
+    spilled: bool,
+    spill_path: Option<PathBuf>,
+}
+
+impl CsrChunkReader {
+    /// Open and validate `path`, plan the row-windows, and (only when the
+    /// file's entries are not already grouped by output row) build the
+    /// on-disk spill. Every input-validation failure is a clean `Err`.
+    pub fn open(path: &Path, opts: StreamOptions) -> Result<CsrChunkReader> {
+        let opts = StreamOptions { chunk_nnz: opts.chunk_nnz.max(1), ..opts };
+        let open_scanner = || -> Result<MtxScanner<BufReader<File>>> {
+            let file = File::open(path)
+                .with_context(|| format!("opening {}", path.display()))?;
+            MtxScanner::open(BufReader::new(file), path)
+        };
+
+        // Pass 1: count raw entries per output row and detect grouping.
+        let mut scanner = open_scanner()?;
+        let (full_rows, cols) = if opts.transpose {
+            (scanner.cols(), scanner.rows())
+        } else {
+            (scanner.rows(), scanner.cols())
+        };
+        let rows = effective_rows(full_rows, opts.limit);
+        let total_nnz = scanner.nnz();
+        let mut counts = vec![0usize; rows];
+        let mut kept_nnz = 0usize;
+        let mut ordered = true;
+        let mut last_row: Option<usize> = None;
+        while let Some((i, j, _)) = scanner.next_entry()? {
+            let r = if opts.transpose { j } else { i };
+            if r >= rows {
+                continue;
+            }
+            counts[r] += 1;
+            kept_nnz += 1;
+            if last_row.is_some_and(|last| r < last) {
+                ordered = false;
+            }
+            last_row = Some(r);
+        }
+
+        // Window plan: accumulate whole rows while the raw budget holds;
+        // a window always takes at least one row.
+        let mut windows = Vec::new();
+        let mut start = 0usize;
+        while start < rows {
+            let mut end = start;
+            let mut raw = 0usize;
+            while end < rows && (end == start || raw + counts[end] <= opts.chunk_nnz) {
+                raw += counts[end];
+                end += 1;
+            }
+            windows.push(Window { start, end, raw });
+            start = end;
+        }
+        let peak_window_nnz = windows.iter().map(|w| w.raw).max().unwrap_or(0);
+
+        let (body, spill_path) = if ordered {
+            (Body::Ordered(open_scanner()?), None)
+        } else {
+            let (reader, spill_path) = build_spill(path, &opts, rows, &windows)?;
+            (Body::Spill(reader), Some(spill_path))
+        };
+        Ok(CsrChunkReader {
+            path: path.to_path_buf(),
+            spilled: !ordered,
+            opts,
+            rows,
+            cols,
+            total_nnz,
+            kept_nnz,
+            windows,
+            body,
+            cursor: 0,
+            peak_window_nnz,
+            peak_resident_nnz: 0,
+            spill_path,
+        })
+    }
+
+    /// Output rows (post-transpose, post-limit).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Output columns (post-transpose).
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Entries the size line declared (pre-limit, pre-dedup).
+    pub fn declared_nnz(&self) -> usize {
+        self.total_nnz
+    }
+
+    /// The dataset name the in-memory loader would assign to this source.
+    pub fn source_name(&self) -> String {
+        mtx_name(&self.path, self.rows, self.cols)
+    }
+
+    /// Counters for the pass so far (windows/peaks are fixed by the plan).
+    pub fn stats(&self) -> StreamStats {
+        StreamStats {
+            windows: self.windows.len(),
+            chunk_nnz: self.opts.chunk_nnz,
+            total_nnz: self.total_nnz,
+            kept_nnz: self.kept_nnz,
+            peak_window_nnz: self.peak_window_nnz,
+            peak_resident_nnz: self.peak_resident_nnz,
+            spilled: self.spilled,
+        }
+    }
+
+    /// Yield the next row-window, or `None` once the row range is covered.
+    pub fn next_window(&mut self) -> Result<Option<CsrWindow>> {
+        if self.cursor == self.windows.len() {
+            return Ok(None);
+        }
+        let Window { start, end, raw } = self.windows[self.cursor];
+        let mut triplets: Vec<(usize, usize, f32)> = Vec::with_capacity(raw);
+        match &mut self.body {
+            Body::Ordered(scanner) => {
+                while triplets.len() < raw {
+                    let Some((i, j, v)) = scanner.next_entry()? else {
+                        bail!(
+                            "{}: body ended mid-window (file changed between passes?)",
+                            self.path.display()
+                        );
+                    };
+                    let r = if self.opts.transpose { j } else { i };
+                    if r >= self.rows {
+                        continue;
+                    }
+                    if r < start || r >= end {
+                        bail!(
+                            "{}: entries reordered between passes (row {r} outside window {start}..{end})",
+                            self.path.display()
+                        );
+                    }
+                    let c = if self.opts.transpose { i } else { j };
+                    triplets.push((r - start, c, v));
+                }
+            }
+            Body::Spill(reader) => {
+                let mut rec = [0u8; SPILL_REC];
+                for _ in 0..raw {
+                    reader
+                        .read_exact(&mut rec)
+                        .with_context(|| "reading streaming spill")?;
+                    let r = u32::from_le_bytes(rec[0..4].try_into().unwrap()) as usize;
+                    let c = u32::from_le_bytes(rec[4..8].try_into().unwrap()) as usize;
+                    let v = f32::from_le_bytes(rec[8..12].try_into().unwrap());
+                    ensure!(
+                        r >= start && r < end && c < self.cols,
+                        "corrupt streaming spill record ({r}, {c}) for window {start}..{end}"
+                    );
+                    triplets.push((r - start, c, v));
+                }
+            }
+        }
+        self.cursor += 1;
+        let matrix = CsrMatrix::from_triplet_vec(end - start, self.cols, triplets);
+        Ok(Some(CsrWindow { start_row: start, matrix }))
+    }
+
+    /// Drain every window into one full matrix — bitwise equal to the
+    /// in-memory loader's result (stable per-window triplet builds
+    /// concatenate to the global build; see the module docs). Transient
+    /// overhead on top of the growing output is one window. Covers the
+    /// full row range, so it must run on a freshly opened reader; a
+    /// partially consumed one returns a clean `Err`.
+    pub fn read_all(&mut self) -> Result<CsrMatrix> {
+        ensure!(
+            self.cursor == 0,
+            "{}: read_all requires a freshly opened reader ({} of {} windows already consumed)",
+            self.path.display(),
+            self.cursor,
+            self.windows.len()
+        );
+        let mut indptr = Vec::with_capacity(self.rows + 1);
+        indptr.push(0usize);
+        let mut indices: Vec<u32> = Vec::new();
+        let mut values: Vec<f32> = Vec::new();
+        while let Some(w) = self.next_window()? {
+            let (wp, wi, wv) = w.matrix.parts();
+            let offset = *indptr.last().unwrap();
+            indptr.extend(wp[1..].iter().map(|p| p + offset));
+            indices.extend_from_slice(wi);
+            values.extend_from_slice(wv);
+        }
+        ensure!(
+            indptr.len() == self.rows + 1,
+            "{}: windows covered {} rows, expected {}",
+            self.path.display(),
+            indptr.len() - 1,
+            self.rows
+        );
+        self.peak_resident_nnz = self.peak_resident_nnz.max(values.len());
+        Ok(CsrMatrix::from_parts(self.rows, self.cols, indptr, indices, values))
+    }
+
+    /// Subsample `n` rows without replacement, drawing the **identical
+    /// index set and rng stream** as `Dataset::subsample` on the fully
+    /// loaded matrix: the index draw is the one `rng.sample_indices(rows,
+    /// n)` call (reservoir-free — the header gives `rows` up front), then
+    /// a single forward pass over the windows collects the selected rows,
+    /// and assembly in draw order reproduces `CsrMatrix::select_rows`
+    /// bitwise. Peak value residency: selected-so-far + one window. Like
+    /// [`CsrChunkReader::read_all`], requires a freshly opened reader (a
+    /// selected row in an already-consumed window would be unreachable).
+    pub fn subsample_rows(&mut self, n: usize, rng: &mut Rng) -> Result<(CsrMatrix, Vec<usize>)> {
+        ensure!(
+            self.cursor == 0,
+            "{}: subsample_rows requires a freshly opened reader ({} of {} windows already consumed)",
+            self.path.display(),
+            self.cursor,
+            self.windows.len()
+        );
+        ensure!(n <= self.rows, "subsample({n}) > rows({})", self.rows);
+        let idx = rng.sample_indices(self.rows, n);
+        let selected: HashSet<usize> = idx.iter().copied().collect();
+        let mut kept: HashMap<usize, (Vec<u32>, Vec<f32>)> = HashMap::with_capacity(n);
+        let mut resident = 0usize;
+        while let Some(w) = self.next_window()? {
+            let raw = self.windows[self.cursor - 1].raw;
+            for local in 0..w.matrix.rows() {
+                let global = w.start_row + local;
+                if selected.contains(&global) {
+                    let (ci, cv) = w.matrix.row(local);
+                    resident += cv.len();
+                    kept.insert(global, (ci.to_vec(), cv.to_vec()));
+                }
+            }
+            self.peak_resident_nnz = self.peak_resident_nnz.max(resident + raw);
+        }
+        let mut indptr = Vec::with_capacity(n + 1);
+        indptr.push(0usize);
+        let mut indices: Vec<u32> = Vec::new();
+        let mut values: Vec<f32> = Vec::new();
+        for g in &idx {
+            let (ci, cv) = kept.get(g).expect("window pass covered every selected row");
+            indices.extend_from_slice(ci);
+            values.extend_from_slice(cv);
+            indptr.push(indices.len());
+        }
+        Ok((CsrMatrix::from_parts(n, self.cols, indptr, indices, values), idx))
+    }
+}
+
+impl Drop for CsrChunkReader {
+    fn drop(&mut self) {
+        if let Some(p) = &self.spill_path {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+/// Pass 2 for unordered input: scatter entries into per-window byte
+/// ranges of a temp file. Exact destinations are known from the pass-1
+/// counts, so each window's range fills front to back in file order
+/// (per-window append buffers flush at their running offsets). Buffered
+/// residency across all windows is capped at `max(chunk_nnz, 2^16)`
+/// records (~768 KiB at the floor).
+fn build_spill(
+    path: &Path,
+    opts: &StreamOptions,
+    rows: usize,
+    windows: &[Window],
+) -> Result<(BufReader<File>, PathBuf)> {
+    let mut window_of_row = vec![0u32; rows];
+    let mut base = Vec::with_capacity(windows.len());
+    let mut acc = 0usize;
+    for (w, win) in windows.iter().enumerate() {
+        for r in win.start..win.end {
+            window_of_row[r] = w as u32;
+        }
+        base.push(acc);
+        acc += win.raw;
+    }
+
+    let spill_path = std::env::temp_dir().join(format!(
+        "banditpam_stream_spill_{}_{}.bin",
+        std::process::id(),
+        SPILL_COUNTER.fetch_add(1, Ordering::Relaxed)
+    ));
+    let mut spill = std::fs::OpenOptions::new()
+        .read(true)
+        .write(true)
+        .create_new(true)
+        .open(&spill_path)
+        .with_context(|| format!("creating spill file {}", spill_path.display()))?;
+    // Wrap so the spill file never leaks, even on a mid-build error.
+    let result = write_spill(path, opts, rows, windows, &base, &window_of_row, &mut spill);
+    match result {
+        Ok(()) => {
+            spill.seek(SeekFrom::Start(0))?;
+            Ok((BufReader::new(spill), spill_path))
+        }
+        Err(e) => {
+            drop(spill);
+            let _ = std::fs::remove_file(&spill_path);
+            Err(e)
+        }
+    }
+}
+
+fn write_spill(
+    path: &Path,
+    opts: &StreamOptions,
+    rows: usize,
+    windows: &[Window],
+    base: &[usize],
+    window_of_row: &[u32],
+    spill: &mut File,
+) -> Result<()> {
+    // The 2^16 floor keeps the spill pass efficient even under a tiny
+    // window budget: each flush touches only the windows that actually
+    // buffered records (the dirty list, not an O(windows) scan) and
+    // amortizes at least 64k records of parsing per round of seeks.
+    let flush_cap = opts.chunk_nnz.max(1 << 16);
+    let mut bufs: Vec<Vec<u8>> = vec![Vec::new(); windows.len()];
+    let mut written = vec![0usize; windows.len()];
+    let mut dirty: Vec<usize> = Vec::new();
+    let mut buffered = 0usize;
+
+    fn flush_dirty(
+        spill: &mut File,
+        base: &[usize],
+        bufs: &mut [Vec<u8>],
+        written: &mut [usize],
+        dirty: &mut Vec<usize>,
+        buffered: &mut usize,
+    ) -> Result<()> {
+        // Ascending window order = ascending file offsets for the seeks.
+        dirty.sort_unstable();
+        for &w in dirty.iter() {
+            let buf = &mut bufs[w];
+            let offset = ((base[w] + written[w]) * SPILL_REC) as u64;
+            spill.seek(SeekFrom::Start(offset))?;
+            spill.write_all(buf)?;
+            written[w] += buf.len() / SPILL_REC;
+            buf.clear();
+        }
+        dirty.clear();
+        *buffered = 0;
+        Ok(())
+    }
+
+    let file =
+        File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut scanner = MtxScanner::open(BufReader::new(file), path)?;
+    while let Some((i, j, v)) = scanner.next_entry()? {
+        let r = if opts.transpose { j } else { i };
+        if r >= rows {
+            continue;
+        }
+        let c = if opts.transpose { i } else { j };
+        let w = window_of_row[r] as usize;
+        let buf = &mut bufs[w];
+        if buf.is_empty() {
+            dirty.push(w);
+        }
+        buf.extend_from_slice(&(r as u32).to_le_bytes());
+        buf.extend_from_slice(&(c as u32).to_le_bytes());
+        buf.extend_from_slice(&v.to_le_bytes());
+        buffered += 1;
+        if buffered >= flush_cap {
+            flush_dirty(spill, base, &mut bufs, &mut written, &mut dirty, &mut buffered)?;
+        }
+    }
+    flush_dirty(spill, base, &mut bufs, &mut written, &mut dirty, &mut buffered)?;
+    Ok(())
+}
+
+/// Stream-load a whole `.mtx` file: bitwise-identical dataset to
+/// [`crate::data::loader::load_mtx`] with the same `transpose`/`limit`,
+/// assembled window by window.
+pub fn load_mtx_streamed(path: &Path, opts: &StreamOptions) -> Result<(Dataset, StreamStats)> {
+    let mut reader = CsrChunkReader::open(path, opts.clone())?;
+    let ds = Dataset::from_stream(&mut reader)?;
+    Ok((ds, reader.stats()))
+}
+
+/// Stream-subsample `n` rows of a `.mtx` file: bitwise-identical dataset
+/// (matrix, name, rng stream position) to `load_mtx(...).subsample(n,
+/// rng)`, holding only `max(selected, window)`-scale values in memory.
+pub fn subsample_mtx_streamed(
+    path: &Path,
+    opts: &StreamOptions,
+    n: usize,
+    rng: &mut Rng,
+) -> Result<(Dataset, StreamStats)> {
+    let mut reader = CsrChunkReader::open(path, opts.clone())?;
+    let base_name = reader.source_name();
+    let (matrix, idx) = reader.subsample_rows(n, rng)?;
+    let name = format!("{base_name}[sub {}]", idx.len());
+    Ok((Dataset::sparse(matrix, name), reader.stats()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::loader;
+    use crate::data::synthetic;
+    use crate::data::Points;
+
+    fn tmpfile(name: &str, contents: &[u8]) -> PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "banditpam_stream_test_{}_{name}",
+            std::process::id()
+        ));
+        std::fs::write(&p, contents).unwrap();
+        p
+    }
+
+    const SHUFFLED: &[u8] = b"%%MatrixMarket matrix coordinate real general\n\
+        % shuffled rows, duplicates, an explicit zero\n\
+        5 4 9\n\
+        3 2 1.25\n1 1 0.5\n5 4 -2.75\n2 3 0\n3 2 0.75\n1 4 3.5\n4 1 0.001\n1 1 0.25\n5 1 7\n";
+
+    #[test]
+    fn window_plan_respects_budget_and_never_splits_rows() {
+        let p = tmpfile("plan.mtx", SHUFFLED);
+        let r = CsrChunkReader::open(
+            &p,
+            StreamOptions { chunk_nnz: 3, ..StreamOptions::default() },
+        )
+        .unwrap();
+        assert_eq!(r.rows(), 5);
+        assert_eq!(r.cols(), 4);
+        let starts: Vec<usize> = r.windows.iter().map(|w| w.start).collect();
+        let ends: Vec<usize> = r.windows.iter().map(|w| w.end).collect();
+        // windows partition [0, 5) in order
+        assert_eq!(starts[0], 0);
+        assert_eq!(*ends.last().unwrap(), 5);
+        for i in 1..starts.len() {
+            assert_eq!(starts[i], ends[i - 1]);
+        }
+        for w in &r.windows {
+            assert!(w.end > w.start, "window must hold at least one row");
+            // raw > budget only for single-row windows
+            assert!(w.raw <= 3 || w.end - w.start == 1);
+        }
+        assert_eq!(r.stats().kept_nnz, 9);
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn unordered_body_spills_and_matches_in_memory() {
+        let p = tmpfile("spill.mtx", SHUFFLED);
+        let mem = loader::load_mtx(&p, false, 0).unwrap();
+        let Points::Sparse(expect) = &mem.points else { unreachable!() };
+        for chunk in [1usize, 2, 4, 64] {
+            let mut r = CsrChunkReader::open(
+                &p,
+                StreamOptions { chunk_nnz: chunk, ..StreamOptions::default() },
+            )
+            .unwrap();
+            assert!(r.stats().spilled, "shuffled rows must take the spill path");
+            let got = r.read_all().unwrap();
+            assert_eq!(&got, expect, "chunk={chunk}");
+        }
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn row_major_body_streams_without_spill() {
+        let ds = synthetic::scrna_sparse(&mut Rng::seed_from(3), 30, 48, 0.10);
+        let p = tmpfile("ordered.mtx", b"");
+        loader::save_mtx(&ds, &p).unwrap();
+        let mut r = CsrChunkReader::open(
+            &p,
+            StreamOptions { chunk_nnz: 17, ..StreamOptions::default() },
+        )
+        .unwrap();
+        assert!(!r.stats().spilled, "row-major writer output must not spill");
+        let got = r.read_all().unwrap();
+        let Points::Sparse(expect) = &ds.points else { unreachable!() };
+        assert_eq!(&got, expect);
+        // ... while the same file under --transpose must spill
+        let r2 = CsrChunkReader::open(
+            &p,
+            StreamOptions { chunk_nnz: 17, transpose: true, ..StreamOptions::default() },
+        )
+        .unwrap();
+        assert!(r2.stats().spilled);
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn windows_cover_empty_rows_and_empty_matrices() {
+        let p = tmpfile(
+            "empty_rows.mtx",
+            b"%%MatrixMarket matrix coordinate real general\n4 3 1\n2 2 5.5\n",
+        );
+        let mut r = CsrChunkReader::open(
+            &p,
+            StreamOptions { chunk_nnz: 1, ..StreamOptions::default() },
+        )
+        .unwrap();
+        let m = r.read_all().unwrap();
+        assert_eq!(m.rows(), 4);
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.row(1), (&[1u32][..], &[5.5f32][..]));
+
+        let p0 = tmpfile(
+            "no_entries.mtx",
+            b"%%MatrixMarket matrix coordinate real general\n0 7 0\n",
+        );
+        let mut r0 = CsrChunkReader::open(&p0, StreamOptions::default()).unwrap();
+        let m0 = r0.read_all().unwrap();
+        assert_eq!((m0.rows(), m0.cols(), m0.nnz()), (0, 7, 0));
+        let _ = std::fs::remove_file(p);
+        let _ = std::fs::remove_file(p0);
+    }
+
+    #[test]
+    fn subsample_matches_in_memory_bitwise_and_rng_stream() {
+        let ds = synthetic::scrna_sparse(&mut Rng::seed_from(21), 60, 40, 0.10);
+        let p = tmpfile("sub.mtx", b"");
+        loader::save_mtx(&ds, &p).unwrap();
+        let mem = loader::load_mtx(&p, false, 0).unwrap();
+        let mut rng_mem = Rng::seed_from(77);
+        let sub_mem = mem.subsample(25, &mut rng_mem);
+        let mut rng_st = Rng::seed_from(77);
+        let (sub_st, stats) = subsample_mtx_streamed(
+            &p,
+            &StreamOptions { chunk_nnz: 23, ..StreamOptions::default() },
+            25,
+            &mut rng_st,
+        )
+        .unwrap();
+        let (Points::Sparse(a), Points::Sparse(b)) = (&sub_mem.points, &sub_st.points) else {
+            unreachable!()
+        };
+        assert_eq!(a, b);
+        assert_eq!(sub_mem.name, sub_st.name);
+        // rng streams stay in lockstep after the draw
+        assert_eq!(rng_mem.next_u64(), rng_st.next_u64());
+        // bounded residency: selected + one window, never the whole matrix
+        assert!(stats.peak_resident_nnz <= a.nnz() + stats.peak_window_nnz);
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn spill_file_is_cleaned_up_on_drop() {
+        let p = tmpfile("cleanup.mtx", SHUFFLED);
+        let spill_path = {
+            let r = CsrChunkReader::open(
+                &p,
+                StreamOptions { chunk_nnz: 2, ..StreamOptions::default() },
+            )
+            .unwrap();
+            let sp = r.spill_path.clone().expect("spill expected");
+            assert!(sp.exists());
+            sp
+        };
+        assert!(!spill_path.exists(), "spill must be removed on drop");
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn limit_applies_to_post_transpose_rows() {
+        // 2 genes x 3 cells; transpose makes cells rows, limit keeps 2 cells.
+        let p = tmpfile(
+            "limit.mtx",
+            b"%%MatrixMarket matrix coordinate real general\n2 3 4\n1 1 1\n2 1 2\n1 2 3\n2 3 4\n",
+        );
+        let mut r = CsrChunkReader::open(
+            &p,
+            StreamOptions { chunk_nnz: 2, transpose: true, limit: 2 },
+        )
+        .unwrap();
+        assert_eq!(r.rows(), 2);
+        assert_eq!(r.cols(), 2);
+        let m = r.read_all().unwrap();
+        assert_eq!(m.row(0), (&[0u32, 1][..], &[1.0f32, 2.0][..]));
+        assert_eq!(m.row(1), (&[0u32][..], &[3.0f32][..]));
+        let _ = std::fs::remove_file(p);
+    }
+}

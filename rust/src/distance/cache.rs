@@ -181,6 +181,24 @@ mod tests {
         assert!((c.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
     }
 
+    /// Edge case pinned by ISSUE 4: before any probe, `hit_rate` must be
+    /// exactly 0.0 — not NaN from a 0/0 — and the guard must also hold
+    /// immediately after `clear()` resets both counters to zero.
+    #[test]
+    fn hit_rate_is_zero_not_nan_before_any_probe() {
+        let c = DistanceCache::new(16);
+        assert_eq!(c.stats(), (0, 0));
+        let r = c.hit_rate();
+        assert!(!r.is_nan(), "hit_rate must never be NaN");
+        assert_eq!(r, 0.0);
+        c.get_or_compute(3, 4, || 2.0);
+        c.get_or_compute(3, 4, || 2.0);
+        assert!(c.hit_rate() > 0.0);
+        c.clear();
+        assert_eq!(c.hit_rate(), 0.0);
+        assert!(!c.hit_rate().is_nan());
+    }
+
     #[test]
     fn clear_resets() {
         let c = DistanceCache::new(100);

@@ -15,6 +15,7 @@ use banditpam::algorithms::{
 };
 use banditpam::bench::Scale;
 use banditpam::coordinator::banditpam::BanditPam;
+use banditpam::data::stream::{self, StreamOptions};
 use banditpam::data::{loader, synthetic, Dataset, Points};
 use banditpam::distance::Metric;
 use banditpam::runtime::backend::NativeBackend;
@@ -31,6 +32,7 @@ banditpam — almost linear time k-medoids clustering via multi-armed bandits
 USAGE:
   banditpam cluster [--data FILE | --synthetic NAME] [--format csv|mtx|idx]
                     [--limit L] [--transpose] [--sparse] [--density P]
+                    [--stream] [--chunk-nnz B]
                     [--n N] [--k K]
                     [--metric l2|l1|cosine|tree] [--algo NAME] [--seed S]
                     [--backend native|xla] [--threads T] [--verbose]
@@ -45,7 +47,13 @@ SYNTHETIC DATASETS: gmm, mnist, scrna, scrna-sparse, scrna-pca, hoc4
 SPARSE DATA: --format mtx loads Matrix Market triplets as CSR points
              (--transpose for 10x genes x cells files); --sparse converts
              any dense dataset to CSR; --density P sets the scrna-sparse
-             generator's expression probability (default 0.10)
+             generator's expression probability (default 0.10); --limit L
+             caps the rows read (post-transpose, so cells on a 10x file)
+STREAMING:   .mtx files >= 256 MiB stream through the out-of-core chunked
+             reader automatically; --stream forces it and --chunk-nnz B
+             sets the per-window entry budget (default 1048576, implies
+             --stream) — results are bitwise-identical to the in-memory
+             loader
 EXPERIMENTS: fig1a fig1b fig2 fig3 appfig1 appfig2 appfig34 appfig5
              headline ablations (see DESIGN.md for the paper mapping)
 ";
@@ -67,6 +75,11 @@ fn make_algo(name: &str) -> Result<Box<dyn KMedoids>> {
 fn make_dataset(args: &Args, rng: &mut Rng) -> Result<Dataset> {
     let n: usize = args.get_parsed("n", 1000usize)?;
     let density: f64 = args.get_parsed("density", 0.10)?;
+    if (args.flag("stream") || args.get("chunk-nnz").is_some()) && args.get("data").is_none() {
+        bail!(
+            "--stream/--chunk-nnz require --data FILE.mtx (synthetic datasets are generated in memory)"
+        );
+    }
     let ds = if let Some(path) = args.get("data") {
         let format = match args.get("format") {
             Some(s) => DataFormat::parse(s)
@@ -77,9 +90,36 @@ fn make_dataset(args: &Args, rng: &mut Rng) -> Result<Dataset> {
         // `--limit` caps how many points a file loader reads (0 = all);
         // `--n` is the synthetic-size knob and is ignored for files.
         let limit: usize = args.get_parsed("limit", 0usize)?;
+        if (args.flag("stream") || args.get("chunk-nnz").is_some())
+            && format != DataFormat::Mtx
+        {
+            bail!("--stream/--chunk-nnz require --format mtx (got {format})");
+        }
         match format {
             DataFormat::Csv => loader::load_csv(&path)?,
-            DataFormat::Mtx => loader::load_mtx(&path, args.flag("transpose"))?,
+            DataFormat::Mtx => {
+                let transpose = args.flag("transpose");
+                // An explicit window budget implies the streamed path —
+                // --chunk-nnz must never be silently dropped.
+                if args.flag("stream") || args.get("chunk-nnz").is_some() {
+                    let opts = StreamOptions {
+                        chunk_nnz: args.get_parsed("chunk-nnz", stream::DEFAULT_CHUNK_NNZ)?,
+                        transpose,
+                        limit,
+                    };
+                    let (ds, stats) = stream::load_mtx_streamed(&path, &opts)?;
+                    println!(
+                        "streamed load: {} windows of <= {} entries, peak window {} nnz{}",
+                        stats.windows,
+                        stats.chunk_nnz,
+                        stats.peak_window_nnz,
+                        if stats.spilled { " (row-bucketing spill)" } else { "" }
+                    );
+                    ds
+                } else {
+                    loader::load_mtx_auto(&path, transpose, limit)?
+                }
+            }
             DataFormat::Idx => loader::load_idx_images(&path, limit)?,
         }
     } else {

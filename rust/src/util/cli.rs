@@ -39,7 +39,7 @@ impl std::error::Error for ParseError {}
 /// Options that never take a value (`--verbose file.csv` must not consume
 /// `file.csv`). Everything else uses `--key value` / `--key=value`.
 const BOOLEAN_FLAGS: &[&str] =
-    &["verbose", "csv", "force", "help", "quiet", "sparse", "transpose"];
+    &["verbose", "csv", "force", "help", "quiet", "sparse", "stream", "transpose"];
 
 /// On-disk dataset formats the `--data` loaders understand.
 ///
@@ -251,6 +251,15 @@ mod tests {
         assert!(a.flag("sparse"));
         assert!(a.flag("transpose"));
         assert!((a.get_parsed("density", 0.0f64).unwrap() - 0.05).abs() < 1e-12);
+        assert_eq!(a.positional, vec!["data.mtx"]);
+    }
+
+    #[test]
+    fn stream_flag_does_not_eat_values() {
+        let a = parse("cluster --stream --chunk-nnz 4096 --limit 500 data.mtx");
+        assert!(a.flag("stream"));
+        assert_eq!(a.get_parsed("chunk-nnz", 0usize).unwrap(), 4096);
+        assert_eq!(a.get_parsed("limit", 0usize).unwrap(), 500);
         assert_eq!(a.positional, vec!["data.mtx"]);
     }
 }

@@ -1,0 +1,248 @@
+//! Parity property suite for the out-of-core CSR streaming subsystem
+//! (`data/stream.rs`).
+//!
+//! The contract under test is **bitwise** equality with the in-memory
+//! path — not tolerance: the chunked reader builds each row-window with
+//! the same stable-sorted `CsrMatrix::from_triplets` the in-memory loader
+//! uses on the whole file, window triplet subsequences preserve file
+//! order (directly on the ordered path, per-bucket on the spill path),
+//! and windows never split rows, so concatenated window parts must equal
+//! the global build bit for bit. Any difference is a logic bug, never a
+//! rounding excuse.
+//!
+//! Grid: body kind in {real, integer, pattern} (with shuffled entry
+//! order, duplicate coordinates and an explicit zero) x transpose on/off
+//! x chunk-nnz budget in {1, 17, 4096, >= nnz}. Plus the experimental
+//! protocol end to end: a streamed subsample of a seeded scRNA n=2000
+//! file draws the identical rng stream as `Dataset::subsample` and fits
+//! to identical medoids, assignments and eval counters.
+
+use banditpam::data::sparse::CsrMatrix;
+use banditpam::data::stream::{self, CsrChunkReader, StreamOptions};
+use banditpam::data::{loader, synthetic, Points};
+use banditpam::prelude::*;
+use std::path::PathBuf;
+
+const CHUNKS: &[usize] = &[1, 17, 4096, 1 << 30];
+
+fn tmpfile(name: &str, contents: &[u8]) -> PathBuf {
+    let p = std::env::temp_dir().join(format!(
+        "banditpam_prop_stream_{}_{name}",
+        std::process::id()
+    ));
+    std::fs::write(&p, contents).unwrap();
+    p
+}
+
+/// Strict bitwise equality: shapes, indptr, indices, and value *bits*
+/// (f32 `==` would conflate 0.0/-0.0 and choke on NaN).
+fn assert_bitwise(a: &CsrMatrix, b: &CsrMatrix, what: &str) {
+    assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()), "{what}: shape");
+    let (ap, ai, av) = a.parts();
+    let (bp, bi, bv) = b.parts();
+    assert_eq!(ap, bp, "{what}: indptr");
+    assert_eq!(ai, bi, "{what}: indices");
+    let abits: Vec<u32> = av.iter().map(|v| v.to_bits()).collect();
+    let bbits: Vec<u32> = bv.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(abits, bbits, "{what}: value bits");
+}
+
+fn sparse(ds: &banditpam::data::Dataset) -> &CsrMatrix {
+    let Points::Sparse(m) = &ds.points else {
+        panic!("expected sparse points, got {}", ds.points.kind())
+    };
+    m
+}
+
+/// Shuffled rows, duplicate coordinates (summed in file order), an
+/// explicit zero entry, negative and tiny values, empty rows and columns.
+fn bodies() -> Vec<(&'static str, &'static [u8])> {
+    vec![
+        (
+            "real",
+            &b"%%MatrixMarket matrix coordinate real general\n\
+               % shuffled order, duplicates, explicit zero\n\
+               5 4 9\n\
+               3 2 1.25\n1 1 0.5\n5 4 -2.75\n2 3 0\n3 2 0.75\n\
+               1 4 3.5\n4 1 0.001\n1 1 0.25\n5 1 7\n"[..],
+        ),
+        (
+            "integer",
+            &b"%%MatrixMarket matrix coordinate integer general\n\
+               4 5 6\n\
+               4 5 9\n1 2 3\n2 1 -4\n4 5 1\n3 3 5\n1 1 2\n"[..],
+        ),
+        (
+            "pattern",
+            &b"%%MatrixMarket matrix coordinate pattern general\n\
+               4 4 5\n\
+               4 4\n1 3\n2 2\n1 1\n3 4\n"[..],
+        ),
+    ]
+}
+
+#[test]
+fn streamed_load_matches_in_memory_bitwise_across_grid() {
+    for (kind, body) in bodies() {
+        let p = tmpfile(&format!("grid_{kind}.mtx"), body);
+        for transpose in [false, true] {
+            let mem = loader::load_mtx(&p, transpose, 0).unwrap();
+            for &chunk in CHUNKS {
+                let opts = StreamOptions { chunk_nnz: chunk, transpose, limit: 0 };
+                let (st, stats) = stream::load_mtx_streamed(&p, &opts).unwrap();
+                let what = format!("{kind} transpose={transpose} chunk={chunk}");
+                assert_bitwise(sparse(&mem), sparse(&st), &what);
+                assert_eq!(mem.name, st.name, "{what}: dataset name");
+                assert!(stats.kept_nnz <= stats.total_nnz, "{what}: counters");
+            }
+        }
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn streamed_load_matches_on_row_major_writer_output() {
+    // Our own writer emits row-major entries: the no-transpose read must
+    // take the ordered (no-spill) path, the transposed read must spill,
+    // and both must match the in-memory loader at every budget.
+    let ds = synthetic::scrna_sparse(&mut Rng::seed_from(42), 200, 64, 0.10);
+    let p = tmpfile("rowmajor.mtx", b"");
+    loader::save_mtx(&ds, &p).unwrap();
+    for transpose in [false, true] {
+        let mem = loader::load_mtx(&p, transpose, 0).unwrap();
+        for &chunk in CHUNKS {
+            let opts = StreamOptions { chunk_nnz: chunk, transpose, limit: 0 };
+            let (st, stats) = stream::load_mtx_streamed(&p, &opts).unwrap();
+            assert_eq!(
+                stats.spilled, transpose,
+                "row-major input: spill iff transposed (chunk={chunk})"
+            );
+            assert_bitwise(
+                sparse(&mem),
+                sparse(&st),
+                &format!("row-major transpose={transpose} chunk={chunk}"),
+            );
+        }
+    }
+    // no-transpose load is also bitwise the generator's own matrix
+    let mem = loader::load_mtx(&p, false, 0).unwrap();
+    assert_bitwise(sparse(&ds), sparse(&mem), "writer roundtrip");
+    let _ = std::fs::remove_file(p);
+}
+
+#[test]
+fn limit_matches_in_memory_at_every_budget() {
+    let ds = synthetic::scrna_sparse(&mut Rng::seed_from(13), 90, 40, 0.10);
+    let p = tmpfile("limit_grid.mtx", b"");
+    loader::save_mtx(&ds, &p).unwrap();
+    for transpose in [false, true] {
+        for limit in [1usize, 7, 64, 10_000] {
+            let mem = loader::load_mtx(&p, transpose, limit).unwrap();
+            for &chunk in &[1usize, 17, 1 << 30] {
+                let opts = StreamOptions { chunk_nnz: chunk, transpose, limit };
+                let (st, _) = stream::load_mtx_streamed(&p, &opts).unwrap();
+                assert_bitwise(
+                    sparse(&mem),
+                    sparse(&st),
+                    &format!("limit={limit} transpose={transpose} chunk={chunk}"),
+                );
+                assert_eq!(mem.name, st.name);
+            }
+        }
+    }
+    let _ = std::fs::remove_file(p);
+}
+
+/// The experimental protocol end to end on a seeded scRNA n=2000 file:
+/// the streamed subsample must (a) assemble the bitwise-identical matrix,
+/// (b) leave the rng stream in the identical position, and (c) fit to
+/// identical medoids, assignments, loss bits and eval counters.
+#[test]
+fn streamed_subsample_fit_matches_in_memory() {
+    let n = 2000;
+    let genes = 256;
+    let sub_n = 600;
+    let k = 5;
+    let base = synthetic::scrna_sparse(&mut Rng::seed_from(11), n, genes, 0.10);
+    let p = tmpfile("scrna_fit.mtx", b"");
+    loader::save_mtx(&base, &p).unwrap();
+
+    // in-memory protocol: full load, then Dataset::subsample
+    let mem = loader::load_mtx(&p, false, 0).unwrap();
+    let mut rng_mem = Rng::seed_from(5);
+    let sub_mem = mem.subsample(sub_n, &mut rng_mem);
+
+    // streamed protocol: bounded windows, same draw
+    let mut rng_st = Rng::seed_from(5);
+    let opts = StreamOptions { chunk_nnz: 2048, ..Default::default() };
+    let (sub_st, stats) = stream::subsample_mtx_streamed(&p, &opts, sub_n, &mut rng_st).unwrap();
+
+    assert_bitwise(sparse(&sub_mem), sparse(&sub_st), "subsample matrix");
+    assert_eq!(sub_mem.name, sub_st.name, "subsample dataset name");
+    assert!(stats.windows > 1, "budget must actually window the file");
+    assert!(
+        stats.peak_resident_nnz < sparse(&mem).nnz(),
+        "subsample must not have materialized the full matrix \
+         (resident {} vs total {})",
+        stats.peak_resident_nnz,
+        sparse(&mem).nnz()
+    );
+    // rng streams in lockstep after the draw
+    assert_eq!(
+        rng_mem.clone().next_u64(),
+        rng_st.clone().next_u64(),
+        "rng stream position"
+    );
+
+    // identical fits from the identical data + rng
+    let fit_mem = BanditPam::new(BanditPamConfig::default())
+        .fit(
+            &NativeBackend::new(&sub_mem.points, Metric::L1).with_threads(4),
+            k,
+            &mut rng_mem,
+        )
+        .unwrap();
+    let fit_st = BanditPam::new(BanditPamConfig::default())
+        .fit(
+            &NativeBackend::new(&sub_st.points, Metric::L1).with_threads(4),
+            k,
+            &mut rng_st,
+        )
+        .unwrap();
+    assert_eq!(fit_mem.medoids, fit_st.medoids, "medoids");
+    assert_eq!(fit_mem.assignments, fit_st.assignments, "assignments");
+    assert_eq!(fit_mem.loss.to_bits(), fit_st.loss.to_bits(), "loss bits");
+    assert_eq!(
+        fit_mem.stats.distance_evals, fit_st.stats.distance_evals,
+        "distance eval counter"
+    );
+    assert_eq!(fit_mem.stats.swap_iters, fit_st.stats.swap_iters, "swap iters");
+    let _ = std::fs::remove_file(p);
+}
+
+/// Windows stay readable one at a time through the public iterator, and
+/// partial consumption + `read_all` of the remainder still covers every
+/// row exactly once.
+#[test]
+fn window_iterator_covers_rows_exactly_once() {
+    let ds = synthetic::scrna_sparse(&mut Rng::seed_from(7), 64, 32, 0.10);
+    let p = tmpfile("iter.mtx", b"");
+    loader::save_mtx(&ds, &p).unwrap();
+    let mut reader =
+        CsrChunkReader::open(&p, StreamOptions { chunk_nnz: 40, ..Default::default() })
+            .unwrap();
+    let mut next_row = 0usize;
+    let mut nnz = 0usize;
+    while let Some(w) = reader.next_window().unwrap() {
+        assert_eq!(w.start_row, next_row, "windows arrive in row order");
+        assert!(w.matrix.rows() > 0, "windows are non-empty row ranges");
+        assert_eq!(w.matrix.cols(), 32);
+        next_row += w.matrix.rows();
+        nnz += w.matrix.nnz();
+    }
+    assert_eq!(next_row, 64, "windows partition the row range");
+    assert_eq!(nnz, sparse(&ds).nnz());
+    // exhausted iterator keeps returning None
+    assert!(reader.next_window().unwrap().is_none());
+    let _ = std::fs::remove_file(p);
+}

@@ -1,0 +1,135 @@
+//! Golden-fixture tests for the `.mtx` readers: every malformed input
+//! under `tests/fixtures/` must produce a clean `Err` — never a panic,
+//! never an allocation blow-up — from **both** the in-memory loader and
+//! the chunked out-of-core reader, and the good fixtures pin the
+//! `--limit`/`--transpose` interaction and the write -> chunked-read ->
+//! write roundtrip.
+
+use banditpam::data::stream::{self, CsrChunkReader, StreamOptions};
+use banditpam::data::{loader, synthetic, Points};
+use banditpam::prelude::*;
+use std::path::{Path, PathBuf};
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("fixtures")
+        .join(name)
+}
+
+/// Streamed load via the public reader, surfacing open-time and
+/// window-time errors alike.
+fn stream_load(path: &Path, opts: StreamOptions) -> anyhow::Result<CsrMatrix> {
+    let mut r = CsrChunkReader::open(path, opts)?;
+    r.read_all()
+}
+
+#[test]
+fn malformed_fixtures_err_cleanly_in_both_readers() {
+    for name in [
+        "malformed_header.mtx",
+        "array_format.mtx",
+        "symmetric.mtx",
+        "out_of_range.mtx",
+        "nnz_unparseable.mtx",  // nnz overflow: too large to parse into usize
+        "truncated_body.mtx",   // body ends mid-window
+        "huge_shape.mtx",       // rows far beyond the MAX_DIM ceiling
+        "huge_rows_in_u32.mtx", // rows fit u32 but exceed MAX_DIM: ~GB indptr lie
+        "extra_entries.mtx",    // more entries than the size line promises
+        "missing_value.mtx",    // real body with a pattern-style entry
+        "missing_size.mtx",
+    ] {
+        let p = fixture(name);
+        assert!(p.exists(), "fixture {name} missing");
+        for transpose in [false, true] {
+            let mem = loader::load_mtx(&p, transpose, 0);
+            assert!(mem.is_err(), "{name} transpose={transpose}: in-memory must Err");
+            for chunk in [1usize, 1 << 20] {
+                let st = stream_load(&p, StreamOptions { chunk_nnz: chunk, transpose, limit: 0 });
+                assert!(st.is_err(), "{name} transpose={transpose} chunk={chunk}: chunked must Err");
+            }
+        }
+    }
+}
+
+/// A size line declaring more entries than the matrix has cells is legal
+/// when the extras are duplicate coordinates (summed in file order) —
+/// both readers must accept it and agree. Pre-PR-4 the in-memory loader
+/// accepted such files; this pins that the shared grammar still does.
+#[test]
+fn duplicate_heavy_overfull_file_loads_in_both_readers() {
+    let p = fixture("duplicate_overfull.mtx"); // 2x2, nnz=5, (1,1) twice
+    let mem = loader::load_mtx(&p, false, 0).unwrap();
+    let Points::Sparse(m) = &mem.points else { unreachable!() };
+    assert_eq!(m.row(0), (&[0u32, 1][..], &[2.0f32, 1.0][..])); // dup summed
+    assert_eq!(m.row(1), (&[0u32, 1][..], &[1.0f32, 1.0][..]));
+    for chunk in [1usize, 1 << 20] {
+        for transpose in [false, true] {
+            let st = stream_load(&p, StreamOptions { chunk_nnz: chunk, transpose, limit: 0 })
+                .unwrap();
+            let mem_t = loader::load_mtx(&p, transpose, 0).unwrap();
+            let Points::Sparse(e) = &mem_t.points else { unreachable!() };
+            assert_eq!(&st, e, "chunk={chunk} transpose={transpose}");
+        }
+    }
+}
+
+/// The `--limit` row cap applies to **post-transpose** rows — cells, not
+/// genes, on a 10x-layout file — identically in both readers. (Before the
+/// streaming subsystem, `--limit` was silently ignored for `.mtx` input;
+/// this fixture pins the repaired semantics.)
+#[test]
+fn limit_counts_post_transpose_rows_in_both_readers() {
+    let p = fixture("limit_transpose.mtx"); // 3 genes x 4 cells
+    // transpose: points = cells; limit 2 keeps cells 0 and 1 only
+    let mem = loader::load_mtx(&p, true, 2).unwrap();
+    assert_eq!(mem.len(), 2);
+    assert_eq!(mem.points.dim(), Some(3));
+    let Points::Sparse(m) = &mem.points else { unreachable!() };
+    assert_eq!(m.row(0), (&[0u32, 1][..], &[1.0f32, 2.0][..])); // cell 1: genes 1, 2
+    assert_eq!(m.row(1), (&[2u32][..], &[3.0f32][..])); // cell 2: gene 3
+    for chunk in [1usize, 3, 1 << 20] {
+        let st = stream_load(&p, StreamOptions { chunk_nnz: chunk, transpose: true, limit: 2 })
+            .unwrap();
+        assert_eq!(&st, m, "chunk={chunk}");
+    }
+    // no transpose: points = genes; limit 2 keeps genes 0 and 1
+    let mem_g = loader::load_mtx(&p, false, 2).unwrap();
+    assert_eq!(mem_g.len(), 2);
+    assert_eq!(mem_g.points.dim(), Some(4));
+    let Points::Sparse(g) = &mem_g.points else { unreachable!() };
+    assert_eq!(g.row(0), (&[0u32, 2][..], &[1.0f32, 4.0][..])); // gene 1: cells 1, 3
+    assert_eq!(g.row(1), (&[0u32, 3][..], &[2.0f32, 5.0][..])); // gene 2: cells 1, 4
+    for chunk in [1usize, 1 << 20] {
+        let st = stream_load(&p, StreamOptions { chunk_nnz: chunk, transpose: false, limit: 2 })
+            .unwrap();
+        assert_eq!(&st, g, "chunk={chunk}");
+    }
+    // limit 0 = all rows, and limit > rows saturates
+    assert_eq!(loader::load_mtx(&p, true, 0).unwrap().len(), 4);
+    assert_eq!(loader::load_mtx(&p, true, 99).unwrap().len(), 4);
+}
+
+/// write -> chunked-read -> write must reproduce the original file byte
+/// for byte: the streamed matrix is bitwise the in-memory one, and the
+/// writer's canonical row-major triplet order is a pure function of it.
+#[test]
+fn write_chunked_read_write_roundtrip_is_byte_identical() {
+    let ds = synthetic::scrna_sparse(&mut Rng::seed_from(17), 40, 64, 0.10);
+    let dir = std::env::temp_dir();
+    let first = dir.join(format!("banditpam_rt_a_{}.mtx", std::process::id()));
+    let second = dir.join(format!("banditpam_rt_b_{}.mtx", std::process::id()));
+    loader::save_mtx(&ds, &first).unwrap();
+    let (streamed, stats) = stream::load_mtx_streamed(
+        &first,
+        &StreamOptions { chunk_nnz: 37, ..Default::default() },
+    )
+    .unwrap();
+    assert!(stats.windows > 1, "budget must actually window the file");
+    loader::save_mtx(&streamed, &second).unwrap();
+    let a = std::fs::read(&first).unwrap();
+    let b = std::fs::read(&second).unwrap();
+    assert_eq!(a, b, "roundtrip must be byte-identical");
+    let _ = std::fs::remove_file(first);
+    let _ = std::fs::remove_file(second);
+}
