@@ -17,14 +17,21 @@ use banditpam::prelude::*;
 fn main() -> anyhow::Result<()> {
     let n = 600;
     let k = 4;
-    let mut rng = Rng::seed_from(31337);
-    let data = synthetic::hoc4_like(&mut rng, n);
+    let data = synthetic::hoc4_like(&mut Rng::seed_from(31337), n);
     println!("dataset: {} (metric = tree edit distance, k = {k})", data.name);
 
+    // Tree edit distance works through the same facade as the vector
+    // metrics — the model owns the k medoid ASTs (cloned), so feedback
+    // routing keeps working after the submission corpus is dropped. (Tree
+    // models are the one kind without an on-disk format.)
     let threads = banditpam::experiments::harness::default_threads();
-    let backend = NativeBackend::new(&data.points, Metric::TreeEdit).with_threads(threads);
-    let mut algo = BanditPam::new(BanditPamConfig::default());
-    let fit = algo.fit(&backend, k, &mut rng)?;
+    let model = Fit::banditpam()
+        .metric(Metric::TreeEdit)
+        .threads(threads)
+        .seed(31337)
+        .k(k)
+        .fit(&data)?;
+    let fit = model.clustering();
 
     println!(
         "\nBanditPAM: loss {:.1}, {} tree-edit evaluations ({} swap iters)",
@@ -71,5 +78,15 @@ fn main() -> anyhow::Result<()> {
         );
         println!("farthest submission: {}", trees[worst.1].render());
     }
+
+    // New submissions arrive after the annotations were written: the model
+    // routes them to the existing medoid feedback without refitting.
+    let late = synthetic::hoc4_like(&mut Rng::seed_from(777), 25);
+    let (routed, edits) = model.predict_with_dists(&late.points)?;
+    println!(
+        "\n25 late submissions routed to existing feedback (mean {:.1} edits \
+         from their medoid)",
+        edits.iter().sum::<f64>() / routed.len() as f64
+    );
     Ok(())
 }

@@ -11,14 +11,14 @@
 //!      by the JAX graph (L2), AOT-lowered to HLO text by `make artifacts`,
 //!      and compiled/executed here via the PJRT C API — Python is not
 //!      running anywhere in this process;
-//!   2. through the **native backend** (pure Rust kernels).
+//!   2. through the **native backend**, via the `Fit` facade (which also
+//!      yields a `KMedoidsModel` serving out-of-sample assignment).
 //!
 //! The two runs must produce identical medoids (same RNG seed, same
 //! algorithm, numerics agree to fp32 tolerance), and both must match exact
 //! PAM (FastPAM1). The headline metrics (distance-evaluation reduction,
 //! wall-clock) are printed and recorded in EXPERIMENTS.md.
 
-use banditpam::algorithms::fastpam1::FastPam1;
 use banditpam::prelude::*;
 use banditpam::runtime::executable::Client;
 use banditpam::runtime::manifest::Manifest;
@@ -26,7 +26,9 @@ use banditpam::runtime::xla_backend::XlaBackend;
 
 /// BanditPAM through the AOT XLA path. Fails (and the caller downgrades to
 /// a skip) when the `xla` feature or the HLO artifacts are unavailable,
-/// e.g. in offline CI smoke runs.
+/// e.g. in offline CI smoke runs. The XLA backend has no facade entry —
+/// it is exercised through the low-level `KMedoids` interface, which
+/// remains fully public.
 fn fit_via_xla(data: &Dataset, k: usize) -> anyhow::Result<Clustering> {
     let client = Client::cpu()?;
     println!("PJRT platform: {}", client.platform());
@@ -72,13 +74,17 @@ fn main() -> anyhow::Result<()> {
         }
     };
 
-    // --- Same fit through the native kernels ------------------------------
-    let native = NativeBackend::new(&data.points, Metric::L2)
-        .with_threads(banditpam::experiments::harness::default_threads());
-    let mut algo = BanditPam::new(BanditPamConfig::default());
+    // --- Same fit through the native kernels, via the facade --------------
+    let threads = banditpam::experiments::harness::default_threads();
     let t0 = std::time::Instant::now();
-    let fit_native = algo.fit(&native, k, &mut Rng::seed_from(99))?;
+    let model = Fit::banditpam()
+        .metric(Metric::L2)
+        .threads(threads)
+        .seed(99)
+        .k(k)
+        .fit(&data)?;
     let native_secs = t0.elapsed().as_secs_f64();
+    let fit_native = model.clustering();
     println!(
         "[native] medoids {:?}  loss {:.2}  evals {}  {:.2}s",
         fit_native.medoids, fit_native.loss, fit_native.stats.distance_evals, native_secs
@@ -94,10 +100,22 @@ fn main() -> anyhow::Result<()> {
         println!("\nXLA == native medoids: YES (three-layer stack composes)");
     }
 
+    // The fitted model serves assignment without the training set.
+    let probes = synthetic::mnist_like(&mut Rng::seed_from(321), 64);
+    let (assign, dists) = model.predict_with_dists(&probes.points)?;
+    println!(
+        "out-of-sample : 64 probe images assigned (mean distance {:.2})",
+        dists.iter().sum::<f64>() / assign.len() as f64
+    );
+
     // --- Exact PAM reference ----------------------------------------------
-    let pam_backend = NativeBackend::new(&data.points, Metric::L2)
-        .with_threads(banditpam::experiments::harness::default_threads());
-    let pam = FastPam1::new().fit(&pam_backend, k, &mut Rng::seed_from(0))?;
+    let pam_model = Fit::fastpam1()
+        .metric(Metric::L2)
+        .threads(threads)
+        .seed(0)
+        .k(k)
+        .fit(&data)?;
+    let pam = pam_model.clustering();
     println!(
         "[pam   ] medoids {:?}  loss {:.2}  evals {}",
         pam.medoids, pam.loss, pam.stats.distance_evals

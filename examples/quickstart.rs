@@ -1,55 +1,91 @@
-//! Quickstart: cluster a synthetic Gaussian mixture with BanditPAM and
-//! compare against exact PAM.
+//! Quickstart: the fitted-model API end to end — fit a synthetic Gaussian
+//! mixture with BanditPAM through the `Fit` builder, predict unseen
+//! points, persist the model, and compare against exact PAM.
 //!
 //!     cargo run --release --example quickstart
 //!
-//! Demonstrates the core public API: build a dataset, wrap it in a
-//! distance backend, fit, inspect medoids / loss / evaluation counts.
+//! Demonstrates the core public API: `Fit` (one-stop builder),
+//! `KMedoidsModel` (owned medoids, out-of-sample `predict`, `save`/`load`)
+//! and the training metadata carried on the model.
 
 use banditpam::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     // 1. Data: 800 points in 16 dims from 5 well-separated components.
-    let mut rng = Rng::seed_from(7);
-    let data = synthetic::gmm(&mut rng, 800, 16, 5, 4.0);
+    let data = synthetic::gmm(&mut Rng::seed_from(7), 800, 16, 5, 4.0);
     println!("dataset: {} ({} points)", data.name, data.len());
 
-    // 2. Backend: native Rust kernels, counting every distance evaluation.
-    let backend = NativeBackend::new(&data.points, Metric::L2);
-
-    // 3. Fit BanditPAM with the paper-default configuration
-    //    (B = 100, delta = 1/(1000 |S_tar|), per-arm sigma).
-    let mut algo = BanditPam::new(BanditPamConfig::default());
-    let fit = algo.fit(&backend, 5, &mut rng)?;
+    // 2. Fit BanditPAM with the paper-default configuration through the
+    //    builder facade — backend, rng and config are assembled inside.
+    let model = Fit::banditpam().metric(Metric::L2).seed(7).k(5).fit(&data)?;
+    let fit = model.clustering();
     println!("\nBanditPAM:");
     println!("  medoids        = {:?}", fit.medoids);
     println!("  loss           = {:.3}", fit.loss);
     println!("  distance evals = {}", fit.stats.distance_evals);
     println!("  swap iters     = {}", fit.stats.swap_iters);
 
-    // 4. Reference: exact PAM on the same data.
-    let pam_backend = NativeBackend::new(&data.points, Metric::L2);
-    let pam_fit = Pam::new().fit(&pam_backend, 5, &mut rng)?;
-    println!("\nPAM (exact):");
+    // 3. The model owns its medoid points: predicting the training set
+    //    reproduces the stored assignments bit for bit.
+    let again = model.predict(&data.points)?;
+    assert_eq!(again, fit.assignments, "training-set predict is bitwise-stable");
+    println!("  predict(train) = training assignments (bitwise)");
+
+    // 4. Out-of-sample assignment of genuinely unseen points.
+    let unseen = synthetic::gmm(&mut Rng::seed_from(8), 100, 16, 5, 4.0);
+    let (assign, dists) = model.predict_with_dists(&unseen.points)?;
+    let mean = dists.iter().sum::<f64>() / dists.len() as f64;
+    println!(
+        "  100 unseen points assigned (mean distance to medoid {mean:.3})"
+    );
+    assert_eq!(assign.len(), 100);
+
+    // 5. Persistence: save -> load -> serve, with the training data gone.
+    let path = std::env::temp_dir().join(format!(
+        "banditpam_quickstart_{}.bpmodel",
+        std::process::id()
+    ));
+    model.save(&path)?;
+    drop(data);
+    let served = KMedoidsModel::load(&path)?;
+    let re_assign = served.predict(&unseen.points)?;
+    assert_eq!(re_assign, assign, "reloaded model predicts identically");
+    println!(
+        "  saved -> reloaded -> identical predictions ({} bytes on disk)",
+        std::fs::metadata(&path)?.len()
+    );
+    let _ = std::fs::remove_file(&path);
+
+    // 6. Reference: exact PAM on the same data, same facade.
+    let unseen_model = Fit::pam().metric(Metric::L2).seed(7).k(5).fit(&unseen)?;
+    let pam_fit = unseen_model.clustering();
+    println!("\nPAM (exact, on the unseen batch):");
     println!("  medoids        = {:?}", pam_fit.medoids);
     println!("  loss           = {:.3}", pam_fit.loss);
-    println!("  distance evals = {}", pam_fit.stats.distance_evals);
 
-    // 5. The paper's claim: identical medoids, far fewer evaluations.
+    // 7. The paper's claim on the training set: same medoids as PAM, far
+    //    fewer evaluations.
+    let big = synthetic::gmm(&mut Rng::seed_from(7), 800, 16, 5, 4.0);
+    let pam_model = Fit::pam().metric(Metric::L2).seed(7).k(5).fit(&big)?;
     println!(
         "\nsame medoids as PAM: {}",
-        if fit.same_medoids(&pam_fit) { "YES" } else { "no (rare; loss matches)" }
+        if model.clustering().same_medoids(pam_model.clustering()) {
+            "YES"
+        } else {
+            "no (rare; loss matches)"
+        }
     );
     println!(
         "evaluation ratio   : {:.1}x fewer",
-        pam_fit.stats.distance_evals as f64 / fit.stats.distance_evals as f64
+        pam_model.clustering().stats.distance_evals as f64
+            / model.clustering().stats.distance_evals as f64
     );
 
-    // 6. Cluster purity against the generator's ground-truth labels.
-    if let Some(labels) = &data.labels {
-        let k = fit.medoids.len();
+    // 8. Cluster purity against the generator's ground-truth labels.
+    if let Some(labels) = &big.labels {
+        let k = model.k();
         let mut majority = vec![std::collections::HashMap::new(); k];
-        for (i, &a) in fit.assignments.iter().enumerate() {
+        for (i, &a) in model.clustering().assignments.iter().enumerate() {
             *majority[a].entry(labels[i]).or_insert(0usize) += 1;
         }
         let pure: usize = majority
@@ -58,7 +94,7 @@ fn main() -> anyhow::Result<()> {
             .sum();
         println!(
             "cluster purity     : {:.1}%",
-            100.0 * pure as f64 / data.len() as f64
+            100.0 * pure as f64 / big.len() as f64
         );
     }
     Ok(())

@@ -7,22 +7,23 @@
 //!
 //!     cargo run --release --example scrna_celltypes
 //!
-//! Clusters zero-inflated log-normal expression profiles (11 cell types),
-//! reports the medoid "marker profiles", cluster purity against the
-//! generating cell types, the evaluation savings vs PAM, a parity check
-//! against the same data densified (identical medoids), and an
+//! Clusters zero-inflated log-normal expression profiles (11 cell types)
+//! through the `Fit` facade, reports the medoid "marker profiles", cluster
+//! purity against the generating cell types, the evaluation savings vs
+//! PAM, a parity check against the same data densified (identical
+//! medoids), a **model round trip** (save -> load -> predict, bitwise
+//! equal to the training assignments, training data not required), and an
 //! out-of-core leg: the cells round-trip through a Matrix Market file via
 //! the chunked streaming reader, bitwise-identical to in-memory.
 
-use banditpam::algorithms::fastpam1::FastPam1;
 use banditpam::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     let n = 1500;
     let genes = 1024;
     let k = 11;
-    let mut rng = Rng::seed_from(2024);
-    let data = synthetic::scrna_sparse(&mut rng, n, genes, 0.10);
+    let seed = 2024u64;
+    let data = synthetic::scrna_sparse(&mut Rng::seed_from(seed), n, genes, 0.10);
     let Points::Sparse(csr) = &data.points else { unreachable!() };
     println!(
         "dataset: {} (metric = l1, k = {k}, nnz = {}, density = {:.2}%)",
@@ -32,9 +33,13 @@ fn main() -> anyhow::Result<()> {
     );
 
     let threads = banditpam::experiments::harness::default_threads();
-    let backend = NativeBackend::new(&data.points, Metric::L1).with_threads(threads);
-    let mut algo = BanditPam::new(BanditPamConfig::default());
-    let fit = algo.fit(&backend, k, &mut rng)?;
+    let model = Fit::banditpam()
+        .metric(Metric::L1)
+        .threads(threads)
+        .seed(seed)
+        .k(k)
+        .fit(&data)?;
+    let fit = model.clustering();
 
     println!(
         "\nBanditPAM (sparse): loss {:.1}, {} distance evals, {} swap iters",
@@ -69,29 +74,55 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // Parity: the exact same cells densified, fit with the same rng
-    // stream (regenerate to advance it identically), must give the same
-    // medoids — the CSR path changes the arithmetic, not the search.
+    // Parity: the exact same cells densified, fit through the same facade
+    // with the same seed, must give the same medoids — the CSR path
+    // changes the arithmetic, not the search.
     let densified = data.to_dense().expect("dense twin");
-    let dense_backend = NativeBackend::new(&densified.points, Metric::L1).with_threads(threads);
-    let mut rng2 = Rng::seed_from(2024);
-    let _ = synthetic::scrna_sparse(&mut rng2, n, genes, 0.10);
-    let dense_fit = BanditPam::new(BanditPamConfig::default())
-        .fit(&dense_backend, k, &mut rng2)?;
+    let dense_model = Fit::banditpam()
+        .metric(Metric::L1)
+        .threads(threads)
+        .seed(seed)
+        .k(k)
+        .fit(&densified)?;
     println!(
         "\ndensified parity : medoids {} (loss ratio {:.6})",
-        if dense_fit.medoids == fit.medoids { "identical" } else { "DIFFER" },
-        fit.loss / dense_fit.loss
+        if dense_model.clustering().medoids == fit.medoids { "identical" } else { "DIFFER" },
+        fit.loss / dense_model.loss()
     );
 
     // PAM reference for the savings claim (also on the sparse path).
-    let pam_backend = NativeBackend::new(&data.points, Metric::L1).with_threads(threads);
-    let pam = FastPam1::new().fit(&pam_backend, k, &mut Rng::seed_from(0))?;
+    let pam_model = Fit::fastpam1()
+        .metric(Metric::L1)
+        .threads(threads)
+        .seed(0)
+        .k(k)
+        .fit(&data)?;
+    let pam = pam_model.clustering();
     println!(
         "vs PAM/FastPAM1 : loss ratio {:.4}, {:.1}x fewer distance evals",
         fit.loss / pam.loss,
         pam.stats.distance_evals as f64 / fit.stats.distance_evals as f64
     );
+
+    // Model round trip: the fitted medoid set is a serving artifact — it
+    // saves to the versioned binary format, reloads without the training
+    // data, and re-assigns the training cells bitwise-identically.
+    let model_path = std::env::temp_dir().join(format!(
+        "banditpam_scrna_model_{}.bpmodel",
+        std::process::id()
+    ));
+    model.save(&model_path)?;
+    let served = KMedoidsModel::load(&model_path)?.with_threads(threads);
+    let re_assign = served.predict(&data.points)?;
+    assert_eq!(
+        re_assign, fit.assignments,
+        "reloaded model must reproduce the training assignments bitwise"
+    );
+    println!(
+        "\nmodel round trip: {} bytes, predict(train) == training assignments",
+        std::fs::metadata(&model_path)?.len()
+    );
+    let _ = std::fs::remove_file(&model_path);
 
     // Out-of-core parity: the same cells written to a Matrix Market file
     // and streamed back through bounded row-windows (as a real 68k-cell
@@ -108,7 +139,7 @@ fn main() -> anyhow::Result<()> {
     let (streamed, stats) = banditpam::data::stream::load_mtx_streamed(&mtx, &opts)?;
     let Points::Sparse(streamed_csr) = &streamed.points else { unreachable!() };
     println!(
-        "\nout-of-core     : {} windows, peak window {} nnz ({:.1}% of total) -> {}",
+        "out-of-core     : {} windows, peak window {} nnz ({:.1}% of total) -> {}",
         stats.windows,
         stats.peak_window_nnz,
         100.0 * stats.peak_window_nnz as f64 / csr.nnz() as f64,

@@ -8,7 +8,7 @@
 
 use crate::algorithms::matrix_cache::{exact_build, FullMatrix, MatState};
 use crate::algorithms::pam::swap_until_converged;
-use crate::algorithms::{check_fit_args, Clustering, FitStats, KMedoids};
+use crate::algorithms::{check_fit_args, degenerate_fit, Clustering, FitStats, KMedoids};
 use crate::runtime::backend::DistanceBackend;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
@@ -44,13 +44,20 @@ impl KMedoids for Clara {
         backend: &dyn DistanceBackend,
         k: usize,
         rng: &mut Rng,
-    ) -> anyhow::Result<Clustering> {
+    ) -> crate::error::Result<Clustering> {
         check_fit_args(backend, k)?;
+        if let Some(c) = degenerate_fit(backend, k) {
+            return Ok(c);
+        }
         let timer = Timer::start();
         let start = backend.counter().get();
         let n = backend.n();
         let ssize = if self.sample_size == 0 { (40 + 2 * k).min(n) } else { self.sample_size.min(n) };
-        anyhow::ensure!(ssize > k, "sample size {ssize} must exceed k {k}");
+        if ssize <= k {
+            return Err(crate::error::Error::invalid_argument(format!(
+                "sample size {ssize} must exceed k {k}"
+            )));
+        }
 
         let mut best: Option<(f64, Vec<usize>)> = None;
         for _ in 0..self.samples {

@@ -8,7 +8,7 @@
 //! distinctly below PAM (paper Figure 1a) but each neighbour check is only
 //! n evaluations.
 
-use crate::algorithms::{check_fit_args, Clustering, FitStats, KMedoids};
+use crate::algorithms::{check_fit_args, degenerate_fit, Clustering, FitStats, KMedoids};
 use crate::coordinator::state::MedoidState;
 use crate::runtime::backend::DistanceBackend;
 use crate::util::rng::Rng;
@@ -79,8 +79,11 @@ impl KMedoids for Clarans {
         backend: &dyn DistanceBackend,
         k: usize,
         rng: &mut Rng,
-    ) -> anyhow::Result<Clustering> {
+    ) -> crate::error::Result<Clustering> {
         check_fit_args(backend, k)?;
+        if let Some(c) = degenerate_fit(backend, k) {
+            return Ok(c);
+        }
         let timer = Timer::start();
         let start = backend.counter().get();
         let n = backend.n();

@@ -10,7 +10,7 @@
 
 use crate::algorithms::fastpam1::best_swap_eq12;
 use crate::algorithms::matrix_cache::{exact_build, FullMatrix, MatState};
-use crate::algorithms::{check_fit_args, Clustering, FitStats, KMedoids};
+use crate::algorithms::{check_fit_args, degenerate_fit, Clustering, FitStats, KMedoids};
 use crate::runtime::backend::DistanceBackend;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
@@ -37,8 +37,11 @@ impl KMedoids for FastPam {
         backend: &dyn DistanceBackend,
         k: usize,
         _rng: &mut Rng,
-    ) -> anyhow::Result<Clustering> {
+    ) -> crate::error::Result<Clustering> {
         check_fit_args(backend, k)?;
+        if let Some(c) = degenerate_fit(backend, k) {
+            return Ok(c);
+        }
         let timer = Timer::start();
         let start = backend.counter().get();
         let m = FullMatrix::compute(backend);

@@ -9,7 +9,7 @@
 //! identical to PAM's.
 
 use crate::algorithms::matrix_cache::{exact_build, FullMatrix, MatState};
-use crate::algorithms::{check_fit_args, Clustering, FitStats, KMedoids};
+use crate::algorithms::{check_fit_args, degenerate_fit, Clustering, FitStats, KMedoids};
 use crate::runtime::backend::DistanceBackend;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
@@ -77,8 +77,11 @@ impl KMedoids for FastPam1 {
         backend: &dyn DistanceBackend,
         k: usize,
         _rng: &mut Rng,
-    ) -> anyhow::Result<Clustering> {
+    ) -> crate::error::Result<Clustering> {
         check_fit_args(backend, k)?;
+        if let Some(c) = degenerate_fit(backend, k) {
+            return Ok(c);
+        }
         let timer = Timer::start();
         let start = backend.counter().get();
         let m = FullMatrix::compute(backend);

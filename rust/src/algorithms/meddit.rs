@@ -5,7 +5,7 @@
 //! BanditPAM. Included both as the historical baseline and as a
 //! correctness cross-check (for k = 1, BanditPAM's BUILD must agree).
 
-use crate::algorithms::{check_fit_args, Clustering, FitStats, KMedoids};
+use crate::algorithms::{check_fit_args, degenerate_fit, Clustering, FitStats, KMedoids};
 use crate::bandits::adaptive::{adaptive_search, AdaptiveConfig};
 use crate::coordinator::arms::BuildArms;
 use crate::coordinator::state::MedoidState;
@@ -36,9 +36,16 @@ impl KMedoids for Meddit {
         backend: &dyn DistanceBackend,
         k: usize,
         rng: &mut Rng,
-    ) -> anyhow::Result<Clustering> {
+    ) -> crate::error::Result<Clustering> {
         check_fit_args(backend, k)?;
-        anyhow::ensure!(k == 1, "meddit solves the 1-medoid problem (got k = {k})");
+        if k != 1 {
+            return Err(crate::error::Error::invalid_argument(format!(
+                "meddit solves the 1-medoid problem (got k = {k})"
+            )));
+        }
+        if let Some(c) = degenerate_fit(backend, k) {
+            return Ok(c);
+        }
         let timer = Timer::start();
         let start = backend.counter().get();
         let n = backend.n();

@@ -16,6 +16,7 @@ pub mod meddit;
 pub mod pam;
 pub mod voronoi;
 
+use crate::error::{Error, Result};
 use crate::runtime::backend::{loss_and_assignments, DistanceBackend};
 use crate::util::rng::Rng;
 
@@ -85,6 +86,28 @@ impl Clustering {
     pub fn same_medoids(&self, other: &Clustering) -> bool {
         self.medoids == other.medoids
     }
+
+    /// The `k == n` degenerate solution: every point is its own medoid at
+    /// loss 0. Assignments are the identity (point `i` → medoid position
+    /// `i`), which is *a* — and, absent duplicate points, *the* — optimal
+    /// assignment; no distances are evaluated.
+    ///
+    /// Caveat: because no distances are computed, the identity assignment
+    /// is **not** re-derived through the first-minimum tie-break that
+    /// `loss_and_assignments` (and model predict) use. If the data holds
+    /// two points at distance zero from each other (duplicates; or
+    /// cosine-parallel vectors), a later one is assigned to itself here
+    /// but would tie-break to the *earlier* zero-distance medoid under
+    /// predict. All distances involved are exactly zero either way, so
+    /// the loss is unaffected — only the label choice among equals.
+    pub fn each_point_its_own_medoid(n: usize) -> Clustering {
+        Clustering {
+            medoids: (0..n).collect(),
+            assignments: (0..n).collect(),
+            loss: 0.0,
+            stats: FitStats { iters_plus_one: 1, ..Default::default() },
+        }
+    }
 }
 
 /// Common interface for all k-medoids solvers in this crate.
@@ -98,18 +121,113 @@ pub trait KMedoids {
         backend: &dyn DistanceBackend,
         k: usize,
         rng: &mut Rng,
-    ) -> anyhow::Result<Clustering>;
+    ) -> Result<Clustering>;
 }
 
 /// Validate common preconditions; shared by every implementation.
-pub(crate) fn check_fit_args(backend: &dyn DistanceBackend, k: usize) -> anyhow::Result<()> {
-    anyhow::ensure!(k >= 1, "k must be >= 1 (got {k})");
-    anyhow::ensure!(
-        k < backend.n(),
-        "k = {k} must be smaller than the dataset size n = {}",
-        backend.n()
-    );
+/// `k == n` is allowed — it has the trivial exact solution every
+/// implementation returns through [`degenerate_fit`].
+pub(crate) fn check_fit_args(backend: &dyn DistanceBackend, k: usize) -> Result<()> {
+    if k < 1 {
+        return Err(Error::invalid_argument(format!("k must be >= 1 (got {k})")));
+    }
+    if k > backend.n() {
+        return Err(Error::invalid_argument(format!(
+            "k = {k} must not exceed the dataset size n = {}",
+            backend.n()
+        )));
+    }
     Ok(())
+}
+
+/// The shared `k == n` fast path: the unique zero-loss solution is every
+/// point as its own medoid, so no search (and no distance evaluation) is
+/// needed. Every implementation calls this right after [`check_fit_args`].
+pub(crate) fn degenerate_fit(backend: &dyn DistanceBackend, k: usize) -> Option<Clustering> {
+    (k == backend.n()).then(|| Clustering::each_point_its_own_medoid(k))
+}
+
+/// One constructible `KMedoids` implementation, as the CLI and the
+/// [`crate::model::Fit`] facade see it.
+pub struct AlgorithmSpec {
+    /// The accepted `--algo` spelling (also [`KMedoids::name`]).
+    pub name: &'static str,
+    /// One-line description for `help` output.
+    pub note: &'static str,
+    /// Construct a fresh instance with its default configuration.
+    pub make: fn() -> Box<dyn KMedoids>,
+}
+
+/// Registry of every `KMedoids` implementation. `main.rs` dispatch, its
+/// `help` text and the [`crate::model::Fit`] facade all read this one
+/// table, so the accepted names can never drift from the documented ones.
+pub const REGISTRY: &[AlgorithmSpec] = &[
+    AlgorithmSpec {
+        name: "banditpam",
+        note: "adaptive multi-armed bandit PAM (the paper; default)",
+        make: || Box::new(crate::coordinator::banditpam::BanditPam::default_paper()),
+    },
+    AlgorithmSpec {
+        name: "pam",
+        note: "exact PAM (quality reference)",
+        make: || Box::new(pam::Pam::new()),
+    },
+    AlgorithmSpec {
+        name: "fastpam1",
+        note: "exact-PAM-equivalent SWAP, O(k) faster",
+        make: || Box::new(fastpam1::FastPam1::new()),
+    },
+    AlgorithmSpec {
+        name: "fastpam",
+        note: "near-PAM quality, eager sweeps",
+        make: || Box::new(fastpam::FastPam::new()),
+    },
+    AlgorithmSpec {
+        name: "clara",
+        note: "PAM on random subsamples",
+        make: || Box::new(clara::Clara::new()),
+    },
+    AlgorithmSpec {
+        name: "clarans",
+        note: "randomized neighbor search",
+        make: || Box::new(clarans::Clarans::new()),
+    },
+    AlgorithmSpec {
+        name: "voronoi",
+        note: "k-means-style alternation",
+        make: || Box::new(voronoi::VoronoiIteration::new()),
+    },
+    AlgorithmSpec {
+        name: "meddit",
+        note: "1-medoid bandit of Bagaria et al. (k=1 only)",
+        make: || Box::new(meddit::Meddit::new()),
+    },
+];
+
+/// Look up a registry entry by name. Shared by [`make_algorithm`] and the
+/// [`crate::model::Fit`] facade so the lookup and its error message exist
+/// exactly once.
+pub fn find_algorithm(name: &str) -> Result<&'static AlgorithmSpec> {
+    REGISTRY.iter().find(|spec| spec.name == name).ok_or_else(|| {
+        Error::invalid_argument(format!(
+            "unknown algorithm {name:?} (expected one of: {})",
+            algorithm_names()
+        ))
+    })
+}
+
+/// Construct an algorithm by registry name.
+pub fn make_algorithm(name: &str) -> Result<Box<dyn KMedoids>> {
+    find_algorithm(name).map(|spec| (spec.make)())
+}
+
+/// The accepted algorithm names, comma-separated, in registry order.
+pub fn algorithm_names() -> String {
+    REGISTRY
+        .iter()
+        .map(|s| s.name)
+        .collect::<Vec<_>>()
+        .join(", ")
 }
 
 #[cfg(test)]
@@ -149,7 +267,50 @@ mod tests {
         let ds = synthetic::gmm(&mut Rng::seed_from(2), 10, 2, 2, 1.0);
         let b = NativeBackend::new(&ds.points, Metric::L2);
         assert!(check_fit_args(&b, 0).is_err());
-        assert!(check_fit_args(&b, 10).is_err());
+        assert!(check_fit_args(&b, 11).is_err());
         assert!(check_fit_args(&b, 3).is_ok());
+        // k == n is legal: it has the trivial exact solution
+        assert!(check_fit_args(&b, 10).is_ok());
+    }
+
+    /// `k == n` short-circuits to the zero-loss identity solution in every
+    /// implementation, with no distance evaluations.
+    #[test]
+    fn degenerate_k_equals_n_fast_path() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(7), 12, 3, 2, 2.0);
+        let b = NativeBackend::new(&ds.points, Metric::L2);
+        assert!(degenerate_fit(&b, 11).is_none());
+        let c = degenerate_fit(&b, 12).expect("k == n is degenerate");
+        assert_eq!(c.medoids, (0..12).collect::<Vec<_>>());
+        assert_eq!(c.assignments, (0..12).collect::<Vec<_>>());
+        assert_eq!(c.loss, 0.0);
+        assert_eq!(b.counter().get(), 0, "no distances evaluated");
+        // end to end through every registered algorithm (meddit is k=1
+        // only, so it only hits the degenerate path at n = 1)
+        for spec in REGISTRY {
+            let mut rng = Rng::seed_from(5);
+            if spec.name == "meddit" {
+                let one = synthetic::gmm(&mut Rng::seed_from(8), 1, 3, 1, 1.0);
+                let b1 = NativeBackend::new(&one.points, Metric::L2);
+                let fit = (spec.make)().fit(&b1, 1, &mut rng).unwrap();
+                assert_eq!(fit.medoids, vec![0], "{}", spec.name);
+                continue;
+            }
+            let fit = (spec.make)().fit(&b, 12, &mut rng).unwrap();
+            assert_eq!(fit.medoids, c.medoids, "{}", spec.name);
+            assert_eq!(fit.assignments, c.assignments, "{}", spec.name);
+            assert_eq!(fit.loss, 0.0, "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn registry_names_resolve_and_match_impl_names() {
+        for spec in REGISTRY {
+            let algo = make_algorithm(spec.name).unwrap();
+            assert_eq!(algo.name(), spec.name);
+        }
+        let err = make_algorithm("kmeans").unwrap_err();
+        assert!(err.to_string().contains("banditpam"), "{err}");
+        assert!(algorithm_names().starts_with("banditpam, pam"));
     }
 }

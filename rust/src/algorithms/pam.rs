@@ -12,7 +12,7 @@
 //! removes exactly that factor-k redundancy.
 
 use crate::algorithms::matrix_cache::{exact_build, swap_delta, FullMatrix, MatState};
-use crate::algorithms::{check_fit_args, Clustering, FitStats, KMedoids};
+use crate::algorithms::{check_fit_args, degenerate_fit, Clustering, FitStats, KMedoids};
 use crate::runtime::backend::DistanceBackend;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
@@ -78,8 +78,11 @@ impl KMedoids for Pam {
         backend: &dyn DistanceBackend,
         k: usize,
         _rng: &mut Rng,
-    ) -> anyhow::Result<Clustering> {
+    ) -> crate::error::Result<Clustering> {
         check_fit_args(backend, k)?;
+        if let Some(c) = degenerate_fit(backend, k) {
+            return Ok(c);
+        }
         let timer = Timer::start();
         let start = backend.counter().get();
         let m = FullMatrix::compute(backend);

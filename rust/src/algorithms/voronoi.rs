@@ -8,7 +8,7 @@
 //! local optima than PAM (paper Figure 1a, the worst of the four).
 
 use crate::algorithms::matrix_cache::FullMatrix;
-use crate::algorithms::{check_fit_args, Clustering, FitStats, KMedoids};
+use crate::algorithms::{check_fit_args, degenerate_fit, Clustering, FitStats, KMedoids};
 use crate::runtime::backend::DistanceBackend;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
@@ -35,8 +35,11 @@ impl KMedoids for VoronoiIteration {
         backend: &dyn DistanceBackend,
         k: usize,
         _rng: &mut Rng,
-    ) -> anyhow::Result<Clustering> {
+    ) -> crate::error::Result<Clustering> {
         check_fit_args(backend, k)?;
+        if let Some(c) = degenerate_fit(backend, k) {
+            return Ok(c);
+        }
         let timer = Timer::start();
         let start = backend.counter().get();
         let n = backend.n();

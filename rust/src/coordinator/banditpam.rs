@@ -1,7 +1,7 @@
 //! The BanditPAM driver: k BUILD searches + SWAP-until-converged, each via
 //! Algorithm 1. Implements [`crate::algorithms::KMedoids`].
 
-use crate::algorithms::{check_fit_args, Clustering, FitStats, KMedoids};
+use crate::algorithms::{check_fit_args, degenerate_fit, Clustering, FitStats, KMedoids};
 use crate::coordinator::build::build_step;
 use crate::coordinator::config::BanditPamConfig;
 use crate::coordinator::session::SwapSession;
@@ -54,11 +54,19 @@ impl BanditPam {
         backend: &dyn DistanceBackend,
         k: usize,
         rng: &mut Rng,
-    ) -> anyhow::Result<MedoidState> {
+    ) -> crate::error::Result<MedoidState> {
+        self.config.validate()?;
         check_fit_args(backend, k)?;
         self.build_sigmas.clear();
         self.trace.clear();
         let mut state = MedoidState::empty(backend.n());
+        if k == backend.n() {
+            // Degenerate k == n: every point is a medoid; no search.
+            for i in 0..k {
+                state.add_medoid(backend, i);
+            }
+            return Ok(state);
+        }
         for _ in 0..k {
             let before = backend.counter().get();
             let (_, outcome) = build_step(backend, &mut state, &self.config, rng);
@@ -88,7 +96,20 @@ impl KMedoids for BanditPam {
         backend: &dyn DistanceBackend,
         k: usize,
         rng: &mut Rng,
-    ) -> anyhow::Result<Clustering> {
+    ) -> crate::error::Result<Clustering> {
+        // validate/check repeat inside build_only (both are public entry
+        // points and the checks are O(1)); they must run here first so the
+        // degenerate shortcut below cannot bypass them. Unlike build_only's
+        // k == n branch (which must materialize a MedoidState and therefore
+        // evaluates distances), this shortcut is evaluation-free.
+        self.config.validate()?;
+        check_fit_args(backend, k)?;
+        if let Some(c) = degenerate_fit(backend, k) {
+            // No search ran: leave no stale telemetry from a prior fit.
+            self.build_sigmas.clear();
+            self.trace.clear();
+            return Ok(c);
+        }
         let timer = Timer::start();
         let start_evals = backend.counter().get();
         let mut state = self.build_only(backend, k, rng)?;
@@ -214,6 +235,26 @@ mod tests {
         let ds = synthetic::gmm(&mut Rng::seed_from(6), 10, 2, 2, 1.0);
         let backend = NativeBackend::new(&ds.points, Metric::L2);
         assert!(BanditPam::default_paper().fit(&backend, 0, &mut Rng::seed_from(0)).is_err());
-        assert!(BanditPam::default_paper().fit(&backend, 10, &mut Rng::seed_from(0)).is_err());
+        assert!(BanditPam::default_paper().fit(&backend, 11, &mut Rng::seed_from(0)).is_err());
+        // k == n is the degenerate identity solution, not an error
+        let fit = BanditPam::default_paper()
+            .fit(&backend, 10, &mut Rng::seed_from(0))
+            .unwrap();
+        assert_eq!(fit.medoids, (0..10).collect::<Vec<_>>());
+        assert_eq!(fit.loss, 0.0);
+    }
+
+    #[test]
+    fn fit_rejects_invalid_config() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(6), 10, 2, 2, 1.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let mut algo = BanditPam::new(BanditPamConfig {
+            swap_reuse: false,
+            swap_warm_start: true,
+            ..Default::default()
+        });
+        let err = algo.fit(&backend, 3, &mut Rng::seed_from(0)).unwrap_err();
+        assert_eq!(err.kind(), "config");
+        assert!(algo.build_only(&backend, 3, &mut Rng::seed_from(0)).is_err());
     }
 }

@@ -60,8 +60,9 @@ pub struct BanditPamConfig {
     /// changed (BanditPAM++ "PI"). Skips re-pulling, so it changes the
     /// search trajectory; the result keeps Algorithm 1's usual
     /// high-probability guarantee rather than bitwise parity. Off by
-    /// default; requires `swap_reuse`. The `abl-swap-reuse` ablation
-    /// measures it.
+    /// default; requires `swap_reuse` — [`BanditPamConfig::validate`]
+    /// rejects `swap_warm_start` without it (it used to be silently
+    /// inactive). The `abl-swap-reuse` ablation measures it.
     pub swap_warm_start: bool,
 }
 
@@ -90,6 +91,40 @@ impl Default for BanditPamConfig {
 }
 
 impl BanditPamConfig {
+    /// Reject configurations that cannot run or would silently misbehave:
+    ///
+    /// * `batch_size == 0` — Algorithm 1 would never pull an arm;
+    /// * `DeltaMode::Fixed` outside the open interval `(0, 1)` — not a
+    ///   probability (and 0/1 degenerate the confidence intervals);
+    /// * `swap_warm_start` without `swap_reuse` — the estimator carry-over
+    ///   rides on the session row cache, so this combination used to be
+    ///   *silently inactive*; it is now a hard error.
+    ///
+    /// Called by the [`crate::model::Fit`] builder before construction and
+    /// by [`crate::coordinator::banditpam::BanditPam`] at the top of every
+    /// fit (the config field is public and mutable, so construction-time
+    /// validation alone could be bypassed).
+    pub fn validate(&self) -> crate::error::Result<()> {
+        use crate::error::Error;
+        if self.batch_size == 0 {
+            return Err(Error::config("batch_size must be >= 1 (got 0)"));
+        }
+        if let DeltaMode::Fixed(d) = self.delta {
+            if !(d > 0.0 && d < 1.0) {
+                return Err(Error::config(format!(
+                    "DeltaMode::Fixed must lie in (0, 1) (got {d})"
+                )));
+            }
+        }
+        if self.swap_warm_start && !self.swap_reuse {
+            return Err(Error::config(
+                "swap_warm_start requires swap_reuse (estimator carry-over rides on \
+                 the session row cache; enabling it alone would silently do nothing)",
+            ));
+        }
+        Ok(())
+    }
+
     /// Adaptive-search knobs for a call with `n_targets` arms over `n`
     /// points. BUILD searches always have a strictly-improving winner;
     /// SWAP searches pass `early_stop` so a converged iteration terminates
@@ -126,6 +161,31 @@ mod tests {
     fn delta_degenerate_inputs() {
         assert!(DeltaMode::PaperDefault.resolve(0, 0) > 0.0);
         assert!(DeltaMode::NCubed.resolve(0, 0) > 0.0);
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        assert!(BanditPamConfig::default().validate().is_ok());
+        let zero_batch = BanditPamConfig { batch_size: 0, ..Default::default() };
+        assert_eq!(zero_batch.validate().unwrap_err().kind(), "config");
+        for d in [0.0, 1.0, -0.5, 1.5, f64::NAN] {
+            let c = BanditPamConfig { delta: DeltaMode::Fixed(d), ..Default::default() };
+            assert!(c.validate().is_err(), "Fixed({d}) must be rejected");
+        }
+        let ok_fixed =
+            BanditPamConfig { delta: DeltaMode::Fixed(0.01), ..Default::default() };
+        assert!(ok_fixed.validate().is_ok());
+        // warm start without reuse: previously silently inactive, now hard
+        let warm_only = BanditPamConfig {
+            swap_reuse: false,
+            swap_warm_start: true,
+            ..Default::default()
+        };
+        let err = warm_only.validate().unwrap_err();
+        assert!(err.to_string().contains("swap_reuse"), "{err}");
+        let warm_with_reuse =
+            BanditPamConfig { swap_warm_start: true, ..Default::default() };
+        assert!(warm_with_reuse.validate().is_ok());
     }
 
     #[test]

@@ -9,38 +9,51 @@
 
 use crate::data::sparse::CsrMatrix;
 use crate::data::{stream, Dataset, Points};
+use crate::error::{Error, Result};
 use crate::util::matrix::Matrix;
-use anyhow::{bail, Context, Result};
+use std::fmt::Display;
 use std::io::Read;
 use std::path::Path;
 
+/// Dataset-I/O error with the path folded in.
+fn io_err(path: &Path, e: impl Display) -> Error {
+    Error::data(format!("{}: {e}", path.display()))
+}
+
+/// Fold an error from the (internally `anyhow`-based) streaming reader
+/// into the public [`Error::Data`] category, keeping its context chain.
+fn stream_err(e: anyhow::Error) -> Error {
+    Error::data(format!("{e:#}"))
+}
+
 /// Load a headerless CSV of floats (rows = points).
 pub fn load_csv(path: &Path) -> Result<Dataset> {
-    let text = std::fs::read_to_string(path)
-        .with_context(|| format!("reading {}", path.display()))?;
+    let text = std::fs::read_to_string(path).map_err(|e| io_err(path, e))?;
     let mut rows: Vec<Vec<f32>> = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
-        let row: Result<Vec<f32>, _> =
+        let row: std::result::Result<Vec<f32>, _> =
             line.split(',').map(|f| f.trim().parse::<f32>()).collect();
-        let row = row.with_context(|| format!("line {} of {}", lineno + 1, path.display()))?;
+        let row = row.map_err(|e| {
+            Error::data(format!("line {} of {}: {e}", lineno + 1, path.display()))
+        })?;
         if let Some(first) = rows.first() {
             if row.len() != first.len() {
-                bail!(
+                return Err(Error::data(format!(
                     "ragged CSV: line {} has {} fields, expected {}",
                     lineno + 1,
                     row.len(),
                     first.len()
-                );
+                )));
             }
         }
         rows.push(row);
     }
     if rows.is_empty() {
-        bail!("empty CSV {}", path.display());
+        return Err(Error::data(format!("empty CSV {}", path.display())));
     }
     let (n, d) = (rows.len(), rows[0].len());
     let flat: Vec<f32> = rows.into_iter().flatten().collect();
@@ -55,16 +68,22 @@ pub fn save_csv(ds: &Dataset, path: &Path) -> Result<()> {
     use std::io::Write;
     let m = match &ds.points {
         crate::data::Points::Dense(m) => m,
-        _ => bail!("save_csv supports dense datasets only"),
+        other => {
+            return Err(Error::unsupported(format!(
+                "save_csv supports dense datasets only (got {})",
+                other.kind()
+            )))
+        }
     };
-    let mut f = std::io::BufWriter::new(
-        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
-    );
-    for i in 0..m.rows() {
-        let row: Vec<String> = m.row(i).iter().map(|v| format!("{v}")).collect();
-        writeln!(f, "{}", row.join(","))?;
-    }
-    Ok(())
+    let write = || -> std::io::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        for i in 0..m.rows() {
+            let row: Vec<String> = m.row(i).iter().map(|v| format!("{v}")).collect();
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(())
+    };
+    write().map_err(|e| io_err(path, e))
 }
 
 /// Load a Matrix Market coordinate (triplet) file as a sparse dataset,
@@ -85,9 +104,9 @@ pub fn save_csv(ds: &Dataset, path: &Path) -> Result<()> {
 /// bitwise-interchangeable, and [`load_mtx_auto`] picks between them by
 /// file size.
 pub fn load_mtx(path: &Path, transpose: bool, limit: usize) -> Result<Dataset> {
-    let file = std::fs::File::open(path)
-        .with_context(|| format!("opening {}", path.display()))?;
-    let mut scanner = stream::MtxScanner::open(std::io::BufReader::new(file), path)?;
+    let file = std::fs::File::open(path).map_err(|e| io_err(path, e))?;
+    let mut scanner = stream::MtxScanner::open(std::io::BufReader::new(file), path)
+        .map_err(stream_err)?;
     let (full_rows, cols) = if transpose {
         (scanner.cols(), scanner.rows())
     } else {
@@ -98,7 +117,7 @@ pub fn load_mtx(path: &Path, transpose: bool, limit: usize) -> Result<Dataset> {
     // before the (validating) scan finds the mismatch.
     let mut triplets: Vec<(usize, usize, f32)> =
         Vec::with_capacity(scanner.nnz().min(1 << 24));
-    while let Some((i, j, v)) = scanner.next_entry()? {
+    while let Some((i, j, v)) = scanner.next_entry().map_err(stream_err)? {
         let (r, c) = if transpose { (j, i) } else { (i, j) };
         if r < rows {
             triplets.push((r, c, v));
@@ -119,12 +138,10 @@ pub const MTX_STREAM_THRESHOLD_BYTES: u64 = 256 << 20;
 /// bitwise-identical datasets, so the switch is purely a memory-profile
 /// decision; `--stream` on the CLI forces the chunked path regardless.
 pub fn load_mtx_auto(path: &Path, transpose: bool, limit: usize) -> Result<Dataset> {
-    let bytes = std::fs::metadata(path)
-        .with_context(|| format!("reading {}", path.display()))?
-        .len();
+    let bytes = std::fs::metadata(path).map_err(|e| io_err(path, e))?.len();
     if bytes >= MTX_STREAM_THRESHOLD_BYTES {
         let opts = stream::StreamOptions { transpose, limit, ..Default::default() };
-        Ok(stream::load_mtx_streamed(path, &opts)?.0)
+        Ok(stream::load_mtx_streamed(path, &opts).map_err(stream_err)?.0)
     } else {
         load_mtx(path, transpose, limit)
     }
@@ -141,37 +158,46 @@ pub fn save_mtx(ds: &Dataset, path: &Path) -> Result<()> {
             owned = CsrMatrix::from_dense(d);
             &owned
         }
-        _ => bail!("save_mtx supports vector datasets only (got {})", ds.points.kind()),
+        other => {
+            return Err(Error::unsupported(format!(
+                "save_mtx supports vector datasets only (got {})",
+                other.kind()
+            )))
+        }
     };
-    let mut f = std::io::BufWriter::new(
-        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
-    );
-    writeln!(f, "%%MatrixMarket matrix coordinate real general")?;
-    writeln!(f, "% written by banditpam (points = rows)")?;
-    writeln!(f, "{} {} {}", m.rows(), m.cols(), m.nnz())?;
-    for (i, j, v) in m.triplets() {
-        writeln!(f, "{} {} {v}", i + 1, j + 1)?;
-    }
-    Ok(())
+    let write = || -> std::io::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "%%MatrixMarket matrix coordinate real general")?;
+        writeln!(f, "% written by banditpam (points = rows)")?;
+        writeln!(f, "{} {} {}", m.rows(), m.cols(), m.nnz())?;
+        for (i, j, v) in m.triplets() {
+            writeln!(f, "{} {} {v}", i + 1, j + 1)?;
+        }
+        Ok(())
+    };
+    write().map_err(|e| io_err(path, e))
 }
 
 /// Load an MNIST IDX3 image file (magic 0x00000803) as flattened rows
 /// scaled to [0, 1]. `limit` caps the number of images read (0 = all).
 pub fn load_idx_images(path: &Path, limit: usize) -> Result<Dataset> {
-    let mut f = std::fs::File::open(path)
-        .with_context(|| format!("opening {}", path.display()))?;
+    let mut f = std::fs::File::open(path).map_err(|e| io_err(path, e))?;
     let mut header = [0u8; 16];
-    f.read_exact(&mut header).context("IDX header")?;
+    f.read_exact(&mut header)
+        .map_err(|e| io_err(path, format!("IDX header: {e}")))?;
     let magic = u32::from_be_bytes(header[0..4].try_into().unwrap());
     if magic != 0x0000_0803 {
-        bail!("not an IDX3 image file (magic {magic:#x})");
+        return Err(Error::data(format!(
+            "not an IDX3 image file (magic {magic:#x})"
+        )));
     }
     let n = u32::from_be_bytes(header[4..8].try_into().unwrap()) as usize;
     let h = u32::from_be_bytes(header[8..12].try_into().unwrap()) as usize;
     let w = u32::from_be_bytes(header[12..16].try_into().unwrap()) as usize;
     let take = if limit == 0 { n } else { limit.min(n) };
     let mut buf = vec![0u8; take * h * w];
-    f.read_exact(&mut buf).context("IDX pixel data")?;
+    f.read_exact(&mut buf)
+        .map_err(|e| io_err(path, format!("IDX pixel data: {e}")))?;
     let data: Vec<f32> = buf.into_iter().map(|b| b as f32 / 255.0).collect();
     Ok(Dataset::dense(
         Matrix::from_vec(data, take, h * w),

@@ -74,6 +74,20 @@ impl Points {
         }
     }
 
+    /// Select points by index into a new `Points` of the same storage kind
+    /// (indices may repeat or reorder). This is how
+    /// [`crate::model::KMedoidsModel`] extracts its owned medoid rows from
+    /// a training set, and what [`Dataset::select`] routes through.
+    pub fn select(&self, idx: &[usize]) -> Points {
+        match self {
+            Points::Dense(m) => Points::Dense(m.select_rows(idx)),
+            Points::Sparse(m) => Points::Sparse(m.select_rows(idx)),
+            Points::Trees(t) => {
+                Points::Trees(idx.iter().map(|&i| t[i].clone()).collect())
+            }
+        }
+    }
+
     /// Convert dense storage to CSR (`None` for trees; sparse is returned
     /// as a clone). Exact zeros are dropped; `to_dense` restores them, so
     /// the round trip is lossless.
@@ -147,9 +161,12 @@ impl Dataset {
     /// ([`stream::CsrChunkReader`]), window by window — bitwise-identical
     /// to loading the same file in memory, but only ever holding one
     /// row-window of values beyond the growing result.
-    pub fn from_stream(reader: &mut stream::CsrChunkReader) -> anyhow::Result<Dataset> {
+    pub fn from_stream(reader: &mut stream::CsrChunkReader) -> crate::error::Result<Dataset> {
         let name = reader.source_name();
-        Ok(Dataset::sparse(reader.read_all()?, name))
+        let csr = reader
+            .read_all()
+            .map_err(|e| crate::error::Error::data(format!("{e:#}")))?;
+        Ok(Dataset::sparse(csr, name))
     }
 
     /// Number of points.
@@ -172,13 +189,7 @@ impl Dataset {
 
     /// Select points by index.
     pub fn select(&self, idx: &[usize]) -> Dataset {
-        let points = match &self.points {
-            Points::Dense(m) => Points::Dense(m.select_rows(idx)),
-            Points::Sparse(m) => Points::Sparse(m.select_rows(idx)),
-            Points::Trees(t) => {
-                Points::Trees(idx.iter().map(|&i| t[i].clone()).collect())
-            }
-        };
+        let points = self.points.select(idx);
         let labels = self
             .labels
             .as_ref()

@@ -36,7 +36,8 @@ pub struct CsrMatrix {
 impl CsrMatrix {
     /// Build from raw CSR arrays, validating every invariant listed in the
     /// module docs. Panics on violation (programmer error, not input
-    /// error — file loaders go through [`CsrMatrix::from_triplets`]).
+    /// error — file loaders go through [`CsrMatrix::from_triplets`], and
+    /// untrusted on-disk payloads through [`CsrMatrix::try_from_parts`]).
     pub fn from_parts(
         rows: usize,
         cols: usize,
@@ -44,29 +45,75 @@ impl CsrMatrix {
         indices: Vec<u32>,
         values: Vec<f32>,
     ) -> CsrMatrix {
-        assert!(cols <= u32::MAX as usize, "cols {cols} exceeds u32 column space");
-        assert_eq!(indptr.len(), rows + 1, "indptr must have rows+1 entries");
-        assert_eq!(indptr[0], 0, "indptr[0] must be 0");
-        assert_eq!(*indptr.last().unwrap(), indices.len(), "indptr end/nnz mismatch");
-        assert_eq!(indices.len(), values.len(), "indices/values length mismatch");
+        match CsrMatrix::try_from_parts(rows, cols, indptr, indices, values) {
+            Ok(m) => m,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Fallible variant of [`CsrMatrix::from_parts`]: returns a descriptive
+    /// `Err` instead of panicking on an invariant violation. This is the
+    /// entry point for *untrusted* CSR payloads (the model file loader),
+    /// where a corrupt file must surface as a clean error.
+    pub fn try_from_parts(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    ) -> Result<CsrMatrix, String> {
+        if cols > u32::MAX as usize {
+            return Err(format!("cols {cols} exceeds u32 column space"));
+        }
+        if indptr.len() != rows + 1 {
+            return Err(format!(
+                "indptr must have rows+1 entries (rows = {rows}, got {})",
+                indptr.len()
+            ));
+        }
+        if indptr[0] != 0 {
+            return Err(format!("indptr[0] must be 0 (got {})", indptr[0]));
+        }
+        if *indptr.last().unwrap() != indices.len() {
+            return Err(format!(
+                "indptr end/nnz mismatch ({} vs {})",
+                indptr[rows],
+                indices.len()
+            ));
+        }
+        if indices.len() != values.len() {
+            return Err(format!(
+                "indices/values length mismatch ({} vs {})",
+                indices.len(),
+                values.len()
+            ));
+        }
+        // Full monotonicity first: with `indptr[rows] == nnz` already
+        // checked, this bounds every entry by nnz, so the row slicing
+        // below cannot go out of range even on hostile input.
+        if indptr.windows(2).any(|w| w[0] > w[1]) {
+            return Err("indptr must be non-decreasing".to_string());
+        }
         for r in 0..rows {
-            assert!(indptr[r] <= indptr[r + 1], "indptr must be non-decreasing");
             let row = &indices[indptr[r]..indptr[r + 1]];
             for w in row.windows(2) {
-                assert!(w[0] < w[1], "row {r}: columns must be strictly increasing");
+                if w[0] >= w[1] {
+                    return Err(format!("row {r}: columns must be strictly increasing"));
+                }
             }
             if let Some(&last) = row.last() {
-                assert!((last as usize) < cols, "row {r}: column {last} >= cols {cols}");
+                if last as usize >= cols {
+                    return Err(format!("row {r}: column {last} >= cols {cols}"));
+                }
             }
         }
         // No explicit zeros: nnz()/density()/PartialEq all assume stored
         // values are structural nonzeros (the kernels would stay correct,
         // but two equal-data matrices would compare unequal).
-        assert!(
-            values.iter().all(|&v| v != 0.0),
-            "explicit zero value stored (strip zeros before from_parts)"
-        );
-        CsrMatrix { indptr, indices, values, rows, cols }
+        if !values.iter().all(|&v| v != 0.0) {
+            return Err("explicit zero value stored (strip zeros before from_parts)".to_string());
+        }
+        Ok(CsrMatrix { indptr, indices, values, rows, cols })
     }
 
     /// Empty matrix (no stored values).
@@ -374,5 +421,33 @@ mod tests {
     #[should_panic(expected = "out of")]
     fn out_of_bounds_triplet_rejected() {
         CsrMatrix::from_triplets(2, 2, &[(0, 5, 1.0)]);
+    }
+
+    type CsrMatrixPartsCase = (usize, usize, Vec<usize>, Vec<u32>, Vec<f32>);
+
+    /// `try_from_parts` is the untrusted-input entry: every invariant
+    /// violation is an `Err`, never a panic.
+    #[test]
+    fn try_from_parts_rejects_each_invariant_violation() {
+        let ok = CsrMatrix::try_from_parts(2, 3, vec![0, 1, 2], vec![1, 0], vec![1.0, 2.0]);
+        assert!(ok.is_ok());
+        let cases: Vec<(CsrMatrixPartsCase, &str)> = vec![
+            ((1, 4, vec![0, 1, 2], vec![1, 2], vec![1.0, 2.0]), "rows+1"),
+            ((1, 4, vec![1, 2], vec![1], vec![1.0]), "indptr[0]"),
+            ((1, 4, vec![0, 1], vec![1, 2], vec![1.0, 2.0]), "mismatch"),
+            ((1, 4, vec![0, 2], vec![1, 2], vec![1.0]), "length mismatch"),
+            // hostile indptr: decreasing run whose end still equals nnz —
+            // must Err without slicing out of bounds
+            ((2, 4, vec![0, 2, 1], vec![1], vec![1.0]), "non-decreasing"),
+            ((1, 4, vec![0, 2], vec![2, 1], vec![1.0, 2.0]), "strictly increasing"),
+            ((1, 4, vec![0, 2], vec![1, 1], vec![1.0, 2.0]), "strictly increasing"),
+            ((1, 2, vec![0, 1], vec![5], vec![1.0]), ">= cols"),
+            ((1, 4, vec![0, 1], vec![1], vec![0.0]), "explicit zero"),
+        ];
+        for ((rows, cols, indptr, indices, values), needle) in cases {
+            let err = CsrMatrix::try_from_parts(rows, cols, indptr, indices, values)
+                .unwrap_err();
+            assert!(err.contains(needle), "expected {needle:?} in {err:?}");
+        }
     }
 }

@@ -145,10 +145,18 @@ thread_local! {
     static SCATTER: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
 }
 
-/// Run `body` with row `t` of `m` scattered into the thread-local dense
-/// scratch buffer (length >= `m.cols()`, zero everywhere `t` stores
-/// nothing).
-fn with_scattered_row<R>(m: &CsrMatrix, t: usize, body: impl FnOnce(&[f32]) -> R) -> R {
+/// Run `body` with the sparse row `(ti, tv)` scattered into the
+/// thread-local dense scratch buffer (length >= `cols`, zero everywhere
+/// the row stores nothing). The row need not come from the same matrix as
+/// the references streamed inside `body` — the query-vs-medoids cross
+/// kernels scatter a *medoid* row and stream *query* rows, both over the
+/// same `cols`-wide feature space.
+fn with_scattered<R>(
+    cols: usize,
+    ti: &[u32],
+    tv: &[f32],
+    body: impl FnOnce(&[f32]) -> R,
+) -> R {
     /// Un-scatters on drop, so the all-zero invariant survives a panic in
     /// `body`: pool workers outlive chunk panics, and a poisoned scratch
     /// would silently corrupt every later block on that thread.
@@ -165,10 +173,9 @@ fn with_scattered_row<R>(m: &CsrMatrix, t: usize, body: impl FnOnce(&[f32]) -> R
     }
     SCATTER.with(|cell| {
         let mut scratch = cell.borrow_mut();
-        if scratch.len() < m.cols() {
-            scratch.resize(m.cols(), 0.0);
+        if scratch.len() < cols {
+            scratch.resize(cols, 0.0);
         }
-        let (ti, tv) = m.row(t);
         for (&j, &v) in ti.iter().zip(tv) {
             scratch[j as usize] = v;
         }
@@ -177,21 +184,45 @@ fn with_scattered_row<R>(m: &CsrMatrix, t: usize, body: impl FnOnce(&[f32]) -> R
     })
 }
 
+/// [`with_scattered`] for row `t` of `m` (the same-matrix row kernels).
+fn with_scattered_row<R>(m: &CsrMatrix, t: usize, body: impl FnOnce(&[f32]) -> R) -> R {
+    let (ti, tv) = m.row(t);
+    with_scattered(m.cols(), ti, tv, body)
+}
+
 /// One-to-many sparse l2 row kernel: `out[r] = l2(row t, row refs[r])`
 /// against the precomputed squared-norm table (`sq_norms[i] = |row i|^2`,
 /// as produced by [`sq_norm`]). `O(nnz_ref)` per reference via
 /// scatter/gather; bit-identical to the pairwise [`l2`].
 pub fn l2_row(m: &CsrMatrix, t: usize, sq_norms: &[f64], refs: &[usize], out: &mut [f64]) {
+    l2_row_vs(m.row(t), sq_norms[t], m, sq_norms, refs, out)
+}
+
+/// Cross-matrix variant of [`l2_row`]: the target row `(ti, tv)` (with its
+/// squared norm `sq_t`) may come from a *different* matrix than the
+/// streamed references — the query-vs-medoids predict path scatters a
+/// medoid row and streams query rows. Both sides must share the feature
+/// space (`refs_m.cols()`). Accumulation order is identical to the
+/// same-matrix kernel, so when `(ti, tv)` is a row of `refs_m` the two are
+/// bit-for-bit equal.
+pub fn l2_row_vs(
+    t_row: (&[u32], &[f32]),
+    sq_t: f64,
+    refs_m: &CsrMatrix,
+    ref_sq: &[f64],
+    refs: &[usize],
+    out: &mut [f64],
+) {
     debug_assert_eq!(refs.len(), out.len());
-    with_scattered_row(m, t, |scratch| {
-        let sq_t = sq_norms[t];
+    debug_assert!(t_row.0.last().is_none_or(|&j| (j as usize) < refs_m.cols()));
+    with_scattered(refs_m.cols(), t_row.0, t_row.1, |scratch| {
         for (o, &r) in out.iter_mut().zip(refs) {
-            let (ri, rv) = m.row(r);
+            let (ri, rv) = refs_m.row(r);
             let mut d = 0.0f64;
             for (&j, &v) in ri.iter().zip(rv) {
                 d += v as f64 * scratch[j as usize] as f64;
             }
-            *o = l2_from_parts(sq_t, sq_norms[r], d);
+            *o = l2_from_parts(sq_t, ref_sq[r], d);
         }
     })
 }
@@ -200,16 +231,29 @@ pub fn l2_row(m: &CsrMatrix, t: usize, sq_norms: &[f64], refs: &[usize], out: &m
 /// (`abs_sums[i] = ||row i||_1`, as produced by [`abs_sum`]).
 /// Bit-identical to the pairwise [`l1`].
 pub fn l1_row(m: &CsrMatrix, t: usize, abs_sums: &[f64], refs: &[usize], out: &mut [f64]) {
+    l1_row_vs(m.row(t), abs_sums[t], m, abs_sums, refs, out)
+}
+
+/// Cross-matrix variant of [`l1_row`] (see [`l2_row_vs`] for the
+/// target/reference split).
+pub fn l1_row_vs(
+    t_row: (&[u32], &[f32]),
+    abs_t: f64,
+    refs_m: &CsrMatrix,
+    ref_abs: &[f64],
+    refs: &[usize],
+    out: &mut [f64],
+) {
     debug_assert_eq!(refs.len(), out.len());
-    with_scattered_row(m, t, |scratch| {
-        let abs_t = abs_sums[t];
+    debug_assert!(t_row.0.last().is_none_or(|&j| (j as usize) < refs_m.cols()));
+    with_scattered(refs_m.cols(), t_row.0, t_row.1, |scratch| {
         for (o, &r) in out.iter_mut().zip(refs) {
-            let (ri, rv) = m.row(r);
+            let (ri, rv) = refs_m.row(r);
             let mut corr = 0.0f64;
             for (&j, &v) in ri.iter().zip(rv) {
                 corr += l1_term(scratch[j as usize] as f64, v as f64);
             }
-            *o = l1_from_parts(abs_t, abs_sums[r], corr);
+            *o = l1_from_parts(abs_t, ref_abs[r], corr);
         }
     })
 }
@@ -217,16 +261,29 @@ pub fn l1_row(m: &CsrMatrix, t: usize, abs_sums: &[f64], refs: &[usize], out: &m
 /// One-to-many sparse cosine row kernel against the precomputed
 /// squared-norm table. Bit-identical to the pairwise [`cosine`].
 pub fn cosine_row(m: &CsrMatrix, t: usize, sq_norms: &[f64], refs: &[usize], out: &mut [f64]) {
+    cosine_row_vs(m.row(t), sq_norms[t], m, sq_norms, refs, out)
+}
+
+/// Cross-matrix variant of [`cosine_row`] (see [`l2_row_vs`] for the
+/// target/reference split).
+pub fn cosine_row_vs(
+    t_row: (&[u32], &[f32]),
+    sq_t: f64,
+    refs_m: &CsrMatrix,
+    ref_sq: &[f64],
+    refs: &[usize],
+    out: &mut [f64],
+) {
     debug_assert_eq!(refs.len(), out.len());
-    with_scattered_row(m, t, |scratch| {
-        let sq_t = sq_norms[t];
+    debug_assert!(t_row.0.last().is_none_or(|&j| (j as usize) < refs_m.cols()));
+    with_scattered(refs_m.cols(), t_row.0, t_row.1, |scratch| {
         for (o, &r) in out.iter_mut().zip(refs) {
-            let (ri, rv) = m.row(r);
+            let (ri, rv) = refs_m.row(r);
             let mut d = 0.0f64;
             for (&j, &v) in ri.iter().zip(rv) {
                 d += v as f64 * scratch[j as usize] as f64;
             }
-            *o = cosine_from_parts(d, sq_t, sq_norms[r]);
+            *o = cosine_from_parts(d, sq_t, ref_sq[r]);
         }
     })
 }
@@ -315,6 +372,41 @@ mod tests {
                     let (ri, rv) = sp.row(r);
                     assert_eq!(o, cosine(ti, tv, ri, rv), "cos t={t} r={r}");
                 }
+            }
+        }
+    }
+
+    /// The cross-matrix `_vs` kernels scatter a row from one matrix and
+    /// stream references from another; against the merge pair kernels they
+    /// must agree bit for bit (same exact-zero argument as the same-matrix
+    /// path), which is what makes out-of-sample predict reproducible.
+    #[test]
+    fn cross_matrix_row_kernels_bitwise_equal_merge() {
+        let mut rng = Rng::seed_from(54);
+        let (targets, _) = random_pair(&mut rng, 5, 63, 0.3);
+        let (queries, _) = random_pair(&mut rng, 9, 63, 0.15);
+        let t_abs = abs_sum_table(&targets);
+        let t_sq = sq_norm_table(&targets);
+        let q_abs = abs_sum_table(&queries);
+        let q_sq = sq_norm_table(&queries);
+        let refs: Vec<usize> = (0..9).collect();
+        let mut out = vec![0.0f64; refs.len()];
+        for t in 0..5 {
+            let (ti, tv) = targets.row(t);
+            l1_row_vs((ti, tv), t_abs[t], &queries, &q_abs, &refs, &mut out);
+            for (&r, &o) in refs.iter().zip(&out) {
+                let (ri, rv) = queries.row(r);
+                assert_eq!(o, l1(ti, tv, ri, rv), "l1 t={t} r={r}");
+            }
+            l2_row_vs((ti, tv), t_sq[t], &queries, &q_sq, &refs, &mut out);
+            for (&r, &o) in refs.iter().zip(&out) {
+                let (ri, rv) = queries.row(r);
+                assert_eq!(o, l2(ti, tv, ri, rv), "l2 t={t} r={r}");
+            }
+            cosine_row_vs((ti, tv), t_sq[t], &queries, &q_sq, &refs, &mut out);
+            for (&r, &o) in refs.iter().zip(&out) {
+                let (ri, rv) = queries.row(r);
+                assert_eq!(o, cosine(ti, tv, ri, rv), "cos t={t} r={r}");
             }
         }
     }

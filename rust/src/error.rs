@@ -1,0 +1,165 @@
+//! Crate-wide error type for the public API boundary.
+//!
+//! Historically every fallible public function returned `anyhow::Result`
+//! (via the vendored shim), which made failure modes stringly-typed: a
+//! caller could not tell a bad `k` from a corrupt model file without
+//! parsing messages. [`Error`] classifies the crate's failure surface into
+//! a small closed set of variants; the [`crate::algorithms::KMedoids`]
+//! trait, the [`crate::data::loader`] functions and the whole
+//! [`crate::model`] layer return it.
+//!
+//! The `anyhow` shim remains in use at *internal* call sites (streaming
+//! reader, manifest/XLA plumbing, `main.rs` glue) — interop is seamless in
+//! both directions:
+//!
+//! * `Error` implements [`std::error::Error`], so `?` lifts it into
+//!   `anyhow::Result` through the shim's blanket `From` impl (and the real
+//!   crate's, if it were substituted).
+//! * `From<anyhow::Error> for Error` folds an internal context chain into
+//!   [`Error::Internal`], preserving the full `{:#}` rendering.
+
+use std::fmt;
+
+/// Classified error for the public API boundary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Error {
+    /// A caller-supplied argument is out of range or inconsistent
+    /// (`k == 0`, dimension mismatch between a model and its queries, ...).
+    InvalidArgument(String),
+    /// A configuration value (or combination) is invalid —
+    /// [`crate::coordinator::config::BanditPamConfig::validate`].
+    Config(String),
+    /// A dataset could not be read or parsed (CSV/MTX/IDX grammar, I/O).
+    Data(String),
+    /// A model file could not be written, read or parsed
+    /// ([`crate::model::KMedoidsModel::save`] / `load`).
+    Model(String),
+    /// The requested metric/storage/algorithm combination is unsupported
+    /// (tree edit distance on dense points, saving a tree-medoid model).
+    Unsupported(String),
+    /// An internal subsystem failed; carries the flattened `anyhow`
+    /// context chain.
+    Internal(String),
+}
+
+/// `Result` defaulting to [`Error`], like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an [`Error::InvalidArgument`].
+    pub fn invalid_argument(msg: impl fmt::Display) -> Error {
+        Error::InvalidArgument(msg.to_string())
+    }
+
+    /// Build an [`Error::Config`].
+    pub fn config(msg: impl fmt::Display) -> Error {
+        Error::Config(msg.to_string())
+    }
+
+    /// Build an [`Error::Data`].
+    pub fn data(msg: impl fmt::Display) -> Error {
+        Error::Data(msg.to_string())
+    }
+
+    /// Build an [`Error::Model`].
+    pub fn model(msg: impl fmt::Display) -> Error {
+        Error::Model(msg.to_string())
+    }
+
+    /// Build an [`Error::Unsupported`].
+    pub fn unsupported(msg: impl fmt::Display) -> Error {
+        Error::Unsupported(msg.to_string())
+    }
+
+    /// Short machine-checkable category name.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Error::InvalidArgument(_) => "invalid_argument",
+            Error::Config(_) => "config",
+            Error::Data(_) => "data",
+            Error::Model(_) => "model",
+            Error::Unsupported(_) => "unsupported",
+            Error::Internal(_) => "internal",
+        }
+    }
+
+    /// The human-readable message (without the category prefix).
+    pub fn message(&self) -> &str {
+        match self {
+            Error::InvalidArgument(m)
+            | Error::Config(m)
+            | Error::Data(m)
+            | Error::Model(m)
+            | Error::Unsupported(m)
+            | Error::Internal(m) => m,
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidArgument(m) => write!(f, "invalid argument: {m}"),
+            Error::Config(m) => write!(f, "invalid config: {m}"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Model(m) => write!(f, "model error: {m}"),
+            Error::Unsupported(m) => write!(f, "unsupported: {m}"),
+            Error::Internal(m) => write!(f, "internal error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Fold an internal `anyhow` chain into [`Error::Internal`], keeping the
+/// whole context chain (the `{:#}` rendering: "outer: mid: root").
+impl From<anyhow::Error> for Error {
+    fn from(e: anyhow::Error) -> Error {
+        Error::Internal(format!("{e:#}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_category_and_message() {
+        let e = Error::invalid_argument("k must be >= 1 (got 0)");
+        assert_eq!(e.to_string(), "invalid argument: k must be >= 1 (got 0)");
+        assert_eq!(e.kind(), "invalid_argument");
+        assert_eq!(e.message(), "k must be >= 1 (got 0)");
+        assert_eq!(Error::model("bad magic").kind(), "model");
+    }
+
+    #[test]
+    fn lifts_into_anyhow_via_question_mark() {
+        fn inner() -> anyhow::Result<()> {
+            Err(Error::config("batch_size must be >= 1"))?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("batch_size"));
+    }
+
+    #[test]
+    fn folds_anyhow_chains_into_internal() {
+        use anyhow::Context;
+        let chained: anyhow::Result<()> =
+            std::result::Result::<(), _>::Err(std::io::Error::new(
+                std::io::ErrorKind::NotFound,
+                "gone",
+            ))
+            .context("reading manifest");
+        let e = Error::from(chained.unwrap_err());
+        assert_eq!(e.kind(), "internal");
+        assert!(e.message().contains("reading manifest"));
+        assert!(e.message().contains("gone"));
+    }
+
+    #[test]
+    fn equality_by_variant_and_message() {
+        assert_eq!(Error::data("x"), Error::data("x"));
+        assert_ne!(Error::data("x"), Error::model("x"));
+    }
+}

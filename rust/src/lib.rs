@@ -18,19 +18,49 @@
 //!
 //! ## Quickstart
 //!
+//! The front door is the [`model::Fit`] builder: pick an algorithm, chain
+//! the knobs, fit a [`data::Dataset`]. The result is a fitted
+//! [`model::KMedoidsModel`] that **owns** its medoid points — it assigns
+//! unseen points, saves to a versioned binary file (`rust/MODEL.md`), and
+//! outlives the training data.
+//!
 //! ```no_run
 //! # // no_run: rustdoc test binaries miss the cargo rpath to
 //! # // /opt/xla_extension/lib (libstdc++); compile-checked only.
 //! use banditpam::prelude::*;
 //!
+//! let data = synthetic::gmm(&mut Rng::seed_from(7), 200, 16, 5, 3.0);
+//! let model = Fit::banditpam().metric(Metric::L2).seed(7).k(5).fit(&data)?;
+//! println!("loss = {}, medoid rows = {:?}", model.loss(), model.clustering().medoids);
+//!
+//! // Out-of-sample assignment: the medoids are owned by the model, so
+//! // the training dataset can be dropped.
+//! let queries = synthetic::gmm(&mut Rng::seed_from(8), 50, 16, 5, 3.0);
+//! drop(data);
+//! let assignments = model.predict(&queries.points)?;
+//! assert_eq!(assignments.len(), 50);
+//!
+//! // Persistence: save, reload, serve.
+//! model.save(std::path::Path::new("gmm.bpmodel"))?;
+//! let served = KMedoidsModel::load(std::path::Path::new("gmm.bpmodel"))?;
+//! assert_eq!(served.predict(&queries.points)?, assignments);
+//! # Ok::<(), banditpam::Error>(())
+//! ```
+//!
+//! The lower layers stay public for full control — build a
+//! [`runtime::backend::NativeBackend`] and run any
+//! [`algorithms::KMedoids`] implementation by hand:
+//!
+//! ```no_run
+//! use banditpam::prelude::*;
+//!
 //! let mut rng = Rng::seed_from(7);
 //! let data = synthetic::gmm(&mut rng, 200, 16, 5, 3.0);
-//! let backend = NativeBackend::new(&data.points, Metric::L2);
+//! let backend = NativeBackend::new(&data.points, Metric::L2).with_threads(8);
 //! let fit = BanditPam::new(BanditPamConfig::default())
-//!     .fit(&backend, 5, &mut rng)
-//!     .unwrap();
-//! println!("loss = {}, medoids = {:?}", fit.loss, fit.medoids);
-//! assert_eq!(fit.medoids.len(), 5);
+//!     .fit(&backend, 5, &mut rng)?;
+//! println!("evals = {}", fit.stats.distance_evals);
+//! # Ok::<(), banditpam::Error>(())
 //! ```
 //!
 //! See `examples/` for end-to-end drivers (including one that routes all
@@ -43,11 +73,15 @@ pub mod bench;
 pub mod coordinator;
 pub mod data;
 pub mod distance;
+pub mod error;
 pub mod experiments;
+pub mod model;
 pub mod runtime;
 pub mod stats;
 pub mod testkit;
 pub mod util;
+
+pub use error::{Error, Result};
 
 /// Convenient single-import surface for examples and downstream users.
 pub mod prelude {
@@ -60,6 +94,8 @@ pub mod prelude {
     pub use crate::data::sparse::CsrMatrix;
     pub use crate::data::{synthetic, Dataset, Points};
     pub use crate::distance::{counter::DistanceCounter, Metric};
+    pub use crate::error::{Error, Result};
+    pub use crate::model::{Fit, KMedoidsModel};
     pub use crate::runtime::backend::{DistanceBackend, NativeBackend};
     pub use crate::util::rng::Rng;
 }

@@ -2,31 +2,44 @@
 //!
 //! Subcommands:
 //!   cluster        fit k medoids on a CSV / synthetic dataset
+//!   predict        assign points to the medoids of a saved model
 //!   experiment     regenerate a paper table/figure (see DESIGN.md)
 //!   generate-data  write a synthetic dataset to CSV
 //!   info           runtime / artifact diagnostics
 //!
-//! Run `banditpam help` for full usage.
+//! Run `banditpam help` for full usage. Algorithm and synthetic-dataset
+//! dispatch go through [`banditpam::algorithms::REGISTRY`] and
+//! [`banditpam::data::synthetic::REGISTRY`], and the help text is rendered
+//! from the same tables — the accepted names cannot drift from the
+//! documented ones.
 
 use anyhow::{bail, Context, Result};
-use banditpam::algorithms::{
-    clara::Clara, clarans::Clarans, fastpam::FastPam, fastpam1::FastPam1,
-    meddit::Meddit, pam::Pam, voronoi::VoronoiIteration, KMedoids,
-};
+use banditpam::algorithms::{make_algorithm, KMedoids};
 use banditpam::bench::Scale;
-use banditpam::coordinator::banditpam::BanditPam;
 use banditpam::data::stream::{self, StreamOptions};
 use banditpam::data::{loader, synthetic, Dataset, Points};
 use banditpam::distance::Metric;
+use banditpam::model::KMedoidsModel;
 use banditpam::runtime::backend::NativeBackend;
 use banditpam::runtime::executable::Client;
 use banditpam::runtime::manifest::Manifest;
 use banditpam::runtime::xla_backend::XlaBackend;
 use banditpam::util::cli::{Args, DataFormat};
 use banditpam::util::rng::Rng;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
-const HELP: &str = "\
+/// Full usage text, rendered from the algorithm/synthetic registries.
+fn help() -> String {
+    let algorithms: Vec<String> = banditpam::algorithms::REGISTRY
+        .iter()
+        .map(|s| format!("  {:<10} {}", s.name, s.note))
+        .collect();
+    let synthetics: Vec<String> = synthetic::REGISTRY
+        .iter()
+        .map(|s| format!("  {:<13} {}", s.name, s.note))
+        .collect();
+    format!(
+        "\
 banditpam — almost linear time k-medoids clustering via multi-armed bandits
 
 USAGE:
@@ -36,14 +49,24 @@ USAGE:
                     [--n N] [--k K]
                     [--metric l2|l1|cosine|tree] [--algo NAME] [--seed S]
                     [--backend native|xla] [--threads T] [--verbose]
+                    [--save-model FILE]
+  banditpam predict --model FILE [--data FILE | --synthetic NAME]
+                    [--format csv|mtx|idx] [--limit L] [--transpose]
+                    [--n N] [--seed S] [--threads T] [--out FILE] [--verbose]
   banditpam experiment <id|all> [--scale smoke|quick|paper] [--seed S] [--csv]
   banditpam generate-data --synthetic NAME --n N --out FILE[.csv|.mtx]
                     [--format csv|mtx] [--seed S]
   banditpam info
 
-ALGORITHMS: banditpam (default), pam, fastpam1, fastpam, clara, clarans,
-            voronoi, meddit (k=1 only)
-SYNTHETIC DATASETS: gmm, mnist, scrna, scrna-sparse, scrna-pca, hoc4
+ALGORITHMS (--algo):
+{}
+SYNTHETIC DATASETS (--synthetic):
+{}
+MODELS:      `cluster --save-model FILE` persists the fitted medoids +
+             metadata to the versioned binary format (rust/MODEL.md);
+             `predict --model FILE` reloads it and assigns any dataset —
+             no training data needed. Queries are auto-converted to the
+             model's storage kind (dense <-> CSR).
 SPARSE DATA: --format mtx loads Matrix Market triplets as CSR points
              (--transpose for 10x genes x cells files); --sparse converts
              any dense dataset to CSR; --density P sets the scrna-sparse
@@ -56,20 +79,10 @@ STREAMING:   .mtx files >= 256 MiB stream through the out-of-core chunked
              loader
 EXPERIMENTS: fig1a fig1b fig2 fig3 appfig1 appfig2 appfig34 appfig5
              headline ablations (see DESIGN.md for the paper mapping)
-";
-
-fn make_algo(name: &str) -> Result<Box<dyn KMedoids>> {
-    Ok(match name {
-        "banditpam" => Box::new(BanditPam::default_paper()),
-        "pam" => Box::new(Pam::new()),
-        "fastpam1" => Box::new(FastPam1::new()),
-        "fastpam" => Box::new(FastPam::new()),
-        "clara" => Box::new(Clara::new()),
-        "clarans" => Box::new(Clarans::new()),
-        "voronoi" => Box::new(VoronoiIteration::new()),
-        "meddit" => Box::new(Meddit::new()),
-        other => bail!("unknown algorithm {other:?} (see `banditpam help`)"),
-    })
+",
+        algorithms.join("\n"),
+        synthetics.join("\n"),
+    )
 }
 
 fn make_dataset(args: &Args, rng: &mut Rng) -> Result<Dataset> {
@@ -124,15 +137,7 @@ fn make_dataset(args: &Args, rng: &mut Rng) -> Result<Dataset> {
         }
     } else {
         let name = args.get("synthetic").unwrap_or("gmm");
-        match name {
-            "gmm" => synthetic::gmm(rng, n, 16, 5, 3.0),
-            "mnist" => synthetic::mnist_like(rng, n),
-            "scrna" => synthetic::scrna_like(rng, n, 1024),
-            "scrna-sparse" => synthetic::scrna_sparse(rng, n, 1024, density),
-            "scrna-pca" => synthetic::scrna_pca(rng, n, 1024, 10),
-            "hoc4" => synthetic::hoc4_like(rng, n),
-            other => bail!("unknown synthetic dataset {other:?}"),
-        }
+        synthetic::by_name(name, rng, n, density)?
     };
     if args.flag("sparse") && !matches!(ds.points, Points::Sparse(_)) {
         return ds
@@ -156,7 +161,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     )?;
 
     let backend_kind = args.get("backend").unwrap_or("native");
-    let mut algo = make_algo(&algo_name)?;
+    let mut algo = make_algorithm(&algo_name)?;
     println!(
         "dataset {} (n={}, metric={metric}, k={k}, algo={algo_name}, backend={backend_kind})",
         ds.name,
@@ -203,6 +208,97 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             sizes[a] += 1;
         }
         println!("cluster sizes : {sizes:?}");
+    }
+    if let Some(path) = args.get("save-model") {
+        let fingerprint = format!(
+            "algo={algo_name} metric={metric} k={k} seed={seed} threads={threads} \
+             backend={backend_kind} data={}",
+            ds.name
+        );
+        let model = KMedoidsModel::from_fit(
+            &ds.points,
+            metric,
+            fit.clone(),
+            algo_name.as_str(),
+            fingerprint,
+        )?;
+        model.save(Path::new(path))?;
+        println!("model saved   : {path} ({} bytes)", std::fs::metadata(path)?.len());
+    }
+    Ok(())
+}
+
+/// `banditpam predict --model FILE [--data ... | --synthetic ...]`: reload
+/// a saved model and assign a dataset to its medoids — no training data,
+/// rerun or refit involved.
+fn cmd_predict(args: &Args) -> Result<()> {
+    let model_path = args.get("model").context("--model FILE required")?;
+    let model = KMedoidsModel::load(Path::new(model_path))?;
+    println!(
+        "model         : {model_path} (algo={}, metric={}, k={}, dim={}, n_train={}, loss={:.4})",
+        model.algorithm(),
+        model.metric(),
+        model.k(),
+        model.dim().map_or("-".to_string(), |d| d.to_string()),
+        model.n_train(),
+        model.loss()
+    );
+    if args.flag("verbose") {
+        println!("fingerprint   : {}", model.config_fingerprint());
+    }
+    let seed: u64 = args.get_parsed("seed", 42u64)?;
+    let mut rng = Rng::seed_from(seed);
+    let ds = make_dataset(args, &mut rng)?;
+    // Convert the queries to the model's storage kind when they disagree
+    // (a dense CSV against a CSR model, or vice versa); tree/vector
+    // mismatches have no conversion and surface as predict errors. When
+    // the kinds already match, borrow the loaded points as-is — no copy
+    // of a potentially multi-GB query set.
+    let converted = if ds.points.kind() == model.medoid_points().kind() {
+        None
+    } else {
+        let c = match model.medoid_points() {
+            Points::Dense(_) => ds.points.to_dense(),
+            Points::Sparse(_) => ds.points.to_sparse(),
+            Points::Trees(_) => None,
+        };
+        if let Some(p) = &c {
+            println!(
+                "queries       : converted {} -> {} to match the model",
+                ds.points.kind(),
+                p.kind()
+            );
+        }
+        c
+    };
+    let queries: &Points = converted.as_ref().unwrap_or(&ds.points);
+    let threads: usize = args.get_parsed(
+        "threads",
+        banditpam::experiments::harness::default_threads(),
+    )?;
+    let model = model.with_threads(threads);
+    let (assign, dists) = model.predict_with_dists(queries)?;
+    let mut sizes = vec![0usize; model.k()];
+    for &a in &assign {
+        sizes[a] += 1;
+    }
+    let mean = dists.iter().sum::<f64>() / dists.len().max(1) as f64;
+    let max = dists.iter().cloned().fold(0.0f64, f64::max);
+    println!(
+        "assigned      : {} points (dataset {})",
+        assign.len(),
+        ds.name
+    );
+    println!("cluster sizes : {sizes:?}");
+    println!("distance      : mean {mean:.4}, max {max:.4}");
+    if let Some(out) = args.get("out") {
+        use std::io::Write;
+        let mut f = std::io::BufWriter::new(std::fs::File::create(out)?);
+        writeln!(f, "point,assignment,medoid_train_index,distance")?;
+        for (i, (&a, &d)) in assign.iter().zip(&dists).enumerate() {
+            writeln!(f, "{i},{a},{},{d}", model.clustering().medoids[a])?;
+        }
+        println!("wrote         : {out}");
     }
     Ok(())
 }
@@ -299,13 +395,14 @@ fn main() -> Result<()> {
     let args = Args::from_env();
     match args.subcommand.as_deref() {
         Some("cluster") => cmd_cluster(&args),
+        Some("predict") => cmd_predict(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("generate-data") => cmd_generate(&args),
         Some("info") => cmd_info(),
         Some("help") | None => {
-            print!("{HELP}");
+            print!("{}", help());
             Ok(())
         }
-        Some(other) => bail!("unknown subcommand {other:?}\n{HELP}"),
+        Some(other) => bail!("unknown subcommand {other:?}\n{}", help()),
     }
 }

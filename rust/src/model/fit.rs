@@ -1,0 +1,268 @@
+//! The one-stop fit facade: `Fit::banditpam().metric(..).seed(..).fit(&data)`.
+//!
+//! Every [`crate::algorithms::KMedoids`] implementation gets one entry
+//! point; the builder assembles the backend (threads, cache), the seeded
+//! rng and (for BanditPAM) the validated configuration, runs the fit and
+//! wraps the result into a [`KMedoidsModel`] — the caller never touches
+//! `NativeBackend`/`Rng` plumbing.
+
+use super::KMedoidsModel;
+use crate::algorithms::{make_algorithm, KMedoids};
+use crate::coordinator::banditpam::BanditPam;
+use crate::coordinator::config::BanditPamConfig;
+use crate::data::Dataset;
+use crate::distance::Metric;
+use crate::error::{Error, Result};
+use crate::runtime::backend::NativeBackend;
+use crate::util::rng::Rng;
+
+/// Builder for a k-medoids fit. Construct with one of the per-algorithm
+/// entry points ([`Fit::banditpam`], [`Fit::pam`], ...) or by registry
+/// name ([`Fit::algorithm`]), chain the knobs, finish with [`Fit::fit`].
+///
+/// Defaults: `metric = L2`, `k = 5`, `seed = 42`, `threads = 1`, no
+/// pairwise cache, paper-default BanditPAM configuration (`meddit` defaults
+/// to `k = 1`, the only k it solves).
+#[derive(Debug, Clone)]
+pub struct Fit {
+    algorithm: &'static str,
+    metric: Metric,
+    k: usize,
+    seed: u64,
+    threads: usize,
+    cache: Option<usize>,
+    config: Option<BanditPamConfig>,
+}
+
+impl Fit {
+    fn with_algorithm(algorithm: &'static str) -> Fit {
+        Fit {
+            algorithm,
+            metric: Metric::L2,
+            k: if algorithm == "meddit" { 1 } else { 5 },
+            seed: 42,
+            threads: 1,
+            cache: None,
+            config: None,
+        }
+    }
+
+    /// BanditPAM (the paper's algorithm; configurable via [`Fit::config`]).
+    pub fn banditpam() -> Fit {
+        Fit::with_algorithm("banditpam")
+    }
+
+    /// Exact PAM (the quality reference).
+    pub fn pam() -> Fit {
+        Fit::with_algorithm("pam")
+    }
+
+    /// FastPAM1 (exact-PAM-equivalent SWAP, O(k) faster).
+    pub fn fastpam1() -> Fit {
+        Fit::with_algorithm("fastpam1")
+    }
+
+    /// FastPAM (near-PAM quality, eager sweeps).
+    pub fn fastpam() -> Fit {
+        Fit::with_algorithm("fastpam")
+    }
+
+    /// CLARA (PAM on random subsamples).
+    pub fn clara() -> Fit {
+        Fit::with_algorithm("clara")
+    }
+
+    /// CLARANS (randomized neighbor search).
+    pub fn clarans() -> Fit {
+        Fit::with_algorithm("clarans")
+    }
+
+    /// Voronoi iteration (k-means-style alternation).
+    pub fn voronoi() -> Fit {
+        Fit::with_algorithm("voronoi")
+    }
+
+    /// Meddit (the 1-medoid bandit; `k` defaults to 1).
+    pub fn meddit() -> Fit {
+        Fit::with_algorithm("meddit")
+    }
+
+    /// Entry point by registry name — the CLI's `--algo` dispatch.
+    pub fn algorithm(name: &str) -> Result<Fit> {
+        crate::algorithms::find_algorithm(name).map(|spec| Fit::with_algorithm(spec.name))
+    }
+
+    /// Distance metric (default L2).
+    pub fn metric(mut self, metric: Metric) -> Fit {
+        self.metric = metric;
+        self
+    }
+
+    /// Number of medoids (default 5; 1 for meddit).
+    pub fn k(mut self, k: usize) -> Fit {
+        self.k = k;
+        self
+    }
+
+    /// Rng seed (default 42). Fits are deterministic given the seed,
+    /// dataset and configuration — thread count never changes the result.
+    pub fn seed(mut self, seed: u64) -> Fit {
+        self.seed = seed;
+        self
+    }
+
+    /// Backend thread count (default 1). Also becomes the model's
+    /// predict-time thread count.
+    pub fn threads(mut self, threads: usize) -> Fit {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Enable the Appendix-2.2 pairwise distance cache with the given soft
+    /// entry capacity.
+    pub fn cache(mut self, entries: usize) -> Fit {
+        self.cache = Some(entries);
+        self
+    }
+
+    /// BanditPAM configuration (validated at [`Fit::fit`] time; rejected
+    /// for the other algorithms rather than silently ignored).
+    pub fn config(mut self, config: BanditPamConfig) -> Fit {
+        self.config = Some(config);
+        self
+    }
+
+    /// Run the fit and wrap the result into a [`KMedoidsModel`].
+    pub fn fit(&self, data: &Dataset) -> Result<KMedoidsModel> {
+        if !self.metric.supports(&data.points) {
+            return Err(Error::unsupported(format!(
+                "metric {} does not support {} points",
+                self.metric,
+                data.points.kind()
+            )));
+        }
+        let mut algo: Box<dyn KMedoids> = if self.algorithm == "banditpam" {
+            let config = self.config.clone().unwrap_or_default();
+            config.validate()?;
+            Box::new(BanditPam::new(config))
+        } else {
+            if self.config.is_some() {
+                return Err(Error::config(format!(
+                    "config(BanditPamConfig) only applies to banditpam (got {})",
+                    self.algorithm
+                )));
+            }
+            make_algorithm(self.algorithm)?
+        };
+        let mut backend =
+            NativeBackend::new(&data.points, self.metric).with_threads(self.threads);
+        if let Some(entries) = self.cache {
+            backend = backend.with_cache(entries);
+        }
+        let mut rng = Rng::seed_from(self.seed);
+        let clustering = algo.fit(&backend, self.k, &mut rng)?;
+        let model = KMedoidsModel::from_fit(
+            &data.points,
+            self.metric,
+            clustering,
+            self.algorithm,
+            self.fingerprint(),
+        )?;
+        Ok(model.with_threads(self.threads))
+    }
+
+    /// The reproducibility fingerprint recorded into the model: every knob
+    /// that determines the fit, as stable `key=value` pairs.
+    fn fingerprint(&self) -> String {
+        let config = match (&self.config, self.algorithm) {
+            (Some(c), _) => format!("{c:?}"),
+            (None, "banditpam") => format!("{:?}", BanditPamConfig::default()),
+            (None, _) => "default".to_string(),
+        };
+        format!(
+            "algo={} metric={} k={} seed={} threads={} cache={} config={config}",
+            self.algorithm,
+            self.metric,
+            self.k,
+            self.seed,
+            self.threads,
+            self.cache.map_or("none".to_string(), |c| c.to_string()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::runtime::backend::NativeBackend;
+
+    #[test]
+    fn facade_matches_hand_assembled_fit_bitwise() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(1), 80, 8, 4, 3.0);
+        let model = Fit::banditpam().metric(Metric::L2).seed(7).k(4).fit(&ds).unwrap();
+        // the long way around, same seed
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let fit = BanditPam::new(BanditPamConfig::default())
+            .fit(&backend, 4, &mut Rng::seed_from(7))
+            .unwrap();
+        assert_eq!(model.clustering().medoids, fit.medoids);
+        assert_eq!(model.clustering().assignments, fit.assignments);
+        assert_eq!(model.loss().to_bits(), fit.loss.to_bits());
+    }
+
+    #[test]
+    fn every_registry_algorithm_has_a_facade_entry() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(2), 50, 6, 3, 3.0);
+        let entries = [
+            Fit::banditpam(),
+            Fit::pam(),
+            Fit::fastpam1(),
+            Fit::fastpam(),
+            Fit::clara(),
+            Fit::clarans(),
+            Fit::voronoi(),
+            Fit::meddit(),
+        ];
+        assert_eq!(entries.len(), crate::algorithms::REGISTRY.len());
+        for fit in entries {
+            let k = if fit.algorithm == "meddit" { 1 } else { 3 };
+            let model = fit.k(k).seed(3).fit(&ds).unwrap();
+            assert!(model.k() >= 1, "{}", model.algorithm());
+            assert_eq!(model.n_train(), 50);
+        }
+        // by-name entry mirrors the registry
+        assert!(Fit::algorithm("pam").is_ok());
+        assert!(Fit::algorithm("kmeans").is_err());
+    }
+
+    #[test]
+    fn config_on_non_banditpam_is_rejected() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(3), 30, 4, 2, 3.0);
+        let err = Fit::pam().config(BanditPamConfig::default()).fit(&ds).unwrap_err();
+        assert_eq!(err.kind(), "config");
+        // and an invalid config is rejected before any work happens
+        let err = Fit::banditpam()
+            .config(BanditPamConfig { batch_size: 0, ..Default::default() })
+            .fit(&ds)
+            .unwrap_err();
+        assert_eq!(err.kind(), "config");
+    }
+
+    #[test]
+    fn unsupported_metric_storage_is_a_clean_error() {
+        let trees = synthetic::hoc4_like(&mut Rng::seed_from(4), 20);
+        let err = Fit::banditpam().metric(Metric::L2).fit(&trees);
+        // L2 over trees: rejected, not panicked
+        assert_eq!(err.unwrap_err().kind(), "unsupported");
+        // tree edit over trees through the facade works end to end
+        let model = Fit::banditpam().metric(Metric::TreeEdit).k(3).seed(1).fit(&trees).unwrap();
+        assert_eq!(model.k(), 3);
+        assert_eq!(model.dim(), None);
+        // ... and predicts its own training set bitwise
+        let pred = model.predict(&trees.points).unwrap();
+        assert_eq!(&pred, &model.clustering().assignments);
+        // but has no serialized form
+        assert_eq!(model.to_bytes().unwrap_err().kind(), "unsupported");
+    }
+}

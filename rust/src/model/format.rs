@@ -1,0 +1,357 @@
+//! The versioned little-endian binary model format.
+//!
+//! Layout (all integers little-endian; full specification with the
+//! rationale in `rust/MODEL.md`):
+//!
+//! ```text
+//! magic        8  b"BPAMMODL"
+//! version      4  u32 = 1
+//! metric       1  u8: 0 = l2, 1 = l1, 2 = cosine
+//! storage      1  u8: 0 = dense, 1 = sparse
+//! reserved     2  u16 = 0
+//! k            4  u32 (>= 1)
+//! dim          4  u32
+//! n_train      4  u32 (>= k)
+//! loss         8  f64
+//! stats       64  u64 x7 (distance/build/swap/swap-saved evals,
+//!                 swap_iters, swaps_applied, iters_plus_one) + f64 wall_secs
+//! algorithm    4 + len  (u32 length + UTF-8)
+//! fingerprint  4 + len  (u32 length + UTF-8)
+//! medoids      4k  u32 training indices, strictly increasing, < n_train
+//! assignments  4*n_train  u32, < k
+//! payload      dense:  k*dim x f32 (row-major medoid rows)
+//!              sparse: u64 nnz; (k+1) x u64 indptr; nnz x u32 indices;
+//!                      nnz x f32 values  (CSR invariants enforced)
+//! ```
+//!
+//! The reader is hardened against hostile input in the
+//! `tests/stream_fixtures.rs` style: every length is checked against the
+//! bytes actually present *before* any allocation (a lying header cannot
+//! force an OOM), every invariant violation is a clean
+//! [`Error::Model`](crate::error::Error::Model), and trailing bytes are
+//! rejected. Tree-medoid models have no serialized form.
+
+use super::KMedoidsModel;
+use crate::algorithms::{Clustering, FitStats};
+use crate::data::sparse::CsrMatrix;
+use crate::data::Points;
+use crate::distance::Metric;
+use crate::error::{Error, Result};
+use crate::util::matrix::Matrix;
+
+pub(super) const MAGIC: &[u8; 8] = b"BPAMMODL";
+pub(super) const VERSION: u32 = 1;
+/// Cap on the algorithm/fingerprint string lengths — far above anything
+/// the crate writes, low enough that a lying length cannot hurt.
+const MAX_STRING: usize = 1 << 16;
+
+fn metric_tag(m: Metric) -> Option<u8> {
+    match m {
+        Metric::L2 => Some(0),
+        Metric::L1 => Some(1),
+        Metric::Cosine => Some(2),
+        Metric::TreeEdit => None,
+    }
+}
+
+fn tag_metric(t: u8) -> Option<Metric> {
+    match t {
+        0 => Some(Metric::L2),
+        1 => Some(Metric::L1),
+        2 => Some(Metric::Cosine),
+        _ => None,
+    }
+}
+
+fn fits_u32(what: &str, v: usize) -> Result<u32> {
+    u32::try_from(v).map_err(|_| Error::model(format!("{what} {v} exceeds the u32 format field")))
+}
+
+pub(super) fn write(model: &KMedoidsModel) -> Result<Vec<u8>> {
+    let metric = metric_tag(model.metric).ok_or_else(|| {
+        Error::unsupported("tree-edit models have no serialized form (medoids are ASTs)")
+    })?;
+    let (storage, dim) = match &model.medoid_points {
+        Points::Dense(m) => (0u8, m.cols()),
+        Points::Sparse(m) => (1u8, m.cols()),
+        Points::Trees(_) => {
+            return Err(Error::unsupported(
+                "tree-medoid models have no serialized form",
+            ))
+        }
+    };
+    let c = &model.clustering;
+    let k = fits_u32("k", c.medoids.len())?;
+    let dim = fits_u32("dim", dim)?;
+    let n_train = fits_u32("n_train", model.n_train)?;
+    if model.algorithm.len() > MAX_STRING || model.fingerprint.len() > MAX_STRING {
+        return Err(Error::model("metadata string exceeds the format cap"));
+    }
+
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(metric);
+    out.push(storage);
+    out.extend_from_slice(&0u16.to_le_bytes());
+    out.extend_from_slice(&k.to_le_bytes());
+    out.extend_from_slice(&dim.to_le_bytes());
+    out.extend_from_slice(&n_train.to_le_bytes());
+    out.extend_from_slice(&c.loss.to_le_bytes());
+    for v in [
+        c.stats.distance_evals,
+        c.stats.build_evals,
+        c.stats.swap_evals,
+        c.stats.swap_evals_saved,
+        c.stats.swap_iters as u64,
+        c.stats.swaps_applied as u64,
+        c.stats.iters_plus_one as u64,
+    ] {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out.extend_from_slice(&c.stats.wall_secs.to_le_bytes());
+    for s in [&model.algorithm, &model.fingerprint] {
+        out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+        out.extend_from_slice(s.as_bytes());
+    }
+    for &m in &c.medoids {
+        out.extend_from_slice(&fits_u32("medoid index", m)?.to_le_bytes());
+    }
+    for &a in &c.assignments {
+        out.extend_from_slice(&fits_u32("assignment", a)?.to_le_bytes());
+    }
+    match &model.medoid_points {
+        Points::Dense(m) => {
+            for i in 0..m.rows() {
+                for &v in m.row(i) {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        Points::Sparse(m) => {
+            let (indptr, indices, values) = m.parts();
+            out.extend_from_slice(&(indices.len() as u64).to_le_bytes());
+            for &p in indptr {
+                out.extend_from_slice(&(p as u64).to_le_bytes());
+            }
+            for &j in indices {
+                out.extend_from_slice(&j.to_le_bytes());
+            }
+            for &v in values {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Points::Trees(_) => unreachable!("rejected above"),
+    }
+    Ok(out)
+}
+
+/// Bounds-checked little-endian cursor. Every read names what it was
+/// reading, so a truncation error pinpoints the failing field.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::model(format!(
+                "truncated model file: need {n} bytes for {what}, {} left",
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    /// A `count`-element vector of fixed-size scalars, length-checked
+    /// against the remaining bytes *before* allocating.
+    fn vec<T>(
+        &mut self,
+        count: usize,
+        size: usize,
+        what: &str,
+        decode: impl Fn(&[u8]) -> T,
+    ) -> Result<Vec<T>> {
+        let bytes = count
+            .checked_mul(size)
+            .ok_or_else(|| Error::model(format!("{what} count {count} overflows")))?;
+        let raw = self.take(bytes, what)?;
+        Ok(raw.chunks_exact(size).map(decode).collect())
+    }
+
+    fn string(&mut self, what: &str) -> Result<String> {
+        let len = self.u32(what)? as usize;
+        if len > MAX_STRING {
+            return Err(Error::model(format!(
+                "{what} length {len} exceeds the format cap {MAX_STRING}"
+            )));
+        }
+        let raw = self.take(len, what)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| Error::model(format!("{what} is not valid UTF-8")))
+    }
+}
+
+pub(super) fn read(bytes: &[u8]) -> Result<KMedoidsModel> {
+    let mut r = Reader::new(bytes);
+    if r.take(8, "magic")? != MAGIC {
+        return Err(Error::model("not a banditpam model file (bad magic)"));
+    }
+    let version = r.u32("version")?;
+    if version != VERSION {
+        return Err(Error::model(format!(
+            "unsupported model format version {version} (expected {VERSION})"
+        )));
+    }
+    let metric = tag_metric(r.u8("metric tag")?)
+        .ok_or_else(|| Error::model("unknown metric tag"))?;
+    let storage = r.u8("storage tag")?;
+    if storage > 1 {
+        return Err(Error::model(format!("unknown storage tag {storage}")));
+    }
+    if r.u16("reserved")? != 0 {
+        return Err(Error::model("reserved field must be zero"));
+    }
+    let k = r.u32("k")? as usize;
+    let dim = r.u32("dim")? as usize;
+    let n_train = r.u32("n_train")? as usize;
+    if k == 0 {
+        return Err(Error::model("k must be >= 1"));
+    }
+    if n_train < k {
+        return Err(Error::model(format!("n_train {n_train} smaller than k {k}")));
+    }
+    let loss = r.f64("loss")?;
+    let stats = FitStats {
+        distance_evals: r.u64("distance_evals")?,
+        build_evals: r.u64("build_evals")?,
+        swap_evals: r.u64("swap_evals")?,
+        swap_evals_saved: r.u64("swap_evals_saved")?,
+        swap_iters: r.u64("swap_iters")? as usize,
+        swaps_applied: r.u64("swaps_applied")? as usize,
+        iters_plus_one: r.u64("iters_plus_one")? as usize,
+        wall_secs: r.f64("wall_secs")?,
+    };
+    let algorithm = r.string("algorithm name")?;
+    let fingerprint = r.string("config fingerprint")?;
+    let medoids: Vec<usize> = r.vec(k, 4, "medoid indices", |b| {
+        u32::from_le_bytes(b.try_into().unwrap()) as usize
+    })?;
+    if let Some(&bad) = medoids.iter().find(|&&m| m >= n_train) {
+        return Err(Error::model(format!(
+            "medoid index {bad} out of range for n_train {n_train}"
+        )));
+    }
+    if medoids.windows(2).any(|w| w[0] >= w[1]) {
+        return Err(Error::model("medoid indices must be strictly increasing"));
+    }
+    let assignments: Vec<usize> = r.vec(n_train, 4, "assignments", |b| {
+        u32::from_le_bytes(b.try_into().unwrap()) as usize
+    })?;
+    if let Some(&bad) = assignments.iter().find(|&&a| a >= k) {
+        return Err(Error::model(format!("assignment {bad} out of range for k {k}")));
+    }
+    let medoid_points = if storage == 0 {
+        let count = k
+            .checked_mul(dim)
+            .ok_or_else(|| Error::model("k * dim overflows"))?;
+        let data = r.vec(count, 4, "dense medoid payload", |b| {
+            f32::from_le_bytes(b.try_into().unwrap())
+        })?;
+        Points::Dense(Matrix::from_vec(data, k, dim))
+    } else {
+        let nnz = usize::try_from(r.u64("nnz")?)
+            .map_err(|_| Error::model("nnz exceeds the address space"))?;
+        let indptr: Vec<usize> = r
+            .vec(k + 1, 8, "indptr", |b| u64::from_le_bytes(b.try_into().unwrap()))?
+            .into_iter()
+            .map(|p| {
+                usize::try_from(p).map_err(|_| Error::model("indptr entry overflows"))
+            })
+            .collect::<Result<_>>()?;
+        let indices: Vec<u32> =
+            r.vec(nnz, 4, "column indices", |b| u32::from_le_bytes(b.try_into().unwrap()))?;
+        let values: Vec<f32> =
+            r.vec(nnz, 4, "values", |b| f32::from_le_bytes(b.try_into().unwrap()))?;
+        let csr = CsrMatrix::try_from_parts(k, dim, indptr, indices, values)
+            .map_err(|e| Error::model(format!("corrupt CSR payload: {e}")))?;
+        Points::Sparse(csr)
+    };
+    if r.remaining() != 0 {
+        return Err(Error::model(format!(
+            "{} trailing bytes after the payload",
+            r.remaining()
+        )));
+    }
+    Ok(KMedoidsModel {
+        medoid_points,
+        metric,
+        clustering: Clustering { medoids, assignments, loss, stats },
+        algorithm,
+        fingerprint,
+        n_train,
+        threads: 1,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metric_tags_roundtrip() {
+        for m in [Metric::L2, Metric::L1, Metric::Cosine] {
+            assert_eq!(tag_metric(metric_tag(m).unwrap()), Some(m));
+        }
+        assert_eq!(metric_tag(Metric::TreeEdit), None);
+        assert_eq!(tag_metric(3), None);
+    }
+
+    #[test]
+    fn reader_reports_truncation_with_field_names() {
+        let mut r = Reader::new(&[1, 2, 3]);
+        let err = r.u32("version").unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+        assert!(err.to_string().contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn reader_rejects_overflowing_vec_before_allocating() {
+        let mut r = Reader::new(&[0u8; 16]);
+        let err = r
+            .vec(usize::MAX, 8, "indptr", |b| u64::from_le_bytes(b.try_into().unwrap()))
+            .unwrap_err();
+        assert!(err.to_string().contains("indptr"), "{err}");
+    }
+}

@@ -1,0 +1,391 @@
+//! The fitted-model layer: [`KMedoidsModel`] and the [`Fit`] builder.
+//!
+//! The paper's pitch is that k-medoids centers are *actual data points*
+//! supporting *arbitrary metrics* — which makes the fitted medoid set a
+//! reusable artifact, not just indices into a dataset the caller must keep
+//! alive. [`KMedoidsModel`] owns the extracted medoid points (dense rows
+//! or CSR rows — or cloned trees for the tree-edit metric), the metric,
+//! and the training [`Clustering`] metadata, and serves batch
+//! out-of-sample assignment through the same one-to-many row kernels the
+//! fit used ([`crate::runtime::backend::NativeBackend::block_vs`]):
+//! predicting the training set reproduces the stored training assignments
+//! **bit for bit**.
+//!
+//! Vector-storage models serialize to a versioned little-endian binary
+//! format ([`KMedoidsModel::save`] / [`KMedoidsModel::load`], documented
+//! in `rust/MODEL.md`); malformed files produce clean
+//! [`Error::Model`](crate::error::Error::Model) errors, never panics.
+//!
+//! [`Fit`] is the one-stop front door: pick an algorithm, chain the knobs,
+//! fit a [`crate::data::Dataset`] — no hand-assembled backend/rng/config.
+//!
+//! ```no_run
+//! use banditpam::prelude::*;
+//!
+//! let mut rng = Rng::seed_from(7);
+//! let data = synthetic::gmm(&mut rng, 200, 16, 5, 3.0);
+//! let model = Fit::banditpam().metric(Metric::L2).seed(7).k(5).fit(&data)?;
+//! let assignments = model.predict(&data.points)?; // == training assignments
+//! model.save(std::path::Path::new("gmm.bpmodel"))?;
+//! # Ok::<(), banditpam::Error>(())
+//! ```
+
+mod fit;
+mod format;
+
+pub use fit::Fit;
+
+use crate::algorithms::Clustering;
+use crate::data::Points;
+use crate::distance::Metric;
+use crate::error::{Error, Result};
+use crate::runtime::backend::{assign_against, NativeBackend};
+use std::path::Path;
+
+/// A fitted k-medoids model, decoupled from its training data.
+///
+/// Holds the k medoid points themselves (owned), the metric, and the
+/// training-fit metadata. Construct through [`Fit`] (preferred),
+/// [`KMedoidsModel::from_fit`] (when you already ran a
+/// [`crate::algorithms::KMedoids`] by hand), or [`KMedoidsModel::load`].
+#[derive(Debug, Clone)]
+pub struct KMedoidsModel {
+    /// The k extracted medoid points, in `clustering.medoids` order
+    /// (ascending training index).
+    medoid_points: Points,
+    metric: Metric,
+    /// The training fit: medoid *training indices*, per-training-point
+    /// assignments, loss, stats.
+    clustering: Clustering,
+    /// [`crate::algorithms::KMedoids::name`] of the producing algorithm.
+    algorithm: String,
+    /// Reproducibility fingerprint of the producing configuration
+    /// (free-form single line; [`Fit`] writes `key=value` pairs).
+    fingerprint: String,
+    /// Training set size the clustering metadata refers to.
+    n_train: usize,
+    /// Predict-time thread count (runtime knob; not serialized).
+    threads: usize,
+}
+
+impl KMedoidsModel {
+    /// Build a model from a finished fit: extracts the medoid rows of
+    /// `points` named by `clustering.medoids` into owned storage.
+    ///
+    /// Errors when the clustering and the point set disagree (an index out
+    /// of range, assignment list of the wrong length or naming a
+    /// nonexistent medoid slot) or the metric does not support the
+    /// storage.
+    pub fn from_fit(
+        points: &Points,
+        metric: Metric,
+        clustering: Clustering,
+        algorithm: impl Into<String>,
+        fingerprint: impl Into<String>,
+    ) -> Result<KMedoidsModel> {
+        let n = points.len();
+        let k = clustering.medoids.len();
+        if k == 0 {
+            return Err(Error::invalid_argument("clustering has no medoids"));
+        }
+        if !metric.supports(points) {
+            return Err(Error::unsupported(format!(
+                "metric {metric} does not support {} points",
+                points.kind()
+            )));
+        }
+        if let Some(&bad) = clustering.medoids.iter().find(|&&m| m >= n) {
+            return Err(Error::invalid_argument(format!(
+                "medoid index {bad} out of range for n = {n}"
+            )));
+        }
+        // `Clustering::finalize` sorts medoids ascending and assignments
+        // index that order; the binary format reader enforces the same
+        // invariant. Reject hand-assembled unsorted sets here so a model
+        // that saves can always be loaded back.
+        if clustering.medoids.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(Error::invalid_argument(
+                "medoid indices must be strictly increasing (Clustering::finalize \
+                 order) — assignments index positions in that order",
+            ));
+        }
+        if clustering.assignments.len() != n {
+            return Err(Error::invalid_argument(format!(
+                "assignment list has {} entries for n = {n}",
+                clustering.assignments.len()
+            )));
+        }
+        if let Some(&bad) = clustering.assignments.iter().find(|&&a| a >= k) {
+            return Err(Error::invalid_argument(format!(
+                "assignment {bad} out of range for k = {k}"
+            )));
+        }
+        Ok(KMedoidsModel {
+            medoid_points: points.select(&clustering.medoids),
+            metric,
+            clustering,
+            algorithm: algorithm.into(),
+            fingerprint: fingerprint.into(),
+            n_train: n,
+            threads: 1,
+        })
+    }
+
+    /// Set the predict-time thread count (runtime knob, not serialized;
+    /// thread count never changes predicted bits).
+    pub fn with_threads(mut self, threads: usize) -> KMedoidsModel {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Number of medoids.
+    pub fn k(&self) -> usize {
+        self.clustering.medoids.len()
+    }
+
+    /// The fit metric.
+    pub fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    /// Feature dimensionality (`None` for tree-medoid models).
+    pub fn dim(&self) -> Option<usize> {
+        self.medoid_points.dim()
+    }
+
+    /// Training set size.
+    pub fn n_train(&self) -> usize {
+        self.n_train
+    }
+
+    /// Producing algorithm name ("banditpam", "pam", ...).
+    pub fn algorithm(&self) -> &str {
+        &self.algorithm
+    }
+
+    /// Reproducibility fingerprint of the producing configuration.
+    pub fn config_fingerprint(&self) -> &str {
+        &self.fingerprint
+    }
+
+    /// The owned medoid points (k rows, `clustering().medoids` order).
+    pub fn medoid_points(&self) -> &Points {
+        &self.medoid_points
+    }
+
+    /// The training fit: medoid training indices, training assignments,
+    /// loss and stats.
+    pub fn clustering(&self) -> &Clustering {
+        &self.clustering
+    }
+
+    /// Training loss (Eq. 1).
+    pub fn loss(&self) -> f64 {
+        self.clustering.loss
+    }
+
+    /// A reusable prediction handle: holds the metric backend — and, with
+    /// [`KMedoidsModel::with_threads`] above 1, its **persistent thread
+    /// pool** — across batches. One-shot [`KMedoidsModel::predict`] calls
+    /// build and tear down a pool each time; a serving loop should hold
+    /// one `Predictor` instead (same results, bit for bit).
+    pub fn predictor(&self) -> Predictor<'_> {
+        Predictor {
+            model: self,
+            backend: NativeBackend::new(&self.medoid_points, self.metric)
+                .with_threads(self.threads),
+        }
+    }
+
+    /// Assign each query point to its nearest medoid; `out[i]` indexes
+    /// [`KMedoidsModel::clustering`]`.medoids`. See
+    /// [`KMedoidsModel::predict_with_dists`].
+    pub fn predict(&self, queries: &Points) -> Result<Vec<usize>> {
+        Ok(self.predict_with_dists(queries)?.0)
+    }
+
+    /// Assign each query point to its nearest medoid, also returning the
+    /// distance to it.
+    ///
+    /// Queries must use the same storage kind and feature space as the
+    /// model. Computation runs through the same one-to-many row kernels
+    /// and first-minimum tie-breaking as the training-side
+    /// `loss_and_assignments`, so predicting the training points is
+    /// bitwise-equal to the stored training assignments — across metrics,
+    /// storage kinds and thread counts.
+    ///
+    /// One carve-out: a degenerate `k == n` fit stores identity
+    /// assignments without evaluating distances, so on data containing
+    /// duplicate (or cosine-parallel) points its stored labels can pick a
+    /// *later* zero-distance medoid than predict's tie-break would — see
+    /// [`Clustering::each_point_its_own_medoid`]. Distances are exactly
+    /// zero under both labelings.
+    pub fn predict_with_dists(&self, queries: &Points) -> Result<(Vec<usize>, Vec<f64>)> {
+        self.predictor().predict_with_dists(queries)
+    }
+
+    /// Serialize to the versioned binary model format (see
+    /// `rust/MODEL.md`). Tree-medoid models have no on-disk form.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let bytes = self.to_bytes()?;
+        std::fs::write(path, bytes)
+            .map_err(|e| Error::model(format!("writing {}: {e}", path.display())))
+    }
+
+    /// Deserialize a model written by [`KMedoidsModel::save`]. Malformed
+    /// input of any kind — bad magic/version, lying lengths, corrupt CSR
+    /// payload — returns [`Error::Model`], never panics, and never
+    /// allocates more than the file's own size promises.
+    pub fn load(path: &Path) -> Result<KMedoidsModel> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| Error::model(format!("reading {}: {e}", path.display())))?;
+        Self::from_bytes(&bytes)
+    }
+
+    /// [`KMedoidsModel::save`] to an in-memory buffer.
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        format::write(self)
+    }
+
+    /// [`KMedoidsModel::load`] from an in-memory buffer.
+    pub fn from_bytes(bytes: &[u8]) -> Result<KMedoidsModel> {
+        format::read(bytes)
+    }
+}
+
+/// A prediction handle bound to a [`KMedoidsModel`], created by
+/// [`KMedoidsModel::predictor`]. Holds the resolved backend (and its
+/// persistent thread pool) so repeated batches pay no per-call setup —
+/// the serving-loop counterpart of the one-shot `predict` methods, with
+/// bitwise-identical results.
+pub struct Predictor<'m> {
+    model: &'m KMedoidsModel,
+    backend: NativeBackend<'m>,
+}
+
+impl Predictor<'_> {
+    /// Batch assignment; see [`KMedoidsModel::predict`].
+    pub fn predict(&self, queries: &Points) -> Result<Vec<usize>> {
+        Ok(self.predict_with_dists(queries)?.0)
+    }
+
+    /// Batch assignment with distances; see
+    /// [`KMedoidsModel::predict_with_dists`] for the parity contract.
+    pub fn predict_with_dists(&self, queries: &Points) -> Result<(Vec<usize>, Vec<f64>)> {
+        let medoids = &self.model.medoid_points;
+        if queries.kind() != medoids.kind() {
+            return Err(Error::unsupported(format!(
+                "query storage {} does not match the model's {} medoids \
+                 (convert with Points::to_dense/to_sparse first)",
+                queries.kind(),
+                medoids.kind()
+            )));
+        }
+        if let (Some(qd), Some(md)) = (queries.dim(), medoids.dim()) {
+            if qd != md {
+                return Err(Error::invalid_argument(format!(
+                    "query dimension {qd} does not match the model's {md}"
+                )));
+            }
+        }
+        if queries.is_empty() {
+            return Ok((Vec::new(), Vec::new()));
+        }
+        Ok(assign_against(&self.backend, queries))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{Clustering, FitStats};
+    use crate::data::synthetic;
+    use crate::util::rng::Rng;
+
+    fn model_over_gmm() -> (crate::data::Dataset, KMedoidsModel) {
+        let ds = synthetic::gmm(&mut Rng::seed_from(1), 40, 8, 3, 3.0);
+        let model = Fit::banditpam().metric(Metric::L2).seed(5).k(3).fit(&ds).unwrap();
+        (ds, model)
+    }
+
+    #[test]
+    fn from_fit_validates_consistency() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(2), 10, 4, 2, 2.0);
+        let good = Clustering {
+            medoids: vec![1, 4],
+            assignments: vec![0; 10],
+            loss: 1.0,
+            stats: FitStats::default(),
+        };
+        assert!(KMedoidsModel::from_fit(&ds.points, Metric::L2, good.clone(), "pam", "")
+            .is_ok());
+        let cases = [
+            Clustering { medoids: vec![], ..good.clone() },
+            Clustering { medoids: vec![1, 10], ..good.clone() },
+            // unsorted / duplicate medoids save fine but could never load
+            // back (the format requires strictly increasing indices)
+            Clustering { medoids: vec![4, 1], ..good.clone() },
+            Clustering { medoids: vec![1, 1], ..good.clone() },
+            Clustering { assignments: vec![0; 9], ..good.clone() },
+            Clustering { assignments: vec![2; 10], ..good.clone() },
+        ];
+        for (i, bad) in cases.into_iter().enumerate() {
+            assert!(
+                KMedoidsModel::from_fit(&ds.points, Metric::L2, bad, "pam", "").is_err(),
+                "case {i} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn predict_rejects_mismatched_queries() {
+        let (ds, model) = model_over_gmm();
+        // storage mismatch
+        let sp = ds.points.to_sparse().unwrap();
+        assert_eq!(model.predict(&sp).unwrap_err().kind(), "unsupported");
+        // dimension mismatch
+        let wrong = synthetic::gmm(&mut Rng::seed_from(3), 5, 9, 2, 1.0);
+        assert_eq!(
+            model.predict(&wrong.points).unwrap_err().kind(),
+            "invalid_argument"
+        );
+        // empty queries are fine
+        let empty = crate::data::Points::Dense(crate::util::matrix::Matrix::zeros(0, 8));
+        assert_eq!(model.predict(&empty).unwrap(), Vec::<usize>::new());
+    }
+
+    /// A reused `Predictor` (one backend + pool across batches) returns
+    /// the same bits as the one-shot predict path.
+    #[test]
+    fn predictor_reuse_matches_one_shot_predict() {
+        let (ds, model) = model_over_gmm();
+        let model = model.with_threads(4);
+        let batches: Vec<_> = (0..3)
+            .map(|i| ds.select(&[(i * 7) % 40, (i * 11) % 40, (i * 13) % 40]))
+            .collect();
+        let served = model.predictor();
+        for batch in &batches {
+            let (a_served, d_served) = served.predict_with_dists(&batch.points).unwrap();
+            let (a_once, d_once) = model.predict_with_dists(&batch.points).unwrap();
+            assert_eq!(a_served, a_once);
+            let b1: Vec<u64> = d_served.iter().map(|d| d.to_bits()).collect();
+            let b2: Vec<u64> = d_once.iter().map(|d| d.to_bits()).collect();
+            assert_eq!(b1, b2);
+            assert_eq!(served.predict(&batch.points).unwrap(), a_served);
+        }
+    }
+
+    #[test]
+    fn metadata_accessors_round_through() {
+        let (ds, model) = model_over_gmm();
+        assert_eq!(model.k(), 3);
+        assert_eq!(model.metric(), Metric::L2);
+        assert_eq!(model.dim(), Some(8));
+        assert_eq!(model.n_train(), 40);
+        assert_eq!(model.algorithm(), "banditpam");
+        assert!(model.config_fingerprint().contains("seed=5"));
+        assert_eq!(model.medoid_points().len(), 3);
+        assert_eq!(model.clustering().assignments.len(), ds.len());
+        assert!(model.loss() > 0.0);
+    }
+}

@@ -121,14 +121,7 @@ impl<'a> NativeBackend<'a> {
             "metric {metric} does not support {} points",
             points.kind()
         );
-        let norms = match (metric, points) {
-            (Metric::Cosine, Points::Dense(m)) => {
-                (0..m.rows()).map(|i| dense::sq_norm(m.row(i))).collect()
-            }
-            (Metric::L2 | Metric::Cosine, Points::Sparse(m)) => sparse::sq_norm_table(m),
-            (Metric::L1, Points::Sparse(m)) => sparse::abs_sum_table(m),
-            _ => Vec::new(),
-        };
+        let norms = Self::norms_for(metric, points);
         NativeBackend {
             points,
             metric,
@@ -138,6 +131,24 @@ impl<'a> NativeBackend<'a> {
             threads: 1,
             pool_min_work: POOL_MIN_WORK,
             norms,
+        }
+    }
+
+    /// The per-point reduction table `metric` needs over `points` — the
+    /// same table [`NativeBackend::new`] builds for its own point set
+    /// (dense cosine and sparse l2/cosine: squared L2 norms; sparse l1:
+    /// abs sums; empty otherwise). The query-vs-medoids cross path
+    /// ([`NativeBackend::block_vs`]) needs a second instance of it for the
+    /// query set, computed identically so predict-on-training-set is
+    /// bitwise-equal to the training assignments.
+    pub fn norms_for(metric: Metric, points: &Points) -> Vec<f64> {
+        match (metric, points) {
+            (Metric::Cosine, Points::Dense(m)) => {
+                (0..m.rows()).map(|i| dense::sq_norm(m.row(i))).collect()
+            }
+            (Metric::L2 | Metric::Cosine, Points::Sparse(m)) => sparse::sq_norm_table(m),
+            (Metric::L1, Points::Sparse(m)) => sparse::abs_sum_table(m),
+            _ => Vec::new(),
         }
     }
 
@@ -273,6 +284,114 @@ impl<'a> NativeBackend<'a> {
                 }
                 missed
             }
+        }
+    }
+
+    /// Fill one cross row `out[r] = d(points[t], queries[refs[r]])`
+    /// through the same row kernels as [`NativeBackend::fill_row`], with
+    /// the reference side streamed from `queries` (whose reduction table
+    /// is `q_norms`, per [`NativeBackend::norms_for`]). Never cached: the
+    /// pairwise cache keys are indices into the *training* point set.
+    ///
+    /// Panics when the query storage kind does not match the backend's —
+    /// [`crate::model::KMedoidsModel::predict`] validates and `Err`s
+    /// before reaching this.
+    fn fill_row_vs(
+        &self,
+        kern: &PairKernel<'_>,
+        queries: &Points,
+        q_norms: &[f64],
+        t: usize,
+        refs: &[usize],
+        out: &mut [f64],
+    ) {
+        match (*kern, queries) {
+            (PairKernel::L2(m), Points::Dense(q)) => {
+                dense::l2_row(m.row(t), refs.iter().map(|&r| q.row(r)), out)
+            }
+            (PairKernel::L1(m), Points::Dense(q)) => {
+                dense::l1_row(m.row(t), refs.iter().map(|&r| q.row(r)), out)
+            }
+            (PairKernel::Cosine { m, sq_norms }, Points::Dense(q)) => dense::cosine_row(
+                m.row(t),
+                sq_norms[t],
+                refs.iter().map(|&r| (q.row(r), q_norms[r])),
+                out,
+            ),
+            (PairKernel::SparseL2 { m, sq_norms }, Points::Sparse(q)) => {
+                sparse::l2_row_vs(m.row(t), sq_norms[t], q, q_norms, refs, out)
+            }
+            (PairKernel::SparseL1 { m, abs_sums }, Points::Sparse(q)) => {
+                sparse::l1_row_vs(m.row(t), abs_sums[t], q, q_norms, refs, out)
+            }
+            (PairKernel::SparseCosine { m, sq_norms }, Points::Sparse(q)) => {
+                sparse::cosine_row_vs(m.row(t), sq_norms[t], q, q_norms, refs, out)
+            }
+            (PairKernel::Generic, Points::Trees(q)) => {
+                let Points::Trees(ts) = self.points else {
+                    panic!("generic cross kernel requires tree storage on both sides")
+                };
+                for (o, &r) in out.iter_mut().zip(refs) {
+                    *o = crate::distance::tree_edit::ted(&ts[t], &q[r]);
+                }
+            }
+            _ => panic!(
+                "query storage {} does not match backend storage {}",
+                queries.kind(),
+                self.points.kind()
+            ),
+        }
+    }
+
+    /// Query-vs-medoids cross block:
+    /// `out[t * refs.len() + r] = d(points[targets[t]], queries[refs[r]])`,
+    /// where `targets` index this backend's (training/medoid) point set
+    /// and `refs` index `queries` — an *unseen* point set over the same
+    /// feature space. `q_norms` must be
+    /// `NativeBackend::norms_for(self.metric(), queries)`.
+    ///
+    /// This is the out-of-sample twin of [`DistanceBackend::block`]: the
+    /// same one-to-many row kernels fill each target row, the persistent
+    /// pool shards the work, and when `queries` *is* the training point
+    /// set the output is bitwise-equal to `block` (the row kernels are
+    /// per-reference independent, so sharding cannot change bits).
+    /// Sharding runs along the query axis — the predict workload is few
+    /// medoid targets against many queries. Evaluations are counted into
+    /// this backend's counter (one add per block).
+    pub fn block_vs(
+        &self,
+        targets: &[usize],
+        queries: &Points,
+        q_norms: &[f64],
+        refs: &[usize],
+        out: &mut [f64],
+    ) {
+        assert_eq!(out.len(), targets.len() * refs.len());
+        if targets.is_empty() || refs.is_empty() {
+            return;
+        }
+        let rn = refs.len();
+        self.counter.add((targets.len() * rn) as u64);
+        let kern = self.kernel();
+        let work = targets.len() * rn * self.elem_cost();
+        let pool = self
+            .pool
+            .as_ref()
+            .filter(|_| work >= self.pool_min_work && rn >= 2);
+        let out_ptr = OutPtr(out.as_mut_ptr());
+        let body = |r0: usize, r1: usize| {
+            for (ti, &t) in targets.iter().enumerate() {
+                // SAFETY: chunks cover disjoint `r0..r1` column ranges of
+                // row `ti`; no two (ti, chunk) slices alias.
+                let chunk = unsafe {
+                    std::slice::from_raw_parts_mut(out_ptr.0.add(ti * rn + r0), r1 - r0)
+                };
+                self.fill_row_vs(&kern, queries, q_norms, t, &refs[r0..r1], chunk);
+            }
+        };
+        match pool {
+            Some(p) => p.run(rn, self.chunk_for(rn), &body),
+            None => body(0, rn),
         }
     }
 
@@ -435,6 +554,51 @@ pub fn loss_and_assignments(
         }
     }
     (loss, assign)
+}
+
+/// Assign every point of `queries` to its nearest point of the backend's
+/// own set (all of them — the backend is expected to hold exactly the k
+/// medoid points, as [`crate::model::KMedoidsModel`] builds it). Returns
+/// `(assignment, distance)` per query, where `assignment` indexes the
+/// backend's rows.
+///
+/// Mirrors [`loss_and_assignments`] exactly — same reference tiling, same
+/// first-minimum tie-breaking (`<`, lowest medoid row wins), same row
+/// kernels via [`NativeBackend::block_vs`] — so predicting the training
+/// set reproduces the training assignments bit for bit.
+pub fn assign_against(
+    backend: &NativeBackend<'_>,
+    queries: &Points,
+) -> (Vec<usize>, Vec<f64>) {
+    let k = backend.n();
+    assert!(k > 0, "assign_against requires at least one medoid");
+    let nq = queries.len();
+    let q_norms = NativeBackend::norms_for(backend.metric(), queries);
+    const REF_TILE: usize = 2048;
+    let targets: Vec<usize> = (0..k).collect();
+    let refs: Vec<usize> = (0..nq).collect();
+    let mut tile_buf = vec![0.0f64; k * REF_TILE.min(nq.max(1))];
+    let mut assign = vec![0usize; nq];
+    let mut dists = vec![0.0f64; nq];
+    for tile in refs.chunks(REF_TILE) {
+        let cn = tile.len();
+        let out = &mut tile_buf[..k * cn];
+        backend.block_vs(&targets, queries, &q_norms, tile, out);
+        for (ci, &j) in tile.iter().enumerate() {
+            let mut best = f64::INFINITY;
+            let mut who = 0;
+            for (mi, row) in out.chunks_exact(cn).enumerate() {
+                let d = row[ci];
+                if d < best {
+                    best = d;
+                    who = mi;
+                }
+            }
+            assign[j] = who;
+            dists[j] = best;
+        }
+    }
+    (assign, dists)
 }
 
 #[cfg(test)]
@@ -651,6 +815,58 @@ mod tests {
         cached.block(&targets, &refs, &mut b);
         assert_eq!(a, b);
         assert_eq!(cached.counter().get(), evals);
+    }
+
+    /// `block_vs` with the training set itself as the query side must be
+    /// bitwise-equal to `block` — the cross kernels are the same kernels.
+    #[test]
+    fn block_vs_matches_block_on_training_set() {
+        let dense = synthetic::gmm(&mut Rng::seed_from(21), 90, 33, 3, 2.0);
+        let sparse = sparse_dataset();
+        for (ds, metrics) in [
+            (&dense, &[Metric::L1, Metric::L2, Metric::Cosine][..]),
+            (&sparse, &[Metric::L1, Metric::L2, Metric::Cosine][..]),
+        ] {
+            for &metric in metrics {
+                for threads in [1usize, 4] {
+                    let b = NativeBackend::new(&ds.points, metric)
+                        .with_threads(threads)
+                        .with_pool_min_work(0);
+                    let targets = [0usize, 7, 13];
+                    let refs: Vec<usize> = (0..ds.len()).collect();
+                    let mut a = vec![0.0; targets.len() * refs.len()];
+                    let mut c = vec![0.0; targets.len() * refs.len()];
+                    b.block(&targets, &refs, &mut a);
+                    let q_norms = NativeBackend::norms_for(metric, &ds.points);
+                    b.block_vs(&targets, &ds.points, &q_norms, &refs, &mut c);
+                    assert_eq!(a, c, "{metric} threads={threads} on {}", ds.points.kind());
+                }
+            }
+        }
+    }
+
+    /// Assigning the training set against a backend holding only the
+    /// extracted medoid rows reproduces the training assignments bitwise.
+    #[test]
+    fn assign_against_reproduces_training_assignments() {
+        for ds in [
+            synthetic::gmm(&mut Rng::seed_from(22), 120, 16, 4, 3.0),
+            sparse_dataset(),
+        ] {
+            let metric = Metric::L2;
+            let b = NativeBackend::new(&ds.points, metric);
+            let medoids = [3usize, 40, 55];
+            let (_, want) = loss_and_assignments(&b, &medoids);
+            let medoid_points = ds.points.select(&medoids);
+            let mb = NativeBackend::new(&medoid_points, metric);
+            let (got, dists) = assign_against(&mb, &ds.points);
+            assert_eq!(got, want, "{}", ds.points.kind());
+            // each medoid is its own nearest medoid at distance zero
+            for (mi, &m) in medoids.iter().enumerate() {
+                assert_eq!(got[m], mi);
+                assert_eq!(dists[m], 0.0);
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,257 @@
+//! Fitted-model API lockdown: out-of-sample predict parity, persistence
+//! round trips, and hostile-input hardening of the binary model format.
+//!
+//! The parity contract is **bitwise**: `model.predict(training points)`
+//! equals `Clustering::assignments` exactly, across metrics {l1, l2,
+//! cosine} x storage {dense, sparse} x threads {1, 8} x cache on/off, and
+//! a saved model reloads byte-identically and predicts identically with
+//! the training dataset dropped. Malformed model files must Err — never
+//! panic, never over-allocate — in the `tests/stream_fixtures.rs` golden
+//! fixture style.
+
+use banditpam::prelude::*;
+use banditpam::util::matrix::Matrix;
+use std::path::PathBuf;
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("fixtures")
+        .join("models")
+        .join(name)
+}
+
+fn dense_data(seed: u64) -> Dataset {
+    synthetic::gmm(&mut Rng::seed_from(seed), 220, 24, 4, 3.0)
+}
+
+fn sparse_data(seed: u64) -> Dataset {
+    synthetic::scrna_sparse(&mut Rng::seed_from(seed), 180, 256, 0.10)
+}
+
+/// The acceptance grid: predict-on-training-set is bitwise-equal to the
+/// stored assignments for every metric x storage x thread-count x cache
+/// combination, and the assignment distances are exact zeros on medoids.
+#[test]
+fn predict_parity_metrics_by_storage_by_threads() {
+    for (ds, storage) in [(dense_data(11), "dense"), (sparse_data(12), "sparse")] {
+        for metric in [Metric::L1, Metric::L2, Metric::Cosine] {
+            for threads in [1usize, 8] {
+                for cache in [false, true] {
+                    let mut fit =
+                        Fit::banditpam().metric(metric).threads(threads).seed(31).k(5);
+                    if cache {
+                        fit = fit.cache(1 << 16);
+                    }
+                    let model = fit.fit(&ds).unwrap();
+                    let ctx = format!("{storage}/{metric}/threads={threads}/cache={cache}");
+                    let pred = model.predict(&ds.points).unwrap();
+                    assert_eq!(pred, model.clustering().assignments, "{ctx}");
+                    let (pred2, dists) = model.predict_with_dists(&ds.points).unwrap();
+                    assert_eq!(pred2, pred, "{ctx}");
+                    for (pos, &m) in model.clustering().medoids.iter().enumerate() {
+                        assert_eq!(pred[m], pos, "{ctx}: medoid {m} self-assignment");
+                        assert_eq!(dists[m], 0.0, "{ctx}: medoid {m} self-distance");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Thread count must never change predicted bits — same contract as the
+/// training-side determinism suite.
+#[test]
+fn predict_is_thread_invariant_on_unseen_points() {
+    for (train, queries) in [
+        (dense_data(21), dense_data(22)),
+        (sparse_data(23), sparse_data(24)),
+    ] {
+        let model = Fit::banditpam().metric(Metric::L2).seed(7).k(4).fit(&train).unwrap();
+        let (a1, d1) = model
+            .clone()
+            .with_threads(1)
+            .predict_with_dists(&queries.points)
+            .unwrap();
+        let (a8, d8) = model
+            .with_threads(8)
+            .predict_with_dists(&queries.points)
+            .unwrap();
+        assert_eq!(a1, a8);
+        let bits1: Vec<u64> = d1.iter().map(|d| d.to_bits()).collect();
+        let bits8: Vec<u64> = d8.iter().map(|d| d.to_bits()).collect();
+        assert_eq!(bits1, bits8, "distances must be bitwise thread-invariant");
+    }
+}
+
+/// save -> load -> re-save is byte-identical, and the reloaded model
+/// serves predict with the training dataset dropped.
+#[test]
+fn save_load_roundtrip_is_byte_identical_and_serves_without_training_data() {
+    for (ds, metric) in [(dense_data(41), Metric::Cosine), (sparse_data(42), Metric::L1)] {
+        let queries = ds.select(&(0..40).collect::<Vec<_>>());
+        let model = Fit::banditpam().metric(metric).seed(9).k(6).fit(&ds).unwrap();
+        let want_train = model.clustering().assignments.clone();
+        let want_queries = model.predict(&queries.points).unwrap();
+
+        let bytes = model.to_bytes().unwrap();
+        let reloaded = KMedoidsModel::from_bytes(&bytes).unwrap();
+        assert_eq!(reloaded.to_bytes().unwrap(), bytes, "re-save must be byte-identical");
+
+        // metadata survives exactly
+        assert_eq!(reloaded.k(), model.k());
+        assert_eq!(reloaded.metric(), model.metric());
+        assert_eq!(reloaded.dim(), model.dim());
+        assert_eq!(reloaded.n_train(), model.n_train());
+        assert_eq!(reloaded.algorithm(), model.algorithm());
+        assert_eq!(reloaded.config_fingerprint(), model.config_fingerprint());
+        assert_eq!(reloaded.clustering().medoids, model.clustering().medoids);
+        assert_eq!(reloaded.clustering().assignments, model.clustering().assignments);
+        assert_eq!(
+            reloaded.loss().to_bits(),
+            model.loss().to_bits(),
+            "loss must round-trip bitwise"
+        );
+        let (s, m) = (&reloaded.clustering().stats, &model.clustering().stats);
+        assert_eq!(s.distance_evals, m.distance_evals);
+        assert_eq!(s.swap_iters, m.swap_iters);
+
+        // file round trip + serving with the training data dropped
+        let path = std::env::temp_dir().join(format!(
+            "banditpam_model_api_{}_{}.bpmodel",
+            std::process::id(),
+            metric
+        ));
+        model.save(&path).unwrap();
+        drop(model);
+        drop(ds);
+        let served = KMedoidsModel::load(&path).unwrap();
+        assert_eq!(served.predict(&queries.points).unwrap(), want_queries);
+        // ... and the original training points, regenerated bit-identically
+        let regen = if served.metric() == Metric::Cosine {
+            dense_data(41)
+        } else {
+            sparse_data(42)
+        };
+        assert_eq!(served.predict(&regen.points).unwrap(), want_train);
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+/// `k == n` through the whole stack: facade -> degenerate fit -> model ->
+/// predict -> persistence.
+#[test]
+fn degenerate_k_equals_n_end_to_end() {
+    let ds = synthetic::gmm(&mut Rng::seed_from(51), 25, 6, 3, 3.0);
+    let model = Fit::banditpam().metric(Metric::L2).seed(1).k(25).fit(&ds).unwrap();
+    assert_eq!(model.k(), 25);
+    assert_eq!(model.loss(), 0.0);
+    assert_eq!(model.clustering().medoids, (0..25).collect::<Vec<_>>());
+    let pred = model.predict(&ds.points).unwrap();
+    assert_eq!(pred, model.clustering().assignments);
+    let reloaded = KMedoidsModel::from_bytes(&model.to_bytes().unwrap()).unwrap();
+    assert_eq!(reloaded.predict(&ds.points).unwrap(), pred);
+}
+
+/// Golden corrupted fixtures: every malformed model file must produce a
+/// clean `Err` from `KMedoidsModel::load` — never a panic, never an
+/// allocation blow-up (`lying_nnz` declares 2^40 entries).
+#[test]
+fn corrupted_model_fixtures_err_cleanly() {
+    for name in [
+        "bad_magic.bpmodel",
+        "bad_version.bpmodel",
+        "bad_metric.bpmodel",
+        "bad_storage.bpmodel",
+        "nonzero_reserved.bpmodel",
+        "zero_k.bpmodel",
+        "k_exceeds_n.bpmodel",
+        "truncated_header.bpmodel",
+        "truncated_payload.bpmodel",
+        "trailing_bytes.bpmodel",
+        "decreasing_medoids.bpmodel",
+        "medoid_out_of_range.bpmodel",
+        "bad_assignment.bpmodel",
+        "huge_string.bpmodel",
+        "lying_nnz.bpmodel",
+        "explicit_zero_value.bpmodel",
+        "decreasing_indptr.bpmodel",
+        "column_out_of_range.bpmodel",
+    ] {
+        let p = fixture(name);
+        assert!(p.exists(), "fixture {name} missing");
+        let err = KMedoidsModel::load(&p).expect_err(&format!("{name} must Err"));
+        assert_eq!(err.kind(), "model", "{name}: {err}");
+    }
+    // missing file is also a clean model error
+    assert_eq!(
+        KMedoidsModel::load(&fixture("does_not_exist.bpmodel"))
+            .unwrap_err()
+            .kind(),
+        "model"
+    );
+}
+
+/// Golden *valid* fixtures pin the byte format itself: files written by
+/// this version (and checked in) must keep loading and predicting, so any
+/// accidental format change breaks loudly here.
+#[test]
+fn golden_valid_fixtures_load_and_predict() {
+    let dense = KMedoidsModel::load(&fixture("valid_dense.bpmodel")).unwrap();
+    assert_eq!(dense.k(), 2);
+    assert_eq!(dense.metric(), Metric::L2);
+    assert_eq!(dense.dim(), Some(2));
+    assert_eq!(dense.n_train(), 4);
+    assert_eq!(dense.algorithm(), "pam");
+    assert_eq!(dense.config_fingerprint(), "golden");
+    assert_eq!(dense.loss(), 1.0);
+    assert_eq!(dense.clustering().medoids, vec![0, 2]);
+    let queries = Points::Dense(Matrix::from_vec(
+        vec![0.1, -0.1, 2.9, 3.2, 0.0, 0.0],
+        3,
+        2,
+    ));
+    assert_eq!(dense.predict(&queries).unwrap(), vec![0, 1, 0]);
+
+    let sparse = KMedoidsModel::load(&fixture("valid_sparse.bpmodel")).unwrap();
+    assert_eq!(sparse.k(), 2);
+    assert_eq!(sparse.dim(), Some(3));
+    let Points::Sparse(m) = sparse.medoid_points() else { unreachable!() };
+    assert_eq!(m.nnz(), 3);
+    assert_eq!(m.row(0), (&[0u32][..], &[1.0f32][..]));
+    assert_eq!(m.row(1), (&[0u32, 2][..], &[2.0f32, 3.0][..]));
+    let sq = CsrMatrix::from_triplets(2, 3, &[(0, 0, 1.0), (1, 0, 2.0), (1, 2, 3.0)]);
+    let pred = sparse.predict(&Points::Sparse(sq)).unwrap();
+    assert_eq!(pred, vec![0, 1]);
+}
+
+/// Every strict prefix of a valid model must Err (truncation), and random
+/// single-byte corruption must never panic.
+#[test]
+fn truncation_and_bitflip_sweep_never_panics() {
+    let ds = sparse_data(61);
+    let model = Fit::banditpam().metric(Metric::L1).seed(3).k(3).fit(&ds).unwrap();
+    let bytes = model.to_bytes().unwrap();
+    for cut in (0..bytes.len()).step_by(7) {
+        assert!(
+            KMedoidsModel::from_bytes(&bytes[..cut]).is_err(),
+            "prefix of {cut} bytes must not load"
+        );
+    }
+    for pos in (0..bytes.len()).step_by(11) {
+        let mut corrupt = bytes.clone();
+        corrupt[pos] ^= 0xA5;
+        // any Result is acceptable; panicking or over-allocating is not
+        let _ = KMedoidsModel::from_bytes(&corrupt);
+    }
+}
+
+/// The `Fit` facade acceptance line from the issue, verbatim shape.
+#[test]
+fn acceptance_one_liner() {
+    let data = dense_data(71);
+    let model = Fit::banditpam().metric(Metric::L2).seed(7).fit(&data).unwrap();
+    assert_eq!(model.k(), 5, "default k");
+    let pred = model.predict(&data.points).unwrap();
+    assert_eq!(pred, model.clustering().assignments);
+}
