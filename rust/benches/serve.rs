@@ -1,0 +1,355 @@
+//! Serve load generator: an in-process server (over in-memory pipes,
+//! exactly the code path a socket uses) hammered by concurrent client
+//! threads with mixed dense/sparse traffic and a deterministic
+//! fault-injection fraction. Emits `BENCH_serve.json` with p50/p99
+//! latency, throughput and shed rate per scenario.
+//!
+//! Acceptance (ISSUE 6): the server survives the full fault schedule —
+//! every request gets exactly one typed response, healthy responses are
+//! bitwise-identical to single-shot `predict`, and the final drain is
+//! clean. Scale via BANDITPAM_BENCH_SCALE=smoke|quick|paper.
+
+use banditpam::data::synthetic;
+use banditpam::model::{Fit, KMedoidsModel};
+use banditpam::serve::faults::{pipe, FaultPlan, PipeReader, PipeWriter};
+use banditpam::serve::protocol::{
+    encode_request, parse_response, read_frame, ErrorCode, PredictRequest, Request,
+    Response,
+};
+use banditpam::serve::{AdmissionConfig, Registry, ServeOptions, Server};
+use banditpam::stats::summary::quantile;
+use banditpam::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+struct Client {
+    w: Option<PipeWriter>,
+    r: PipeReader,
+    conn: Option<thread::JoinHandle<()>>,
+}
+
+impl Client {
+    fn connect(server: &Arc<Server>) -> Client {
+        let (cw, sr) = pipe();
+        let (sw, cr) = pipe();
+        let server = Arc::clone(server);
+        let conn = thread::spawn(move || server.handle_connection(sr, sw));
+        Client { w: Some(cw), r: cr, conn: Some(conn) }
+    }
+}
+
+impl Drop for Client {
+    fn drop(&mut self) {
+        drop(self.w.take());
+        if let Some(h) = self.conn.take() {
+            h.join().ok();
+        }
+    }
+}
+
+struct ScenarioResult {
+    name: String,
+    requests: usize,
+    ok: usize,
+    shed: usize,
+    errors: usize,
+    p50_ms: f64,
+    p99_ms: f64,
+    throughput_rps: f64,
+    wall_secs: f64,
+}
+
+impl ScenarioResult {
+    fn json(&self) -> String {
+        format!(
+            "{{\"scenario\": \"{}\", \"requests\": {}, \"ok\": {}, \"shed\": {}, \
+             \"errors\": {}, \"p50_ms\": {:.4}, \"p99_ms\": {:.4}, \
+             \"throughput_rps\": {:.1}, \"shed_rate\": {:.4}, \"wall_secs\": {:.4}}}",
+            self.name,
+            self.requests,
+            self.ok,
+            self.shed,
+            self.errors,
+            self.p50_ms,
+            self.p99_ms,
+            self.throughput_rps,
+            self.shed as f64 / self.requests.max(1) as f64,
+            self.wall_secs
+        )
+    }
+
+    fn line(&self) -> String {
+        format!(
+            "{:<28} {:>6} reqs  p50 {:>8.3} ms  p99 {:>8.3} ms  {:>9.1} req/s  \
+             shed {:>5.1}%  err {}",
+            self.name,
+            self.requests,
+            self.p50_ms,
+            self.p99_ms,
+            self.throughput_rps,
+            100.0 * self.shed as f64 / self.requests.max(1) as f64,
+            self.errors
+        )
+    }
+}
+
+/// One worker: `reqs` sequential request/response round trips on its own
+/// connection. Every `fault_every`-th request (if nonzero) is a
+/// deliberately corrupted frame whose typed rejection also counts as a
+/// measured round trip. Returns (latencies_ms, ok, shed, errors).
+#[allow(clippy::too_many_arguments)]
+fn worker(
+    server: Arc<Server>,
+    reference: Arc<BTreeMap<String, KMedoidsModel>>,
+    worker_id: u64,
+    reqs: usize,
+    fault_every: usize,
+    sparse_share: usize,
+) -> (Vec<f64>, usize, usize, usize) {
+    let mut c = Client::connect(&server);
+    let mut lat = Vec::with_capacity(reqs);
+    let (mut ok, mut shed, mut errors) = (0usize, 0usize, 0usize);
+    for i in 0..reqs {
+        let sparse = sparse_share > 0 && i % sparse_share == 0;
+        let (model, queries) = if sparse {
+            let q = synthetic::scrna_like(
+                &mut Rng::seed_from(worker_id * 10_000 + i as u64),
+                1 + i % 8,
+                24,
+            )
+            .to_sparse()
+            .unwrap()
+            .points;
+            ("cells", q)
+        } else {
+            let q = synthetic::gmm(
+                &mut Rng::seed_from(worker_id * 10_000 + i as u64),
+                1 + i % 8,
+                6,
+                3,
+                3.0,
+            )
+            .points;
+            ("gmm", q)
+        };
+        let req = Request::Predict(PredictRequest {
+            id: i as u64,
+            model: model.into(),
+            deadline_ms: 0,
+            queries: queries.clone(),
+        });
+        let mut frame = encode_request(&req);
+        let faulty = fault_every > 0 && i % fault_every == fault_every - 1;
+        if faulty {
+            // well-framed but body-corrupt (trailing byte past the
+            // grammar): the server must answer BadRequest with the
+            // echoed id and keep the connection alive
+            let body_len = (frame.len() - 8 + 1) as u32;
+            frame[4..8].copy_from_slice(&body_len.to_le_bytes());
+            frame.push(0);
+        }
+        let t0 = Instant::now();
+        c.w.as_mut().unwrap().write_all(&frame).unwrap();
+        let (kind, body) = read_frame(&mut c.r).unwrap().expect("server hung up");
+        let resp = parse_response(kind, &body).unwrap();
+        lat.push(t0.elapsed().as_secs_f64() * 1e3);
+        match resp {
+            Response::Assignments { id, assign, dists } => {
+                assert_eq!(id, i as u64);
+                assert!(!faulty, "a corrupted frame must not produce assignments");
+                let (want_a, want_d) =
+                    reference[model].predict_with_dists(&queries).unwrap();
+                let want_a: Vec<u32> = want_a.iter().map(|&a| a as u32).collect();
+                assert_eq!(assign, want_a, "serving must match single-shot predict");
+                assert!(
+                    dists
+                        .iter()
+                        .zip(&want_d)
+                        .all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "distances must be bitwise-identical"
+                );
+                ok += 1;
+            }
+            Response::Error { code: ErrorCode::Overloaded, .. } => shed += 1,
+            Response::Error { .. } => errors += 1,
+            other => panic!("unexpected response {other:?}"),
+        }
+    }
+    (lat, ok, shed, errors)
+}
+
+fn run_scenario(
+    name: &str,
+    server: &Arc<Server>,
+    reference: &Arc<BTreeMap<String, KMedoidsModel>>,
+    clients: usize,
+    reqs_per_client: usize,
+    fault_every: usize,
+    sparse_share: usize,
+) -> ScenarioResult {
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|w| {
+            let server = Arc::clone(server);
+            let reference = Arc::clone(reference);
+            thread::spawn(move || {
+                worker(server, reference, w as u64, reqs_per_client, fault_every, sparse_share)
+            })
+        })
+        .collect();
+    let mut lat = Vec::new();
+    let (mut ok, mut shed, mut errors) = (0, 0, 0);
+    for h in handles {
+        let (l, o, s, e) = h.join().expect("worker panicked");
+        lat.extend(l);
+        ok += o;
+        shed += s;
+        errors += e;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let requests = clients * reqs_per_client;
+    assert_eq!(ok + shed + errors, requests, "every request answered exactly once");
+    ScenarioResult {
+        name: name.to_string(),
+        requests,
+        ok,
+        shed,
+        errors,
+        p50_ms: quantile(&lat, 0.50),
+        p99_ms: quantile(&lat, 0.99),
+        throughput_rps: requests as f64 / wall.max(1e-9),
+        wall_secs: wall,
+    }
+}
+
+fn main() {
+    let scale = banditpam::bench::Scale::from_env();
+    let clients = scale.pick(2, 4, 8);
+    let reqs = scale.pick(40, 200, 1000);
+    println!("== serve benches ({scale:?}: {clients} clients x {reqs} reqs) ==");
+
+    // Fit and persist the served models; keep in-memory twins as the
+    // bitwise reference.
+    let dir = std::env::temp_dir().join(format!("bp_bench_serve_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let gmm_ds = synthetic::gmm(&mut Rng::seed_from(1), 60, 6, 3, 3.0);
+    let gmm = Fit::banditpam().k(3).seed(1).fit(&gmm_ds).unwrap();
+    gmm.save(&dir.join("gmm.bpmodel")).unwrap();
+    let cells_ds = synthetic::scrna_like(&mut Rng::seed_from(2), 60, 24).to_sparse().unwrap();
+    let cells = Fit::banditpam().k(3).seed(2).fit(&cells_ds).unwrap();
+    cells.save(&dir.join("cells.bpmodel")).unwrap();
+    let mut reference = BTreeMap::new();
+    reference.insert("gmm".to_string(), gmm);
+    reference.insert("cells".to_string(), cells);
+    let reference = Arc::new(reference);
+
+    let open_registry = || {
+        Registry::open(&[
+            ("gmm".into(), dir.join("gmm.bpmodel")),
+            ("cells".into(), dir.join("cells.bpmodel")),
+        ])
+        .expect("registry")
+    };
+
+    let mut results: Vec<ScenarioResult> = Vec::new();
+
+    // --- healthy load: mixed dense/sparse, no faults --------------------
+    {
+        let server = Server::new(
+            open_registry(),
+            ServeOptions { threads: 2, ..Default::default() },
+        );
+        let r = run_scenario("healthy-mixed", &server, &reference, clients, reqs, 0, 4);
+        assert_eq!(r.errors, 0, "healthy load must not error");
+        assert_eq!(r.shed, 0, "default queue bounds must not shed this load");
+        println!("{}", r.line());
+        results.push(r);
+        server.begin_shutdown();
+        server.join();
+    }
+
+    // --- hostile frames riding along ------------------------------------
+    {
+        let server = Server::new(
+            open_registry(),
+            ServeOptions { threads: 2, ..Default::default() },
+        );
+        // every 5th frame per client is corrupted
+        let r = run_scenario("with-corrupt-frames", &server, &reference, clients, reqs, 5, 4);
+        assert!(r.errors > 0, "the corrupted frames must surface as typed errors");
+        assert_eq!(
+            r.errors,
+            clients * (reqs / 5),
+            "exactly the corrupted frames error"
+        );
+        println!("{}", r.line());
+        results.push(r);
+        server.begin_shutdown();
+        server.join();
+    }
+
+    // --- forced batch panics (isolation under fire) ---------------------
+    {
+        let server = Server::new(
+            open_registry(),
+            ServeOptions {
+                threads: 2,
+                // high threshold: panics stay isolated, no quarantine —
+                // the quarantine path itself is covered by tests
+                admission: AdmissionConfig { quarantine_threshold: u32::MAX, ..Default::default() },
+                faults: FaultPlan { panic_every: Some(7), ..Default::default() },
+            },
+        );
+        let r = run_scenario("with-batch-panics", &server, &reference, clients, reqs, 0, 4);
+        assert!(r.errors > 0, "the injected panics must surface as Internal errors");
+        assert!(r.ok > 0, "non-panicked batches keep serving");
+        println!("{}", r.line());
+        results.push(r);
+        server.begin_shutdown();
+        server.join();
+    }
+
+    // --- tight queue: backpressure under concurrency --------------------
+    {
+        let server = Server::new(
+            open_registry(),
+            ServeOptions {
+                threads: 1,
+                admission: AdmissionConfig {
+                    max_queue_requests: 2,
+                    max_queue_points: 8,
+                    ..Default::default()
+                },
+                faults: FaultPlan { stall_ms: scale.pick(2, 1, 1), ..Default::default() },
+            },
+        );
+        let r = run_scenario(
+            "tight-queue-backpressure",
+            &server,
+            &reference,
+            clients.max(2),
+            reqs,
+            0,
+            4,
+        );
+        println!("{}", r.line());
+        results.push(r);
+        server.begin_shutdown();
+        server.join();
+    }
+
+    let doc = format!(
+        "{{\"bench\": \"serve\", \"scale\": \"{scale:?}\", \"clients\": {clients}, \
+         \"reqs_per_client\": {reqs}, \"scenarios\": [\n  {}\n]}}\n",
+        results.iter().map(|r| r.json()).collect::<Vec<_>>().join(",\n  ")
+    );
+    match std::fs::write("BENCH_serve.json", &doc) {
+        Ok(()) => println!("wrote BENCH_serve.json"),
+        Err(e) => println!("BENCH_serve.json: write failed ({e})"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    println!("[serve] all scenarios drained cleanly");
+}

@@ -40,6 +40,16 @@ pub fn load_csv(path: &Path) -> Result<Dataset> {
         let row = row.map_err(|e| {
             Error::data(format!("line {} of {}: {e}", lineno + 1, path.display()))
         })?;
+        // Rust's f32 parser accepts "NaN"/"inf" spellings; a NaN feature
+        // silently corrupts every nearest-medoid comparison downstream, so
+        // reject non-finite values at the ingest boundary.
+        if let Some(v) = row.iter().find(|v| !v.is_finite()) {
+            return Err(Error::data(format!(
+                "line {} of {}: non-finite value {v}",
+                lineno + 1,
+                path.display()
+            )));
+        }
         if let Some(first) = rows.first() {
             if row.len() != first.len() {
                 return Err(Error::data(format!(
@@ -180,6 +190,9 @@ pub fn save_mtx(ds: &Dataset, path: &Path) -> Result<()> {
 
 /// Load an MNIST IDX3 image file (magic 0x00000803) as flattened rows
 /// scaled to [0, 1]. `limit` caps the number of images read (0 = all).
+///
+/// IDX pixel bytes map to `b / 255.0` — always finite — so unlike the
+/// CSV/MTX text loaders this path needs no non-finite rejection.
 pub fn load_idx_images(path: &Path, limit: usize) -> Result<Dataset> {
     let mut f = std::fs::File::open(path).map_err(|e| io_err(path, e))?;
     let mut header = [0u8; 16];
@@ -243,6 +256,21 @@ mod tests {
         let p = tmpfile("ragged.csv", b"1,2\n3\n");
         assert!(load_csv(&p).unwrap_err().to_string().contains("ragged"));
         let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn csv_rejects_non_finite_values() {
+        for (name, contents) in [
+            ("nan.csv", &b"1.0,NaN\n"[..]),
+            ("inf.csv", b"inf,2.0\n"),
+            ("ninf.csv", b"1.0,2.0\n3.0,-inf\n"),
+        ] {
+            let p = tmpfile(name, contents);
+            let err = load_csv(&p).unwrap_err();
+            assert_eq!(err.kind(), "data", "{name}");
+            assert!(err.message().contains("non-finite"), "{name}: {err}");
+            let _ = std::fs::remove_file(p);
+        }
     }
 
     #[test]
@@ -363,6 +391,21 @@ mod tests {
         ] {
             let p = tmpfile(name, contents);
             assert!(load_mtx(&p, false, 0).is_err(), "{name} should be rejected");
+            let _ = std::fs::remove_file(p);
+        }
+    }
+
+    #[test]
+    fn mtx_rejects_non_finite_values() {
+        for (name, contents) in [
+            ("nan.mtx", &b"%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 nan\n"[..]),
+            ("inf.mtx", b"%%MatrixMarket matrix coordinate real general\n2 2 1\n2 1 inf\n"),
+            ("ninf.mtx", b"%%MatrixMarket matrix coordinate real general\n2 2 1\n1 2 -inf\n"),
+        ] {
+            let p = tmpfile(name, contents);
+            let err = load_mtx(&p, false, 0).unwrap_err();
+            assert_eq!(err.kind(), "data", "{name}");
+            assert!(err.message().contains("non-finite"), "{name}: {err}");
             let _ = std::fs::remove_file(p);
         }
     }

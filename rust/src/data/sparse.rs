@@ -16,7 +16,9 @@
 //! * within each row, column indices are strictly increasing (sorted,
 //!   no duplicates) and `< cols`;
 //! * stored values are nonzero (constructors strip explicit zeros — the
-//!   kernels stay correct with them, but they waste space and cycles).
+//!   kernels stay correct with them, but they waste space and cycles);
+//! * stored values are finite (NaN/±inf would silently corrupt the
+//!   nearest-medoid argmin comparisons downstream).
 
 use crate::util::matrix::Matrix;
 
@@ -106,6 +108,12 @@ impl CsrMatrix {
                     return Err(format!("row {r}: column {last} >= cols {cols}"));
                 }
             }
+        }
+        // Finite values only: a stored NaN poisons every distance
+        // comparison downstream (NaN < best is always false, so medoid
+        // argmins silently pick garbage), and ±inf overflows reductions.
+        if let Some(&v) = values.iter().find(|v| !v.is_finite()) {
+            return Err(format!("non-finite value {v} stored"));
         }
         // No explicit zeros: nnz()/density()/PartialEq all assume stored
         // values are structural nonzeros (the kernels would stay correct,
@@ -443,6 +451,9 @@ mod tests {
             ((1, 4, vec![0, 2], vec![1, 1], vec![1.0, 2.0]), "strictly increasing"),
             ((1, 2, vec![0, 1], vec![5], vec![1.0]), ">= cols"),
             ((1, 4, vec![0, 1], vec![1], vec![0.0]), "explicit zero"),
+            ((1, 4, vec![0, 1], vec![1], vec![f32::NAN]), "non-finite"),
+            ((1, 4, vec![0, 2], vec![1, 2], vec![1.0, f32::INFINITY]), "non-finite"),
+            ((1, 4, vec![0, 1], vec![1], vec![f32::NEG_INFINITY]), "non-finite"),
         ];
         for ((rows, cols, indptr, indices, values), needle) in cases {
             let err = CsrMatrix::try_from_parts(rows, cols, indptr, indices, values)

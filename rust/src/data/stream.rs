@@ -267,6 +267,11 @@ impl<B: BufRead> MtxScanner<B> {
             } else {
                 parse_field(fields.next(), "entry value", lineno, &self.display)?
             };
+            // Rust's f32 parser accepts "nan"/"inf" spellings; reject them
+            // here so both the in-memory and streamed loaders agree.
+            if !v.is_finite() {
+                bail!("line {lineno} of {}: non-finite value {v}", self.display);
+            }
             if i == 0 || j == 0 || i > self.rows || j > self.cols {
                 bail!(
                     "line {lineno} of {}: entry ({i}, {j}) outside 1..={} x 1..={}",

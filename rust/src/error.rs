@@ -83,6 +83,17 @@ impl Error {
         }
     }
 
+    /// Process exit code for CLI reporting: `2` for caller mistakes
+    /// (invalid argument/config, unsupported combination — "fix your
+    /// invocation"), `1` for everything else (bad data/model files,
+    /// internal failures).
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            Error::InvalidArgument(_) | Error::Config(_) | Error::Unsupported(_) => 2,
+            _ => 1,
+        }
+    }
+
     /// The human-readable message (without the category prefix).
     pub fn message(&self) -> &str {
         match self {
@@ -116,6 +127,21 @@ impl std::error::Error for Error {}
 impl From<anyhow::Error> for Error {
     fn from(e: anyhow::Error) -> Error {
         Error::Internal(format!("{e:#}"))
+    }
+}
+
+/// I/O failures surface as [`Error::Data`] — in practice they come from
+/// reading datasets/models or writing CLI outputs.
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::Data(e.to_string())
+    }
+}
+
+/// A CLI option that fails to parse is the caller's mistake.
+impl From<crate::util::cli::ParseError> for Error {
+    fn from(e: crate::util::cli::ParseError) -> Error {
+        Error::InvalidArgument(e.to_string())
     }
 }
 
@@ -161,5 +187,31 @@ mod tests {
     fn equality_by_variant_and_message() {
         assert_eq!(Error::data("x"), Error::data("x"));
         assert_ne!(Error::data("x"), Error::model("x"));
+    }
+
+    #[test]
+    fn exit_codes_distinguish_usage_errors() {
+        assert_eq!(Error::invalid_argument("x").exit_code(), 2);
+        assert_eq!(Error::config("x").exit_code(), 2);
+        assert_eq!(Error::unsupported("x").exit_code(), 2);
+        assert_eq!(Error::data("x").exit_code(), 1);
+        assert_eq!(Error::model("x").exit_code(), 1);
+        assert_eq!(Error::Internal("x".into()).exit_code(), 1);
+    }
+
+    #[test]
+    fn io_and_cli_errors_convert() {
+        let e: Error =
+            std::io::Error::new(std::io::ErrorKind::NotFound, "missing.csv").into();
+        assert_eq!(e.kind(), "data");
+        assert!(e.message().contains("missing.csv"));
+        let p = crate::util::cli::ParseError {
+            key: "k".to_string(),
+            value: "abc".to_string(),
+            expected: "usize",
+        };
+        let e: Error = p.into();
+        assert_eq!(e.kind(), "invalid_argument");
+        assert_eq!(e.exit_code(), 2);
     }
 }

@@ -77,6 +77,7 @@ pub mod error;
 pub mod experiments;
 pub mod model;
 pub mod runtime;
+pub mod serve;
 pub mod stats;
 pub mod testkit;
 pub mod util;

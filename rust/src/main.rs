@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   cluster        fit k medoids on a CSV / synthetic dataset
 //!   predict        assign points to the medoids of a saved model
+//!   serve          long-lived prediction server over saved models
 //!   experiment     regenerate a paper table/figure (see DESIGN.md)
 //!   generate-data  write a synthetic dataset to CSV
 //!   info           runtime / artifact diagnostics
@@ -12,8 +13,12 @@
 //! [`banditpam::data::synthetic::REGISTRY`], and the help text is rendered
 //! from the same tables — the accepted names cannot drift from the
 //! documented ones.
+//!
+//! Every failure exits with a one-line `error: ...` on stderr; usage
+//! errors (bad flags, mismatched inputs, unsupported combinations) exit
+//! with code 2, operational failures (missing files, corrupt data,
+//! internal errors) with code 1 — see [`banditpam::Error::exit_code`].
 
-use anyhow::{bail, Context, Result};
 use banditpam::algorithms::{make_algorithm, KMedoids};
 use banditpam::bench::Scale;
 use banditpam::data::stream::{self, StreamOptions};
@@ -24,8 +29,13 @@ use banditpam::runtime::backend::NativeBackend;
 use banditpam::runtime::executable::Client;
 use banditpam::runtime::manifest::Manifest;
 use banditpam::runtime::xla_backend::XlaBackend;
+use banditpam::serve::{
+    install_sighup_handler, serve_tcp, AdmissionConfig, Registry, ServeOptions, Server,
+};
+use banditpam::serve::faults::FaultPlan;
 use banditpam::util::cli::{Args, DataFormat};
 use banditpam::util::rng::Rng;
+use banditpam::{Error, Result};
 use std::path::{Path, PathBuf};
 
 /// Full usage text, rendered from the algorithm/synthetic registries.
@@ -53,6 +63,10 @@ USAGE:
   banditpam predict --model FILE [--data FILE | --synthetic NAME]
                     [--format csv|mtx|idx] [--limit L] [--transpose]
                     [--n N] [--seed S] [--threads T] [--out FILE] [--verbose]
+  banditpam serve   [--stdio | --listen HOST:PORT] NAME=FILE.bpmodel ...
+                    [--threads T] [--max-queue-requests N] [--max-queue-points N]
+                    [--max-batch-points N] [--retry-after-ms MS]
+                    [--quarantine-threshold N] [--quiet]
   banditpam experiment <id|all> [--scale smoke|quick|paper] [--seed S] [--csv]
   banditpam generate-data --synthetic NAME --n N --out FILE[.csv|.mtx]
                     [--format csv|mtx] [--seed S]
@@ -67,6 +81,13 @@ MODELS:      `cluster --save-model FILE` persists the fitted medoids +
              `predict --model FILE` reloads it and assigns any dataset —
              no training data needed. Queries are auto-converted to the
              model's storage kind (dense <-> CSR).
+SERVING:     `serve` loads one or more models (NAME=FILE, or a bare FILE
+             named by its stem) and answers assignment batches over the
+             binary protocol in rust/SERVE.md — on stdin/stdout (--stdio,
+             the default) or a TCP socket (--listen). Requests are
+             coalesced per model, deadlines and backpressure are
+             enforced, batch panics are isolated, and SIGHUP (or a
+             reload frame) hot-swaps models with zero downtime.
 SPARSE DATA: --format mtx loads Matrix Market triplets as CSR points
              (--transpose for 10x genes x cells files); --sparse converts
              any dense dataset to CSR; --density P sets the scrna-sparse
@@ -89,14 +110,14 @@ fn make_dataset(args: &Args, rng: &mut Rng) -> Result<Dataset> {
     let n: usize = args.get_parsed("n", 1000usize)?;
     let density: f64 = args.get_parsed("density", 0.10)?;
     if (args.flag("stream") || args.get("chunk-nnz").is_some()) && args.get("data").is_none() {
-        bail!(
-            "--stream/--chunk-nnz require --data FILE.mtx (synthetic datasets are generated in memory)"
-        );
+        return Err(Error::invalid_argument(
+            "--stream/--chunk-nnz require --data FILE.mtx (synthetic datasets are generated in memory)",
+        ));
     }
     let ds = if let Some(path) = args.get("data") {
         let format = match args.get("format") {
             Some(s) => DataFormat::parse(s)
-                .with_context(|| format!("bad --format {s:?} (csv|mtx|idx)"))?,
+                .ok_or_else(|| Error::invalid_argument(format!("bad --format {s:?} (csv|mtx|idx)")))?,
             None => DataFormat::infer(path),
         };
         let path = PathBuf::from(path);
@@ -106,7 +127,9 @@ fn make_dataset(args: &Args, rng: &mut Rng) -> Result<Dataset> {
         if (args.flag("stream") || args.get("chunk-nnz").is_some())
             && format != DataFormat::Mtx
         {
-            bail!("--stream/--chunk-nnz require --format mtx (got {format})");
+            return Err(Error::invalid_argument(format!(
+                "--stream/--chunk-nnz require --format mtx (got {format})"
+            )));
         }
         match format {
             DataFormat::Csv => loader::load_csv(&path)?,
@@ -140,9 +163,12 @@ fn make_dataset(args: &Args, rng: &mut Rng) -> Result<Dataset> {
         synthetic::by_name(name, rng, n, density)?
     };
     if args.flag("sparse") && !matches!(ds.points, Points::Sparse(_)) {
-        return ds
-            .to_sparse()
-            .with_context(|| format!("--sparse: {} points have no CSR form", ds.points.kind()));
+        return ds.to_sparse().ok_or_else(|| {
+            Error::invalid_argument(format!(
+                "--sparse: {} points have no CSR form",
+                ds.points.kind()
+            ))
+        });
     }
     Ok(ds)
 }
@@ -153,7 +179,16 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let ds = make_dataset(args, &mut rng)?;
     let k: usize = args.get_parsed("k", 5usize)?;
     let metric = Metric::parse(args.get("metric").unwrap_or("l2"))
-        .context("bad --metric (l2|l1|cosine|tree)")?;
+        .ok_or_else(|| Error::invalid_argument("bad --metric (l2|l1|cosine|tree)"))?;
+    // The backend constructors assert support; reject the combination
+    // here so a bad flag pairing is a usage error, not a panic.
+    if !metric.supports(&ds.points) {
+        return Err(Error::invalid_argument(format!(
+            "--metric {metric} does not support {} points (dataset {})",
+            ds.points.kind(),
+            ds.name
+        )));
+    }
     let algo_name = args.get("algo").unwrap_or("banditpam").to_string();
     let threads: usize = args.get_parsed(
         "threads",
@@ -190,7 +225,11 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             );
             algo.fit(&backend, k, &mut rng)?
         }
-        other => bail!("unknown backend {other:?} (native|xla)"),
+        other => {
+            return Err(Error::invalid_argument(format!(
+                "unknown backend {other:?} (native|xla)"
+            )))
+        }
     };
 
     println!("medoids       : {:?}", fit.medoids);
@@ -232,7 +271,9 @@ fn cmd_cluster(args: &Args) -> Result<()> {
 /// a saved model and assign a dataset to its medoids — no training data,
 /// rerun or refit involved.
 fn cmd_predict(args: &Args) -> Result<()> {
-    let model_path = args.get("model").context("--model FILE required")?;
+    let model_path = args
+        .get("model")
+        .ok_or_else(|| Error::invalid_argument("--model FILE required"))?;
     let model = KMedoidsModel::load(Path::new(model_path))?;
     println!(
         "model         : {model_path} (algo={}, metric={}, k={}, dim={}, n_train={}, loss={:.4})",
@@ -303,17 +344,101 @@ fn cmd_predict(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `banditpam serve [--stdio | --listen HOST:PORT] NAME=FILE.bpmodel ...`:
+/// the long-lived prediction server (see `rust/SERVE.md` for the wire
+/// protocol and the serving guarantees).
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut specs: Vec<(String, PathBuf)> = Vec::new();
+    for spec in &args.positional {
+        // NAME=FILE pins the registry name; a bare FILE is named by its
+        // stem (models.bpmodel -> "models"). Positionals rather than a
+        // repeated --model flag: the option map keeps one value per key.
+        let (name, path) = match spec.split_once('=') {
+            Some((name, path)) => (name.to_string(), PathBuf::from(path)),
+            None => {
+                let path = PathBuf::from(spec);
+                let name = path
+                    .file_stem()
+                    .and_then(|s| s.to_str())
+                    .unwrap_or("")
+                    .to_string();
+                (name, path)
+            }
+        };
+        specs.push((name, path));
+    }
+    if specs.is_empty() {
+        return Err(Error::invalid_argument(
+            "serve needs at least one model: banditpam serve [--stdio | --listen HOST:PORT] NAME=FILE.bpmodel ...",
+        ));
+    }
+    let defaults = AdmissionConfig::default();
+    let admission = AdmissionConfig {
+        max_queue_requests: args
+            .get_parsed("max-queue-requests", defaults.max_queue_requests)?,
+        max_queue_points: args.get_parsed("max-queue-points", defaults.max_queue_points)?,
+        max_batch_points: args.get_parsed("max-batch-points", defaults.max_batch_points)?,
+        retry_after_ms: args.get_parsed("retry-after-ms", defaults.retry_after_ms)?,
+        quarantine_threshold: args
+            .get_parsed("quarantine-threshold", defaults.quarantine_threshold)?,
+    };
+    // Undocumented fault-injection knobs for the smoke harness (see
+    // rust/SERVE.md §faults); inert unless set.
+    let faults = FaultPlan {
+        panic_on_batches: Vec::new(),
+        panic_every: match args.get_parsed("inject-panic-every", 0u64)? {
+            0 => None,
+            n => Some(n),
+        },
+        stall_ms: args.get_parsed("stall-ms", 0u64)?,
+    };
+    let threads: usize = args.get_parsed(
+        "threads",
+        banditpam::experiments::harness::default_threads(),
+    )?;
+    let listen = args.get("listen");
+    if listen.is_some() && args.flag("stdio") {
+        return Err(Error::invalid_argument(
+            "--stdio and --listen are mutually exclusive",
+        ));
+    }
+
+    let registry = Registry::open(&specs)?;
+    install_sighup_handler();
+    let server = Server::new(registry, ServeOptions { threads, admission, faults });
+    if !args.flag("quiet") {
+        let names: Vec<&str> = server.registry().names().collect();
+        eprintln!(
+            "serve: {} model(s) [{}], {threads} predictor thread(s)",
+            names.len(),
+            names.join(", ")
+        );
+    }
+    match listen {
+        Some(addr) => serve_tcp(&server, addr)?,
+        None => server.handle_connection(std::io::stdin(), std::io::stdout()),
+    }
+    server.begin_shutdown();
+    server.join();
+    if !args.flag("quiet") {
+        eprintln!("serve: final stats {}", server.stats.snapshot_json());
+    }
+    Ok(())
+}
+
 fn cmd_experiment(args: &Args) -> Result<()> {
     let id = args
         .positional
         .first()
         .map(String::as_str)
-        .context("usage: banditpam experiment <id|all>")?;
+        .ok_or_else(|| Error::invalid_argument("usage: banditpam experiment <id|all>"))?;
     let scale = match args.get("scale").unwrap_or("quick") {
         "smoke" => Scale::Smoke,
         "quick" => Scale::Quick,
         "paper" => Scale::Paper,
-        other => bail!("bad --scale {other:?}"),
+        other => {
+            return Err(Error::invalid_argument(format!("bad --scale {other:?}")))
+        }
     };
     let seed: u64 = args.get_parsed("seed", 42u64)?;
     let ids: Vec<&str> = if id == "all" {
@@ -334,14 +459,15 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
-    let out = args.get("out").context("--out FILE.csv|FILE.mtx required")?;
+    let out = args
+        .get("out")
+        .ok_or_else(|| Error::invalid_argument("--out FILE.csv|FILE.mtx required"))?;
     let seed: u64 = args.get_parsed("seed", 42u64)?;
     let mut rng = Rng::seed_from(seed);
     let ds = make_dataset(args, &mut rng)?;
     let format = match args.get("format") {
-        Some(s) => {
-            DataFormat::parse(s).with_context(|| format!("bad --format {s:?} (csv|mtx)"))?
-        }
+        Some(s) => DataFormat::parse(s)
+            .ok_or_else(|| Error::invalid_argument(format!("bad --format {s:?} (csv|mtx)")))?,
         None => DataFormat::infer(out),
     };
     match format {
@@ -349,13 +475,20 @@ fn cmd_generate(args: &Args) -> Result<()> {
             loader::save_csv(&ds, &PathBuf::from(out))?;
         }
         DataFormat::Csv => {
-            let dense = ds
-                .to_dense()
-                .with_context(|| format!("CSV output needs vector points ({})", ds.points.kind()))?;
+            let dense = ds.to_dense().ok_or_else(|| {
+                Error::invalid_argument(format!(
+                    "CSV output needs vector points ({})",
+                    ds.points.kind()
+                ))
+            })?;
             loader::save_csv(&dense, &PathBuf::from(out))?;
         }
         DataFormat::Mtx => loader::save_mtx(&ds, &PathBuf::from(out))?,
-        DataFormat::Idx => bail!("generate-data cannot write IDX; use csv or mtx"),
+        DataFormat::Idx => {
+            return Err(Error::invalid_argument(
+                "generate-data cannot write IDX; use csv or mtx",
+            ))
+        }
     }
     println!("wrote {} points to {out} ({format})", ds.len());
     Ok(())
@@ -391,18 +524,31 @@ fn cmd_info() -> Result<()> {
     Ok(())
 }
 
-fn main() -> Result<()> {
-    let args = Args::from_env();
+fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
-        Some("cluster") => cmd_cluster(&args),
-        Some("predict") => cmd_predict(&args),
-        Some("experiment") => cmd_experiment(&args),
-        Some("generate-data") => cmd_generate(&args),
+        Some("cluster") => cmd_cluster(args),
+        Some("predict") => cmd_predict(args),
+        Some("serve") => cmd_serve(args),
+        Some("experiment") => cmd_experiment(args),
+        Some("generate-data") => cmd_generate(args),
         Some("info") => cmd_info(),
         Some("help") | None => {
             print!("{}", help());
             Ok(())
         }
-        Some(other) => bail!("unknown subcommand {other:?}\n{}", help()),
+        Some(other) => Err(Error::invalid_argument(format!(
+            "unknown subcommand {other:?} (run `banditpam help` for usage)"
+        ))),
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = run(&args) {
+        // One line, typed category prefix, no debug formatting; the exit
+        // code distinguishes usage errors (2) from operational ones (1).
+        let line = e.to_string().replace('\n', "; ");
+        eprintln!("error: {line}");
+        std::process::exit(e.exit_code());
     }
 }

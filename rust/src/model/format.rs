@@ -289,6 +289,13 @@ pub(super) fn read(bytes: &[u8]) -> Result<KMedoidsModel> {
         let data = r.vec(count, 4, "dense medoid payload", |b| {
             f32::from_le_bytes(b.try_into().unwrap())
         })?;
+        // A NaN medoid coordinate corrupts every assignment argmin; the
+        // sparse branch gets the same guarantee from `try_from_parts`.
+        if let Some(v) = data.iter().find(|v| !v.is_finite()) {
+            return Err(Error::model(format!(
+                "non-finite value {v} in the dense medoid payload"
+            )));
+        }
         Points::Dense(Matrix::from_vec(data, k, dim))
     } else {
         let nnz = usize::try_from(r.u64("nnz")?)
@@ -353,5 +360,33 @@ mod tests {
             .vec(usize::MAX, 8, "indptr", |b| u64::from_le_bytes(b.try_into().unwrap()))
             .unwrap_err();
         assert!(err.to_string().contains("indptr"), "{err}");
+    }
+
+    /// Both payload branches reject NaN medoid coordinates: the file ends
+    /// with the payload values, so patching the final 4 bytes corrupts
+    /// exactly one stored f32.
+    #[test]
+    fn read_rejects_non_finite_payload_values() {
+        use crate::data::synthetic;
+        use crate::util::rng::Rng;
+        let dense = synthetic::gmm(&mut Rng::seed_from(5), 20, 6, 2, 3.0);
+        let sparse = synthetic::scrna_like(&mut Rng::seed_from(6), 20, 32)
+            .to_sparse()
+            .unwrap();
+        for ds in [dense, sparse] {
+            let model = super::super::Fit::banditpam()
+                .metric(Metric::L1)
+                .seed(3)
+                .k(2)
+                .fit(&ds)
+                .unwrap();
+            let mut bytes = model.to_bytes().unwrap();
+            assert!(read(&bytes).is_ok());
+            let n = bytes.len();
+            bytes[n - 4..].copy_from_slice(&f32::NAN.to_le_bytes());
+            let err = read(&bytes).unwrap_err();
+            assert_eq!(err.kind(), "model", "{}", ds.points.kind());
+            assert!(err.message().contains("non-finite"), "{err}");
+        }
     }
 }

@@ -197,6 +197,22 @@ impl KMedoidsModel {
         }
     }
 
+    /// Like [`KMedoidsModel::predictor`], but computing through an
+    /// existing shared [`ThreadPool`](crate::runtime::pool::ThreadPool)
+    /// instead of spawning one. The serve subsystem holds one warm pool
+    /// for the whole process and builds a short-lived `Predictor` per
+    /// batch; thread count never changes predicted bits, so results are
+    /// identical to [`KMedoidsModel::predict`].
+    pub fn predictor_with_pool(
+        &self,
+        pool: std::sync::Arc<crate::runtime::pool::ThreadPool>,
+    ) -> Predictor<'_> {
+        Predictor {
+            model: self,
+            backend: NativeBackend::new(&self.medoid_points, self.metric).with_pool(pool),
+        }
+    }
+
     /// Assign each query point to its nearest medoid; `out[i]` indexes
     /// [`KMedoidsModel::clustering`]`.medoids`. See
     /// [`KMedoidsModel::predict_with_dists`].

@@ -99,8 +99,10 @@ pub struct NativeBackend<'a> {
     counter: DistanceCounter,
     cache: Option<Arc<DistanceCache>>,
     /// Persistent worker pool for [`DistanceBackend::block`]; `None`
-    /// (single-threaded) until [`NativeBackend::with_threads`] enables it.
-    pool: Option<ThreadPool>,
+    /// (single-threaded) until [`NativeBackend::with_threads`] or
+    /// [`NativeBackend::with_pool`] enables it. `Arc` so a long-lived
+    /// server can share one warm pool across per-request backends.
+    pool: Option<Arc<ThreadPool>>,
     threads: usize,
     /// Minimum block work (scalar ops) before the pool is used.
     pool_min_work: usize,
@@ -163,10 +165,20 @@ impl<'a> NativeBackend<'a> {
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
         self.pool = if self.threads > 1 {
-            Some(ThreadPool::new(self.threads))
+            Some(Arc::new(ThreadPool::new(self.threads)))
         } else {
             None
         };
+        self
+    }
+
+    /// Use an existing shared pool instead of spawning a fresh one. The
+    /// serve layer creates one warm pool at startup and threads it through
+    /// every per-batch backend, so request handling never pays thread
+    /// spawn/teardown.
+    pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> Self {
+        self.threads = pool.threads();
+        self.pool = if self.threads > 1 { Some(pool) } else { None };
         self
     }
 

@@ -22,15 +22,20 @@
 //! to hand it to the persistent workers; this is sound because `run` does
 //! not return until every chunk has finished executing, so the erased
 //! reference never outlives the borrow it came from. Panics inside a
-//! chunk are caught, the task still completes, and `run` re-panics on the
-//! submitting thread.
+//! chunk are caught, the task still completes (the rendezvous never
+//! deadlocks on a poisoned chunk), and `run` re-raises the **original
+//! panic payload** on the submitting thread — so a serving layer that
+//! wraps a kernel call in `catch_unwind` observes the real panic message,
+//! not a generic pool wrapper. When several chunks panic in one task, the
+//! first captured payload wins and the rest are dropped.
 //!
 //! `run` must not be called from inside a running task (the nested call
 //! would wait for the current task to retire while holding one of its
 //! chunks — deadlock). The backend's kernels never re-enter the pool.
 
-use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
@@ -72,8 +77,10 @@ struct Shared {
     work: Condvar,
     /// Submitters wait here for task completion / a free slot.
     done: Condvar,
-    /// Set when any chunk panicked; `run` re-panics after completion.
-    panicked: AtomicBool,
+    /// First panic payload captured from a chunk; `run` re-raises it (via
+    /// `resume_unwind`) after the task completes, preserving the original
+    /// message for `catch_unwind` at higher layers.
+    panic_payload: Mutex<Option<Box<dyn Any + Send>>>,
 }
 
 /// Persistent thread pool executing chunked index-range tasks.
@@ -98,7 +105,7 @@ impl ThreadPool {
             }),
             work: Condvar::new(),
             done: Condvar::new(),
-            panicked: AtomicBool::new(false),
+            panic_payload: Mutex::new(None),
         });
         let handles = (1..threads)
             .map(|i| {
@@ -119,7 +126,8 @@ impl ThreadPool {
 
     /// Execute `f(start, end)` over `0..items` in chunks of `chunk`
     /// items, in parallel across the pool. Blocks until every chunk has
-    /// run; re-panics here if any chunk panicked.
+    /// run; if any chunk panicked, re-raises the first captured payload
+    /// here on the submitting thread (the pool itself survives).
     pub fn run(&self, items: usize, chunk: usize, f: &(dyn Fn(usize, usize) + Sync)) {
         if items == 0 {
             return;
@@ -167,8 +175,8 @@ impl ThreadPool {
             st = self.shared.done.wait(st).unwrap();
         }
         drop(st);
-        if self.shared.panicked.swap(false, Ordering::SeqCst) {
-            panic!("ThreadPool: a parallel block chunk panicked");
+        if let Some(payload) = self.shared.panic_payload.lock().unwrap().take() {
+            resume_unwind(payload);
         }
     }
 }
@@ -203,8 +211,11 @@ fn execute(shared: &Shared, task: &Arc<Task>) {
         // A stale worker whose task already completed gets `start >=
         // items` above and never touches `job`.
         let f = unsafe { &*task.job };
-        if catch_unwind(AssertUnwindSafe(|| f(start, end))).is_err() {
-            shared.panicked.store(true, Ordering::SeqCst);
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(start, end))) {
+            let mut slot = shared.panic_payload.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
         }
         // AcqRel: the final increment must observe (and order after) every
         // other chunk's writes, so the submitter's post-`run` reads of the
@@ -324,6 +335,31 @@ mod tests {
             sum.fetch_add((end - start) as u64, Ordering::Relaxed);
         });
         assert_eq!(sum.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn panic_payload_is_preserved_for_the_caller() {
+        let pool = ThreadPool::new(4);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(100, 10, &|start, _end| {
+                if start == 30 {
+                    panic!("kernel exploded at row {start}");
+                }
+            });
+        }));
+        let payload = result.expect_err("panic must propagate");
+        let msg = payload
+            .downcast_ref::<String>()
+            .map(String::as_str)
+            .or_else(|| payload.downcast_ref::<&str>().copied())
+            .expect("payload should be the original panic message");
+        assert_eq!(msg, "kernel exploded at row 30");
+        // The payload slot must be cleared: the next task succeeds.
+        let sum = AtomicU64::new(0);
+        pool.run(32, 4, &|start, end| {
+            sum.fetch_add((end - start) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 32);
     }
 
     #[test]

@@ -1,0 +1,311 @@
+//! Admission control: a bounded queue that coalesces small concurrent
+//! predict requests into one backend dispatch per model.
+//!
+//! Three jobs:
+//!
+//! * **Backpressure** — [`Batcher::submit`] sheds (returns the request to
+//!   the caller for an `Overloaded` response) once the queue holds
+//!   `max_queue_requests` requests or `max_queue_points` query points.
+//!   Load-shedding at admission keeps the tail latency of accepted
+//!   requests bounded instead of letting the queue grow without limit.
+//! * **Coalescing** — [`Batcher::next_batch`] pops the oldest request and
+//!   greedily merges queued requests for the *same model generation and
+//!   storage/dim* (up to `max_batch_points` points) into one batch, so a
+//!   swarm of small requests costs one `block_vs` dispatch instead of
+//!   many. Row kernels are per-query independent, so a coalesced batch
+//!   is bitwise-identical to serving each request alone.
+//! * **Drain** — after [`Batcher::shutdown`], `next_batch` keeps handing
+//!   out queued work until the queue is empty, then returns `None`;
+//!   nothing accepted is dropped.
+//!
+//! Deadlines ride along: each request carries its admission deadline and
+//! the dispatcher expires it at dispatch time (`DeadlineExceeded`), not
+//! here — a queue scan per tick would be O(n) for no benefit.
+
+use super::protocol::Response;
+use super::registry::ModelSlot;
+use crate::data::Points;
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Admission-control knobs (defaults are sized for the bench workload:
+/// a few thousand points in flight, 50 ms retry hint).
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Shed when the queue already holds this many requests.
+    pub max_queue_requests: usize,
+    /// Shed when the queue already holds this many query points.
+    pub max_queue_points: usize,
+    /// Stop coalescing a batch beyond this many points.
+    pub max_batch_points: usize,
+    /// The retry hint carried by `Overloaded` responses.
+    pub retry_after_ms: u32,
+    /// Consecutive batch panics before a model is quarantined.
+    pub quarantine_threshold: u32,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> AdmissionConfig {
+        AdmissionConfig {
+            max_queue_requests: 1024,
+            max_queue_points: 65536,
+            max_batch_points: 4096,
+            retry_after_ms: 50,
+            quarantine_threshold: 3,
+        }
+    }
+}
+
+/// An admitted predict request waiting for dispatch. Holds a clone of
+/// its connection's reply sender, so the writer thread's channel stays
+/// open until every in-flight request has been answered (the clean-drain
+/// guarantee).
+pub struct PendingRequest {
+    pub id: u64,
+    pub slot: Arc<ModelSlot>,
+    pub queries: Points,
+    /// Absolute expiry; checked at dispatch, `None` = no deadline.
+    pub deadline: Option<Instant>,
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// Outcome of [`Batcher::submit`].
+pub enum Submit {
+    /// Admitted; the dispatcher will answer through `reply`.
+    Queued,
+    /// Shed by backpressure; the request is handed back so the caller
+    /// can answer `Overloaded` itself.
+    Shed(PendingRequest),
+}
+
+struct QueueState {
+    queue: VecDeque<PendingRequest>,
+    /// Total query points across `queue` (the second shed limit).
+    points: usize,
+    shutdown: bool,
+}
+
+/// The bounded admission queue shared by connection readers (producers)
+/// and the dispatcher (single consumer).
+pub struct Batcher {
+    state: Mutex<QueueState>,
+    work: Condvar,
+    max_queue_requests: usize,
+    max_queue_points: usize,
+    max_batch_points: usize,
+}
+
+impl Batcher {
+    pub fn new(cfg: &AdmissionConfig) -> Batcher {
+        Batcher {
+            state: Mutex::new(QueueState {
+                queue: VecDeque::new(),
+                points: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            max_queue_requests: cfg.max_queue_requests.max(1),
+            max_queue_points: cfg.max_queue_points.max(1),
+            max_batch_points: cfg.max_batch_points.max(1),
+        }
+    }
+
+    /// Admit or shed one request. Sheds when either bound is already
+    /// full; an admitted request is only bounded by `max_queue_points`
+    /// in aggregate, so a single oversized request can still enter an
+    /// empty queue rather than being unservable.
+    pub fn submit(&self, req: PendingRequest) -> Submit {
+        let mut st = self.state.lock().unwrap();
+        if st.shutdown {
+            return Submit::Shed(req);
+        }
+        if st.queue.len() >= self.max_queue_requests
+            || (!st.queue.is_empty() && st.points + req.queries.len() > self.max_queue_points)
+        {
+            return Submit::Shed(req);
+        }
+        st.points += req.queries.len();
+        st.queue.push_back(req);
+        drop(st);
+        self.work.notify_one();
+        Submit::Queued
+    }
+
+    /// Block for the next batch: the oldest request plus every queued
+    /// request that can ride along (same model generation via
+    /// `Arc::ptr_eq` on the slot, same storage kind and dimension), up
+    /// to `max_batch_points`. Requests that cannot ride along keep
+    /// their queue order. Returns `None` only after [`Batcher::shutdown`]
+    /// once the queue has fully drained.
+    pub fn next_batch(&self) -> Option<Vec<PendingRequest>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(head) = st.queue.pop_front() {
+                st.points -= head.queries.len();
+                let mut batch = vec![head];
+                let mut batch_points = batch[0].queries.len();
+                let mut i = 0;
+                while i < st.queue.len() {
+                    let cand = &st.queue[i];
+                    let mergeable = Arc::ptr_eq(&cand.slot, &batch[0].slot)
+                        && cand.queries.kind() == batch[0].queries.kind()
+                        && cand.queries.dim() == batch[0].queries.dim()
+                        && batch_points + cand.queries.len() <= self.max_batch_points;
+                    if mergeable {
+                        let req = st.queue.remove(i).unwrap();
+                        st.points -= req.queries.len();
+                        batch_points += req.queries.len();
+                        batch.push(req);
+                    } else {
+                        i += 1;
+                    }
+                }
+                return Some(batch);
+            }
+            if st.shutdown {
+                return None;
+            }
+            st = self.work.wait(st).unwrap();
+        }
+    }
+
+    /// Stop admitting work and wake the dispatcher so it can drain the
+    /// queue and exit.
+    pub fn shutdown(&self) {
+        self.state.lock().unwrap().shutdown = true;
+        self.work.notify_all();
+    }
+
+    /// Queue depth in requests (stats only).
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::registry::Registry;
+    use super::*;
+    use crate::data::synthetic;
+    use crate::model::Fit;
+    use crate::util::matrix::Matrix;
+    use crate::util::rng::Rng;
+    use std::path::PathBuf;
+
+    fn test_slot(tag: &str) -> (Arc<ModelSlot>, PathBuf) {
+        let dir = std::env::temp_dir()
+            .join(format!("bp_batcher_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ds = synthetic::gmm(&mut Rng::seed_from(5), 24, 4, 2, 3.0);
+        let model = Fit::banditpam().k(2).seed(5).fit(&ds).unwrap();
+        let path = dir.join("m.bpmodel");
+        model.save(&path).unwrap();
+        let reg = Registry::open(&[("m".into(), path)]).unwrap();
+        (Arc::clone(reg.get("m").unwrap()), dir)
+    }
+
+    fn dense_req(
+        id: u64,
+        slot: &Arc<ModelSlot>,
+        n: usize,
+        dim: usize,
+        tx: &mpsc::Sender<Response>,
+    ) -> PendingRequest {
+        PendingRequest {
+            id,
+            slot: Arc::clone(slot),
+            queries: Points::Dense(Matrix::zeros(n, dim)),
+            deadline: None,
+            reply: tx.clone(),
+        }
+    }
+
+    #[test]
+    fn coalesces_same_shape_requests_up_to_the_point_cap() {
+        let (slot, dir) = test_slot("coalesce");
+        let cfg = AdmissionConfig { max_batch_points: 5, ..Default::default() };
+        let b = Batcher::new(&cfg);
+        let (tx, _rx) = mpsc::channel();
+        for id in 0..4 {
+            // 2 points each; the cap of 5 fits the head plus one rider.
+            assert!(matches!(b.submit(dense_req(id, &slot, 2, 4, &tx)), Submit::Queued));
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mismatched_dims_do_not_merge_and_keep_their_order() {
+        let (slot, dir) = test_slot("dims");
+        let b = Batcher::new(&AdmissionConfig::default());
+        let (tx, _rx) = mpsc::channel();
+        b.submit(dense_req(1, &slot, 1, 4, &tx));
+        b.submit(dense_req(2, &slot, 1, 7, &tx));
+        b.submit(dense_req(3, &slot, 1, 4, &tx));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sheds_on_request_and_point_bounds() {
+        let (slot, dir) = test_slot("shed");
+        let cfg = AdmissionConfig {
+            max_queue_requests: 2,
+            max_queue_points: 10,
+            ..Default::default()
+        };
+        let b = Batcher::new(&cfg);
+        let (tx, _rx) = mpsc::channel();
+        assert!(matches!(b.submit(dense_req(1, &slot, 1, 4, &tx)), Submit::Queued));
+        assert!(matches!(b.submit(dense_req(2, &slot, 1, 4, &tx)), Submit::Queued));
+        // request bound
+        match b.submit(dense_req(3, &slot, 1, 4, &tx)) {
+            Submit::Shed(req) => assert_eq!(req.id, 3),
+            Submit::Queued => panic!("expected shed"),
+        }
+        b.next_batch().unwrap();
+        // point bound: queue holds 0 points now; admit 8, then 3 more breaks 10
+        assert!(matches!(b.submit(dense_req(4, &slot, 8, 4, &tx)), Submit::Queued));
+        assert!(matches!(b.submit(dense_req(5, &slot, 3, 4, &tx)), Submit::Shed(_)));
+        // but an oversized request enters an *empty* queue
+        b.next_batch().unwrap();
+        assert!(matches!(b.submit(dense_req(6, &slot, 99, 4, &tx)), Submit::Queued));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shutdown_drains_then_yields_none_and_sheds_new_work() {
+        let (slot, dir) = test_slot("drain");
+        let b = Batcher::new(&AdmissionConfig::default());
+        let (tx, _rx) = mpsc::channel();
+        b.submit(dense_req(1, &slot, 1, 4, &tx));
+        b.shutdown();
+        assert!(matches!(b.submit(dense_req(2, &slot, 1, 4, &tx)), Submit::Shed(_)));
+        assert_eq!(b.next_batch().unwrap()[0].id, 1);
+        assert!(b.next_batch().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn next_batch_blocks_until_work_arrives() {
+        let (slot, dir) = test_slot("block");
+        let b = Arc::new(Batcher::new(&AdmissionConfig::default()));
+        let (tx, _rx) = mpsc::channel();
+        let consumer = {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || b.next_batch().map(|batch| batch[0].id))
+        };
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        b.submit(dense_req(77, &slot, 1, 4, &tx));
+        assert_eq!(consumer.join().unwrap(), Some(77));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,269 @@
+//! Deterministic fault injection for the serve subsystem.
+//!
+//! Two halves:
+//!
+//! * **Server-side** — [`FaultPlan`], threaded into the dispatcher:
+//!   forced kernel panics on chosen batch sequence numbers (exercising
+//!   the `catch_unwind` isolation and quarantine paths) and a per-batch
+//!   stall (widening the dispatch window so deadline/hot-swap races
+//!   become testable). The plan is always compiled but inert by default
+//!   (`FaultPlan::default().is_inert()`), so production dispatch pays two
+//!   predictable branches; hidden CLI flags (`--inject-panic-every`,
+//!   `--stall-ms`) arm it for the smoke leg.
+//! * **Client-side** — frame mutilators ([`truncate_frame`],
+//!   [`corrupt_byte`], [`oversize_len`]), a slow-loris [`SlowWriter`]
+//!   that dribbles bytes with a delay, and an in-memory [`pipe`] so
+//!   integration tests and the bench drive a real reader/writer pair
+//!   without sockets.
+//!
+//! Everything here is deterministic: the same plan against the same
+//! request stream produces the same faults, so every failure the harness
+//! finds is replayable.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Server-side fault schedule, keyed by the dispatcher's batch sequence
+/// number (the first batch is seq 1).
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Panic on exactly these batch sequence numbers.
+    pub panic_on_batches: Vec<u64>,
+    /// Panic on every N-th batch (`Some(3)` = seq 3, 6, 9, ...).
+    pub panic_every: Option<u64>,
+    /// Sleep this long inside every dispatch, before deadlines are
+    /// checked — widens the window in which deadlines expire and
+    /// reloads land mid-batch.
+    pub stall_ms: u64,
+}
+
+impl FaultPlan {
+    /// True when the plan injects nothing (the production configuration).
+    pub fn is_inert(&self) -> bool {
+        self.panic_on_batches.is_empty() && self.panic_every.is_none() && self.stall_ms == 0
+    }
+
+    /// Should batch `seq` be killed with a forced panic?
+    pub fn should_panic(&self, seq: u64) -> bool {
+        if self.panic_on_batches.contains(&seq) {
+            return true;
+        }
+        match self.panic_every {
+            Some(n) if n > 0 => seq % n == 0,
+            _ => false,
+        }
+    }
+
+    /// The dispatch stall, if any.
+    pub fn stall(&self) -> Option<Duration> {
+        (self.stall_ms > 0).then(|| Duration::from_millis(self.stall_ms))
+    }
+}
+
+/// Keep only the first `keep` bytes of a frame (truncation mid-header or
+/// mid-body, depending on `keep`).
+pub fn truncate_frame(frame: &[u8], keep: usize) -> Vec<u8> {
+    frame[..keep.min(frame.len())].to_vec()
+}
+
+/// Flip every bit of the byte at `at`.
+pub fn corrupt_byte(frame: &[u8], at: usize) -> Vec<u8> {
+    let mut out = frame.to_vec();
+    if let Some(b) = out.get_mut(at) {
+        *b ^= 0xFF;
+    }
+    out
+}
+
+/// Rewrite the header length field to a lying huge value, keeping the
+/// original body — the parser must reject on the length alone, before
+/// allocating.
+pub fn oversize_len(frame: &[u8]) -> Vec<u8> {
+    let mut out = frame.to_vec();
+    if out.len() >= 8 {
+        out[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+    }
+    out
+}
+
+/// Slow-loris writer: forwards at most `chunk` bytes per `write`, with a
+/// `delay` sleep before each one. Wrapping a client's stream in this
+/// verifies the reader survives arbitrarily fragmented frames.
+pub struct SlowWriter<W: Write> {
+    pub inner: W,
+    pub chunk: usize,
+    pub delay: Duration,
+}
+
+impl<W: Write> Write for SlowWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        std::thread::sleep(self.delay);
+        let n = buf.len().min(self.chunk.max(1));
+        self.inner.write(&buf[..n])
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+struct PipeState {
+    buf: VecDeque<u8>,
+    writers: usize,
+}
+
+struct PipeShared {
+    state: Mutex<PipeState>,
+    readable: Condvar,
+}
+
+/// Write half of an in-memory pipe. Cloning adds a writer; the reader
+/// sees EOF only after every clone is dropped.
+pub struct PipeWriter {
+    shared: Arc<PipeShared>,
+}
+
+/// Read half of an in-memory pipe. Blocks until bytes arrive or all
+/// writers hang up (then returns `Ok(0)` — EOF).
+pub struct PipeReader {
+    shared: Arc<PipeShared>,
+}
+
+/// An in-memory byte pipe with blocking reads and EOF-on-hangup — the
+/// stand-in for a socket in the integration tests and the bench.
+pub fn pipe() -> (PipeWriter, PipeReader) {
+    let shared = Arc::new(PipeShared {
+        state: Mutex::new(PipeState { buf: VecDeque::new(), writers: 1 }),
+        readable: Condvar::new(),
+    });
+    (PipeWriter { shared: Arc::clone(&shared) }, PipeReader { shared })
+}
+
+impl Clone for PipeWriter {
+    fn clone(&self) -> PipeWriter {
+        self.shared.state.lock().unwrap().writers += 1;
+        PipeWriter { shared: Arc::clone(&self.shared) }
+    }
+}
+
+impl Drop for PipeWriter {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.writers -= 1;
+        if st.writers == 0 {
+            drop(st);
+            self.shared.readable.notify_all();
+        }
+    }
+}
+
+impl Write for PipeWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let mut st = self.shared.state.lock().unwrap();
+        st.buf.extend(buf.iter().copied());
+        drop(st);
+        self.shared.readable.notify_all();
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+impl Read for PipeReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if !st.buf.is_empty() {
+                let n = buf.len().min(st.buf.len());
+                for slot in buf.iter_mut().take(n) {
+                    *slot = st.buf.pop_front().unwrap();
+                }
+                return Ok(n);
+            }
+            if st.writers == 0 {
+                return Ok(0);
+            }
+            st = self.shared.readable.wait(st).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_inert() {
+        let plan = FaultPlan::default();
+        assert!(plan.is_inert());
+        assert!(!plan.should_panic(1));
+        assert!(plan.stall().is_none());
+    }
+
+    #[test]
+    fn panic_schedule_is_deterministic() {
+        let plan = FaultPlan {
+            panic_on_batches: vec![2, 5],
+            panic_every: Some(4),
+            stall_ms: 0,
+        };
+        let fired: Vec<u64> = (1..=10).filter(|&s| plan.should_panic(s)).collect();
+        assert_eq!(fired, vec![2, 4, 5, 8]);
+    }
+
+    #[test]
+    fn frame_mutilators_shape_bytes_as_documented() {
+        let frame: Vec<u8> = (0..16).collect();
+        assert_eq!(truncate_frame(&frame, 3), vec![0, 1, 2]);
+        assert_eq!(truncate_frame(&frame, 99).len(), 16);
+        let c = corrupt_byte(&frame, 2);
+        assert_eq!(c[2], 2 ^ 0xFF);
+        assert_eq!(c[3], 3);
+        let o = oversize_len(&frame);
+        assert_eq!(&o[4..8], &u32::MAX.to_le_bytes());
+        assert_eq!(&o[8..], &frame[8..]);
+    }
+
+    #[test]
+    fn pipe_blocks_then_delivers_and_eofs_on_hangup() {
+        let (mut w, mut r) = pipe();
+        let reader = std::thread::spawn(move || {
+            let mut all = Vec::new();
+            r.read_to_end(&mut all).unwrap();
+            all
+        });
+        w.write_all(b"hello ").unwrap();
+        let w2 = w.clone();
+        drop(w);
+        // second writer keeps the pipe open
+        {
+            let mut w2 = w2;
+            w2.write_all(b"world").unwrap();
+        }
+        assert_eq!(reader.join().unwrap(), b"hello world");
+    }
+
+    #[test]
+    fn slow_writer_fragments_but_delivers_everything() {
+        let (w, mut r) = pipe();
+        let mut slow = SlowWriter { inner: w, chunk: 3, delay: Duration::from_millis(1) };
+        let payload: Vec<u8> = (0..32).collect();
+        let writer = std::thread::spawn(move || {
+            slow.write_all(&payload).unwrap();
+        });
+        let mut got = Vec::new();
+        r.read_to_end(&mut got).unwrap();
+        writer.join().unwrap();
+        assert_eq!(got, (0..32).collect::<Vec<u8>>());
+    }
+}

@@ -1,0 +1,37 @@
+//! Long-lived prediction serving: load fitted `.bpmodel` files once and
+//! answer assignment batches over a hardened binary protocol, on
+//! stdin/stdout or a TCP socket (the `serve` subcommand).
+//!
+//! The subsystem is built for hostile clients and flaky models:
+//!
+//! * [`protocol`] — the length-prefixed wire format and its
+//!   never-panics parser (every length checked before allocation).
+//! * [`registry`] — named models with atomic hot swap (SIGHUP or a
+//!   reload frame) and failure quarantine.
+//! * [`batcher`] — bounded admission queue that coalesces small
+//!   concurrent requests into one backend dispatch per model, sheds
+//!   load with `Overloaded` + retry-after, and drains cleanly on
+//!   shutdown.
+//! * [`server`] — the connection/dispatcher machinery: per-request
+//!   deadlines, `catch_unwind` panic isolation, warm predictor pool.
+//! * [`faults`] — the deterministic fault-injection harness (forced
+//!   panics, stalls, frame mutilators, slow-loris writer, in-memory
+//!   pipe) behind the integration tests and `benches/serve.rs`.
+//!
+//! Wire-format and semantics reference: `rust/SERVE.md`.
+//!
+//! The serving contract: a healthy request's assignments are
+//! bitwise-identical to a single-shot [`crate::model::KMedoidsModel::predict`]
+//! against the same model generation, no matter how requests are
+//! coalesced, how many threads the pool runs, or what faults hit the
+//! neighboring traffic.
+
+pub mod batcher;
+pub mod faults;
+pub mod protocol;
+pub mod registry;
+pub mod server;
+
+pub use batcher::AdmissionConfig;
+pub use registry::Registry;
+pub use server::{install_sighup_handler, serve_tcp, ServeOptions, ServeStats, Server};

@@ -1,0 +1,850 @@
+//! The length-prefixed binary wire protocol of the `serve` subcommand.
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//! magic    2  b"BQ"
+//! version  1  u8 = 1
+//! kind     1  u8 (request/response tag, see below)
+//! length   4  u32 body length (<= MAX_FRAME_BODY)
+//! body     length bytes
+//! ```
+//!
+//! Every body begins with a `u64` request id chosen by the client; the
+//! response echoes it, so clients may pipeline requests freely.
+//!
+//! Request kinds: 1 predict, 2 ping, 3 stats, 4 reload, 5 shutdown,
+//! 6 list-models. Response kinds: 0x81 assignments, 0x82 error, 0x83 pong,
+//! 0x84 stats, 0x85 reload-ack, 0x86 shutdown-ack, 0x87 model-list. The
+//! full byte-level spec (with the body grammars) lives in `rust/SERVE.md`,
+//! and the golden fixtures under `tests/fixtures/serve/` pin it.
+//!
+//! # Hostile input
+//!
+//! The parser follows the model-reader discipline (`model/format.rs`):
+//! every length is checked against the bytes actually present **before**
+//! any allocation, every reject is a clean error (never a panic), and
+//! trailing bytes after a body grammar are rejected. Two error tiers:
+//!
+//! * **Connection-fatal** ([`read_frame`] `Err`): bad magic/version, a
+//!   body length beyond [`MAX_FRAME_BODY`], or EOF mid-frame. Once framing
+//!   is lost, resynchronization is impossible — the server sends a
+//!   best-effort error (id 0) and closes.
+//! * **Recoverable** ([`parse_request`] `Err`): the frame was well-framed
+//!   but its body violates the grammar. The failure carries whatever id
+//!   was readable so the error response can echo it; the connection
+//!   continues.
+
+use crate::data::sparse::CsrMatrix;
+use crate::data::Points;
+use crate::util::matrix::Matrix;
+use std::fmt;
+use std::io::{Read, Write};
+
+/// Frame magic: "BQ" (banditpam query).
+pub const MAGIC: [u8; 2] = *b"BQ";
+/// Protocol version.
+pub const VERSION: u8 = 1;
+/// Hard cap on a frame body; a lying length field beyond this is
+/// connection-fatal before any allocation happens.
+pub const MAX_FRAME_BODY: usize = 64 << 20;
+/// Cap on a model-name field.
+pub const MAX_NAME: usize = 256;
+/// Cap on an error-message field (longer messages are truncated on encode).
+pub const MAX_ERROR_MSG: usize = 1024;
+
+/// Request frame kinds (the `kind` header byte).
+pub mod req {
+    pub const PREDICT: u8 = 1;
+    pub const PING: u8 = 2;
+    pub const STATS: u8 = 3;
+    pub const RELOAD: u8 = 4;
+    pub const SHUTDOWN: u8 = 5;
+    pub const LIST_MODELS: u8 = 6;
+}
+
+/// Response frame kinds (the `kind` header byte; high bit set).
+pub mod resp {
+    pub const ASSIGNMENTS: u8 = 0x81;
+    pub const ERROR: u8 = 0x82;
+    pub const PONG: u8 = 0x83;
+    pub const STATS: u8 = 0x84;
+    pub const RELOAD_ACK: u8 = 0x85;
+    pub const SHUTDOWN_ACK: u8 = 0x86;
+    pub const MODEL_LIST: u8 = 0x87;
+}
+
+/// A parsed request frame.
+#[derive(Debug, Clone)]
+pub enum Request {
+    Predict(PredictRequest),
+    Ping { id: u64 },
+    Stats { id: u64 },
+    /// Reload the named model from disk (empty name = every model).
+    Reload { id: u64, name: String },
+    Shutdown { id: u64 },
+    ListModels { id: u64 },
+}
+
+impl Request {
+    /// The client-chosen request id.
+    pub fn id(&self) -> u64 {
+        match self {
+            Request::Predict(p) => p.id,
+            Request::Ping { id }
+            | Request::Stats { id }
+            | Request::Reload { id, .. }
+            | Request::Shutdown { id }
+            | Request::ListModels { id } => *id,
+        }
+    }
+}
+
+/// A predict request: assign `queries` against the named model.
+#[derive(Debug, Clone)]
+pub struct PredictRequest {
+    pub id: u64,
+    /// Registry name of the target model.
+    pub model: String,
+    /// Per-request deadline in milliseconds from admission (0 = none).
+    pub deadline_ms: u32,
+    /// The query points (dense or CSR; finite values only).
+    pub queries: Points,
+}
+
+/// Typed error codes carried by error response frames.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Malformed body, storage/dimension mismatch, unknown frame kind.
+    BadRequest = 1,
+    /// The named model is not in the registry.
+    UnknownModel = 2,
+    /// The request's deadline expired before its batch was dispatched.
+    DeadlineExceeded = 3,
+    /// The admission queue is full; retry after `retry_after_ms`.
+    Overloaded = 4,
+    /// The batch panicked or an internal subsystem failed.
+    Internal = 5,
+    /// The model is quarantined after repeated failures; reload to clear.
+    Quarantined = 6,
+    /// The server is draining; no new predict work is admitted.
+    ShuttingDown = 7,
+}
+
+impl ErrorCode {
+    fn from_u8(v: u8) -> Option<ErrorCode> {
+        Some(match v {
+            1 => ErrorCode::BadRequest,
+            2 => ErrorCode::UnknownModel,
+            3 => ErrorCode::DeadlineExceeded,
+            4 => ErrorCode::Overloaded,
+            5 => ErrorCode::Internal,
+            6 => ErrorCode::Quarantined,
+            7 => ErrorCode::ShuttingDown,
+            _ => return None,
+        })
+    }
+}
+
+/// A response frame.
+#[derive(Debug, Clone)]
+pub enum Response {
+    /// Per-query nearest-medoid assignments and distances, request order.
+    Assignments { id: u64, assign: Vec<u32>, dists: Vec<f64> },
+    /// Typed failure; `retry_after_ms` is nonzero only for `Overloaded`.
+    Error { id: u64, code: ErrorCode, retry_after_ms: u32, message: String },
+    Pong { id: u64 },
+    /// JSON snapshot of the server counters.
+    Stats { id: u64, text: String },
+    /// Human-readable reload report.
+    ReloadAck { id: u64, text: String },
+    ShutdownAck { id: u64 },
+    /// Newline-separated `name kind k dim version` lines.
+    ModelList { id: u64, text: String },
+}
+
+impl Response {
+    /// The echoed request id.
+    pub fn id(&self) -> u64 {
+        match self {
+            Response::Assignments { id, .. }
+            | Response::Error { id, .. }
+            | Response::Pong { id }
+            | Response::Stats { id, .. }
+            | Response::ReloadAck { id, .. }
+            | Response::ShutdownAck { id }
+            | Response::ModelList { id, .. } => *id,
+        }
+    }
+}
+
+/// Connection-fatal framing error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FrameError(pub String);
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Recoverable body-grammar failure: the connection survives, and the
+/// error response echoes `id` (0 when the body was too short to carry
+/// one).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseFailure {
+    pub id: u64,
+    pub message: String,
+}
+
+impl fmt::Display for ParseFailure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.message)
+    }
+}
+
+impl std::error::Error for ParseFailure {}
+
+/// Bounds-checked little-endian body cursor (the model-reader pattern):
+/// each read names its field, and lengths are verified against the bytes
+/// present before anything is allocated.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    /// Request id once parsed, echoed in failures.
+    id: u64,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Cur<'a> {
+        Cur { buf, pos: 0, id: 0 }
+    }
+
+    fn fail(&self, msg: impl fmt::Display) -> ParseFailure {
+        ParseFailure { id: self.id, message: msg.to_string() }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], ParseFailure> {
+        if self.remaining() < n {
+            return Err(self.fail(format!(
+                "truncated body: need {n} bytes for {what}, {} left",
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, ParseFailure> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16, ParseFailure> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, ParseFailure> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, ParseFailure> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    /// The leading request id every body starts with.
+    fn id_field(&mut self) -> Result<u64, ParseFailure> {
+        let id = self.u64("request id")?;
+        self.id = id;
+        Ok(id)
+    }
+
+    /// `count` fixed-size scalars, length-checked before allocating.
+    fn vec<T>(
+        &mut self,
+        count: usize,
+        size: usize,
+        what: &str,
+        decode: impl Fn(&[u8]) -> T,
+    ) -> Result<Vec<T>, ParseFailure> {
+        let bytes = count
+            .checked_mul(size)
+            .ok_or_else(|| self.fail(format!("{what} count {count} overflows")))?;
+        let raw = self.take(bytes, what)?;
+        Ok(raw.chunks_exact(size).map(decode).collect())
+    }
+
+    /// Length-prefixed (u16) UTF-8 string, capped at `max`.
+    fn short_string(&mut self, what: &str, max: usize) -> Result<String, ParseFailure> {
+        let len = self.u16(what)? as usize;
+        if len > max {
+            return Err(self.fail(format!("{what} length {len} exceeds the cap {max}")));
+        }
+        let raw = self.take(len, what)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| self.fail(format!("{what} is not valid UTF-8")))
+    }
+
+    /// Length-prefixed (u32) UTF-8 text (response bodies).
+    fn text(&mut self, what: &str) -> Result<String, ParseFailure> {
+        let len = self.u32(what)? as usize;
+        let raw = self.take(len, what)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| self.fail(format!("{what} is not valid UTF-8")))
+    }
+
+    fn finish(&self) -> Result<(), ParseFailure> {
+        if self.remaining() != 0 {
+            return Err(self.fail(format!(
+                "{} trailing bytes after the body grammar",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Read one frame header + body. `Ok(None)` on clean EOF at a frame
+/// boundary; `Err` on anything that loses framing (bad magic/version,
+/// oversized or truncated frame).
+pub fn read_frame(r: &mut impl Read) -> Result<Option<(u8, Vec<u8>)>, FrameError> {
+    let mut header = [0u8; 8];
+    let mut got = 0;
+    while got < header.len() {
+        match r.read(&mut header[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(FrameError(format!(
+                    "EOF inside a frame header ({got} of 8 bytes)"
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError(format!("reading frame header: {e}"))),
+        }
+    }
+    if header[0..2] != MAGIC {
+        return Err(FrameError(format!(
+            "bad frame magic {:02x}{:02x} (expected \"BQ\")",
+            header[0], header[1]
+        )));
+    }
+    if header[2] != VERSION {
+        return Err(FrameError(format!(
+            "unsupported protocol version {} (expected {VERSION})",
+            header[2]
+        )));
+    }
+    let kind = header[3];
+    let len = u32::from_le_bytes(header[4..8].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_BODY {
+        return Err(FrameError(format!(
+            "frame body length {len} exceeds the cap {MAX_FRAME_BODY}"
+        )));
+    }
+    let mut body = vec![0u8; len];
+    let mut got = 0;
+    while got < len {
+        match r.read(&mut body[got..]) {
+            Ok(0) => {
+                return Err(FrameError(format!(
+                    "EOF inside a frame body ({got} of {len} bytes)"
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError(format!("reading frame body: {e}"))),
+        }
+    }
+    Ok(Some((kind, body)))
+}
+
+/// Write one frame (header + body).
+pub fn write_frame(w: &mut impl Write, kind: u8, body: &[u8]) -> std::io::Result<()> {
+    debug_assert!(body.len() <= MAX_FRAME_BODY);
+    let mut header = [0u8; 8];
+    header[0..2].copy_from_slice(&MAGIC);
+    header[2] = VERSION;
+    header[3] = kind;
+    header[4..8].copy_from_slice(&(body.len() as u32).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(body)
+}
+
+/// Parse a request body for a frame `kind` read by [`read_frame`].
+pub fn parse_request(kind: u8, body: &[u8]) -> Result<Request, ParseFailure> {
+    let mut c = Cur::new(body);
+    let id = c.id_field()?;
+    let req = match kind {
+        req::PREDICT => Request::Predict(parse_predict_body(&mut c, id)?),
+        req::PING => Request::Ping { id },
+        req::STATS => Request::Stats { id },
+        req::RELOAD => {
+            let name = c.short_string("model name", MAX_NAME)?;
+            Request::Reload { id, name }
+        }
+        req::SHUTDOWN => Request::Shutdown { id },
+        req::LIST_MODELS => Request::ListModels { id },
+        other => return Err(c.fail(format!("unknown request kind {other:#04x}"))),
+    };
+    c.finish()?;
+    Ok(req)
+}
+
+fn parse_predict_body(c: &mut Cur<'_>, id: u64) -> Result<PredictRequest, ParseFailure> {
+    let model = c.short_string("model name", MAX_NAME)?;
+    if model.is_empty() {
+        return Err(c.fail("model name must be nonempty"));
+    }
+    let deadline_ms = c.u32("deadline_ms")?;
+    let storage = c.u8("storage tag")?;
+    let n = c.u32("query count")? as usize;
+    let dim = c.u32("query dim")? as usize;
+    let queries = match storage {
+        0 => {
+            let count = n
+                .checked_mul(dim)
+                .ok_or_else(|| c.fail("n * dim overflows"))?;
+            let values = c.vec(count, 4, "dense query payload", |b| {
+                f32::from_le_bytes(b.try_into().unwrap())
+            })?;
+            if let Some(v) = values.iter().find(|v| !v.is_finite()) {
+                return Err(c.fail(format!("non-finite query value {v}")));
+            }
+            Points::Dense(Matrix::from_vec(values, n, dim))
+        }
+        1 => {
+            let nnz = usize::try_from(c.u64("nnz")?)
+                .map_err(|_| c.fail("nnz exceeds the address space"))?;
+            let indptr_raw = c.vec(
+                n.checked_add(1).ok_or_else(|| c.fail("n overflows"))?,
+                8,
+                "indptr",
+                |b| u64::from_le_bytes(b.try_into().unwrap()),
+            )?;
+            let mut indptr = Vec::with_capacity(indptr_raw.len());
+            for p in indptr_raw {
+                indptr.push(
+                    usize::try_from(p).map_err(|_| c.fail("indptr entry overflows"))?,
+                );
+            }
+            let indices = c.vec(nnz, 4, "column indices", |b| {
+                u32::from_le_bytes(b.try_into().unwrap())
+            })?;
+            let values = c.vec(nnz, 4, "values", |b| {
+                f32::from_le_bytes(b.try_into().unwrap())
+            })?;
+            // `try_from_parts` enforces every CSR invariant, including
+            // finite nonzero values.
+            let csr = CsrMatrix::try_from_parts(n, dim, indptr, indices, values)
+                .map_err(|e| c.fail(format!("corrupt CSR query payload: {e}")))?;
+            Points::Sparse(csr)
+        }
+        other => return Err(c.fail(format!("unknown storage tag {other}"))),
+    };
+    Ok(PredictRequest { id, model, deadline_ms, queries })
+}
+
+/// Encode a request as a complete frame (header + body). The inverse of
+/// [`read_frame`] + [`parse_request`]; the golden fixtures pin both
+/// directions byte-exactly.
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut body = Vec::new();
+    body.extend_from_slice(&req.id().to_le_bytes());
+    let kind = match req {
+        Request::Predict(p) => {
+            debug_assert!(p.model.len() <= MAX_NAME);
+            body.extend_from_slice(&(p.model.len() as u16).to_le_bytes());
+            body.extend_from_slice(p.model.as_bytes());
+            body.extend_from_slice(&p.deadline_ms.to_le_bytes());
+            match &p.queries {
+                Points::Dense(m) => {
+                    body.push(0);
+                    body.extend_from_slice(&(m.rows() as u32).to_le_bytes());
+                    body.extend_from_slice(&(m.cols() as u32).to_le_bytes());
+                    for &v in m.as_slice() {
+                        body.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                Points::Sparse(m) => {
+                    body.push(1);
+                    body.extend_from_slice(&(m.rows() as u32).to_le_bytes());
+                    body.extend_from_slice(&(m.cols() as u32).to_le_bytes());
+                    let (indptr, indices, values) = m.parts();
+                    body.extend_from_slice(&(indices.len() as u64).to_le_bytes());
+                    for &p in indptr {
+                        body.extend_from_slice(&(p as u64).to_le_bytes());
+                    }
+                    for &j in indices {
+                        body.extend_from_slice(&j.to_le_bytes());
+                    }
+                    for &v in values {
+                        body.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                Points::Trees(_) => {
+                    unreachable!("tree queries have no wire form")
+                }
+            }
+            req::PREDICT
+        }
+        Request::Ping { .. } => req::PING,
+        Request::Stats { .. } => req::STATS,
+        Request::Reload { name, .. } => {
+            debug_assert!(name.len() <= MAX_NAME);
+            body.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            body.extend_from_slice(name.as_bytes());
+            req::RELOAD
+        }
+        Request::Shutdown { .. } => req::SHUTDOWN,
+        Request::ListModels { .. } => req::LIST_MODELS,
+    };
+    frame(kind, body)
+}
+
+/// Encode a response as a complete frame (header + body).
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let mut body = Vec::new();
+    body.extend_from_slice(&resp.id().to_le_bytes());
+    let kind = match resp {
+        Response::Assignments { assign, dists, .. } => {
+            debug_assert_eq!(assign.len(), dists.len());
+            body.extend_from_slice(&(assign.len() as u32).to_le_bytes());
+            for &a in assign {
+                body.extend_from_slice(&a.to_le_bytes());
+            }
+            for &d in dists {
+                body.extend_from_slice(&d.to_le_bytes());
+            }
+            resp::ASSIGNMENTS
+        }
+        Response::Error { code, retry_after_ms, message, .. } => {
+            body.push(*code as u8);
+            body.extend_from_slice(&retry_after_ms.to_le_bytes());
+            let msg: String = message.chars().take(MAX_ERROR_MSG).collect();
+            body.extend_from_slice(&(msg.len() as u16).to_le_bytes());
+            body.extend_from_slice(msg.as_bytes());
+            resp::ERROR
+        }
+        Response::Pong { .. } => resp::PONG,
+        Response::Stats { text, .. } => {
+            push_text(&mut body, text);
+            resp::STATS
+        }
+        Response::ReloadAck { text, .. } => {
+            push_text(&mut body, text);
+            resp::RELOAD_ACK
+        }
+        Response::ShutdownAck { .. } => resp::SHUTDOWN_ACK,
+        Response::ModelList { text, .. } => {
+            push_text(&mut body, text);
+            resp::MODEL_LIST
+        }
+    };
+    frame(kind, body)
+}
+
+fn push_text(body: &mut Vec<u8>, text: &str) {
+    body.extend_from_slice(&(text.len() as u32).to_le_bytes());
+    body.extend_from_slice(text.as_bytes());
+}
+
+fn frame(kind: u8, body: Vec<u8>) -> Vec<u8> {
+    assert!(body.len() <= MAX_FRAME_BODY, "frame body exceeds the cap");
+    let mut out = Vec::with_capacity(8 + body.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(kind);
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Parse a response body (the client side of the protocol; the bench load
+/// generator and the fault-injection tests decode through this). Same
+/// hardening discipline as [`parse_request`].
+pub fn parse_response(kind: u8, body: &[u8]) -> Result<Response, ParseFailure> {
+    let mut c = Cur::new(body);
+    let id = c.id_field()?;
+    let resp = match kind {
+        resp::ASSIGNMENTS => {
+            let n = c.u32("assignment count")? as usize;
+            let assign = c.vec(n, 4, "assignments", |b| {
+                u32::from_le_bytes(b.try_into().unwrap())
+            })?;
+            let dists =
+                c.vec(n, 8, "distances", |b| f64::from_le_bytes(b.try_into().unwrap()))?;
+            Response::Assignments { id, assign, dists }
+        }
+        resp::ERROR => {
+            let code = ErrorCode::from_u8(c.u8("error code")?)
+                .ok_or_else(|| c.fail("unknown error code"))?;
+            let retry_after_ms = c.u32("retry_after_ms")?;
+            let message = c.short_string("error message", MAX_ERROR_MSG * 4)?;
+            Response::Error { id, code, retry_after_ms, message }
+        }
+        resp::PONG => Response::Pong { id },
+        resp::STATS => Response::Stats { id, text: c.text("stats text")? },
+        resp::RELOAD_ACK => Response::ReloadAck { id, text: c.text("reload report")? },
+        resp::SHUTDOWN_ACK => Response::ShutdownAck { id },
+        resp::MODEL_LIST => Response::ModelList { id, text: c.text("model list")? },
+        other => return Err(c.fail(format!("unknown response kind {other:#04x}"))),
+    };
+    c.finish()?;
+    Ok(resp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_request(req: &Request) -> Request {
+        let frame = encode_request(req);
+        let mut r = &frame[..];
+        let (kind, body) = read_frame(&mut r).unwrap().unwrap();
+        assert!(read_frame(&mut r).unwrap().is_none(), "single frame");
+        parse_request(kind, &body).unwrap()
+    }
+
+    fn roundtrip_response(resp: &Response) -> Response {
+        let frame = encode_response(resp);
+        let mut r = &frame[..];
+        let (kind, body) = read_frame(&mut r).unwrap().unwrap();
+        parse_response(kind, &body).unwrap()
+    }
+
+    #[test]
+    fn control_requests_roundtrip() {
+        for req in [
+            Request::Ping { id: 1 },
+            Request::Stats { id: 2 },
+            Request::Reload { id: 3, name: "gmm".into() },
+            Request::Reload { id: 4, name: String::new() },
+            Request::Shutdown { id: 5 },
+            Request::ListModels { id: 6 },
+        ] {
+            let back = roundtrip_request(&req);
+            assert_eq!(back.id(), req.id());
+            assert_eq!(
+                std::mem::discriminant(&back),
+                std::mem::discriminant(&req)
+            );
+            if let (Request::Reload { name: a, .. }, Request::Reload { name: b, .. }) =
+                (&req, &back)
+            {
+                assert_eq!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_predict_roundtrips() {
+        let req = Request::Predict(PredictRequest {
+            id: 7,
+            model: "gmm".into(),
+            deadline_ms: 250,
+            queries: Points::Dense(Matrix::from_vec(
+                vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+                2,
+                3,
+            )),
+        });
+        let Request::Predict(back) = roundtrip_request(&req) else { unreachable!() };
+        assert_eq!(back.id, 7);
+        assert_eq!(back.model, "gmm");
+        assert_eq!(back.deadline_ms, 250);
+        let Points::Dense(m) = &back.queries else { unreachable!() };
+        assert_eq!(m.as_slice(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn sparse_predict_roundtrips() {
+        let csr = CsrMatrix::try_from_parts(
+            2,
+            4,
+            vec![0, 2, 3],
+            vec![0, 3, 1],
+            vec![1.5, -2.0, 0.25],
+        )
+        .unwrap();
+        let req = Request::Predict(PredictRequest {
+            id: 42,
+            model: "cells".into(),
+            deadline_ms: 0,
+            queries: Points::Sparse(csr.clone()),
+        });
+        let Request::Predict(back) = roundtrip_request(&req) else { unreachable!() };
+        let Points::Sparse(m) = &back.queries else { unreachable!() };
+        assert_eq!(m, &csr);
+    }
+
+    #[test]
+    fn empty_dense_predict_roundtrips() {
+        let req = Request::Predict(PredictRequest {
+            id: 9,
+            model: "gmm".into(),
+            deadline_ms: 0,
+            queries: Points::Dense(Matrix::zeros(0, 5)),
+        });
+        let Request::Predict(back) = roundtrip_request(&req) else { unreachable!() };
+        assert_eq!(back.queries.len(), 0);
+        assert_eq!(back.queries.dim(), Some(5));
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        let cases = [
+            Response::Assignments { id: 1, assign: vec![0, 2, 1], dists: vec![0.5, 1.25, 0.0] },
+            Response::Error {
+                id: 2,
+                code: ErrorCode::Overloaded,
+                retry_after_ms: 50,
+                message: "queue full".into(),
+            },
+            Response::Pong { id: 3 },
+            Response::Stats { id: 4, text: "{\"admitted\":0}".into() },
+            Response::ReloadAck { id: 5, text: "gmm: v2".into() },
+            Response::ShutdownAck { id: 6 },
+            Response::ModelList { id: 7, text: "gmm dense k=3 dim=8 v1".into() },
+        ];
+        for resp in cases {
+            let back = roundtrip_response(&resp);
+            assert_eq!(back.id(), resp.id());
+            match (&resp, &back) {
+                (
+                    Response::Assignments { assign: a1, dists: d1, .. },
+                    Response::Assignments { assign: a2, dists: d2, .. },
+                ) => {
+                    assert_eq!(a1, a2);
+                    let b1: Vec<u64> = d1.iter().map(|d| d.to_bits()).collect();
+                    let b2: Vec<u64> = d2.iter().map(|d| d.to_bits()).collect();
+                    assert_eq!(b1, b2);
+                }
+                (
+                    Response::Error { code: c1, retry_after_ms: r1, message: m1, .. },
+                    Response::Error { code: c2, retry_after_ms: r2, message: m2, .. },
+                ) => {
+                    assert_eq!(c1, c2);
+                    assert_eq!(r1, r2);
+                    assert_eq!(m1, m2);
+                }
+                (Response::Stats { text: t1, .. }, Response::Stats { text: t2, .. })
+                | (
+                    Response::ReloadAck { text: t1, .. },
+                    Response::ReloadAck { text: t2, .. },
+                )
+                | (
+                    Response::ModelList { text: t1, .. },
+                    Response::ModelList { text: t2, .. },
+                ) => assert_eq!(t1, t2),
+                (Response::Pong { .. }, Response::Pong { .. })
+                | (Response::ShutdownAck { .. }, Response::ShutdownAck { .. }) => {}
+                _ => panic!("variant changed in roundtrip"),
+            }
+        }
+    }
+
+    #[test]
+    fn clean_eof_at_boundary_is_none() {
+        let mut r: &[u8] = &[];
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn framing_violations_are_fatal_errors() {
+        // bad magic
+        let mut r: &[u8] = &[b'X', b'Q', 1, 2, 0, 0, 0, 0];
+        assert!(read_frame(&mut r).unwrap_err().0.contains("magic"));
+        // bad version
+        let mut r: &[u8] = &[b'B', b'Q', 9, 2, 0, 0, 0, 0];
+        assert!(read_frame(&mut r).unwrap_err().0.contains("version"));
+        // oversized length, rejected before allocation
+        let mut hdr = vec![b'B', b'Q', 1, 2];
+        hdr.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let mut r: &[u8] = &hdr;
+        assert!(read_frame(&mut r).unwrap_err().0.contains("exceeds"));
+        // truncated header
+        let mut r: &[u8] = &[b'B', b'Q', 1];
+        assert!(read_frame(&mut r).unwrap_err().0.contains("header"));
+        // truncated body
+        let mut frame = vec![b'B', b'Q', 1, 2];
+        frame.extend_from_slice(&16u32.to_le_bytes());
+        frame.extend_from_slice(&[0u8; 4]);
+        let mut r: &[u8] = &frame;
+        assert!(read_frame(&mut r).unwrap_err().0.contains("body"));
+    }
+
+    #[test]
+    fn error_message_is_truncated_on_encode() {
+        let long = "x".repeat(MAX_ERROR_MSG * 3);
+        let resp = Response::Error {
+            id: 1,
+            code: ErrorCode::Internal,
+            retry_after_ms: 0,
+            message: long,
+        };
+        let Response::Error { message, .. } = roundtrip_response(&resp) else {
+            unreachable!()
+        };
+        assert_eq!(message.len(), MAX_ERROR_MSG);
+    }
+
+    #[test]
+    fn predict_body_grammar_rejections_echo_the_id() {
+        // valid frame, then corrupt the body in targeted ways
+        let req = Request::Predict(PredictRequest {
+            id: 0x0102_0304_0506_0708,
+            model: "m".into(),
+            deadline_ms: 0,
+            queries: Points::Dense(Matrix::from_vec(vec![1.0, 2.0], 1, 2)),
+        });
+        let frame = encode_request(&req);
+        let body = &frame[8..];
+        // trailing bytes
+        let mut long = body.to_vec();
+        long.push(0);
+        let err = parse_request(req::PREDICT, &long).unwrap_err();
+        assert_eq!(err.id, 0x0102_0304_0506_0708);
+        assert!(err.message.contains("trailing"));
+        // truncated payload
+        let err = parse_request(req::PREDICT, &body[..body.len() - 1]).unwrap_err();
+        assert_eq!(err.id, 0x0102_0304_0506_0708);
+        assert!(err.message.contains("truncated"));
+        // too short to even carry an id
+        let err = parse_request(req::PREDICT, &body[..4]).unwrap_err();
+        assert_eq!(err.id, 0);
+    }
+
+    #[test]
+    fn non_finite_dense_query_is_rejected() {
+        let mut body = Vec::new();
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.extend_from_slice(&1u16.to_le_bytes());
+        body.push(b'm');
+        body.extend_from_slice(&0u32.to_le_bytes());
+        body.push(0); // dense
+        body.extend_from_slice(&1u32.to_le_bytes()); // n
+        body.extend_from_slice(&2u32.to_le_bytes()); // dim
+        body.extend_from_slice(&1.0f32.to_le_bytes());
+        body.extend_from_slice(&f32::NAN.to_le_bytes());
+        let err = parse_request(req::PREDICT, &body).unwrap_err();
+        assert!(err.message.contains("non-finite"), "{}", err.message);
+    }
+
+    #[test]
+    fn unknown_kinds_are_recoverable_rejections() {
+        let mut body = Vec::new();
+        body.extend_from_slice(&5u64.to_le_bytes());
+        let err = parse_request(0x7f, &body).unwrap_err();
+        assert_eq!(err.id, 5);
+        assert!(err.message.contains("unknown request kind"));
+        let err = parse_response(0x01, &body).unwrap_err();
+        assert!(err.message.contains("unknown response kind"));
+    }
+}

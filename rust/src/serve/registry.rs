@@ -1,0 +1,320 @@
+//! Named model registry with atomic hot swap and failure quarantine.
+//!
+//! Each served model lives in a [`ModelSlot`]: the current
+//! [`KMedoidsModel`] sits behind an `Arc` that is swapped atomically on
+//! reload (lock held only for the pointer swap, never during the disk
+//! load), so in-flight batches keep computing against the `Arc` they
+//! cloned at admission while new batches see the new model — the
+//! arc-swap pattern without the crate.
+//!
+//! Quarantine: when a batch against a slot panics, the dispatcher calls
+//! [`ModelSlot::record_panic`]; after `threshold` *consecutive* failures
+//! the slot is quarantined and fast-rejects predict requests with the
+//! `Quarantined` error code until a successful [`ModelSlot::reload`]
+//! clears it. A successful batch resets the consecutive-failure count.
+
+use crate::error::{Error, Result};
+use crate::model::KMedoidsModel;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One immutable generation of a served model. Batches hold an
+/// `Arc<LoadedModel>` for their whole lifetime, so a reload can never
+/// change the bytes a batch computes against.
+pub struct LoadedModel {
+    pub model: KMedoidsModel,
+    /// Monotonic reload generation (1 = the initial load).
+    pub version: u64,
+}
+
+/// A named slot in the registry: current model generation plus failure
+/// accounting.
+pub struct ModelSlot {
+    name: String,
+    path: PathBuf,
+    current: Mutex<Arc<LoadedModel>>,
+    consecutive_failures: AtomicU32,
+    quarantined: AtomicBool,
+}
+
+impl ModelSlot {
+    fn open(name: &str, path: &Path) -> Result<ModelSlot> {
+        let model = KMedoidsModel::load(path)?;
+        Ok(ModelSlot {
+            name: name.to_string(),
+            path: path.to_path_buf(),
+            current: Mutex::new(Arc::new(LoadedModel { model, version: 1 })),
+            consecutive_failures: AtomicU32::new(0),
+            quarantined: AtomicBool::new(false),
+        })
+    }
+
+    /// Registry name of this slot.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The file the slot (re)loads from.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// The current model generation. Lock held only for the clone.
+    pub fn current(&self) -> Arc<LoadedModel> {
+        Arc::clone(&self.current.lock().unwrap())
+    }
+
+    /// Whether the slot is fast-rejecting requests after repeated
+    /// failures.
+    pub fn is_quarantined(&self) -> bool {
+        self.quarantined.load(Ordering::Acquire)
+    }
+
+    /// Reload from disk and swap atomically. The disk read happens
+    /// outside the slot lock; in-flight batches finish on the old `Arc`.
+    /// A successful reload clears quarantine; a failed one changes
+    /// nothing.
+    pub fn reload(&self) -> Result<u64> {
+        let model = KMedoidsModel::load(&self.path).map_err(|e| {
+            Error::model(format!("reloading {:?} from {:?}: {e}", self.name, self.path))
+        })?;
+        let mut cur = self.current.lock().unwrap();
+        let version = cur.version + 1;
+        *cur = Arc::new(LoadedModel { model, version });
+        drop(cur);
+        self.consecutive_failures.store(0, Ordering::Release);
+        self.quarantined.store(false, Ordering::Release);
+        Ok(version)
+    }
+
+    /// Record a batch panic against this slot. Returns `true` when this
+    /// failure is the one that newly trips the quarantine.
+    pub fn record_panic(&self, threshold: u32) -> bool {
+        let n = self.consecutive_failures.fetch_add(1, Ordering::AcqRel) + 1;
+        if n >= threshold && !self.quarantined.swap(true, Ordering::AcqRel) {
+            return true;
+        }
+        false
+    }
+
+    /// Record a successful batch: resets the consecutive-failure count.
+    pub fn record_success(&self) {
+        self.consecutive_failures.store(0, Ordering::Release);
+    }
+}
+
+/// The set of served models, keyed by name.
+pub struct Registry {
+    slots: BTreeMap<String, Arc<ModelSlot>>,
+}
+
+impl Registry {
+    /// Load every `(name, path)` spec. Duplicate names and unreadable
+    /// files are startup errors — a server with a half-loaded registry
+    /// would silently shed traffic.
+    pub fn open(specs: &[(String, PathBuf)]) -> Result<Registry> {
+        if specs.is_empty() {
+            return Err(Error::invalid_argument(
+                "serve needs at least one model (name=path.bpmodel)",
+            ));
+        }
+        let mut slots = BTreeMap::new();
+        for (name, path) in specs {
+            if name.is_empty() {
+                return Err(Error::invalid_argument(format!(
+                    "empty model name for {path:?}"
+                )));
+            }
+            if name.len() > super::protocol::MAX_NAME {
+                return Err(Error::invalid_argument(format!(
+                    "model name {name:?} exceeds {} bytes",
+                    super::protocol::MAX_NAME
+                )));
+            }
+            let slot = ModelSlot::open(name, path)
+                .map_err(|e| Error::model(format!("loading {name:?} from {path:?}: {e}")))?;
+            if slots.insert(name.clone(), Arc::new(slot)).is_some() {
+                return Err(Error::invalid_argument(format!(
+                    "duplicate model name {name:?}"
+                )));
+            }
+        }
+        Ok(Registry { slots })
+    }
+
+    /// Look up a slot by name.
+    pub fn get(&self, name: &str) -> Option<&Arc<ModelSlot>> {
+        self.slots.get(name)
+    }
+
+    /// Slot names in sorted order.
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.slots.keys().map(String::as_str)
+    }
+
+    /// All slots in name order.
+    pub fn slots(&self) -> impl Iterator<Item = &Arc<ModelSlot>> {
+        self.slots.values()
+    }
+
+    /// Reload one model (nonempty `name`) or every model (empty), and
+    /// report per-slot outcomes as `name: vN` / `name: error ...` lines.
+    /// A failed reload leaves the old generation serving.
+    pub fn reload(&self, name: &str) -> Result<String> {
+        if !name.is_empty() {
+            let slot = self
+                .get(name)
+                .ok_or_else(|| Error::invalid_argument(format!("unknown model {name:?}")))?;
+            let v = slot.reload()?;
+            return Ok(format!("{name}: v{v}"));
+        }
+        let mut lines = Vec::new();
+        for slot in self.slots() {
+            match slot.reload() {
+                Ok(v) => lines.push(format!("{}: v{v}", slot.name())),
+                Err(e) => lines.push(format!("{}: error {e}", slot.name())),
+            }
+        }
+        Ok(lines.join("\n"))
+    }
+
+    /// The `list-models` response text: one
+    /// `name kind k dim version` line per slot.
+    pub fn describe(&self) -> String {
+        let mut lines = Vec::new();
+        for slot in self.slots() {
+            let cur = slot.current();
+            let kind = cur.model.medoid_points().kind();
+            let dim = cur
+                .model
+                .dim()
+                .map(|d| d.to_string())
+                .unwrap_or_else(|| "-".into());
+            lines.push(format!(
+                "{} {kind} k={} dim={dim} v{}{}",
+                slot.name(),
+                cur.model.k(),
+                cur.version,
+                if slot.is_quarantined() { " quarantined" } else { "" },
+            ));
+        }
+        lines.join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::model::Fit;
+    use crate::util::rng::Rng;
+
+    fn save_model(dir: &Path, name: &str, seed: u64) -> PathBuf {
+        let ds = synthetic::gmm(&mut Rng::seed_from(seed), 24, 6, 2, 3.0);
+        let model = Fit::banditpam().k(2).seed(seed).fit(&ds).unwrap();
+        let path = dir.join(format!("{name}.bpmodel"));
+        model.save(&path).unwrap();
+        path
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("bp_registry_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn reload_swaps_atomically_and_inflight_holds_old_arc() {
+        let dir = tmpdir("swap");
+        let path = save_model(&dir, "m", 1);
+        let reg = Registry::open(&[("m".into(), path.clone())]).unwrap();
+        let slot = reg.get("m").unwrap();
+        let inflight = slot.current();
+        assert_eq!(inflight.version, 1);
+
+        // Overwrite the file with a differently-seeded model, reload.
+        save_model(&dir, "m", 99);
+        let report = reg.reload("m").unwrap();
+        assert_eq!(report, "m: v2");
+        assert_eq!(slot.current().version, 2);
+        // The in-flight generation is untouched.
+        assert_eq!(inflight.version, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failed_reload_leaves_old_generation_serving() {
+        let dir = tmpdir("failedreload");
+        let path = save_model(&dir, "m", 1);
+        let reg = Registry::open(&[("m".into(), path.clone())]).unwrap();
+        std::fs::write(&path, b"garbage").unwrap();
+        assert!(reg.reload("m").is_err());
+        let slot = reg.get("m").unwrap();
+        assert_eq!(slot.current().version, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn quarantine_trips_after_threshold_and_reload_clears_it() {
+        let dir = tmpdir("quarantine");
+        let path = save_model(&dir, "m", 1);
+        let reg = Registry::open(&[("m".into(), path)]).unwrap();
+        let slot = reg.get("m").unwrap();
+
+        assert!(!slot.record_panic(3));
+        assert!(!slot.record_panic(3));
+        // A success in between resets the streak.
+        slot.record_success();
+        assert!(!slot.record_panic(3));
+        assert!(!slot.record_panic(3));
+        assert!(slot.record_panic(3), "third consecutive failure trips");
+        assert!(slot.is_quarantined());
+        // Tripping again reports false (already quarantined).
+        assert!(!slot.record_panic(3));
+
+        slot.reload().unwrap();
+        assert!(!slot.is_quarantined());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn open_rejects_bad_specs() {
+        let dir = tmpdir("specs");
+        let path = save_model(&dir, "m", 1);
+        assert_eq!(Registry::open(&[]).unwrap_err().kind(), "invalid_argument");
+        assert_eq!(
+            Registry::open(&[(String::new(), path.clone())]).unwrap_err().kind(),
+            "invalid_argument"
+        );
+        assert_eq!(
+            Registry::open(&[
+                ("m".into(), path.clone()),
+                ("m".into(), path.clone()),
+            ])
+            .unwrap_err()
+            .kind(),
+            "invalid_argument"
+        );
+        assert_eq!(
+            Registry::open(&[("m".into(), dir.join("missing.bpmodel"))])
+                .unwrap_err()
+                .kind(),
+            "model"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn describe_lists_models() {
+        let dir = tmpdir("describe");
+        let path = save_model(&dir, "m", 1);
+        let reg = Registry::open(&[("m".into(), path)]).unwrap();
+        let text = reg.describe();
+        assert!(text.starts_with("m dense k=2"), "{text}");
+        assert!(text.contains("v1"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,764 @@
+//! The serve loop: connection handling, the single-threaded dispatcher,
+//! panic isolation and hot reload.
+//!
+//! # Threading model
+//!
+//! * One **reader** per connection (the calling thread for stdio, a
+//!   spawned thread per TCP accept) parses frames and answers control
+//!   requests inline; predict requests are validated and submitted to
+//!   the shared [`Batcher`].
+//! * One **writer thread** per connection owns the write half; every
+//!   response (inline or from the dispatcher) goes through its channel,
+//!   so frames are never interleaved. The writer sends a pending
+//!   `ShutdownAck` *after* its channel disconnects — and since every
+//!   in-flight [`PendingRequest`] holds a sender clone, the channel only
+//!   disconnects once all admitted work has been answered: the ack is
+//!   provably last (the clean-drain guarantee).
+//! * One **dispatcher thread** per server pops coalesced batches,
+//!   expires deadlines, and computes through a warm [`ThreadPool`]
+//!   shared across batches (the warm predictor pool — no per-request
+//!   thread spawning).
+//!
+//! # Panic isolation
+//!
+//! Each batch computes under `catch_unwind`; a panic (a poisoned model,
+//! a kernel bug, an injected fault) becomes an `Internal` error response
+//! for every request in the batch and increments the slot's
+//! consecutive-failure count — after `quarantine_threshold` failures the
+//! model is quarantined (fast `Quarantined` rejects) until a reload
+//! clears it. The server itself never dies with a client.
+//!
+//! # Hot swap
+//!
+//! A reload (control frame, or SIGHUP on unix) loads the new file off
+//! the slot lock and swaps the `Arc` atomically. A batch clones its
+//! model `Arc` *before* computing, so in-flight batches finish on the
+//! generation they started with; the next batch sees the new one.
+//! Responses are bitwise-identical to single-shot `predict` against
+//! whichever generation served them.
+
+use super::batcher::{AdmissionConfig, Batcher, PendingRequest, Submit};
+use super::faults::FaultPlan;
+use super::protocol::{self, ErrorCode, PredictRequest, Request, Response};
+use super::registry::Registry;
+use crate::data::sparse::CsrMatrix;
+use crate::data::Points;
+use crate::runtime::pool::ThreadPool;
+use crate::util::json;
+use crate::util::matrix::Matrix;
+use std::io::{Read, Write};
+use std::net::TcpListener;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Monotonic server counters; snapshot as JSON via the `stats` request.
+#[derive(Default)]
+pub struct ServeStats {
+    /// Predict requests admitted to the queue.
+    pub admitted: AtomicU64,
+    /// Predict requests shed by backpressure.
+    pub shed: AtomicU64,
+    /// Admitted requests whose deadline expired before dispatch.
+    pub deadline_expired: AtomicU64,
+    /// Batches dispatched (after coalescing).
+    pub batches: AtomicU64,
+    /// Batches that panicked (isolated, answered `Internal`).
+    pub panics: AtomicU64,
+    /// Predict requests answered with assignments.
+    pub served_ok: AtomicU64,
+    /// Malformed frames / bodies answered with `BadRequest`.
+    pub bad_requests: AtomicU64,
+    /// Reload operations performed (control frame or SIGHUP).
+    pub reloads: AtomicU64,
+    /// Requests fast-rejected because their model was quarantined.
+    pub quarantined: AtomicU64,
+}
+
+impl ServeStats {
+    /// JSON object with every counter, stable key order.
+    pub fn snapshot_json(&self) -> String {
+        let pairs = [
+            ("admitted", self.admitted.load(Ordering::Relaxed)),
+            ("shed", self.shed.load(Ordering::Relaxed)),
+            ("deadline_expired", self.deadline_expired.load(Ordering::Relaxed)),
+            ("batches", self.batches.load(Ordering::Relaxed)),
+            ("panics", self.panics.load(Ordering::Relaxed)),
+            ("served_ok", self.served_ok.load(Ordering::Relaxed)),
+            ("bad_requests", self.bad_requests.load(Ordering::Relaxed)),
+            ("reloads", self.reloads.load(Ordering::Relaxed)),
+            ("quarantined", self.quarantined.load(Ordering::Relaxed)),
+        ];
+        let body: Vec<String> = pairs
+            .iter()
+            .map(|(k, v)| format!("\"{}\":{v}", json::escape(k)))
+            .collect();
+        format!("{{{}}}", body.join(","))
+    }
+}
+
+/// Server construction options.
+pub struct ServeOptions {
+    /// Threads in the shared predictor pool.
+    pub threads: usize,
+    pub admission: AdmissionConfig,
+    pub faults: FaultPlan,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            threads: 1,
+            admission: AdmissionConfig::default(),
+            faults: FaultPlan::default(),
+        }
+    }
+}
+
+/// A running prediction server: registry + admission queue + dispatcher.
+pub struct Server {
+    registry: Registry,
+    batcher: Batcher,
+    pub stats: ServeStats,
+    pool: Arc<ThreadPool>,
+    admission: AdmissionConfig,
+    faults: FaultPlan,
+    shutting_down: AtomicBool,
+    dispatcher: Mutex<Option<thread::JoinHandle<()>>>,
+}
+
+impl Server {
+    /// Build the server and start its dispatcher thread.
+    pub fn new(registry: Registry, opts: ServeOptions) -> Arc<Server> {
+        let server = Arc::new(Server {
+            registry,
+            batcher: Batcher::new(&opts.admission),
+            stats: ServeStats::default(),
+            pool: Arc::new(ThreadPool::new(opts.threads.max(1))),
+            admission: opts.admission,
+            faults: opts.faults,
+            shutting_down: AtomicBool::new(false),
+            dispatcher: Mutex::new(None),
+        });
+        let handle = {
+            let server = Arc::clone(&server);
+            thread::Builder::new()
+                .name("serve-dispatcher".into())
+                .spawn(move || server.dispatch_loop())
+                .expect("spawning the dispatcher")
+        };
+        *server.dispatcher.lock().unwrap() = Some(handle);
+        server
+    }
+
+    /// The model registry (reload, describe).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Whether a shutdown has been initiated.
+    pub fn is_shutting_down(&self) -> bool {
+        self.shutting_down.load(Ordering::Acquire)
+    }
+
+    /// Stop admitting predict work; the dispatcher drains the queue and
+    /// exits. Idempotent.
+    pub fn begin_shutdown(&self) {
+        self.shutting_down.store(true, Ordering::Release);
+        self.batcher.shutdown();
+    }
+
+    /// Wait for the dispatcher to drain and exit.
+    pub fn join(&self) {
+        if let Some(h) = self.dispatcher.lock().unwrap().take() {
+            h.join().expect("the dispatcher never panics");
+        }
+    }
+
+    /// Reload models (empty name = all); the `ReloadAck` text reports
+    /// per-slot outcomes.
+    pub fn request_reload(&self, name: &str) -> Result<String, crate::error::Error> {
+        let report = self.registry.reload(name)?;
+        self.stats.reloads.fetch_add(1, Ordering::Relaxed);
+        Ok(report)
+    }
+
+    /// Service a pending SIGHUP (unix): reload every model. Called from
+    /// reader loops and the dispatcher between batches.
+    pub fn poll_reload(&self) {
+        if take_pending_sighup() {
+            // Failures are reported per-slot in the log line; old
+            // generations keep serving.
+            match self.request_reload("") {
+                Ok(report) => eprintln!("serve: SIGHUP reload\n{report}"),
+                Err(e) => eprintln!("serve: SIGHUP reload failed: {e}"),
+            }
+        }
+    }
+
+    // ---- dispatcher ----------------------------------------------------
+
+    fn dispatch_loop(&self) {
+        let mut seq: u64 = 0;
+        while let Some(batch) = self.batcher.next_batch() {
+            seq += 1;
+            self.poll_reload();
+            self.process_batch(seq, batch);
+        }
+    }
+
+    fn process_batch(&self, seq: u64, batch: Vec<PendingRequest>) {
+        self.stats.batches.fetch_add(1, Ordering::Relaxed);
+        let slot = Arc::clone(&batch[0].slot);
+
+        if slot.is_quarantined() {
+            self.stats.quarantined.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            for req in batch {
+                let _ = req.reply.send(Response::Error {
+                    id: req.id,
+                    code: ErrorCode::Quarantined,
+                    retry_after_ms: 0,
+                    message: format!(
+                        "model {:?} is quarantined after repeated failures; reload to clear",
+                        slot.name()
+                    ),
+                });
+            }
+            return;
+        }
+
+        // Pin the model generation before any stall: a reload landing
+        // mid-batch must not change the bytes this batch computes on.
+        let loaded = slot.current();
+
+        if let Some(stall) = self.faults.stall() {
+            thread::sleep(stall);
+        }
+
+        // Expire deadlines at dispatch (after the injected stall, so the
+        // fault harness can force expiry deterministically).
+        let now = Instant::now();
+        let (batch, expired): (Vec<_>, Vec<_>) = batch
+            .into_iter()
+            .partition(|req| req.deadline.map_or(true, |d| now < d));
+        self.stats.deadline_expired.fetch_add(expired.len() as u64, Ordering::Relaxed);
+        for req in expired {
+            let _ = req.reply.send(Response::Error {
+                id: req.id,
+                code: ErrorCode::DeadlineExceeded,
+                retry_after_ms: 0,
+                message: "deadline expired before dispatch".into(),
+            });
+        }
+        if batch.is_empty() {
+            return;
+        }
+
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            if self.faults.should_panic(seq) {
+                panic!("injected fault: forced kernel panic (batch {seq})");
+            }
+            let queries = concat_queries(&batch);
+            loaded
+                .model
+                .predictor_with_pool(Arc::clone(&self.pool))
+                .predict_with_dists(queries.as_ref().unwrap_or(&batch[0].queries))
+        }));
+
+        match outcome {
+            Ok(Ok((assign, dists))) => {
+                slot.record_success();
+                self.stats.served_ok.fetch_add(batch.len() as u64, Ordering::Relaxed);
+                let mut offset = 0;
+                for req in batch {
+                    let n = req.queries.len();
+                    let _ = req.reply.send(Response::Assignments {
+                        id: req.id,
+                        assign: assign[offset..offset + n]
+                            .iter()
+                            .map(|&a| a as u32)
+                            .collect(),
+                        dists: dists[offset..offset + n].to_vec(),
+                    });
+                    offset += n;
+                }
+            }
+            Ok(Err(e)) => {
+                // A typed predict error (post-reload storage/dim drift):
+                // the request, not the server, is at fault.
+                self.stats.bad_requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+                for req in batch {
+                    let _ = req.reply.send(Response::Error {
+                        id: req.id,
+                        code: ErrorCode::BadRequest,
+                        retry_after_ms: 0,
+                        message: e.to_string(),
+                    });
+                }
+            }
+            Err(payload) => {
+                self.stats.panics.fetch_add(1, Ordering::Relaxed);
+                let text = panic_text(payload.as_ref());
+                if slot.record_panic(self.admission.quarantine_threshold) {
+                    eprintln!(
+                        "serve: model {:?} quarantined after {} consecutive batch panics",
+                        slot.name(),
+                        self.admission.quarantine_threshold
+                    );
+                }
+                for req in batch {
+                    let _ = req.reply.send(Response::Error {
+                        id: req.id,
+                        code: ErrorCode::Internal,
+                        retry_after_ms: 0,
+                        message: format!("batch panicked: {text}"),
+                    });
+                }
+            }
+        }
+    }
+
+    // ---- connection handling -------------------------------------------
+
+    /// Serve one connection: parse frames off `reader` on the calling
+    /// thread, write responses through a dedicated writer thread.
+    /// Returns once the client hangs up, breaks framing, or sends a
+    /// shutdown frame — with every admitted request answered and, on
+    /// shutdown, the `ShutdownAck` written last.
+    pub fn handle_connection<R, W>(self: &Arc<Server>, mut reader: R, writer: W)
+    where
+        R: Read,
+        W: Write + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Response>();
+        let ack_id: Arc<Mutex<Option<u64>>> = Arc::new(Mutex::new(None));
+        let writer_handle = {
+            let ack_id = Arc::clone(&ack_id);
+            thread::spawn(move || {
+                let mut writer = writer;
+                // Write errors (client gone) are ignored but the channel
+                // keeps draining, so senders never block on a dead peer.
+                for resp in rx {
+                    let _ = writer.write_all(&protocol::encode_response(&resp));
+                    let _ = writer.flush();
+                }
+                // The channel is disconnected: every sender clone —
+                // including those held by in-flight requests — is gone,
+                // so the ack really is the last frame.
+                if let Some(id) = ack_id.lock().unwrap().take() {
+                    let _ =
+                        writer.write_all(&protocol::encode_response(&Response::ShutdownAck {
+                            id,
+                        }));
+                    let _ = writer.flush();
+                }
+            })
+        };
+
+        loop {
+            self.poll_reload();
+            let frame = match protocol::read_frame(&mut reader) {
+                Ok(Some(frame)) => frame,
+                Ok(None) => break, // clean EOF at a frame boundary
+                Err(e) => {
+                    // Framing is lost: best-effort error, then close.
+                    self.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+                    let _ = tx.send(Response::Error {
+                        id: 0,
+                        code: ErrorCode::BadRequest,
+                        retry_after_ms: 0,
+                        message: e.0,
+                    });
+                    break;
+                }
+            };
+            let req = match protocol::parse_request(frame.0, &frame.1) {
+                Ok(req) => req,
+                Err(fail) => {
+                    // Well-framed but malformed: recoverable.
+                    self.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+                    let _ = tx.send(Response::Error {
+                        id: fail.id,
+                        code: ErrorCode::BadRequest,
+                        retry_after_ms: 0,
+                        message: fail.message,
+                    });
+                    continue;
+                }
+            };
+            match req {
+                Request::Ping { id } => {
+                    let _ = tx.send(Response::Pong { id });
+                }
+                Request::Stats { id } => {
+                    let _ = tx.send(Response::Stats {
+                        id,
+                        text: self.stats.snapshot_json(),
+                    });
+                }
+                Request::ListModels { id } => {
+                    let _ = tx.send(Response::ModelList {
+                        id,
+                        text: self.registry.describe(),
+                    });
+                }
+                Request::Reload { id, name } => match self.request_reload(&name) {
+                    Ok(text) => {
+                        let _ = tx.send(Response::ReloadAck { id, text });
+                    }
+                    Err(e) => {
+                        let _ = tx.send(Response::Error {
+                            id,
+                            code: ErrorCode::BadRequest,
+                            retry_after_ms: 0,
+                            message: e.to_string(),
+                        });
+                    }
+                },
+                Request::Shutdown { id } => {
+                    *ack_id.lock().unwrap() = Some(id);
+                    self.begin_shutdown();
+                    break;
+                }
+                Request::Predict(p) => self.admit_predict(p, &tx),
+            }
+        }
+
+        drop(tx);
+        let _ = writer_handle.join();
+    }
+
+    /// Validate and enqueue one predict request, answering rejects
+    /// inline through `tx`.
+    fn admit_predict(&self, p: PredictRequest, tx: &mpsc::Sender<Response>) {
+        let send_err = |id, code, retry_after_ms, message: String| {
+            let _ = tx.send(Response::Error { id, code, retry_after_ms, message });
+        };
+        if self.is_shutting_down() {
+            send_err(
+                p.id,
+                ErrorCode::ShuttingDown,
+                0,
+                "the server is draining".into(),
+            );
+            return;
+        }
+        let Some(slot) = self.registry.get(&p.model) else {
+            send_err(
+                p.id,
+                ErrorCode::UnknownModel,
+                0,
+                format!("unknown model {:?}", p.model),
+            );
+            return;
+        };
+        if slot.is_quarantined() {
+            self.stats.quarantined.fetch_add(1, Ordering::Relaxed);
+            send_err(
+                p.id,
+                ErrorCode::Quarantined,
+                0,
+                format!("model {:?} is quarantined; reload to clear", p.model),
+            );
+            return;
+        }
+        // Validate shape against the current generation so malformed
+        // requests fail fast instead of poisoning a batch.
+        let loaded = slot.current();
+        let medoids = loaded.model.medoid_points();
+        if p.queries.kind() != medoids.kind() {
+            send_err(
+                p.id,
+                ErrorCode::BadRequest,
+                0,
+                format!(
+                    "query storage {} does not match the model's {} medoids",
+                    p.queries.kind(),
+                    medoids.kind()
+                ),
+            );
+            return;
+        }
+        if p.queries.dim() != loaded.model.dim() {
+            send_err(
+                p.id,
+                ErrorCode::BadRequest,
+                0,
+                format!(
+                    "query dimension {:?} does not match the model's {:?}",
+                    p.queries.dim(),
+                    loaded.model.dim()
+                ),
+            );
+            return;
+        }
+        if p.queries.is_empty() {
+            // Nothing to dispatch; answer directly (parity with
+            // `predict` on empty input).
+            let _ = tx.send(Response::Assignments {
+                id: p.id,
+                assign: Vec::new(),
+                dists: Vec::new(),
+            });
+            return;
+        }
+        let deadline = (p.deadline_ms > 0)
+            .then(|| Instant::now() + Duration::from_millis(u64::from(p.deadline_ms)));
+        let pending = PendingRequest {
+            id: p.id,
+            slot: Arc::clone(slot),
+            queries: p.queries,
+            deadline,
+            reply: tx.clone(),
+        };
+        match self.batcher.submit(pending) {
+            Submit::Queued => {
+                self.stats.admitted.fetch_add(1, Ordering::Relaxed);
+            }
+            Submit::Shed(req) => {
+                self.stats.shed.fetch_add(1, Ordering::Relaxed);
+                let (code, msg) = if self.is_shutting_down() {
+                    (ErrorCode::ShuttingDown, "the server is draining".to_string())
+                } else {
+                    (
+                        ErrorCode::Overloaded,
+                        format!(
+                            "admission queue full; retry in {} ms",
+                            self.admission.retry_after_ms
+                        ),
+                    )
+                };
+                let retry = if code == ErrorCode::Overloaded {
+                    self.admission.retry_after_ms
+                } else {
+                    0
+                };
+                send_err(req.id, code, retry, msg);
+            }
+        }
+    }
+}
+
+/// Concatenate a coalesced batch's queries into one `Points` for a
+/// single backend dispatch. Returns `None` for a single-request batch
+/// (the caller uses the original, skipping the copy). Row kernels are
+/// per-query independent, so assignments on the concatenation are
+/// bitwise-identical to per-request dispatches.
+fn concat_queries(batch: &[PendingRequest]) -> Option<Points> {
+    if batch.len() == 1 {
+        return None;
+    }
+    match &batch[0].queries {
+        Points::Dense(first) => {
+            let dim = first.cols();
+            let mut values = Vec::new();
+            let mut rows = 0;
+            for req in batch {
+                let Points::Dense(m) = &req.queries else {
+                    unreachable!("the batcher only merges same-kind queries")
+                };
+                values.extend_from_slice(m.as_slice());
+                rows += m.rows();
+            }
+            Some(Points::Dense(Matrix::from_vec(values, rows, dim)))
+        }
+        Points::Sparse(first) => {
+            let cols = first.cols();
+            let mut indptr = vec![0usize];
+            let mut indices = Vec::new();
+            let mut values = Vec::new();
+            let mut rows = 0;
+            for req in batch {
+                let Points::Sparse(m) = &req.queries else {
+                    unreachable!("the batcher only merges same-kind queries")
+                };
+                let (ip, ix, vs) = m.parts();
+                let base = *indptr.last().unwrap();
+                indptr.extend(ip.iter().skip(1).map(|p| base + p));
+                indices.extend_from_slice(ix);
+                values.extend_from_slice(vs);
+                rows += m.rows();
+            }
+            let csr = CsrMatrix::try_from_parts(rows, cols, indptr, indices, values)
+                .expect("concatenating valid CSR blocks preserves the invariants");
+            Some(Points::Sparse(csr))
+        }
+        Points::Trees(_) => unreachable!("tree queries have no wire form"),
+    }
+}
+
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+// ---- SIGHUP (unix) -----------------------------------------------------
+
+#[cfg(unix)]
+static SIGHUP_PENDING: AtomicBool = AtomicBool::new(false);
+
+/// Install the SIGHUP → reload-all handler (unix only; a no-op
+/// elsewhere). The handler only flips a flag; the actual reload runs on
+/// the next reader/dispatcher tick via [`Server::poll_reload`].
+pub fn install_sighup_handler() {
+    #[cfg(unix)]
+    {
+        const SIGHUP: i32 = 1;
+        extern "C" fn on_sighup(_signum: i32) {
+            SIGHUP_PENDING.store(true, Ordering::SeqCst);
+        }
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        unsafe {
+            signal(SIGHUP, on_sighup);
+        }
+    }
+}
+
+fn take_pending_sighup() -> bool {
+    #[cfg(unix)]
+    {
+        SIGHUP_PENDING.swap(false, Ordering::SeqCst)
+    }
+    #[cfg(not(unix))]
+    {
+        false
+    }
+}
+
+// ---- TCP ---------------------------------------------------------------
+
+/// Accept TCP connections until shutdown, one reader thread per client.
+/// After shutdown, waits up to ~5 s for connection threads to finish
+/// (idle clients holding sockets open are abandoned to process exit).
+pub fn serve_tcp(server: &Arc<Server>, addr: &str) -> std::io::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    eprintln!("serve: listening on {}", listener.local_addr()?);
+    let mut handles: Vec<thread::JoinHandle<()>> = Vec::new();
+    while !server.is_shutting_down() {
+        server.poll_reload();
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                stream.set_nodelay(true).ok();
+                let write_half = stream.try_clone()?;
+                let server = Arc::clone(server);
+                handles.push(thread::spawn(move || {
+                    server.handle_connection(stream, write_half);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(e),
+        }
+        handles.retain(|h| !h.is_finished());
+    }
+    let drain_deadline = Instant::now() + Duration::from_secs(5);
+    while handles.iter().any(|h| !h.is_finished()) && Instant::now() < drain_deadline {
+        thread::sleep(Duration::from_millis(20));
+    }
+    for h in handles.into_iter().filter(|h| h.is_finished()) {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::model::Fit;
+    use crate::util::rng::Rng;
+    use std::path::PathBuf;
+
+    fn registry_with_model(tag: &str) -> (Registry, PathBuf) {
+        let dir =
+            std::env::temp_dir().join(format!("bp_server_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ds = synthetic::gmm(&mut Rng::seed_from(9), 30, 5, 3, 3.0);
+        let model = Fit::banditpam().k(3).seed(9).fit(&ds).unwrap();
+        let path = dir.join("m.bpmodel");
+        model.save(&path).unwrap();
+        (Registry::open(&[("m".into(), path)]).unwrap(), dir)
+    }
+
+    #[test]
+    fn stats_snapshot_is_valid_json_with_every_counter() {
+        let stats = ServeStats::default();
+        stats.admitted.store(3, Ordering::Relaxed);
+        stats.panics.store(1, Ordering::Relaxed);
+        let snap = stats.snapshot_json();
+        let parsed = json::Json::parse(&snap).unwrap();
+        assert_eq!(parsed.get("admitted").and_then(|j| j.as_usize()), Some(3));
+        assert_eq!(parsed.get("panics").and_then(|j| j.as_usize()), Some(1));
+        assert_eq!(parsed.get("shed").and_then(|j| j.as_usize()), Some(0));
+        assert_eq!(parsed.get("reloads").and_then(|j| j.as_usize()), Some(0));
+    }
+
+    #[test]
+    fn server_starts_drains_and_joins() {
+        let (registry, dir) = registry_with_model("lifecycle");
+        let server = Server::new(registry, ServeOptions::default());
+        assert!(!server.is_shutting_down());
+        server.begin_shutdown();
+        server.join();
+        // join is idempotent
+        server.join();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn panic_text_extracts_both_payload_shapes() {
+        let p: Box<dyn std::any::Any + Send> = Box::new("static str");
+        assert_eq!(panic_text(p.as_ref()), "static str");
+        let p: Box<dyn std::any::Any + Send> = Box::new(String::from("owned"));
+        assert_eq!(panic_text(p.as_ref()), "owned");
+        let p: Box<dyn std::any::Any + Send> = Box::new(42usize);
+        assert_eq!(panic_text(p.as_ref()), "opaque panic payload");
+    }
+
+    #[test]
+    fn concat_queries_merges_sparse_blocks_correctly() {
+        let a = CsrMatrix::try_from_parts(2, 4, vec![0, 1, 3], vec![0, 1, 2], vec![
+            1.0, 2.0, 3.0,
+        ])
+        .unwrap();
+        let b = CsrMatrix::try_from_parts(1, 4, vec![0, 2], vec![0, 3], vec![4.0, 5.0])
+            .unwrap();
+        let (registry, dir) = registry_with_model("concat");
+        let slot = Arc::clone(registry.get("m").unwrap());
+        let (tx, _rx) = mpsc::channel();
+        let batch = vec![
+            PendingRequest {
+                id: 1,
+                slot: Arc::clone(&slot),
+                queries: Points::Sparse(a.clone()),
+                deadline: None,
+                reply: tx.clone(),
+            },
+            PendingRequest {
+                id: 2,
+                slot,
+                queries: Points::Sparse(b.clone()),
+                deadline: None,
+                reply: tx,
+            },
+        ];
+        let merged = concat_queries(&batch).unwrap();
+        let Points::Sparse(m) = merged else { unreachable!() };
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.row(0), (&[0u32][..], &[1.0f32][..]));
+        assert_eq!(m.row(1), (&[1u32, 2][..], &[2.0f32, 3.0][..]));
+        assert_eq!(m.row(2), (&[0u32, 3][..], &[4.0f32, 5.0][..]));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

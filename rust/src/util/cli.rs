@@ -38,8 +38,9 @@ impl std::error::Error for ParseError {}
 
 /// Options that never take a value (`--verbose file.csv` must not consume
 /// `file.csv`). Everything else uses `--key value` / `--key=value`.
-const BOOLEAN_FLAGS: &[&str] =
-    &["verbose", "csv", "force", "help", "quiet", "sparse", "stream", "transpose"];
+const BOOLEAN_FLAGS: &[&str] = &[
+    "verbose", "csv", "force", "help", "quiet", "sparse", "stdio", "stream", "transpose",
+];
 
 /// On-disk dataset formats the `--data` loaders understand.
 ///

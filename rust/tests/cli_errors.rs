@@ -1,0 +1,211 @@
+//! CLI contract tests against the real binary
+//! (`env!("CARGO_BIN_EXE_banditpam")`): usage errors exit 2 with a
+//! one-line typed `error: ...` on stderr (never a debug-formatted
+//! internal error), operational failures exit 1, and the `serve --stdio`
+//! loop speaks the wire protocol end to end.
+
+use banditpam::serve::protocol::{
+    encode_request, parse_response, read_frame, Request, Response,
+};
+use std::io::{Read, Write};
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_banditpam"))
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bp_cli_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Train a tiny dense model via the real `cluster` subcommand.
+fn trained_model(dir: &PathBuf) -> PathBuf {
+    let train = dir.join("train.csv");
+    let mut csv = String::new();
+    for i in 0..12 {
+        let x = f64::from(i % 4);
+        let y = f64::from(i / 4);
+        csv.push_str(&format!("{x},{y},{}\n", x + y));
+    }
+    std::fs::write(&train, csv).unwrap();
+    let model = dir.join("m.bpmodel");
+    let out = bin()
+        .args([
+            "cluster",
+            "--data",
+            train.to_str().unwrap(),
+            "--k",
+            "2",
+            "--threads",
+            "1",
+            "--save-model",
+            model.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "training run failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    model
+}
+
+fn stderr_line(out: &std::process::Output) -> String {
+    String::from_utf8_lossy(&out.stderr).trim().to_string()
+}
+
+#[test]
+fn predict_dimension_mismatch_is_a_one_line_usage_error() {
+    let dir = tmpdir("dim");
+    let model = trained_model(&dir);
+    // 5-column queries against the 3-d model
+    let wide = dir.join("wide.csv");
+    std::fs::write(&wide, "1.0,2.0,3.0,4.0,5.0\n0.5,0.5,0.5,0.5,0.5\n").unwrap();
+    let out = bin()
+        .args([
+            "predict",
+            "--model",
+            model.to_str().unwrap(),
+            "--data",
+            wide.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2), "usage errors exit 2");
+    let err = stderr_line(&out);
+    assert!(err.starts_with("error: invalid argument:"), "{err}");
+    assert!(err.contains("dimension"), "{err}");
+    assert_eq!(err.lines().count(), 1, "one line, not a debug dump: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cluster_metric_unsupported_for_storage_is_a_usage_error_not_a_panic() {
+    let dir = tmpdir("metric");
+    let train = dir.join("train.csv");
+    std::fs::write(&train, "1.0,2.0\n3.0,4.0\n5.0,6.0\n").unwrap();
+    let out = bin()
+        .args(["cluster", "--data", train.to_str().unwrap(), "--metric", "tree", "--k", "2"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    let err = stderr_line(&out);
+    assert!(err.starts_with("error: invalid argument:"), "{err}");
+    assert!(err.contains("does not support"), "{err}");
+    assert!(
+        !String::from_utf8_lossy(&out.stderr).contains("panicked"),
+        "must reject cleanly, not panic"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn missing_model_file_is_an_operational_error_exit_1() {
+    let out = bin()
+        .args(["predict", "--model", "/nonexistent/m.bpmodel", "--synthetic", "gmm"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1), "operational failures exit 1");
+    let err = stderr_line(&out);
+    assert!(err.starts_with("error:"), "{err}");
+    assert_eq!(err.lines().count(), 1, "{err}");
+}
+
+#[test]
+fn missing_required_flag_and_unknown_subcommand_exit_2() {
+    let out = bin().args(["predict"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr_line(&out).contains("--model FILE required"));
+
+    let out = bin().args(["frobnicate"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr_line(&out).contains("unknown subcommand"));
+
+    let out = bin().args(["experiment"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr_line(&out).contains("usage: banditpam experiment"));
+}
+
+#[test]
+fn predict_happy_path_round_trips_through_the_binary() {
+    let dir = tmpdir("happy");
+    let model = trained_model(&dir);
+    let queries = dir.join("q.csv");
+    std::fs::write(&queries, "0.0,0.0,0.0\n3.0,2.0,5.0\n").unwrap();
+    let out_csv = dir.join("assign.csv");
+    let out = bin()
+        .args([
+            "predict",
+            "--model",
+            model.to_str().unwrap(),
+            "--data",
+            queries.to_str().unwrap(),
+            "--out",
+            out_csv.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let written = std::fs::read_to_string(&out_csv).unwrap();
+    assert!(written.starts_with("point,assignment,medoid_train_index,distance"));
+    assert_eq!(written.lines().count(), 3, "header + 2 assignments");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_without_models_is_a_usage_error() {
+    let out = bin().args(["serve", "--stdio"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr_line(&out).contains("at least one model"));
+}
+
+#[test]
+fn serve_stdio_answers_the_protocol_and_exits_cleanly_on_shutdown() {
+    let dir = tmpdir("serve");
+    let model = trained_model(&dir);
+    let mut child = bin()
+        .args([
+            "serve",
+            "--stdio",
+            "--quiet",
+            "--threads",
+            "1",
+            &format!("m={}", model.display()),
+        ])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .unwrap();
+
+    let mut stdin = child.stdin.take().unwrap();
+    stdin.write_all(&encode_request(&Request::Ping { id: 1 })).unwrap();
+    stdin.write_all(&encode_request(&Request::ListModels { id: 2 })).unwrap();
+    stdin.write_all(&encode_request(&Request::Shutdown { id: 3 })).unwrap();
+    stdin.flush().unwrap();
+    drop(stdin);
+
+    let mut stdout = child.stdout.take().unwrap();
+    let mut frames = Vec::new();
+    while let Some((kind, body)) = read_frame(&mut stdout).unwrap() {
+        frames.push(parse_response(kind, &body).unwrap());
+    }
+    assert_eq!(frames.len(), 3, "{frames:?}");
+    assert!(matches!(frames[0], Response::Pong { id: 1 }));
+    let Response::ModelList { text, .. } = &frames[1] else { panic!("{frames:?}") };
+    assert!(text.contains("m dense k=2"), "{text}");
+    assert!(
+        matches!(frames[2], Response::ShutdownAck { id: 3 }),
+        "the ack is the last frame"
+    );
+
+    let status = child.wait().unwrap();
+    let mut errs = String::new();
+    child.stderr.take().unwrap().read_to_string(&mut errs).unwrap();
+    assert!(status.success(), "serve exited {status:?}: {errs}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,89 @@
+#!/usr/bin/env python3
+"""Regenerate the serve-protocol golden fixtures.
+
+The two valid_* files pin the wire format byte-exactly (the Rust side
+asserts encode_request output equals them); the corrupt_* files are
+hostile inputs the parser must reject with a clean error, never a panic.
+Layout reference: rust/SERVE.md.
+"""
+import struct
+from pathlib import Path
+
+HERE = Path(__file__).parent
+MAGIC = b"BQ"
+VERSION = 1
+KIND_PREDICT = 1
+
+
+def frame(kind: int, body: bytes, version: int = VERSION, magic: bytes = MAGIC,
+          length: int | None = None) -> bytes:
+    n = len(body) if length is None else length
+    return magic + bytes([version, kind]) + struct.pack("<I", n) + body
+
+
+def dense_predict(req_id: int, name: bytes, deadline_ms: int, n: int, dim: int,
+                  values: list[float]) -> bytes:
+    body = struct.pack("<Q", req_id)
+    body += struct.pack("<H", len(name)) + name
+    body += struct.pack("<I", deadline_ms)
+    body += b"\x00"  # dense
+    body += struct.pack("<II", n, dim)
+    body += b"".join(struct.pack("<f", v) for v in values)
+    return body
+
+
+def sparse_predict(req_id: int, name: bytes, deadline_ms: int, n: int, dim: int,
+                   indptr: list[int], indices: list[int], values: list[float],
+                   nnz: int | None = None) -> bytes:
+    body = struct.pack("<Q", req_id)
+    body += struct.pack("<H", len(name)) + name
+    body += struct.pack("<I", deadline_ms)
+    body += b"\x01"  # sparse
+    body += struct.pack("<II", n, dim)
+    body += struct.pack("<Q", len(indices) if nnz is None else nnz)
+    body += b"".join(struct.pack("<Q", p) for p in indptr)
+    body += b"".join(struct.pack("<I", j) for j in indices)
+    body += b"".join(struct.pack("<f", v) for v in values)
+    return body
+
+
+def write(name: str, data: bytes) -> None:
+    (HERE / name).write_bytes(data)
+    print(f"{name}: {len(data)} bytes")
+
+
+valid_dense_body = dense_predict(7, b"gmm", 250, 2, 3, [1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
+valid_dense = frame(KIND_PREDICT, valid_dense_body)
+write("valid_dense_predict.bin", valid_dense)
+
+valid_sparse_body = sparse_predict(42, b"cells", 0, 2, 4,
+                                   [0, 2, 3], [0, 3, 1], [1.5, -2.0, 0.25])
+write("valid_sparse_predict.bin", frame(KIND_PREDICT, valid_sparse_body))
+
+# --- framing-fatal corruptions (read_frame must Err) ---
+write("corrupt_bad_magic.bin", frame(KIND_PREDICT, valid_dense_body, magic=b"XQ"))
+write("corrupt_bad_version.bin", frame(KIND_PREDICT, valid_dense_body, version=9))
+write("corrupt_oversized_len.bin",
+      frame(KIND_PREDICT, valid_dense_body, length=0xFFFFFFFF))
+write("corrupt_truncated_header.bin", valid_dense[:5])
+write("corrupt_truncated_body.bin", valid_dense[:-8])
+
+# --- body-grammar corruptions (parse_request must Err, id echoed) ---
+write("corrupt_unknown_kind.bin", frame(0x7F, struct.pack("<Q", 9)))
+write("corrupt_trailing_bytes.bin", frame(KIND_PREDICT, valid_dense_body + b"\x00"))
+write("corrupt_lying_nnz.bin",
+      frame(KIND_PREDICT, sparse_predict(11, b"cells", 0, 2, 4,
+                                         [0, 2, 3], [0, 3, 1], [1.5, -2.0, 0.25],
+                                         nnz=1000)))
+write("corrupt_bad_indptr.bin",
+      frame(KIND_PREDICT, sparse_predict(12, b"cells", 0, 2, 4,
+                                         [0, 3, 2], [0, 3, 1], [1.5, -2.0, 0.25])))
+write("corrupt_nan_value.bin",
+      frame(KIND_PREDICT, dense_predict(13, b"gmm", 0, 1, 2,
+                                        [1.0, float("nan")])))
+huge_name = struct.pack("<Q", 14) + struct.pack("<H", 0xFFFF) + b"x" * 16
+write("corrupt_huge_name.bin", frame(KIND_PREDICT, huge_name))
+dim_overflow = struct.pack("<Q", 15) + struct.pack("<H", 1) + b"m"
+dim_overflow += struct.pack("<I", 0) + b"\x00"
+dim_overflow += struct.pack("<II", 0xFFFFFFFF, 0xFFFFFFFF)
+write("corrupt_dim_overflow.bin", frame(KIND_PREDICT, dim_overflow))

@@ -1,0 +1,495 @@
+//! End-to-end serve tests over in-memory pipes: coalescing parity,
+//! deadlines, backpressure, panic isolation + quarantine, hot swap, the
+//! fault catalog, and clean drain-on-shutdown.
+//!
+//! The load-bearing contract: whatever faults hit the neighboring
+//! traffic, a healthy request's assignments are bitwise-identical to a
+//! single-shot `KMedoidsModel::predict_with_dists` against the same
+//! model generation, and the server itself never dies.
+
+use banditpam::data::{synthetic, Points};
+use banditpam::model::{Fit, KMedoidsModel};
+use banditpam::serve::faults::{pipe, FaultPlan, PipeReader, PipeWriter, SlowWriter};
+use banditpam::serve::protocol::{
+    encode_request, parse_response, read_frame, ErrorCode, PredictRequest, Request,
+    Response,
+};
+use banditpam::serve::{AdmissionConfig, Registry, ServeOptions, Server};
+use banditpam::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+// ---- harness -----------------------------------------------------------
+
+struct TestEnv {
+    dir: PathBuf,
+    server: Arc<Server>,
+}
+
+impl Drop for TestEnv {
+    fn drop(&mut self) {
+        self.server.begin_shutdown();
+        self.server.join();
+        std::fs::remove_dir_all(&self.dir).ok();
+    }
+}
+
+fn dense_model(seed: u64) -> KMedoidsModel {
+    let ds = synthetic::gmm(&mut Rng::seed_from(seed), 40, 6, 3, 3.0);
+    Fit::banditpam().k(3).seed(seed).fit(&ds).unwrap()
+}
+
+fn sparse_model(seed: u64) -> KMedoidsModel {
+    let ds = synthetic::scrna_like(&mut Rng::seed_from(seed), 40, 24)
+        .to_sparse()
+        .unwrap();
+    Fit::banditpam().k(3).seed(seed).fit(&ds).unwrap()
+}
+
+/// Spin up a server over freshly fitted dense ("gmm") and sparse
+/// ("cells") models saved under a per-test temp dir.
+fn start(tag: &str, opts: ServeOptions) -> TestEnv {
+    let dir = std::env::temp_dir().join(format!("bp_serve_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dense_model(1).save(&dir.join("gmm.bpmodel")).unwrap();
+    sparse_model(2).save(&dir.join("cells.bpmodel")).unwrap();
+    let registry = Registry::open(&[
+        ("gmm".into(), dir.join("gmm.bpmodel")),
+        ("cells".into(), dir.join("cells.bpmodel")),
+    ])
+    .unwrap();
+    TestEnv { dir, server: Server::new(registry, opts) }
+}
+
+/// A client over an in-memory pipe pair; the server side runs on its own
+/// thread exactly as a TCP connection would.
+struct Client {
+    w: Option<PipeWriter>,
+    r: PipeReader,
+    conn: Option<thread::JoinHandle<()>>,
+}
+
+impl Client {
+    fn connect(server: &Arc<Server>) -> Client {
+        let (cw, sr) = pipe(); // client -> server
+        let (sw, cr) = pipe(); // server -> client
+        let server = Arc::clone(server);
+        let conn = thread::spawn(move || server.handle_connection(sr, sw));
+        Client { w: Some(cw), r: cr, conn: Some(conn) }
+    }
+
+    fn send(&mut self, req: &Request) {
+        self.send_raw(&encode_request(req));
+    }
+
+    fn send_raw(&mut self, bytes: &[u8]) {
+        self.w.as_mut().unwrap().write_all(bytes).unwrap();
+    }
+
+    fn recv(&mut self) -> Response {
+        self.recv_opt().expect("connection closed early")
+    }
+
+    fn recv_opt(&mut self) -> Option<Response> {
+        let (kind, body) = read_frame(&mut self.r).unwrap()?;
+        Some(parse_response(kind, &body).unwrap())
+    }
+
+    /// Hang up the write half and join the server-side reader.
+    fn close(mut self) {
+        drop(self.w.take());
+        if let Some(h) = self.conn.take() {
+            h.join().unwrap();
+        }
+    }
+}
+
+impl Drop for Client {
+    fn drop(&mut self) {
+        // Hang up FIRST so the server-side reader sees EOF and exits —
+        // joining before dropping the write half would deadlock.
+        drop(self.w.take());
+        if let Some(h) = self.conn.take() {
+            h.join().ok();
+        }
+    }
+}
+
+fn predict(id: u64, model: &str, queries: Points) -> Request {
+    Request::Predict(PredictRequest {
+        id,
+        model: model.into(),
+        deadline_ms: 0,
+        queries,
+    })
+}
+
+fn queries_for(seed: u64, n: usize) -> Points {
+    synthetic::gmm(&mut Rng::seed_from(seed), n, 6, 3, 3.0).points
+}
+
+fn assert_bitwise(resp: &Response, model: &KMedoidsModel, queries: &Points) {
+    let Response::Assignments { assign, dists, .. } = resp else {
+        panic!("expected assignments, got {resp:?}")
+    };
+    let (want_a, want_d) = model.predict_with_dists(queries).unwrap();
+    let want_a: Vec<u32> = want_a.iter().map(|&a| a as u32).collect();
+    assert_eq!(assign, &want_a);
+    let got_bits: Vec<u64> = dists.iter().map(|d| d.to_bits()).collect();
+    let want_bits: Vec<u64> = want_d.iter().map(|d| d.to_bits()).collect();
+    assert_eq!(got_bits, want_bits, "distances must be bitwise-identical");
+}
+
+// ---- tests -------------------------------------------------------------
+
+#[test]
+fn coalesced_pipelined_requests_match_single_shot_predict_bitwise() {
+    let env = start("parity", ServeOptions { threads: 2, ..Default::default() });
+    let gmm = dense_model(1);
+    let cells = sparse_model(2);
+    let mut c = Client::connect(&env.server);
+
+    // Pipeline a burst so the batcher actually coalesces: distinct query
+    // sets per request, mixed dense/sparse targets.
+    let dense_qs: Vec<Points> = (0..6).map(|i| queries_for(100 + i, 3 + i as usize)).collect();
+    let sparse_q = synthetic::scrna_like(&mut Rng::seed_from(55), 5, 24)
+        .to_sparse()
+        .unwrap()
+        .points;
+    for (i, q) in dense_qs.iter().enumerate() {
+        c.send(&predict(i as u64, "gmm", q.clone()));
+    }
+    c.send(&predict(99, "cells", sparse_q.clone()));
+
+    let mut got: BTreeMap<u64, Response> = BTreeMap::new();
+    for _ in 0..7 {
+        let resp = c.recv();
+        got.insert(resp.id(), resp);
+    }
+    for (i, q) in dense_qs.iter().enumerate() {
+        assert_bitwise(&got[&(i as u64)], &gmm, q);
+    }
+    assert_bitwise(&got[&99], &cells, &sparse_q);
+}
+
+#[test]
+fn empty_unknown_and_mismatched_predicts_get_typed_rejects() {
+    let env = start("rejects", ServeOptions::default());
+    let mut c = Client::connect(&env.server);
+
+    // empty query set: answered inline with empty assignments
+    c.send(&predict(1, "gmm", queries_for(1, 0)));
+    let Response::Assignments { assign, dists, .. } = c.recv() else { panic!() };
+    assert!(assign.is_empty() && dists.is_empty());
+
+    // unknown model
+    c.send(&predict(2, "nope", queries_for(1, 2)));
+    let Response::Error { id, code, .. } = c.recv() else { panic!() };
+    assert_eq!((id, code), (2, ErrorCode::UnknownModel));
+
+    // wrong dimension (model is 6-d)
+    c.send(&predict(
+        3,
+        "gmm",
+        synthetic::gmm(&mut Rng::seed_from(3), 2, 9, 2, 3.0).points,
+    ));
+    let Response::Error { id, code, message, .. } = c.recv() else { panic!() };
+    assert_eq!((id, code), (3, ErrorCode::BadRequest));
+    assert!(message.contains("dimension"), "{message}");
+
+    // wrong storage kind (dense queries against the sparse model)
+    c.send(&predict(4, "cells", queries_for(4, 2)));
+    let Response::Error { id, code, message, .. } = c.recv() else { panic!() };
+    assert_eq!((id, code), (4, ErrorCode::BadRequest));
+    assert!(message.contains("storage"), "{message}");
+
+    // ping / list-models still fine afterwards
+    c.send(&Request::Ping { id: 5 });
+    assert!(matches!(c.recv(), Response::Pong { id: 5 }));
+    c.send(&Request::ListModels { id: 6 });
+    let Response::ModelList { text, .. } = c.recv() else { panic!() };
+    assert!(text.contains("gmm") && text.contains("cells"), "{text}");
+}
+
+#[test]
+fn deadlines_expire_under_a_stalled_dispatcher() {
+    let env = start(
+        "deadline",
+        ServeOptions {
+            faults: FaultPlan { stall_ms: 80, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    let mut c = Client::connect(&env.server);
+    // 10 ms deadline against an 80 ms injected stall: must expire.
+    c.send(&Request::Predict(PredictRequest {
+        id: 1,
+        model: "gmm".into(),
+        deadline_ms: 10,
+        queries: queries_for(7, 3),
+    }));
+    let Response::Error { id, code, .. } = c.recv() else { panic!() };
+    assert_eq!((id, code), (1, ErrorCode::DeadlineExceeded));
+
+    // A generous deadline survives the same stall.
+    c.send(&Request::Predict(PredictRequest {
+        id: 2,
+        model: "gmm".into(),
+        deadline_ms: 60_000,
+        queries: queries_for(7, 3),
+    }));
+    assert_bitwise(&c.recv(), &dense_model(1), &queries_for(7, 3));
+}
+
+#[test]
+fn backpressure_sheds_with_retry_after_and_answers_everything() {
+    let env = start(
+        "shed",
+        ServeOptions {
+            admission: AdmissionConfig {
+                max_queue_requests: 1,
+                retry_after_ms: 50,
+                ..Default::default()
+            },
+            faults: FaultPlan { stall_ms: 120, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    let mut c = Client::connect(&env.server);
+    let q = queries_for(9, 2);
+    // Burst while the dispatcher is stalled on the first batch: the
+    // 1-deep queue must shed most of the burst.
+    for id in 0..8 {
+        c.send(&predict(id, "gmm", q.clone()));
+    }
+    let mut ok = 0;
+    let mut shed = 0;
+    let mut seen = BTreeMap::new();
+    for _ in 0..8 {
+        match c.recv() {
+            Response::Assignments { id, .. } => {
+                ok += 1;
+                seen.insert(id, "ok");
+            }
+            Response::Error { id, code: ErrorCode::Overloaded, retry_after_ms, .. } => {
+                assert_eq!(retry_after_ms, 50);
+                shed += 1;
+                seen.insert(id, "shed");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    assert_eq!(seen.len(), 8, "every request answered exactly once");
+    assert!(ok >= 1, "the head of the burst is served");
+    assert!(shed >= 1, "the tail of the burst is shed");
+}
+
+#[test]
+fn batch_panics_are_isolated_quarantine_trips_and_reload_recovers() {
+    let env = start(
+        "panic",
+        ServeOptions {
+            admission: AdmissionConfig { quarantine_threshold: 3, ..Default::default() },
+            faults: FaultPlan {
+                panic_on_batches: vec![1, 2, 3],
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let mut c = Client::connect(&env.server);
+    let q = queries_for(11, 3);
+
+    // Three sequential batches, all killed by the injected panic; the
+    // server answers each with a typed Internal error and stays up.
+    for id in 1..=3u64 {
+        c.send(&predict(id, "gmm", q.clone()));
+        let Response::Error { id: rid, code, message, .. } = c.recv() else { panic!() };
+        assert_eq!((rid, code), (id, ErrorCode::Internal));
+        assert!(message.contains("injected fault"), "{message}");
+    }
+
+    // The third consecutive failure quarantined the model: fast reject.
+    c.send(&predict(4, "gmm", q.clone()));
+    let Response::Error { id, code, .. } = c.recv() else { panic!() };
+    assert_eq!((id, code), (4, ErrorCode::Quarantined));
+
+    // The other model is untouched by the quarantine.
+    let sq = synthetic::scrna_like(&mut Rng::seed_from(66), 4, 24)
+        .to_sparse()
+        .unwrap()
+        .points;
+    c.send(&predict(5, "cells", sq.clone()));
+    assert_bitwise(&c.recv(), &sparse_model(2), &sq);
+
+    // Reload clears the quarantine and the next batch (seq 5, past the
+    // fault schedule) serves bitwise-correct answers again.
+    c.send(&Request::Reload { id: 6, name: "gmm".into() });
+    let Response::ReloadAck { text, .. } = c.recv() else { panic!() };
+    assert!(text.contains("gmm: v2"), "{text}");
+    c.send(&predict(7, "gmm", q.clone()));
+    assert_bitwise(&c.recv(), &dense_model(1), &q);
+}
+
+#[test]
+fn hot_swap_is_atomic_and_inflight_batches_finish_on_the_old_model() {
+    let env = start(
+        "hotswap",
+        ServeOptions {
+            faults: FaultPlan { stall_ms: 150, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    let v1 = dense_model(1);
+    let v2 = dense_model(77); // different seed -> different medoids
+    let q = queries_for(13, 4);
+    let mut c = Client::connect(&env.server);
+
+    // P1 enters the dispatcher, pins generation v1, then stalls 150 ms.
+    c.send(&predict(1, "gmm", q.clone()));
+    thread::sleep(Duration::from_millis(40));
+    // The reload lands mid-stall (the reader thread handles it inline).
+    v2.save(&env.dir.join("gmm.bpmodel")).unwrap();
+    c.send(&Request::Reload { id: 2, name: "gmm".into() });
+
+    // Ack arrives first (the reload is not blocked by the stalled batch)...
+    let Response::ReloadAck { id, text } = c.recv() else { panic!() };
+    assert_eq!(id, 2);
+    assert!(text.contains("v2"), "{text}");
+    // ...then P1 completes on the generation it pinned: the OLD model.
+    assert_bitwise(&c.recv(), &v1, &q);
+    // New requests see the new generation.
+    c.send(&predict(3, "gmm", q.clone()));
+    assert_bitwise(&c.recv(), &v2, &q);
+    // Sanity: the two generations genuinely disagree somewhere, or this
+    // test proves nothing.
+    let a1 = v1.predict(&q).unwrap();
+    let a2 = v2.predict(&q).unwrap();
+    let d1 = v1.predict_with_dists(&q).unwrap().1;
+    let d2 = v2.predict_with_dists(&q).unwrap().1;
+    assert!(
+        a1 != a2 || d1.iter().zip(&d2).any(|(x, y)| x.to_bits() != y.to_bits()),
+        "v1 and v2 answer identically; pick different seeds"
+    );
+}
+
+#[test]
+fn corrupt_frames_get_typed_errors_and_the_server_survives() {
+    let env = start("hostile", ServeOptions::default());
+
+    // Tier 1: body-grammar corruption is recoverable on the connection.
+    let mut c = Client::connect(&env.server);
+    let good = encode_request(&predict(21, "gmm", queries_for(17, 2)));
+    let mut nan_body = good.clone();
+    let n = nan_body.len();
+    nan_body[n - 4..].copy_from_slice(&f32::NAN.to_le_bytes());
+    c.send_raw(&nan_body);
+    let Response::Error { id, code, message, .. } = c.recv() else { panic!() };
+    assert_eq!((id, code), (21, ErrorCode::BadRequest));
+    assert!(message.contains("non-finite"), "{message}");
+    // same connection still serves
+    c.send(&predict(22, "gmm", queries_for(17, 2)));
+    assert_bitwise(&c.recv(), &dense_model(1), &queries_for(17, 2));
+
+    // Tier 2: framing corruption is connection-fatal but server-safe.
+    let mut bad = Client::connect(&env.server);
+    let mut mangled = good.clone();
+    mangled[0] = b'X';
+    bad.send_raw(&mangled);
+    let Response::Error { id, code, .. } = bad.recv() else { panic!() };
+    assert_eq!((id, code), (0, ErrorCode::BadRequest));
+    assert!(bad.recv_opt().is_none(), "framing loss closes the connection");
+    bad.close();
+
+    // The server keeps accepting fresh connections afterwards.
+    let mut c2 = Client::connect(&env.server);
+    c2.send(&Request::Ping { id: 30 });
+    assert!(matches!(c2.recv(), Response::Pong { id: 30 }));
+}
+
+#[test]
+fn slow_loris_fragmented_writes_still_serve_correctly() {
+    let env = start("loris", ServeOptions::default());
+    let (cw, sr) = pipe();
+    let (sw, cr) = pipe();
+    let server = Arc::clone(&env.server);
+    let conn = thread::spawn(move || server.handle_connection(sr, sw));
+
+    // Dribble the frames 5 bytes at a time with a delay.
+    let mut slow = SlowWriter { inner: cw, chunk: 5, delay: Duration::from_millis(1) };
+    let q = queries_for(19, 3);
+    slow.write_all(&encode_request(&predict(1, "gmm", q.clone()))).unwrap();
+    slow.write_all(&encode_request(&Request::Ping { id: 2 })).unwrap();
+
+    let mut r = cr;
+    let mut got = Vec::new();
+    for _ in 0..2 {
+        let (kind, body) = read_frame(&mut r).unwrap().unwrap();
+        got.push(parse_response(kind, &body).unwrap());
+    }
+    got.sort_by_key(|resp| resp.id());
+    assert_bitwise(&got[0], &dense_model(1), &q);
+    assert!(matches!(got[1], Response::Pong { id: 2 }));
+    drop(slow);
+    conn.join().unwrap();
+}
+
+#[test]
+fn shutdown_drains_admitted_work_and_acks_last() {
+    let env = start("drain", ServeOptions::default());
+    let mut c = Client::connect(&env.server);
+    let qs: Vec<Points> = (0..4).map(|i| queries_for(23 + i, 2)).collect();
+    for (i, q) in qs.iter().enumerate() {
+        c.send(&predict(i as u64, "gmm", q.clone()));
+    }
+    c.send(&Request::Shutdown { id: 9 });
+
+    let mut resps = Vec::new();
+    while let Some(resp) = c.recv_opt() {
+        resps.push(resp);
+    }
+    // Every admitted predict is answered, and the ack is the very last
+    // frame on the wire (the clean-drain guarantee).
+    assert!(matches!(resps.last(), Some(Response::ShutdownAck { id: 9 })));
+    let answered: Vec<u64> = resps[..resps.len() - 1]
+        .iter()
+        .map(|resp| {
+            assert!(
+                matches!(resp, Response::Assignments { .. }),
+                "pre-shutdown work drains as answers, got {resp:?}"
+            );
+            resp.id()
+        })
+        .collect();
+    let mut sorted = answered.clone();
+    sorted.sort_unstable();
+    assert_eq!(sorted, vec![0, 1, 2, 3]);
+
+    // Post-shutdown predicts are refused with ShuttingDown.
+    env.server.join();
+    let mut late = Client::connect(&env.server);
+    late.send(&predict(50, "gmm", qs[0].clone()));
+    let Response::Error { code, .. } = late.recv() else { panic!() };
+    assert_eq!(code, ErrorCode::ShuttingDown);
+}
+
+#[test]
+fn stats_snapshot_counts_the_traffic() {
+    let env = start("stats", ServeOptions::default());
+    let mut c = Client::connect(&env.server);
+    let q = queries_for(29, 2);
+    c.send(&predict(1, "gmm", q.clone()));
+    c.recv();
+    c.send(&predict(2, "nope", q));
+    c.recv();
+    c.send(&Request::Stats { id: 3 });
+    let Response::Stats { text, .. } = c.recv() else { panic!() };
+    let json = banditpam::util::json::Json::parse(&text).unwrap();
+    assert_eq!(json.get("admitted").and_then(|j| j.as_usize()), Some(1));
+    assert_eq!(json.get("served_ok").and_then(|j| j.as_usize()), Some(1));
+    assert_eq!(json.get("shed").and_then(|j| j.as_usize()), Some(0));
+}
