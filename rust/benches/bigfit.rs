@@ -1,0 +1,142 @@
+//! BigFit bench: the bounded-memory CLARA-style outer loop, in-memory vs
+//! streamed over the same `.mtx` file. Emits `BENCH_bigfit.json` for CI
+//! with the per-sample wall-clock trajectory, peak resident nnz and peak
+//! RSS (VmHWM).
+//!
+//! Acceptance (ISSUE 7): the streamed run is **bitwise identical** to the
+//! in-memory outer loop with the same seed (medoids, assignments, loss
+//! bits), and its recorded peak resident nnz stays under 25% of the
+//! file's total nnz — the bounded-memory claim, asserted here so CI
+//! enforces it.
+
+use banditpam::data::stream::StreamOptions;
+use banditpam::data::{loader, synthetic, Points};
+use banditpam::prelude::*;
+use banditpam::util::timer::Timer;
+
+/// Peak resident set size in KiB from `/proc/self/status` (Linux; 0
+/// elsewhere) — the whole-process complement to the nnz accounting.
+fn peak_rss_kb() -> u64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("VmHWM:"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|v| v.parse().ok())
+        })
+        .unwrap_or(0)
+}
+
+fn main() {
+    let scale = banditpam::bench::Scale::from_env();
+    println!("== bigfit benches ({scale:?}) ==");
+
+    let n = scale.pick(2_000, 8_000, 20_000);
+    let genes = scale.pick(128, 512, 1024);
+    let k = 5usize;
+    let samples = scale.pick(3, 5, 5);
+    let ds = synthetic::scrna_sparse(&mut Rng::seed_from(42), n, genes, 0.10);
+    let Points::Sparse(csr) = &ds.points else { unreachable!() };
+    let total_nnz = csr.nnz();
+    let mtx = std::env::temp_dir().join(format!(
+        "banditpam_bench_bigfit_{}.mtx",
+        std::process::id()
+    ));
+    loader::save_mtx(&ds, &mtx).expect("write bench .mtx");
+    println!("dataset: {} -> {} ({total_nnz} nnz)", ds.name, mtx.display());
+
+    let big = Fit::banditpam().metric(Metric::L1).k(k).seed(7).threads(4).big().samples(samples);
+
+    // --- in-memory outer loop (the reference) --------------------------
+    let loaded = loader::load_mtx(&mtx, false, 0).expect("in-memory load");
+    let t = Timer::start();
+    let (mem_model, mem_stats) = big.fit_with_stats(&loaded).expect("in-memory bigfit");
+    let mem_secs = t.secs();
+    println!(
+        "bigfit in-memory: n={n} k={k} samples={samples} loss={:.3} {mem_secs:.3}s",
+        mem_model.loss()
+    );
+
+    // --- streamed outer loop over the same file ------------------------
+    let chunk = (total_nnz / 16).max(1);
+    let opts = StreamOptions { chunk_nnz: chunk, ..Default::default() };
+    let t = Timer::start();
+    let (st_model, st_stats) = big.fit_streamed(&mtx, &opts).expect("streamed bigfit");
+    let st_secs = t.secs();
+    println!(
+        "bigfit streamed : n={n} k={k} samples={samples} loss={:.3} {st_secs:.3}s \
+         (chunk {chunk} nnz)",
+        st_model.loss()
+    );
+
+    // Bitwise parity: same medoids, same assignments, same loss bits.
+    assert_eq!(
+        mem_model.clustering().medoids,
+        st_model.clustering().medoids,
+        "medoid parity"
+    );
+    assert_eq!(
+        mem_model.clustering().assignments,
+        st_model.clustering().assignments,
+        "assignment parity"
+    );
+    assert_eq!(
+        mem_model.loss().to_bits(),
+        st_model.loss().to_bits(),
+        "loss bit parity"
+    );
+    assert_eq!(
+        mem_model.clustering().stats.distance_evals,
+        st_model.clustering().stats.distance_evals,
+        "eval counter parity"
+    );
+    println!("bigfit parity in-memory vs streamed: identical");
+
+    // Bounded memory: the streamed loop's working set (sample + window /
+    // medoids + window) stays well under the full matrix.
+    assert!(
+        st_stats.peak_resident_nnz * 4 < total_nnz,
+        "peak resident {} nnz >= 25% of total {total_nnz}",
+        st_stats.peak_resident_nnz
+    );
+    println!(
+        "residency: peak {} of {total_nnz} nnz ({:.1}%), peak window {} nnz, VmHWM {} KiB",
+        st_stats.peak_resident_nnz,
+        100.0 * st_stats.peak_resident_nnz as f64 / total_nnz as f64,
+        st_stats.peak_window_nnz,
+        peak_rss_kb()
+    );
+
+    let mut json_rows: Vec<String> = Vec::new();
+    for (mode, stats, secs) in
+        [("in-memory", &mem_stats, mem_secs), ("streamed", &st_stats, st_secs)]
+    {
+        json_rows.push(format!(
+            "{{\"kind\": \"bigfit\", \"mode\": \"{mode}\", \"n\": {n}, \"d\": {genes}, \
+             \"k\": {k}, \"samples\": {samples}, \"sample_size\": {}, \
+             \"total_nnz\": {total_nnz}, \"chunk_nnz\": {chunk}, \
+             \"peak_resident_nnz\": {}, \"peak_window_nnz\": {}, \
+             \"peak_rss_kb\": {}, \"secs\": {secs:.9}}}",
+            stats.sample_size,
+            stats.peak_resident_nnz,
+            stats.peak_window_nnz,
+            peak_rss_kb()
+        ));
+        for tr in &stats.trajectory {
+            json_rows.push(format!(
+                "{{\"kind\": \"trajectory\", \"mode\": \"{mode}\", \"sample\": {}, \
+                 \"loss\": {}, \"subsample_secs\": {:.9}, \"fit_secs\": {:.9}, \
+                 \"eval_secs\": {:.9}}}",
+                tr.sample, tr.loss, tr.subsample_secs, tr.fit_secs, tr.eval_secs
+            ));
+        }
+    }
+
+    let doc = format!("[\n  {}\n]\n", json_rows.join(",\n  "));
+    match std::fs::write("BENCH_bigfit.json", &doc) {
+        Ok(()) => println!("wrote BENCH_bigfit.json"),
+        Err(e) => println!("BENCH_bigfit.json: write failed ({e})"),
+    }
+    let _ = std::fs::remove_file(&mtx);
+}

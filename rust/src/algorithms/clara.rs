@@ -5,11 +5,18 @@
 //! dataset, and keeps the best. Fast but sacrifices quality — in the
 //! paper's taxonomy it belongs to the "trade quality for runtime" family
 //! CLARANS also lives in.
+//!
+//! The evaluation path is the tiled [`loss_and_assignments_with`]
+//! primitive (one reused `k x REF_TILE` scratch across samples, not a
+//! fresh `k x n` block per sample), and the winning sample's loss and
+//! assignments are threaded through [`Clustering::finalize_with`], so the
+//! full-dataset `n x k` pass runs exactly once per candidate — never a
+//! second time for the winner.
 
 use crate::algorithms::matrix_cache::{exact_build, FullMatrix, MatState};
 use crate::algorithms::pam::swap_until_converged;
 use crate::algorithms::{check_fit_args, degenerate_fit, Clustering, FitStats, KMedoids};
-use crate::runtime::backend::DistanceBackend;
+use crate::runtime::backend::{loss_and_assignments_with, DistanceBackend, EvalBuffers};
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 
@@ -34,6 +41,17 @@ impl Clara {
     }
 }
 
+/// The effective subsample size: the classical `40 + 2k` default (or the
+/// explicit override), clamped to `n`. Shared with the BigFit outer loop
+/// so both spellings of "CLARA-style sampling" agree.
+pub(crate) fn effective_sample_size(sample_size: usize, k: usize, n: usize) -> usize {
+    if sample_size == 0 {
+        (40 + 2 * k).min(n)
+    } else {
+        sample_size.min(n)
+    }
+}
+
 impl KMedoids for Clara {
     fn name(&self) -> &'static str {
         "clara"
@@ -50,50 +68,60 @@ impl KMedoids for Clara {
             return Ok(c);
         }
         let timer = Timer::start();
-        let start = backend.counter().get();
         let n = backend.n();
-        let ssize = if self.sample_size == 0 { (40 + 2 * k).min(n) } else { self.sample_size.min(n) };
+        let ssize = effective_sample_size(self.sample_size, k, n);
         if ssize <= k {
             return Err(crate::error::Error::invalid_argument(format!(
                 "sample size {ssize} must exceed k {k}"
             )));
         }
 
-        let mut best: Option<(f64, Vec<usize>)> = None;
+        let counter = backend.counter();
+        let mut bufs = EvalBuffers::new();
+        let mut best: Option<(f64, Vec<usize>, Vec<usize>)> = None;
+        let mut build_evals = 0u64;
+        let mut eval_evals = 0u64;
+        let mut swap_iters = 0usize;
+        let mut swaps_applied = 0usize;
         for _ in 0..self.samples {
             let subset = rng.sample_indices(n, ssize);
+            // Fit the subsample (exact PAM over its cached pair matrix).
+            let fit_start = counter.get();
             let m = FullMatrix::compute_subset(backend, &subset);
             let mut st = MatState::empty(ssize);
             exact_build(&m, k, &mut st);
-            swap_until_converged(&m, &mut st, 100);
-            let medoids: Vec<usize> = st.medoids.iter().map(|&i| subset[i]).collect();
-            // Evaluate on the full dataset (n*k evaluations).
-            let mut loss = 0.0;
-            let refs: Vec<usize> = (0..n).collect();
-            let mut rows = vec![0.0f64; k * n];
-            backend.block(&medoids, &refs, &mut rows);
-            for j in 0..n {
-                let mut m1 = f64::INFINITY;
-                for r in 0..k {
-                    m1 = m1.min(rows[r * n + j]);
-                }
-                loss += m1;
-            }
-            if best.as_ref().map(|(l, _)| loss < *l).unwrap_or(true) {
-                best = Some((loss, medoids));
+            let (iters, applied) = swap_until_converged(&m, &mut st, 100);
+            build_evals += counter.get() - fit_start;
+            swap_iters += iters;
+            swaps_applied += applied;
+            // Map to global indices, sorted ascending — the order the
+            // final assignments must index.
+            let mut medoids: Vec<usize> = st.medoids.iter().map(|&i| subset[i]).collect();
+            medoids.sort_unstable();
+            // Score on the full dataset (k*n evaluations) through the
+            // reused tile; memory is bounded by the tile, not by n.
+            let eval_start = counter.get();
+            let (loss, assignments) = loss_and_assignments_with(backend, &medoids, &mut bufs);
+            eval_evals += counter.get() - eval_start;
+            if best.as_ref().map(|(l, _, _)| loss < *l).unwrap_or(true) {
+                best = Some((loss, medoids, assignments));
             }
         }
 
-        let (_, medoids) = best.unwrap();
-        let evals = backend.counter().get() - start;
+        let (loss, medoids, assignments) = best.unwrap();
         let stats = FitStats {
-            build_evals: evals,
-            swap_iters: self.samples,
-            iters_plus_one: self.samples + 1,
+            build_evals,
+            eval_evals,
+            samples: self.samples,
+            swap_iters,
+            swaps_applied,
+            iters_plus_one: swap_iters + 1,
             wall_secs: timer.secs(),
             ..Default::default()
         };
-        Ok(Clustering::finalize(backend, medoids, stats))
+        // The winner's loss/assignments were already computed above —
+        // finalize without repeating the n x k pass.
+        Ok(Clustering::finalize_with(backend, medoids, loss, assignments, stats))
     }
 }
 
@@ -135,5 +163,48 @@ mod tests {
         let mut clara = Clara { samples: 2, sample_size: 500 };
         let fit = clara.fit(&backend, 2, &mut Rng::seed_from(2)).unwrap();
         assert_eq!(fit.medoids.len(), 2);
+    }
+
+    /// The winner is evaluated on the full dataset exactly once: the
+    /// backend counter must read samples * (ssize^2 + k*n) on the nose —
+    /// the subsample pair matrices plus one scoring pass per candidate,
+    /// with no extra pass for the winning sample at finalize.
+    #[test]
+    fn clara_evaluates_each_candidate_exactly_once() {
+        let (n, k, samples) = (150usize, 3usize, 4usize);
+        let ds = synthetic::gmm(&mut Rng::seed_from(53), n, 4, k, 4.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let mut clara = Clara { samples, sample_size: 0 };
+        let fit = clara.fit(&backend, k, &mut Rng::seed_from(3)).unwrap();
+        let ssize = 40 + 2 * k;
+        let expect = (samples * (ssize * ssize + k * n)) as u64;
+        assert_eq!(backend.counter().get(), expect, "one full-dataset pass per candidate");
+        assert_eq!(fit.stats.distance_evals, expect);
+    }
+
+    /// Stats land in the right fields: subsample fits in `build_evals`,
+    /// full-dataset scoring in `eval_evals`, the sample count in
+    /// `samples` (not `swap_iters`, which now counts inner PAM SWAP
+    /// iterations honestly).
+    #[test]
+    fn clara_stats_attribute_work_honestly() {
+        let (n, k, samples) = (120usize, 2usize, 5usize);
+        let ds = synthetic::gmm(&mut Rng::seed_from(54), n, 4, k, 4.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let fit = Clara::new().fit(&backend, k, &mut Rng::seed_from(4)).unwrap();
+        let ssize = 40 + 2 * k;
+        assert_eq!(fit.stats.build_evals, (samples * ssize * ssize) as u64);
+        assert_eq!(fit.stats.eval_evals, (samples * k * n) as u64);
+        assert_eq!(fit.stats.samples, samples);
+        assert_eq!(fit.stats.swap_evals, 0);
+        assert_eq!(
+            fit.stats.distance_evals,
+            fit.stats.build_evals + fit.stats.eval_evals
+        );
+        // inner SWAP iterations, not the sample count: every sample runs
+        // at least one (possibly convergence-only) iteration
+        assert!(fit.stats.swap_iters >= samples);
+        assert_eq!(fit.stats.iters_plus_one, fit.stats.swap_iters + 1);
+        assert!(fit.stats.swaps_applied <= fit.stats.swap_iters);
     }
 }

@@ -26,10 +26,15 @@ pub struct FitStats {
     /// Total distance evaluations consumed by the algorithm itself
     /// (excludes the final loss/assignment computation).
     pub distance_evals: u64,
-    /// Evaluations spent in the BUILD / initialization phase.
+    /// Evaluations spent in the BUILD / initialization phase (for
+    /// sampling outer loops: fitting the subsamples).
     pub build_evals: u64,
     /// Evaluations spent in SWAP / refinement.
     pub swap_evals: u64,
+    /// Evaluations spent scoring candidate medoid sets against the full
+    /// dataset (CLARA/BigFit outer loops; 0 for single-candidate
+    /// algorithms).
+    pub eval_evals: u64,
     /// Evaluations the SWAP session served from its cross-iteration row
     /// cache instead of recomputing (0 for algorithms without one).
     pub swap_evals_saved: u64,
@@ -37,6 +42,8 @@ pub struct FitStats {
     pub swap_iters: usize,
     /// Swaps actually applied.
     pub swaps_applied: usize,
+    /// Subsamples drawn and fitted (CLARA/BigFit; 0 otherwise).
+    pub samples: usize,
     /// Wall-clock seconds for the whole fit.
     pub wall_secs: f64,
     /// Per-iteration normalizer the paper uses for Figures 1b/2/3:
@@ -77,8 +84,50 @@ impl Clustering {
         mut stats: FitStats,
     ) -> Clustering {
         medoids.sort_unstable();
-        stats.distance_evals = stats.build_evals + stats.swap_evals;
+        stats.distance_evals = stats.build_evals + stats.swap_evals + stats.eval_evals;
         let (loss, assignments) = loss_and_assignments(backend, &medoids);
+        Clustering { medoids, assignments, loss, stats }
+    }
+
+    /// Like [`Clustering::finalize`], but trusts a `(loss, assignments)`
+    /// pair the caller already computed over exactly this medoid set —
+    /// sampling outer loops (CLARA, BigFit) score every candidate on the
+    /// full dataset anyway, so re-running the `n x k` pass on the winner
+    /// would double its cost. `medoids` must already be sorted ascending
+    /// (the order `assignments` indexes).
+    ///
+    /// Debug builds verify the claim bitwise against a fresh evaluation,
+    /// then un-count the verification's distance evaluations so debug and
+    /// release builds report identical counter totals.
+    pub fn finalize_with(
+        backend: &dyn DistanceBackend,
+        medoids: Vec<usize>,
+        loss: f64,
+        assignments: Vec<usize>,
+        mut stats: FitStats,
+    ) -> Clustering {
+        debug_assert!(
+            medoids.windows(2).all(|w| w[0] < w[1]),
+            "finalize_with requires strictly increasing medoids"
+        );
+        stats.distance_evals = stats.build_evals + stats.swap_evals + stats.eval_evals;
+        #[cfg(not(debug_assertions))]
+        let _ = backend;
+        #[cfg(debug_assertions)]
+        {
+            let before = backend.counter().get();
+            let (want_loss, want_assign) = loss_and_assignments(backend, &medoids);
+            assert_eq!(
+                loss.to_bits(),
+                want_loss.to_bits(),
+                "finalize_with: caller loss diverges from a fresh evaluation"
+            );
+            assert_eq!(
+                assignments, want_assign,
+                "finalize_with: caller assignments diverge from a fresh evaluation"
+            );
+            backend.counter().sub(backend.counter().get() - before);
+        }
         Clustering { medoids, assignments, loss, stats }
     }
 
@@ -247,6 +296,32 @@ mod tests {
         assert!(c.loss > 0.0);
         assert_eq!(c.assignments[2], 0);
         assert_eq!(c.assignments[9], 1);
+    }
+
+    /// `finalize_with` must reproduce `finalize`'s result exactly while
+    /// leaving the evaluation counter where the caller's own evaluation
+    /// left it (the debug verification un-counts itself).
+    #[test]
+    fn finalize_with_trusts_precomputed_results_without_recounting() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(11), 30, 4, 2, 3.0);
+        let b = NativeBackend::new(&ds.points, Metric::L2);
+        let via_finalize = Clustering::finalize(&b, vec![9, 2], FitStats::default());
+        b.counter().reset();
+        let (loss, assignments) =
+            crate::runtime::backend::loss_and_assignments(&b, &[2, 9]);
+        let after_eval = b.counter().get();
+        assert_eq!(after_eval, 2 * 30);
+        let stats = FitStats { eval_evals: after_eval, ..Default::default() };
+        let c = Clustering::finalize_with(&b, vec![2, 9], loss, assignments, stats);
+        assert_eq!(
+            b.counter().get(),
+            after_eval,
+            "finalize_with must not add evaluations (debug verification un-counts)"
+        );
+        assert_eq!(c.medoids, via_finalize.medoids);
+        assert_eq!(c.assignments, via_finalize.assignments);
+        assert_eq!(c.loss.to_bits(), via_finalize.loss.to_bits());
+        assert_eq!(c.stats.distance_evals, 2 * 30);
     }
 
     #[test]

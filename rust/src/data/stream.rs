@@ -488,6 +488,12 @@ impl CsrChunkReader {
         }
         self.cursor += 1;
         let matrix = CsrMatrix::from_triplet_vec(end - start, self.cols, triplets);
+        // Raw window iteration (the BigFit evaluation pass) holds one
+        // window at a time; record that so `stats().peak_resident_nnz`
+        // reflects every consumption pattern, not just the helpers below
+        // (which overwrite this with their larger selected+window /
+        // full-assembly figures).
+        self.peak_resident_nnz = self.peak_resident_nnz.max(matrix.nnz());
         Ok(Some(CsrWindow { start_row: start, matrix }))
     }
 

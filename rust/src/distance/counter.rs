@@ -27,6 +27,14 @@ impl DistanceCounter {
         self.count.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Un-record `n` evaluations. Used by debug-only verification passes
+    /// (`Clustering::finalize_with`) so debug and release builds report
+    /// identical totals; not part of the measurement API.
+    #[inline]
+    pub(crate) fn sub(&self, n: u64) {
+        self.count.fetch_sub(n, Ordering::Relaxed);
+    }
+
     /// Current total.
     pub fn get(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
@@ -50,6 +58,14 @@ mod tests {
         assert_eq!(c.get(), 12);
         c.reset();
         assert_eq!(c.get(), 0);
+    }
+
+    #[test]
+    fn sub_reverses_add() {
+        let c = DistanceCounter::new();
+        c.add(10);
+        c.sub(4);
+        assert_eq!(c.get(), 6);
     }
 
     #[test]

@@ -96,7 +96,7 @@ pub mod prelude {
     pub use crate::data::{synthetic, Dataset, Points};
     pub use crate::distance::{counter::DistanceCounter, Metric};
     pub use crate::error::{Error, Result};
-    pub use crate::model::{Fit, KMedoidsModel};
+    pub use crate::model::{BigFit, BigFitStats, Fit, KMedoidsModel};
     pub use crate::runtime::backend::{DistanceBackend, NativeBackend};
     pub use crate::util::rng::Rng;
 }

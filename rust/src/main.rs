@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   cluster        fit k medoids on a CSV / synthetic dataset
+//!   bigfit         bounded-memory CLARA-style fit over a streamed .mtx
 //!   predict        assign points to the medoids of a saved model
 //!   serve          long-lived prediction server over saved models
 //!   experiment     regenerate a paper table/figure (see DESIGN.md)
@@ -24,7 +25,7 @@ use banditpam::bench::Scale;
 use banditpam::data::stream::{self, StreamOptions};
 use banditpam::data::{loader, synthetic, Dataset, Points};
 use banditpam::distance::Metric;
-use banditpam::model::KMedoidsModel;
+use banditpam::model::{Fit, KMedoidsModel};
 use banditpam::runtime::backend::NativeBackend;
 use banditpam::runtime::executable::Client;
 use banditpam::runtime::manifest::Manifest;
@@ -60,6 +61,11 @@ USAGE:
                     [--metric l2|l1|cosine|tree] [--algo NAME] [--seed S]
                     [--backend native|xla] [--threads T] [--verbose]
                     [--save-model FILE]
+  banditpam bigfit  [--data FILE | --synthetic NAME] [--format csv|mtx|idx]
+                    [--limit L] [--transpose] [--stream] [--chunk-nnz B]
+                    [--n N] [--k K] [--metric l2|l1|cosine|tree] [--algo NAME]
+                    [--samples S] [--sample-size Z] [--seed S] [--threads T]
+                    [--save-model FILE] [--verbose]
   banditpam predict --model FILE [--data FILE | --synthetic NAME]
                     [--format csv|mtx|idx] [--limit L] [--transpose]
                     [--n N] [--seed S] [--threads T] [--out FILE] [--verbose]
@@ -98,6 +104,14 @@ STREAMING:   .mtx files >= 256 MiB stream through the out-of-core chunked
              sets the per-window entry budget (default 1048576, implies
              --stream) — results are bitwise-identical to the in-memory
              loader
+BIGFIT:      CLARA-style outer loop around any --algo: draw --samples
+             subsamples of --sample-size rows (0 = classic 40+2k), fit
+             each in memory, score every candidate against the full
+             dataset window by window, keep the best. With --stream /
+             --chunk-nnz on an .mtx file the full dataset is never
+             resident — peak memory is the sample, the k medoid rows and
+             one window — and the result is bitwise-identical to the
+             in-memory run with the same seed.
 EXPERIMENTS: fig1a fig1b fig2 fig3 appfig1 appfig2 appfig34 appfig5
              headline ablations (see DESIGN.md for the paper mapping)
 ",
@@ -261,6 +275,109 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             algo_name.as_str(),
             fingerprint,
         )?;
+        model.save(Path::new(path))?;
+        println!("model saved   : {path} ({} bytes)", std::fs::metadata(path)?.len());
+    }
+    Ok(())
+}
+
+/// `banditpam bigfit`: the bounded-memory CLARA-style outer loop. With
+/// `--stream`/`--chunk-nnz` on an `.mtx` file the dataset is consumed as
+/// row-windows and never loaded whole; otherwise it runs in memory over
+/// any dataset `cluster` accepts — same result bits either way.
+fn cmd_bigfit(args: &Args) -> Result<()> {
+    let seed: u64 = args.get_parsed("seed", 42u64)?;
+    let k: usize = args.get_parsed("k", 5usize)?;
+    let metric = Metric::parse(args.get("metric").unwrap_or("l2"))
+        .ok_or_else(|| Error::invalid_argument("bad --metric (l2|l1|cosine|tree)"))?;
+    let algo_name = args.get("algo").unwrap_or("banditpam").to_string();
+    let threads: usize = args.get_parsed(
+        "threads",
+        banditpam::experiments::harness::default_threads(),
+    )?;
+    let samples: usize = args.get_parsed("samples", 5usize)?;
+    let sample_size: usize = args.get_parsed("sample-size", 0usize)?;
+    let big = Fit::algorithm(&algo_name)?
+        .metric(metric)
+        .k(k)
+        .seed(seed)
+        .threads(threads)
+        .big()
+        .samples(samples)
+        .sample_size(sample_size);
+
+    let streamed = args.flag("stream") || args.get("chunk-nnz").is_some();
+    let (model, stats, source) = if streamed {
+        let path = args.get("data").ok_or_else(|| {
+            Error::invalid_argument(
+                "--stream/--chunk-nnz require --data FILE.mtx (synthetic datasets are generated in memory)",
+            )
+        })?;
+        let format = match args.get("format") {
+            Some(s) => DataFormat::parse(s).ok_or_else(|| {
+                Error::invalid_argument(format!("bad --format {s:?} (csv|mtx|idx)"))
+            })?,
+            None => DataFormat::infer(path),
+        };
+        if format != DataFormat::Mtx {
+            return Err(Error::invalid_argument(format!(
+                "--stream/--chunk-nnz require --format mtx (got {format})"
+            )));
+        }
+        let opts = StreamOptions {
+            chunk_nnz: args.get_parsed("chunk-nnz", stream::DEFAULT_CHUNK_NNZ)?,
+            transpose: args.flag("transpose"),
+            limit: args.get_parsed("limit", 0usize)?,
+        };
+        let (model, stats) = big.fit_streamed(Path::new(path), &opts)?;
+        (model, stats, format!("{path} (streamed)"))
+    } else {
+        let mut rng = Rng::seed_from(seed);
+        let ds = make_dataset(args, &mut rng)?;
+        if !metric.supports(&ds.points) {
+            return Err(Error::invalid_argument(format!(
+                "--metric {metric} does not support {} points (dataset {})",
+                ds.points.kind(),
+                ds.name
+            )));
+        }
+        let name = ds.name.clone();
+        let (model, stats) = big.fit_with_stats(&ds)?;
+        (model, stats, name)
+    };
+
+    println!(
+        "bigfit        : {source} (n={}, algo={algo_name}, metric={metric}, k={k}, \
+         {} samples x {} rows)",
+        stats.n_rows, stats.samples, stats.sample_size
+    );
+    println!("medoids       : {:?}", model.clustering().medoids);
+    println!("loss          : {:.4}", model.loss());
+    println!(
+        "distance evals: {} ({} sample fits + {} full-dataset scoring)",
+        model.clustering().stats.distance_evals,
+        model.clustering().stats.build_evals,
+        model.clustering().stats.eval_evals
+    );
+    if stats.total_nnz > 0 {
+        println!(
+            "residency     : peak {} of {} nnz ({:.1}%), peak window {} nnz",
+            stats.peak_resident_nnz,
+            stats.total_nnz,
+            100.0 * stats.peak_resident_nnz as f64 / stats.total_nnz.max(1) as f64,
+            stats.peak_window_nnz
+        );
+    }
+    println!("wall time     : {:.3}s", stats.wall_secs);
+    if args.flag("verbose") {
+        for t in &stats.trajectory {
+            println!(
+                "  sample {:>2}  : loss {:.4} (draw {:.3}s, fit {:.3}s, eval {:.3}s)",
+                t.sample, t.loss, t.subsample_secs, t.fit_secs, t.eval_secs
+            );
+        }
+    }
+    if let Some(path) = args.get("save-model") {
         model.save(Path::new(path))?;
         println!("model saved   : {path} ({} bytes)", std::fs::metadata(path)?.len());
     }
@@ -527,6 +644,7 @@ fn cmd_info() -> Result<()> {
 fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("cluster") => cmd_cluster(args),
+        Some("bigfit") => cmd_bigfit(args),
         Some("predict") => cmd_predict(args),
         Some("serve") => cmd_serve(args),
         Some("experiment") => cmd_experiment(args),

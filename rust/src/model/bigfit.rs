@@ -1,0 +1,539 @@
+//! BigFit: bounded-memory CLARA-style training over datasets that never
+//! sit in memory as a whole.
+//!
+//! CLARA's insight (PAM on subsamples, score every candidate on the full
+//! dataset, keep the best) only needs two memory-bounded ingredients: a
+//! subsample draw and a full-dataset evaluation. The streamed subsampler
+//! ([`CsrChunkReader::subsample_rows`]) provides the first at
+//! `selected + one window` residency, and the window-at-a-time evaluation
+//! primitive ([`loss_and_assignments_streamed`]) provides the second at
+//! `k medoid rows + one window` residency — so the whole outer loop runs
+//! with peak value residency `max(sample + window, medoids + window)`,
+//! never the full matrix.
+//!
+//! [`BigFit`] wraps any registered algorithm (a configured [`Fit`],
+//! upgraded via [`Fit::big`]): each round draws one subsample, fits the
+//! inner algorithm on it in memory, extracts the winning medoid *rows*
+//! (bit-copies of the full dataset's rows), drops the sample, and scores
+//! the candidate over the full dataset window by window. The in-memory
+//! ([`BigFit::fit`]) and streamed ([`BigFit::fit_streamed`]) paths are
+//! **bitwise-identical by construction**:
+//!
+//! * the index draw is the same single `rng.sample_indices(n, ssize)` call,
+//!   and the streamed sample assembles to the same bits as
+//!   `Points::select` on those indices (pinned since the PR 4 parity
+//!   suite), so the inner fits see identical inputs and consume identical
+//!   rng — draw/fit/eval interleave per sample, keeping the streams in
+//!   lockstep;
+//! * evaluation folds the same cross row kernels in the same global row
+//!   order through [`WindowFold`](crate::runtime::backend::WindowFold),
+//!   where window boundaries never change bits.
+//!
+//! The result is a normal [`KMedoidsModel`] built from the extracted
+//! medoid rows ([`KMedoidsModel::from_extracted`]): predict, persistence
+//! and serving work unchanged, and predicting the training stream
+//! reproduces the stored assignments bit for bit.
+
+use super::{Fit, KMedoidsModel};
+use crate::algorithms::clara::effective_sample_size;
+use crate::algorithms::{Clustering, FitStats, KMedoids};
+use crate::data::stream::{CsrChunkReader, StreamOptions, StreamStats};
+use crate::data::{Dataset, Points};
+use crate::error::{Error, Result};
+use crate::runtime::backend::{loss_and_assignments_streamed, DistanceBackend, NativeBackend};
+use crate::runtime::pool::ThreadPool;
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Rows per evaluation window on the in-memory path. Any value gives the
+/// same bits (per-reference-independent kernels, global-row-order fold);
+/// this one keeps the window copy around a few MiB of dense f32s.
+const EVAL_WINDOW_ROWS: usize = 4096;
+
+/// The CLARA-style outer loop around a configured [`Fit`]. Construct via
+/// [`Fit::big`], tune with [`BigFit::samples`] / [`BigFit::sample_size`],
+/// run with [`BigFit::fit`] (in-memory dataset) or
+/// [`BigFit::fit_streamed`] (out-of-core `.mtx`).
+#[derive(Debug, Clone)]
+pub struct BigFit {
+    inner: Fit,
+    samples: usize,
+    sample_size: usize,
+}
+
+/// Per-sample trace of one BigFit round, for the wall-clock trajectory.
+#[derive(Debug, Clone)]
+pub struct SampleTrace {
+    /// Round index, `0..samples`.
+    pub sample: usize,
+    /// Full-dataset loss of this round's candidate medoid set.
+    pub loss: f64,
+    /// Seconds drawing (and, streamed, collecting) the subsample.
+    pub subsample_secs: f64,
+    /// Seconds fitting the inner algorithm on the sample.
+    pub fit_secs: f64,
+    /// Seconds scoring the candidate over the full dataset.
+    pub eval_secs: f64,
+}
+
+/// Memory/time accounting for a BigFit run — the numbers the
+/// bounded-memory claim is about.
+#[derive(Debug, Clone)]
+pub struct BigFitStats {
+    /// Rounds run.
+    pub samples: usize,
+    /// Effective subsample size (after the `40 + 2k` default / clamping).
+    pub sample_size: usize,
+    /// Full dataset rows.
+    pub n_rows: usize,
+    /// Raw entries of the full dataset (sparse sources; 0 for dense).
+    pub total_nnz: usize,
+    /// Largest single row-window, in raw entries (streamed; 0 in-memory).
+    pub peak_window_nnz: usize,
+    /// Peak resident values across every pass: streamed, the largest
+    /// `selected + window` / `medoids + window` working set; in-memory,
+    /// the whole matrix (which *is* resident there).
+    pub peak_resident_nnz: usize,
+    /// One entry per round, in order.
+    pub trajectory: Vec<SampleTrace>,
+    /// Total wall-clock seconds.
+    pub wall_secs: f64,
+}
+
+/// What the outer loop needs from a dataset: a subsample draw and a
+/// window-by-window candidate evaluation, each reporting residency.
+trait Source {
+    /// Full dataset rows.
+    fn n(&self) -> usize;
+    /// Draw `ssize` rows without replacement — the identical rng call and
+    /// resulting bits on every implementation.
+    fn draw(&mut self, ssize: usize, rng: &mut Rng) -> Result<(Points, Vec<usize>)>;
+    /// Score `medoid_backend`'s k rows against the full dataset.
+    /// `medoid_nnz` is the candidate's resident raw-entry count, folded
+    /// into the residency peak alongside the windows.
+    fn eval(
+        &mut self,
+        medoid_backend: &NativeBackend<'_>,
+        medoid_nnz: usize,
+    ) -> Result<(f64, Vec<usize>)>;
+    /// Raw entries of the full dataset (0 when dense / unknown).
+    fn total_nnz(&self) -> usize;
+    /// Largest row-window seen (0 in-memory).
+    fn peak_window_nnz(&self) -> usize;
+    /// Peak resident raw entries across the passes so far.
+    fn peak_resident_nnz(&self) -> usize;
+}
+
+/// Raw entries a [`Points`] holds (dense/tree storage reports 0 — the
+/// residency accounting is a sparse-workload concern).
+fn nnz_of(points: &Points) -> usize {
+    match points {
+        Points::Sparse(m) => m.nnz(),
+        _ => 0,
+    }
+}
+
+/// In-memory source: draws via `Points::select` on the one
+/// `sample_indices` call, evaluates over fixed-size row ranges of the
+/// resident matrix — the same window-fold code path the streamed source
+/// uses, so dense and CSV data run through identical evaluation code.
+struct MemSource<'d> {
+    points: &'d Points,
+}
+
+impl Source for MemSource<'_> {
+    fn n(&self) -> usize {
+        self.points.len()
+    }
+
+    fn draw(&mut self, ssize: usize, rng: &mut Rng) -> Result<(Points, Vec<usize>)> {
+        let idx = rng.sample_indices(self.points.len(), ssize);
+        // Draw order, not sorted — `CsrChunkReader::subsample_rows`
+        // assembles in draw order, and bitwise parity needs both paths to
+        // agree on row order.
+        Ok((self.points.select(&idx), idx))
+    }
+
+    fn eval(
+        &mut self,
+        medoid_backend: &NativeBackend<'_>,
+        _medoid_nnz: usize,
+    ) -> Result<(f64, Vec<usize>)> {
+        let n = self.points.len();
+        let mut start = 0usize;
+        loss_and_assignments_streamed(medoid_backend, n, || {
+            if start == n {
+                return Ok(None);
+            }
+            let end = (start + EVAL_WINDOW_ROWS).min(n);
+            let idx: Vec<usize> = (start..end).collect();
+            let window = self.points.select(&idx);
+            let s = start;
+            start = end;
+            Ok(Some((s, window)))
+        })
+    }
+
+    fn total_nnz(&self) -> usize {
+        nnz_of(self.points)
+    }
+
+    fn peak_window_nnz(&self) -> usize {
+        0
+    }
+
+    fn peak_resident_nnz(&self) -> usize {
+        // The matrix is simply resident here; report that honestly.
+        nnz_of(self.points)
+    }
+}
+
+/// Out-of-core source: every draw/eval re-opens the `.mtx` through a
+/// fresh [`CsrChunkReader`] (both consumption patterns require one), and
+/// the reader's own residency counters accumulate into the run-wide peak.
+struct StreamSource {
+    path: PathBuf,
+    opts: StreamOptions,
+    rows: usize,
+    kept_nnz: usize,
+    peak_window_nnz: usize,
+    peak_resident_nnz: usize,
+}
+
+impl StreamSource {
+    fn new(path: &Path, opts: StreamOptions) -> Result<StreamSource> {
+        let reader = CsrChunkReader::open(path, opts.clone())?;
+        let stats = reader.stats();
+        Ok(StreamSource {
+            path: path.to_path_buf(),
+            opts,
+            rows: reader.rows(),
+            kept_nnz: stats.kept_nnz,
+            peak_window_nnz: stats.peak_window_nnz,
+            peak_resident_nnz: 0,
+        })
+    }
+
+    fn reopen(&self) -> Result<CsrChunkReader> {
+        let reader = CsrChunkReader::open(&self.path, self.opts.clone())?;
+        if reader.rows() != self.rows {
+            return Err(Error::data(format!(
+                "{}: row count changed between passes ({} -> {})",
+                self.path.display(),
+                self.rows,
+                reader.rows()
+            )));
+        }
+        Ok(reader)
+    }
+
+    fn merge(&mut self, stats: &StreamStats, extra_resident: usize) {
+        self.peak_window_nnz = self.peak_window_nnz.max(stats.peak_window_nnz);
+        self.peak_resident_nnz =
+            self.peak_resident_nnz.max(stats.peak_resident_nnz + extra_resident);
+    }
+}
+
+impl Source for StreamSource {
+    fn n(&self) -> usize {
+        self.rows
+    }
+
+    fn draw(&mut self, ssize: usize, rng: &mut Rng) -> Result<(Points, Vec<usize>)> {
+        let mut reader = self.reopen()?;
+        let (matrix, idx) = reader.subsample_rows(ssize, rng)?;
+        self.merge(&reader.stats(), 0);
+        Ok((Points::Sparse(matrix), idx))
+    }
+
+    fn eval(
+        &mut self,
+        medoid_backend: &NativeBackend<'_>,
+        medoid_nnz: usize,
+    ) -> Result<(f64, Vec<usize>)> {
+        let mut reader = self.reopen()?;
+        let out = loss_and_assignments_streamed(medoid_backend, self.rows, || {
+            Ok(reader
+                .next_window()?
+                .map(|w| (w.start_row, Points::Sparse(w.matrix))))
+        })?;
+        self.merge(&reader.stats(), medoid_nnz);
+        Ok(out)
+    }
+
+    fn total_nnz(&self) -> usize {
+        self.kept_nnz
+    }
+
+    fn peak_window_nnz(&self) -> usize {
+        self.peak_window_nnz
+    }
+
+    fn peak_resident_nnz(&self) -> usize {
+        self.peak_resident_nnz
+    }
+}
+
+impl BigFit {
+    /// Wrap a configured [`Fit`] (see [`Fit::big`]). Defaults: 5 samples,
+    /// classic `40 + 2k` sample size.
+    pub fn new(inner: Fit) -> BigFit {
+        BigFit { inner, samples: 5, sample_size: 0 }
+    }
+
+    /// Number of subsample rounds (default 5; must be >= 1).
+    pub fn samples(mut self, samples: usize) -> BigFit {
+        self.samples = samples;
+        self
+    }
+
+    /// Subsample size override; 0 (default) = the classic `40 + 2k`,
+    /// clamped to `n` either way.
+    pub fn sample_size(mut self, sample_size: usize) -> BigFit {
+        self.sample_size = sample_size;
+        self
+    }
+
+    /// Run over an in-memory dataset. Same outer loop — and, seeded
+    /// identically over the same data, bitwise the same result — as
+    /// [`BigFit::fit_streamed`].
+    pub fn fit(&self, data: &Dataset) -> Result<KMedoidsModel> {
+        Ok(self.fit_with_stats(data)?.0)
+    }
+
+    /// [`BigFit::fit`] also returning the [`BigFitStats`] accounting.
+    pub fn fit_with_stats(&self, data: &Dataset) -> Result<(KMedoidsModel, BigFitStats)> {
+        let mut src = MemSource { points: &data.points };
+        self.run(&mut src)
+    }
+
+    /// Run out-of-core over a `.mtx` file: the dataset is consumed as
+    /// row-windows under `opts.chunk_nnz` and is never resident as a
+    /// whole. Bitwise-identical to [`BigFit::fit`] on the loaded dataset
+    /// with the same seed.
+    pub fn fit_streamed(
+        &self,
+        path: &Path,
+        opts: &StreamOptions,
+    ) -> Result<(KMedoidsModel, BigFitStats)> {
+        let mut src = StreamSource::new(path, opts.clone())?;
+        self.run(&mut src)
+    }
+
+    /// The shared outer loop: draw -> fit -> extract medoid rows -> drop
+    /// sample -> score streamed, keeping the strictly best candidate.
+    fn run(&self, src: &mut dyn Source) -> Result<(KMedoidsModel, BigFitStats)> {
+        let total = Timer::start();
+        if self.samples == 0 {
+            return Err(Error::invalid_argument("bigfit requires samples >= 1"));
+        }
+        let n = src.n();
+        if n == 0 {
+            return Err(Error::invalid_argument("bigfit over an empty dataset"));
+        }
+        let k = self.inner.k;
+        if k == 0 {
+            return Err(Error::invalid_argument("k must be >= 1 (got 0)"));
+        }
+        let ssize = effective_sample_size(self.sample_size, k, n);
+        if ssize <= k {
+            return Err(Error::invalid_argument(format!(
+                "sample size {ssize} must exceed k {k} (n = {n})"
+            )));
+        }
+        let metric = self.inner.metric;
+        let threads = self.inner.threads;
+        // One pool for every backend the loop builds (sample fits and
+        // candidate evaluations); thread count never changes bits.
+        let pool: Option<Arc<ThreadPool>> =
+            (threads > 1).then(|| Arc::new(ThreadPool::new(threads)));
+        let mut rng = Rng::seed_from(self.inner.seed);
+
+        let mut best: Option<(f64, Vec<usize>, Vec<usize>, Points)> = None;
+        let mut build_evals = 0u64;
+        let mut eval_evals = 0u64;
+        let mut swap_iters = 0usize;
+        let mut swaps_applied = 0usize;
+        let mut trajectory = Vec::with_capacity(self.samples);
+
+        for sample in 0..self.samples {
+            let t_draw = Timer::start();
+            let (sample_points, idx) = src.draw(ssize, &mut rng)?;
+            let subsample_secs = t_draw.secs();
+            if !metric.supports(&sample_points) {
+                return Err(Error::unsupported(format!(
+                    "metric {metric} does not support {} points",
+                    sample_points.kind()
+                )));
+            }
+
+            // Fit the inner algorithm on the resident sample.
+            let t_fit = Timer::start();
+            let mut algo: Box<dyn KMedoids> = self.inner.make_algo()?;
+            let mut sample_backend = NativeBackend::new(&sample_points, metric);
+            if let Some(p) = &pool {
+                sample_backend = sample_backend.with_pool(p.clone());
+            }
+            if let Some(entries) = self.inner.cache {
+                sample_backend = sample_backend.with_cache(entries);
+            }
+            let inner_fit = algo.fit(&sample_backend, k, &mut rng)?;
+            drop(sample_backend);
+            build_evals += inner_fit.stats.distance_evals;
+            swap_iters += inner_fit.stats.swap_iters;
+            swaps_applied += inner_fit.stats.swaps_applied;
+            let fit_secs = t_fit.secs();
+
+            // Map sample-local medoids to sorted global indices, keeping
+            // the local positions aligned so the extracted rows land in
+            // the same (ascending-global) order the assignments index.
+            let mut pairs: Vec<(usize, usize)> =
+                inner_fit.medoids.iter().map(|&loc| (idx[loc], loc)).collect();
+            pairs.sort_unstable();
+            let medoids: Vec<usize> = pairs.iter().map(|&(g, _)| g).collect();
+            let locals: Vec<usize> = pairs.iter().map(|&(_, l)| l).collect();
+            let medoid_points = sample_points.select(&locals);
+            // Residency drops to medoids + one window from here on.
+            drop(sample_points);
+
+            // Score the candidate over the full dataset, window by window.
+            let t_eval = Timer::start();
+            let mut medoid_backend = NativeBackend::new(&medoid_points, metric);
+            if let Some(p) = &pool {
+                medoid_backend = medoid_backend.with_pool(p.clone());
+            }
+            let (loss, assignments) = src.eval(&medoid_backend, nnz_of(&medoid_points))?;
+            eval_evals += medoid_backend.counter().get();
+            let eval_secs = t_eval.secs();
+
+            trajectory.push(SampleTrace { sample, loss, subsample_secs, fit_secs, eval_secs });
+            if best.as_ref().map(|(l, _, _, _)| loss < *l).unwrap_or(true) {
+                best = Some((loss, medoids, assignments, medoid_points));
+            }
+        }
+
+        let (loss, medoids, assignments, medoid_points) = best.unwrap();
+        let mut stats = FitStats {
+            build_evals,
+            eval_evals,
+            samples: self.samples,
+            swap_iters,
+            swaps_applied,
+            iters_plus_one: swap_iters + 1,
+            wall_secs: total.secs(),
+            ..Default::default()
+        };
+        stats.distance_evals = stats.build_evals + stats.swap_evals + stats.eval_evals;
+        let clustering = Clustering { medoids, assignments, loss, stats };
+        let model = KMedoidsModel::from_extracted(
+            medoid_points,
+            metric,
+            clustering,
+            n,
+            format!("bigfit+{}", self.inner.algorithm),
+            self.fingerprint(),
+        )?
+        .with_threads(threads);
+        let big_stats = BigFitStats {
+            samples: self.samples,
+            sample_size: ssize,
+            n_rows: n,
+            total_nnz: src.total_nnz(),
+            peak_window_nnz: src.peak_window_nnz(),
+            peak_resident_nnz: src.peak_resident_nnz(),
+            trajectory,
+            wall_secs: total.secs(),
+        };
+        Ok((model, big_stats))
+    }
+
+    /// Reproducibility fingerprint: the outer-loop knobs plus the inner
+    /// fit's own fingerprint.
+    fn fingerprint(&self) -> String {
+        format!(
+            "bigfit samples={} sample_size={} inner[{}]",
+            self.samples,
+            self.sample_size,
+            self.inner.fingerprint()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::distance::Metric;
+
+    #[test]
+    fn bigfit_returns_valid_model_and_honest_stats() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(60), 300, 6, 3, 4.0);
+        let (model, stats) = Fit::pam()
+            .metric(Metric::L2)
+            .k(3)
+            .seed(9)
+            .big()
+            .samples(3)
+            .fit_with_stats(&ds)
+            .unwrap();
+        assert_eq!(model.k(), 3);
+        assert_eq!(model.n_train(), 300);
+        assert_eq!(model.algorithm(), "bigfit+pam");
+        assert!(model.config_fingerprint().starts_with("bigfit samples=3"));
+        assert_eq!(model.clustering().assignments.len(), 300);
+        // every candidate scored k*n once; no hidden winner re-evaluation
+        let fs = &model.clustering().stats;
+        assert_eq!(fs.eval_evals, (3 * 3 * 300) as u64);
+        assert_eq!(fs.samples, 3);
+        assert_eq!(fs.distance_evals, fs.build_evals + fs.eval_evals);
+        assert_eq!(stats.samples, 3);
+        assert_eq!(stats.sample_size, 40 + 2 * 3);
+        assert_eq!(stats.n_rows, 300);
+        assert_eq!(stats.trajectory.len(), 3);
+        let best = stats.trajectory.iter().map(|t| t.loss).fold(f64::INFINITY, f64::min);
+        assert_eq!(model.loss().to_bits(), best.to_bits());
+    }
+
+    /// The model predicts its own training set back to the stored
+    /// assignments — the from_extracted path preserves the predict
+    /// contract end to end.
+    #[test]
+    fn bigfit_model_predicts_training_set_bitwise() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(61), 250, 5, 4, 3.5);
+        let model =
+            Fit::fastpam1().k(4).seed(12).big().samples(2).fit(&ds).unwrap();
+        let pred = model.predict(&ds.points).unwrap();
+        assert_eq!(&pred, &model.clustering().assignments);
+    }
+
+    #[test]
+    fn bigfit_thread_count_never_changes_bits() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(62), 220, 6, 3, 4.0);
+        let one = Fit::pam().k(3).seed(5).big().samples(2).fit(&ds).unwrap();
+        let many =
+            Fit::pam().k(3).seed(5).threads(4).big().samples(2).fit(&ds).unwrap();
+        assert_eq!(one.clustering().medoids, many.clustering().medoids);
+        assert_eq!(one.clustering().assignments, many.clustering().assignments);
+        assert_eq!(one.loss().to_bits(), many.loss().to_bits());
+    }
+
+    #[test]
+    fn bigfit_rejects_bad_arguments() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(63), 40, 4, 2, 3.0);
+        let err = Fit::pam().k(2).big().samples(0).fit(&ds).unwrap_err();
+        assert_eq!(err.kind(), "invalid_argument");
+        // sample_size <= k
+        let err = Fit::pam().k(5).big().sample_size(5).fit(&ds).unwrap_err();
+        assert_eq!(err.kind(), "invalid_argument");
+        // empty dataset
+        let empty = crate::data::Dataset {
+            points: Points::Dense(crate::util::matrix::Matrix::zeros(0, 4)),
+            labels: None,
+            name: "empty".into(),
+        };
+        let err = Fit::pam().k(2).big().fit(&empty).unwrap_err();
+        assert_eq!(err.kind(), "invalid_argument");
+    }
+}

@@ -25,12 +25,12 @@ use crate::util::rng::Rng;
 /// to `k = 1`, the only k it solves).
 #[derive(Debug, Clone)]
 pub struct Fit {
-    algorithm: &'static str,
-    metric: Metric,
-    k: usize,
-    seed: u64,
-    threads: usize,
-    cache: Option<usize>,
+    pub(crate) algorithm: &'static str,
+    pub(crate) metric: Metric,
+    pub(crate) k: usize,
+    pub(crate) seed: u64,
+    pub(crate) threads: usize,
+    pub(crate) cache: Option<usize>,
     config: Option<BanditPamConfig>,
 }
 
@@ -132,6 +132,34 @@ impl Fit {
         self
     }
 
+    /// Upgrade this configuration to the bounded-memory CLARA-style outer
+    /// loop: [`BigFit`](crate::model::BigFit) draws subsamples, fits this
+    /// algorithm on each in memory, and scores every candidate medoid set
+    /// against the full — optionally streamed — dataset window by window.
+    pub fn big(self) -> crate::model::BigFit {
+        crate::model::BigFit::new(self)
+    }
+
+    /// Construct the configured algorithm instance (validating the
+    /// BanditPAM config; rejecting a config on any other algorithm).
+    /// Shared with the [`crate::model::BigFit`] outer loop, which builds
+    /// one fresh instance per subsample.
+    pub(crate) fn make_algo(&self) -> Result<Box<dyn KMedoids>> {
+        if self.algorithm == "banditpam" {
+            let config = self.config.clone().unwrap_or_default();
+            config.validate()?;
+            Ok(Box::new(BanditPam::new(config)))
+        } else {
+            if self.config.is_some() {
+                return Err(Error::config(format!(
+                    "config(BanditPamConfig) only applies to banditpam (got {})",
+                    self.algorithm
+                )));
+            }
+            make_algorithm(self.algorithm)
+        }
+    }
+
     /// Run the fit and wrap the result into a [`KMedoidsModel`].
     pub fn fit(&self, data: &Dataset) -> Result<KMedoidsModel> {
         if !self.metric.supports(&data.points) {
@@ -141,19 +169,7 @@ impl Fit {
                 data.points.kind()
             )));
         }
-        let mut algo: Box<dyn KMedoids> = if self.algorithm == "banditpam" {
-            let config = self.config.clone().unwrap_or_default();
-            config.validate()?;
-            Box::new(BanditPam::new(config))
-        } else {
-            if self.config.is_some() {
-                return Err(Error::config(format!(
-                    "config(BanditPamConfig) only applies to banditpam (got {})",
-                    self.algorithm
-                )));
-            }
-            make_algorithm(self.algorithm)?
-        };
+        let mut algo = self.make_algo()?;
         let mut backend =
             NativeBackend::new(&data.points, self.metric).with_threads(self.threads);
         if let Some(entries) = self.cache {
@@ -173,7 +189,7 @@ impl Fit {
 
     /// The reproducibility fingerprint recorded into the model: every knob
     /// that determines the fit, as stable `key=value` pairs.
-    fn fingerprint(&self) -> String {
+    pub(crate) fn fingerprint(&self) -> String {
         let config = match (&self.config, self.algorithm) {
             (Some(c), _) => format!("{c:?}"),
             (None, "banditpam") => format!("{:?}", BanditPamConfig::default()),

@@ -253,6 +253,8 @@ pub(super) fn read(bytes: &[u8]) -> Result<KMedoidsModel> {
         return Err(Error::model(format!("n_train {n_train} smaller than k {k}")));
     }
     let loss = r.f64("loss")?;
+    // `eval_evals`/`samples` are not serialized (format v1 predates the
+    // sampling outer loops); they reload as 0.
     let stats = FitStats {
         distance_evals: r.u64("distance_evals")?,
         build_evals: r.u64("build_evals")?,
@@ -262,6 +264,7 @@ pub(super) fn read(bytes: &[u8]) -> Result<KMedoidsModel> {
         swaps_applied: r.u64("swaps_applied")? as usize,
         iters_plus_one: r.u64("iters_plus_one")? as usize,
         wall_secs: r.f64("wall_secs")?,
+        ..Default::default()
     };
     let algorithm = r.string("algorithm name")?;
     let fingerprint = r.string("config fingerprint")?;

@@ -30,9 +30,11 @@
 //! # Ok::<(), banditpam::Error>(())
 //! ```
 
+mod bigfit;
 mod fit;
 mod format;
 
+pub use bigfit::{BigFit, BigFitStats, SampleTrace};
 pub use fit::Fit;
 
 use crate::algorithms::Clustering;
@@ -84,19 +86,54 @@ impl KMedoidsModel {
         fingerprint: impl Into<String>,
     ) -> Result<KMedoidsModel> {
         let n = points.len();
+        // Range-check before `select` (which would panic on a bad index);
+        // everything else is validated by `from_extracted`.
+        if let Some(&bad) = clustering.medoids.iter().find(|&&m| m >= n) {
+            return Err(Error::invalid_argument(format!(
+                "medoid index {bad} out of range for n = {n}"
+            )));
+        }
+        if clustering.medoids.is_empty() {
+            return Err(Error::invalid_argument("clustering has no medoids"));
+        }
+        let medoid_points = points.select(&clustering.medoids);
+        Self::from_extracted(medoid_points, metric, clustering, n, algorithm, fingerprint)
+    }
+
+    /// Build a model from already-extracted medoid rows: the
+    /// [`crate::model::BigFit`] entry point, where the full training set
+    /// was streamed and only the k medoid rows (bit-copies of the
+    /// originals) remain resident. `clustering.medoids` still holds
+    /// *training-set* indices into the `n_train`-row dataset the
+    /// assignments cover; `medoid_points` must hold the corresponding rows
+    /// in the same (ascending) order.
+    pub fn from_extracted(
+        medoid_points: Points,
+        metric: Metric,
+        clustering: Clustering,
+        n_train: usize,
+        algorithm: impl Into<String>,
+        fingerprint: impl Into<String>,
+    ) -> Result<KMedoidsModel> {
         let k = clustering.medoids.len();
         if k == 0 {
             return Err(Error::invalid_argument("clustering has no medoids"));
         }
-        if !metric.supports(points) {
-            return Err(Error::unsupported(format!(
-                "metric {metric} does not support {} points",
-                points.kind()
+        if medoid_points.len() != k {
+            return Err(Error::invalid_argument(format!(
+                "{} medoid rows for {k} medoid indices",
+                medoid_points.len()
             )));
         }
-        if let Some(&bad) = clustering.medoids.iter().find(|&&m| m >= n) {
+        if !metric.supports(&medoid_points) {
+            return Err(Error::unsupported(format!(
+                "metric {metric} does not support {} points",
+                medoid_points.kind()
+            )));
+        }
+        if let Some(&bad) = clustering.medoids.iter().find(|&&m| m >= n_train) {
             return Err(Error::invalid_argument(format!(
-                "medoid index {bad} out of range for n = {n}"
+                "medoid index {bad} out of range for n = {n_train}"
             )));
         }
         // `Clustering::finalize` sorts medoids ascending and assignments
@@ -109,9 +146,9 @@ impl KMedoidsModel {
                  order) — assignments index positions in that order",
             ));
         }
-        if clustering.assignments.len() != n {
+        if clustering.assignments.len() != n_train {
             return Err(Error::invalid_argument(format!(
-                "assignment list has {} entries for n = {n}",
+                "assignment list has {} entries for n = {n_train}",
                 clustering.assignments.len()
             )));
         }
@@ -121,12 +158,12 @@ impl KMedoidsModel {
             )));
         }
         Ok(KMedoidsModel {
-            medoid_points: points.select(&clustering.medoids),
+            medoid_points,
             metric,
             clustering,
             algorithm: algorithm.into(),
             fingerprint: fingerprint.into(),
-            n_train: n,
+            n_train,
             threads: 1,
         })
     }

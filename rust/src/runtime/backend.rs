@@ -22,6 +22,7 @@ use crate::data::Points;
 use crate::distance::cache::DistanceCache;
 use crate::distance::counter::DistanceCounter;
 use crate::distance::{dense, evaluate, sparse, Metric};
+use crate::error::{Error, Result};
 use crate::runtime::pool::ThreadPool;
 use crate::util::matrix::Matrix;
 use std::sync::Arc;
@@ -528,6 +529,68 @@ impl<'a> DistanceBackend for NativeBackend<'a> {
     }
 }
 
+/// References per evaluation tile: bounds the distance scratch of
+/// [`loss_and_assignments`] (and its streamed twin) to `k * REF_TILE`
+/// f64s. Tile boundaries never change result bits — every distance is
+/// computed by a per-reference-independent row kernel, and the loss
+/// accumulates strictly in point order `0..n` regardless of tiling.
+pub const REF_TILE: usize = 2048;
+
+/// Reusable scratch for the tiled evaluation loops: the reference index
+/// tile and the `k x REF_TILE` distance tile. CLARA/BigFit outer loops
+/// hold one of these across candidate evaluations so per-sample memory is
+/// bounded by the tile, not by `n` (the seed rebuilt a `k x n` block per
+/// sample).
+#[derive(Debug, Default)]
+pub struct EvalBuffers {
+    tile_refs: Vec<usize>,
+    tile: Vec<f64>,
+}
+
+impl EvalBuffers {
+    /// Empty scratch; buffers grow to `k * REF_TILE` on first use.
+    pub fn new() -> EvalBuffers {
+        EvalBuffers::default()
+    }
+
+    /// Fill the reference tile with `start..start + cn` and return the
+    /// (refs, out) pair sized for a `k x cn` block.
+    fn tile_for(&mut self, start: usize, cn: usize, k: usize) -> (&[usize], &mut [f64]) {
+        self.tile_refs.clear();
+        self.tile_refs.extend(start..start + cn);
+        if self.tile.len() < k * cn {
+            self.tile.resize(k * cn, 0.0);
+        }
+        (&self.tile_refs, &mut self.tile[..k * cn])
+    }
+}
+
+/// Scan one `k x cn` distance tile column-wise, folding each reference
+/// point's nearest medoid into `loss`/`assign`. First minimum wins (`<`,
+/// lowest medoid row) — the tie-break every evaluation path shares.
+#[inline]
+fn fold_tile(
+    out: &[f64],
+    cn: usize,
+    base_row: usize,
+    loss: &mut f64,
+    assign: &mut [usize],
+) {
+    for ci in 0..cn {
+        let mut best = f64::INFINITY;
+        let mut who = 0;
+        for (mi, row) in out.chunks_exact(cn).enumerate() {
+            let d = row[ci];
+            if d < best {
+                best = d;
+                who = mi;
+            }
+        }
+        *loss += best;
+        assign[base_row + ci] = who;
+    }
+}
+
 /// Compute the k-medoids loss (Eq. 1) and point assignments for a medoid
 /// set: each point contributes its distance to the nearest medoid.
 ///
@@ -538,34 +601,161 @@ pub fn loss_and_assignments(
     backend: &dyn DistanceBackend,
     medoids: &[usize],
 ) -> (f64, Vec<usize>) {
+    loss_and_assignments_with(backend, medoids, &mut EvalBuffers::new())
+}
+
+/// [`loss_and_assignments`] with caller-owned scratch: repeated candidate
+/// evaluations (CLARA's sample loop) reuse one [`EvalBuffers`] instead of
+/// reallocating per call. Bitwise-identical to [`loss_and_assignments`] —
+/// same tiles, same order, same kernels.
+pub fn loss_and_assignments_with(
+    backend: &dyn DistanceBackend,
+    medoids: &[usize],
+    bufs: &mut EvalBuffers,
+) -> (f64, Vec<usize>) {
     assert!(!medoids.is_empty());
     let n = backend.n();
     let k = medoids.len();
-    // References per block tile: bounds the scratch to k * 2048 f64s.
-    const REF_TILE: usize = 2048;
-    let refs: Vec<usize> = (0..n).collect();
-    let mut tile_buf = vec![0.0f64; k * REF_TILE.min(n)];
     let mut loss = 0.0;
     let mut assign = vec![0usize; n];
-    for tile in refs.chunks(REF_TILE) {
-        let cn = tile.len();
-        let out = &mut tile_buf[..k * cn];
-        backend.block(medoids, tile, out);
-        for (ci, &j) in tile.iter().enumerate() {
-            let mut best = f64::INFINITY;
-            let mut who = 0;
-            for (mi, row) in out.chunks_exact(cn).enumerate() {
-                let d = row[ci];
-                if d < best {
-                    best = d;
-                    who = mi;
-                }
-            }
-            loss += best;
-            assign[j] = who;
-        }
+    let mut start = 0usize;
+    while start < n {
+        let cn = REF_TILE.min(n - start);
+        let (refs, out) = bufs.tile_for(start, cn, k);
+        backend.block(medoids, refs, out);
+        fold_tile(out, cn, start, &mut loss, &mut assign);
+        start += cn;
     }
     (loss, assign)
+}
+
+/// Window-at-a-time twin of [`loss_and_assignments`]: folds
+/// medoids-vs-window distance tiles over row-windows of a dataset that is
+/// never resident as a whole. The backend holds only the k extracted
+/// medoid rows; each pushed window is scored through
+/// [`NativeBackend::block_vs`] — the same one-to-many row kernels, tiling
+/// and first-minimum tie-break as the in-memory path — so the fold is
+/// **bitwise-equal to `loss_and_assignments` by construction**:
+///
+/// * extracted medoid rows are bit-copies of the training rows, and
+///   [`NativeBackend::norms_for`] is a per-row reduction, so every
+///   (medoid, point) pair sees identical operands;
+/// * the cross kernels are the same kernels as the same-matrix path
+///   (pinned by `block_vs_matches_block_on_training_set`), and each
+///   distance is per-reference independent, so window/tile boundaries
+///   cannot change any bit;
+/// * the loss accumulates strictly in global row order `0..n` — windows
+///   must arrive in order, enforced here — matching the in-memory sum
+///   term for term.
+///
+/// Peak residency: k medoid rows + one window + a `k x REF_TILE` tile.
+pub struct WindowFold<'a, 'p> {
+    backend: &'a NativeBackend<'p>,
+    n: usize,
+    next_row: usize,
+    loss: f64,
+    assign: Vec<usize>,
+    targets: Vec<usize>,
+    bufs: EvalBuffers,
+}
+
+impl<'a, 'p> WindowFold<'a, 'p> {
+    /// Start a fold over `n` total rows against `backend`'s point set —
+    /// the k medoid rows, all of them.
+    pub fn new(backend: &'a NativeBackend<'p>, n: usize) -> WindowFold<'a, 'p> {
+        let k = backend.n();
+        assert!(k > 0, "WindowFold requires at least one medoid");
+        WindowFold {
+            backend,
+            n,
+            next_row: 0,
+            loss: 0.0,
+            assign: vec![0usize; n],
+            targets: (0..k).collect(),
+            bufs: EvalBuffers::new(),
+        }
+    }
+
+    /// Rows folded so far (the next expected `start_row`).
+    pub fn rows_seen(&self) -> usize {
+        self.next_row
+    }
+
+    /// Score one window: rows `[start_row, start_row + window.len())` of
+    /// the full dataset. Windows must arrive in order and partition
+    /// `[0, n)`; anything else is a clean `Err`.
+    pub fn push(&mut self, start_row: usize, window: &Points) -> Result<()> {
+        if start_row != self.next_row {
+            return Err(Error::data(format!(
+                "window starting at row {start_row} arrived out of order (expected {})",
+                self.next_row
+            )));
+        }
+        let wn = window.len();
+        if start_row + wn > self.n {
+            return Err(Error::data(format!(
+                "window {start_row}..{} overruns the declared {} rows",
+                start_row + wn,
+                self.n
+            )));
+        }
+        if wn == 0 {
+            return Ok(());
+        }
+        if window.kind() != self.backend.points().kind() {
+            return Err(Error::unsupported(format!(
+                "window storage {} does not match the medoid storage {}",
+                window.kind(),
+                self.backend.points().kind()
+            )));
+        }
+        let q_norms = NativeBackend::norms_for(self.backend.metric(), window);
+        let k = self.targets.len();
+        let mut start = 0usize;
+        while start < wn {
+            let cn = REF_TILE.min(wn - start);
+            let (refs, out) = self.bufs.tile_for(start, cn, k);
+            self.backend.block_vs(&self.targets, window, &q_norms, refs, out);
+            fold_tile(out, cn, start_row + start, &mut self.loss, &mut self.assign);
+            start += cn;
+        }
+        self.next_row += wn;
+        Ok(())
+    }
+
+    /// Finish the fold, yielding `(loss, assignments)`. Errs unless the
+    /// pushed windows covered exactly `[0, n)`.
+    pub fn finish(self) -> Result<(f64, Vec<usize>)> {
+        if self.next_row != self.n {
+            return Err(Error::data(format!(
+                "windows covered {} of {} rows",
+                self.next_row, self.n
+            )));
+        }
+        Ok((self.loss, self.assign))
+    }
+}
+
+/// Drive a [`WindowFold`] from a window source: `next` yields
+/// `(start_row, window)` pairs in row order (`Ok(None)` = exhausted),
+/// whether from [`crate::data::stream::CsrChunkReader`] windows or from
+/// row-range selections of an in-memory [`Points`] — dense and sparse
+/// data evaluate through this same code. Returns the `(loss,
+/// assignments)` of the full dataset against `medoid_backend`'s k rows,
+/// bitwise-equal to the in-memory [`loss_and_assignments`].
+pub fn loss_and_assignments_streamed<F>(
+    medoid_backend: &NativeBackend<'_>,
+    n: usize,
+    mut next: F,
+) -> Result<(f64, Vec<usize>)>
+where
+    F: FnMut() -> Result<Option<(usize, Points)>>,
+{
+    let mut fold = WindowFold::new(medoid_backend, n);
+    while let Some((start_row, window)) = next()? {
+        fold.push(start_row, &window)?;
+    }
+    fold.finish()
 }
 
 /// Assign every point of `queries` to its nearest point of the backend's
@@ -879,6 +1069,74 @@ mod tests {
                 assert_eq!(dists[m], 0.0);
             }
         }
+    }
+
+    /// Reused `EvalBuffers` across candidates of different k must not
+    /// change any bit relative to fresh-buffer evaluation.
+    #[test]
+    fn loss_with_reused_buffers_matches_fresh() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(31), 150, 8, 4, 3.0);
+        let b = NativeBackend::new(&ds.points, Metric::L2);
+        let mut bufs = EvalBuffers::new();
+        for medoids in [vec![0usize, 50, 100, 149], vec![7usize, 90], vec![3usize, 4, 5]] {
+            let (l1, a1) = loss_and_assignments(&b, &medoids);
+            let (l2, a2) = loss_and_assignments_with(&b, &medoids, &mut bufs);
+            assert_eq!(l1.to_bits(), l2.to_bits());
+            assert_eq!(a1, a2);
+        }
+    }
+
+    /// The window fold over extracted medoid rows reproduces the
+    /// in-memory evaluation bitwise, for dense and sparse storage and any
+    /// window partition.
+    #[test]
+    fn window_fold_matches_in_memory_bitwise() {
+        for ds in [
+            synthetic::gmm(&mut Rng::seed_from(33), 97, 12, 4, 3.0),
+            sparse_dataset(),
+        ] {
+            let n = ds.len();
+            let metric = Metric::L2;
+            let b = NativeBackend::new(&ds.points, metric);
+            let medoids = [2usize, 30, 55];
+            let (want_loss, want_assign) = loss_and_assignments(&b, &medoids);
+            let medoid_points = ds.points.select(&medoids);
+            let mb = NativeBackend::new(&medoid_points, metric);
+            for rows_per_window in [1usize, 7, n] {
+                let mut fold = WindowFold::new(&mb, n);
+                let mut start = 0usize;
+                while start < n {
+                    let end = (start + rows_per_window).min(n);
+                    let range: Vec<usize> = (start..end).collect();
+                    fold.push(start, &ds.points.select(&range)).unwrap();
+                    start = end;
+                }
+                let (loss, assign) = fold.finish().unwrap();
+                assert_eq!(loss.to_bits(), want_loss.to_bits(), "{}", ds.points.kind());
+                assert_eq!(assign, want_assign, "{}", ds.points.kind());
+            }
+        }
+    }
+
+    /// Out-of-order, overrunning and incomplete window sequences are
+    /// clean errors, never silent corruption.
+    #[test]
+    fn window_fold_rejects_bad_sequences() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(34), 20, 4, 2, 2.0);
+        let medoid_points = ds.points.select(&[0, 10]);
+        let mb = NativeBackend::new(&medoid_points, Metric::L2);
+        let w = ds.points.select(&(0..5).collect::<Vec<_>>());
+        // out of order
+        let mut fold = WindowFold::new(&mb, 20);
+        assert!(fold.push(5, &w).is_err());
+        // overrun
+        let mut fold = WindowFold::new(&mb, 3);
+        assert!(fold.push(0, &w).is_err());
+        // incomplete coverage
+        let mut fold = WindowFold::new(&mb, 20);
+        fold.push(0, &w).unwrap();
+        assert_eq!(fold.rows_seen(), 5);
+        assert!(fold.finish().is_err());
     }
 
     #[test]

@@ -1,0 +1,222 @@
+//! ISSUE 7 acceptance suite: the window-at-a-time evaluation primitive is
+//! bitwise-equal to the in-memory `loss_and_assignments` across metrics,
+//! storage kinds, thread counts and window budgets; the BigFit outer loop
+//! over a streamed `.mtx` is bitwise-identical to the in-memory outer
+//! loop; and CLARA's fixed evaluation path (one full-dataset pass per
+//! candidate, honest stats) stays pinned.
+
+use banditpam::data::stream::{CsrChunkReader, StreamOptions};
+use banditpam::data::{loader, synthetic};
+use banditpam::prelude::*;
+use banditpam::runtime::backend::{loss_and_assignments, loss_and_assignments_streamed};
+use std::path::PathBuf;
+
+fn tmpfile(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "banditpam_property_bigfit_{}_{name}",
+        std::process::id()
+    ))
+}
+
+/// Evaluate `medoids` against `points` through the streamed primitive,
+/// feeding fixed-size row-range windows — the in-memory window source
+/// BigFit uses, parameterized so the grid can sweep window sizes and
+/// thread counts.
+fn eval_streamed_ranges(
+    points: &Points,
+    metric: Metric,
+    medoids: &[usize],
+    rows_per_window: usize,
+    threads: usize,
+) -> (f64, Vec<usize>) {
+    let medoid_points = points.select(medoids);
+    let mut backend = NativeBackend::new(&medoid_points, metric);
+    if threads > 1 {
+        // min_work 0 forces the pool onto these tiny tiles, so the
+        // multi-thread path is genuinely exercised.
+        backend = backend.with_threads(threads).with_pool_min_work(0);
+    }
+    let n = points.len();
+    let mut start = 0usize;
+    loss_and_assignments_streamed(&backend, n, || {
+        if start == n {
+            return Ok(None);
+        }
+        let end = (start + rows_per_window).min(n);
+        let idx: Vec<usize> = (start..end).collect();
+        let window = points.select(&idx);
+        let s = start;
+        start = end;
+        Ok(Some((s, window)))
+    })
+    .unwrap()
+}
+
+/// The tentpole parity grid: {l1, l2, cosine} x {dense, sparse} x threads
+/// {1, 8} x window sizes {1 row, tiny, everything} — every cell bitwise
+/// equal to the one-shot in-memory evaluation.
+#[test]
+fn streamed_primitive_matches_in_memory_across_grid() {
+    let n = 120usize;
+    let dense = synthetic::gmm(&mut Rng::seed_from(5), n, 10, 4, 3.0);
+    // density high enough that no row is all-zero (cosine needs norms)
+    let sparse = synthetic::scrna_sparse(&mut Rng::seed_from(6), n, 48, 0.25);
+    let medoids = [3usize, 37, 58, 119];
+    for metric in [Metric::L1, Metric::L2, Metric::Cosine] {
+        for ds in [&dense, &sparse] {
+            let backend = NativeBackend::new(&ds.points, metric);
+            let (want_loss, want_assign) = loss_and_assignments(&backend, &medoids);
+            for threads in [1usize, 8] {
+                for rows in [1usize, 7, n] {
+                    let (loss, assign) =
+                        eval_streamed_ranges(&ds.points, metric, &medoids, rows, threads);
+                    assert_eq!(
+                        loss.to_bits(),
+                        want_loss.to_bits(),
+                        "loss bits: {metric} {} threads={threads} rows={rows}",
+                        ds.points.kind()
+                    );
+                    assert_eq!(
+                        assign,
+                        want_assign,
+                        "assignments: {metric} {} threads={threads} rows={rows}",
+                        ds.points.kind()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Same parity through a real on-disk `.mtx` and the chunked reader's
+/// windows (the streamed BigFit evaluation path), across window budgets
+/// from one-entry-per-window to everything-in-one-window. Also pins the
+/// reader's residency accounting for raw window iteration.
+#[test]
+fn streamed_primitive_matches_through_real_chunk_reader() {
+    let ds = synthetic::scrna_sparse(&mut Rng::seed_from(9), 90, 40, 0.25);
+    let path = tmpfile("reader.mtx");
+    loader::save_mtx(&ds, &path).unwrap();
+    let medoids = [0usize, 41, 89];
+    let backend = NativeBackend::new(&ds.points, Metric::L2);
+    let (want_loss, want_assign) = loss_and_assignments(&backend, &medoids);
+    let medoid_points = ds.points.select(&medoids);
+    for chunk in [1usize, 53, 1_000_000] {
+        let mut reader = CsrChunkReader::open(
+            &path,
+            StreamOptions { chunk_nnz: chunk, ..Default::default() },
+        )
+        .unwrap();
+        let mb = NativeBackend::new(&medoid_points, Metric::L2);
+        let (loss, assign) = loss_and_assignments_streamed(&mb, ds.len(), || {
+            Ok(reader
+                .next_window()?
+                .map(|w| (w.start_row, Points::Sparse(w.matrix))))
+        })
+        .unwrap();
+        assert_eq!(loss.to_bits(), want_loss.to_bits(), "loss bits at chunk={chunk}");
+        assert_eq!(assign, want_assign, "assignments at chunk={chunk}");
+        // Raw window iteration records one-window residency: positive,
+        // and never more than the largest planned window.
+        let stats = reader.stats();
+        assert!(stats.peak_resident_nnz > 0, "residency recorded at chunk={chunk}");
+        assert!(
+            stats.peak_resident_nnz <= stats.peak_window_nnz,
+            "resident {} > window peak {} at chunk={chunk}",
+            stats.peak_resident_nnz,
+            stats.peak_window_nnz
+        );
+    }
+    let _ = std::fs::remove_file(path);
+}
+
+/// The BigFit outer loop over a streamed `.mtx` is bitwise-identical —
+/// medoids, assignments, loss bits, eval counts — to the in-memory outer
+/// loop with the same seed, across window budgets; the streamed run's
+/// resident working set stays far below the full matrix; and the
+/// resulting extracted-row model predicts and persists like any other.
+#[test]
+fn bigfit_streamed_bitwise_matches_in_memory() {
+    let ds = synthetic::scrna_sparse(&mut Rng::seed_from(11), 600, 64, 0.10);
+    let path = tmpfile("bigfit.mtx");
+    loader::save_mtx(&ds, &path).unwrap();
+    let loaded = loader::load_mtx(&path, false, 0).unwrap();
+    let Points::Sparse(csr) = &loaded.points else { unreachable!() };
+    let total_nnz = csr.nnz();
+
+    let big = Fit::banditpam().metric(Metric::L1).k(4).seed(3).big().samples(3);
+    let (mem_model, mem_stats) = big.fit_with_stats(&loaded).unwrap();
+    assert_eq!(mem_stats.n_rows, 600);
+    assert_eq!(mem_stats.trajectory.len(), 3);
+
+    for chunk in [97usize, 1_000_000] {
+        let opts = StreamOptions { chunk_nnz: chunk, ..Default::default() };
+        let (st_model, st_stats) = big.fit_streamed(&path, &opts).unwrap();
+        assert_eq!(
+            mem_model.clustering().medoids,
+            st_model.clustering().medoids,
+            "medoids at chunk={chunk}"
+        );
+        assert_eq!(
+            mem_model.clustering().assignments,
+            st_model.clustering().assignments,
+            "assignments at chunk={chunk}"
+        );
+        assert_eq!(
+            mem_model.loss().to_bits(),
+            st_model.loss().to_bits(),
+            "loss bits at chunk={chunk}"
+        );
+        assert_eq!(
+            mem_model.clustering().stats.distance_evals,
+            st_model.clustering().stats.distance_evals,
+            "eval counts at chunk={chunk}"
+        );
+        assert_eq!(st_stats.total_nnz, total_nnz);
+        if chunk == 97 {
+            // Bounded memory at a small window budget: sample + window /
+            // medoids + window stays well under the full matrix.
+            assert!(
+                st_stats.peak_resident_nnz * 4 < total_nnz,
+                "peak resident {} nnz >= 25% of {total_nnz}",
+                st_stats.peak_resident_nnz
+            );
+        }
+    }
+
+    // The extracted-row model behaves like any other: training-set
+    // predict reproduces the stored assignments, and it round-trips
+    // through the binary format.
+    let pred = mem_model.predict(&loaded.points).unwrap();
+    assert_eq!(&pred, &mem_model.clustering().assignments);
+    let bytes = mem_model.to_bytes().unwrap();
+    let reloaded = KMedoidsModel::from_bytes(&bytes).unwrap();
+    assert_eq!(reloaded.algorithm(), "bigfit+banditpam");
+    assert_eq!(reloaded.clustering().medoids, mem_model.clustering().medoids);
+    assert_eq!(reloaded.loss().to_bits(), mem_model.loss().to_bits());
+    assert_eq!(reloaded.n_train(), 600);
+
+    let _ = std::fs::remove_file(path);
+}
+
+/// CLARA bugfix regression (integration level): the backend counter reads
+/// exactly `samples * (ssize^2 + k*n)` — one subsample pair matrix plus
+/// one full-dataset scoring pass per candidate, and **no** second
+/// evaluation of the winner at finalize — with the work attributed to the
+/// right stats fields.
+#[test]
+fn clara_scores_each_candidate_exactly_once_with_honest_stats() {
+    let (n, k, samples) = (200usize, 3usize, 4usize);
+    let ds = synthetic::gmm(&mut Rng::seed_from(13), n, 5, k, 4.0);
+    let backend = NativeBackend::new(&ds.points, Metric::L2);
+    let mut clara = Clara { samples, sample_size: 0 };
+    let fit = clara.fit(&backend, k, &mut Rng::seed_from(2)).unwrap();
+    let ssize = 40 + 2 * k;
+    let expect = (samples * (ssize * ssize + k * n)) as u64;
+    assert_eq!(backend.counter().get(), expect, "one full pass per candidate");
+    assert_eq!(fit.stats.distance_evals, expect);
+    assert_eq!(fit.stats.build_evals, (samples * ssize * ssize) as u64);
+    assert_eq!(fit.stats.eval_evals, (samples * k * n) as u64);
+    assert_eq!(fit.stats.samples, samples);
+    assert_eq!(fit.stats.swap_evals, 0);
+}
