@@ -5,13 +5,16 @@
 //! regime the PCA pathology contrasts against, and the one where the
 //! O(nnz) kernels apply (the 10-PC projection is inherently dense).
 
+use banditpam::bench::report::{JsonObj, Report};
 use banditpam::prelude::*;
 
 fn main() {
     let scale = banditpam::bench::Scale::from_env();
     let t0 = std::time::Instant::now();
+    let mut report = Report::new("appfig5").scale(scale);
     for table in banditpam::experiments::run("appfig5", scale, 42).expect("experiment failed") {
         table.print();
+        report.table(&table);
     }
 
     // --- sparse end-to-end: raw scRNA under l1, CSR storage ---------------
@@ -35,6 +38,17 @@ fn main() {
         fit.stats.distance_evals,
         t1.elapsed().as_secs_f64()
     );
+    report.row(
+        JsonObj::new()
+            .str("kind", "sparse_scrna_l1")
+            .u64("n", n as u64)
+            .u64("genes", genes as u64)
+            .f64("density", csr.density())
+            .f64("loss", fit.loss)
+            .u64("distance_evals", fit.stats.distance_evals)
+            .f64("secs", t1.elapsed().as_secs_f64()),
+    );
+    let _ = report.write();
 
     println!(
         "\n[appfig5_scrna_pca] total {:.1}s at {scale:?} scale",

@@ -9,6 +9,7 @@
 //! file's total nnz — the bounded-memory claim, asserted here so CI
 //! enforces it.
 
+use banditpam::bench::report::{JsonObj, Report};
 use banditpam::data::stream::StreamOptions;
 use banditpam::data::{loader, synthetic, Points};
 use banditpam::prelude::*;
@@ -108,35 +109,48 @@ fn main() {
         peak_rss_kb()
     );
 
-    let mut json_rows: Vec<String> = Vec::new();
+    let mut report = Report::new("bigfit").scale(scale).params(
+        JsonObj::new()
+            .u64("n", n as u64)
+            .u64("d", genes as u64)
+            .u64("k", k as u64)
+            .u64("samples", samples as u64)
+            .u64("total_nnz", total_nnz as u64)
+            .u64("chunk_nnz", chunk as u64),
+    );
     for (mode, stats, secs) in
         [("in-memory", &mem_stats, mem_secs), ("streamed", &st_stats, st_secs)]
     {
-        json_rows.push(format!(
-            "{{\"kind\": \"bigfit\", \"mode\": \"{mode}\", \"n\": {n}, \"d\": {genes}, \
-             \"k\": {k}, \"samples\": {samples}, \"sample_size\": {}, \
-             \"total_nnz\": {total_nnz}, \"chunk_nnz\": {chunk}, \
-             \"peak_resident_nnz\": {}, \"peak_window_nnz\": {}, \
-             \"peak_rss_kb\": {}, \"secs\": {secs:.9}}}",
-            stats.sample_size,
-            stats.peak_resident_nnz,
-            stats.peak_window_nnz,
-            peak_rss_kb()
-        ));
+        report.row(
+            JsonObj::new()
+                .str("kind", "bigfit")
+                .str("mode", mode)
+                .u64("n", n as u64)
+                .u64("d", genes as u64)
+                .u64("k", k as u64)
+                .u64("samples", samples as u64)
+                .u64("sample_size", stats.sample_size as u64)
+                .u64("total_nnz", total_nnz as u64)
+                .u64("chunk_nnz", chunk as u64)
+                .u64("peak_resident_nnz", stats.peak_resident_nnz as u64)
+                .u64("peak_window_nnz", stats.peak_window_nnz as u64)
+                .u64("peak_rss_kb", peak_rss_kb())
+                .f64("secs", secs),
+        );
         for tr in &stats.trajectory {
-            json_rows.push(format!(
-                "{{\"kind\": \"trajectory\", \"mode\": \"{mode}\", \"sample\": {}, \
-                 \"loss\": {}, \"subsample_secs\": {:.9}, \"fit_secs\": {:.9}, \
-                 \"eval_secs\": {:.9}}}",
-                tr.sample, tr.loss, tr.subsample_secs, tr.fit_secs, tr.eval_secs
-            ));
+            report.row(
+                JsonObj::new()
+                    .str("kind", "trajectory")
+                    .str("mode", mode)
+                    .u64("sample", tr.sample as u64)
+                    .f64("loss", tr.loss)
+                    .f64("subsample_secs", tr.subsample_secs)
+                    .f64("fit_secs", tr.fit_secs)
+                    .f64("eval_secs", tr.eval_secs),
+            );
         }
     }
 
-    let doc = format!("[\n  {}\n]\n", json_rows.join(",\n  "));
-    match std::fs::write("BENCH_bigfit.json", &doc) {
-        Ok(()) => println!("wrote BENCH_bigfit.json"),
-        Err(e) => println!("BENCH_bigfit.json: write failed ({e})"),
-    }
+    let _ = report.write();
     let _ = std::fs::remove_file(&mtx);
 }

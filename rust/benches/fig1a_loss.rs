@@ -1,12 +1,18 @@
 //! Bench target for paper experiment `fig1a` (see DESIGN.md experiment
 //! index). Scale via BANDITPAM_BENCH_SCALE=smoke|quick|paper (default
-//! quick). Prints the same rows the paper's figure plots.
+//! quick). Prints the same rows the paper's figure plots and emits them
+//! as `BENCH_fig1a.json` in the unified envelope (rust/OBS.md).
+
+use banditpam::bench::report::Report;
 
 fn main() {
     let scale = banditpam::bench::Scale::from_env();
     let t0 = std::time::Instant::now();
+    let mut report = Report::new("fig1a").scale(scale);
     for table in banditpam::experiments::run("fig1a", scale, 42).expect("experiment failed") {
         table.print();
+        report.table(&table);
     }
+    let _ = report.write();
     println!("\n[fig1a_loss] total {:.1}s at {scale:?} scale", t0.elapsed().as_secs_f64());
 }

@@ -4,6 +4,7 @@
 
 use banditpam::algorithms::KMedoids;
 use banditpam::bench::bench_fn;
+use banditpam::bench::report::{JsonObj, Report};
 use banditpam::coordinator::banditpam::BanditPam;
 use banditpam::coordinator::config::BanditPamConfig;
 use banditpam::coordinator::state::MedoidState;
@@ -108,7 +109,9 @@ fn main() {
     let nsw = scale.pick(300, 1500, 4800);
     let ksw = 5;
     let ds_swap = synthetic::mnist_like(&mut Rng::seed_from(6), nsw);
-    let mut json_rows: Vec<String> = Vec::new();
+    let mut report = Report::new("swap")
+        .scale(scale)
+        .params(JsonObj::new().u64("n", nsw as u64).u64("k", ksw as u64));
     let mut swap_evals_by_mode = Vec::new();
     for (name, reuse) in [("off", false), ("on", true)] {
         let backend = NativeBackend::new(&ds_swap.points, Metric::L2).with_threads(4);
@@ -130,16 +133,17 @@ fn main() {
             secs
         );
         swap_evals_by_mode.push(fit.stats.swap_evals);
-        json_rows.push(format!(
-            "{{\"reuse\": \"{name}\", \"n\": {nsw}, \"k\": {ksw}, \
-             \"swap_evals\": {}, \"swap_evals_saved\": {}, \
-             \"total_evals\": {}, \"loss\": {}, \"wall_secs\": {}}}",
-            fit.stats.swap_evals,
-            fit.stats.swap_evals_saved,
-            fit.stats.distance_evals,
-            fit.loss,
-            secs
-        ));
+        report.row(
+            JsonObj::new()
+                .str("reuse", name)
+                .u64("n", nsw as u64)
+                .u64("k", ksw as u64)
+                .u64("swap_evals", fit.stats.swap_evals)
+                .u64("swap_evals_saved", fit.stats.swap_evals_saved)
+                .u64("total_evals", fit.stats.distance_evals)
+                .f64("loss", fit.loss)
+                .f64("wall_secs", secs),
+        );
     }
     if swap_evals_by_mode.len() == 2 && swap_evals_by_mode[1] > 0 {
         println!(
@@ -147,11 +151,7 @@ fn main() {
             swap_evals_by_mode[0] as f64 / swap_evals_by_mode[1] as f64
         );
     }
-    let doc = format!("[\n  {}\n]\n", json_rows.join(",\n  "));
-    match std::fs::write("BENCH_swap.json", &doc) {
-        Ok(()) => println!("wrote BENCH_swap.json"),
-        Err(e) => println!("BENCH_swap.json: write failed ({e})"),
-    }
+    let _ = report.write();
 
     // --- XLA vs native block (needs artifacts) ------------------------------
     let dir = banditpam::runtime::manifest::Manifest::default_dir();

@@ -1,16 +1,20 @@
 //! Serve load generator: an in-process server (over in-memory pipes,
 //! exactly the code path a socket uses) hammered by concurrent client
 //! threads with mixed dense/sparse traffic and a deterministic
-//! fault-injection fraction. Emits `BENCH_serve.json` with p50/p99
-//! latency, throughput and shed rate per scenario.
+//! fault-injection fraction. Emits `BENCH_serve.json` (unified envelope,
+//! rust/OBS.md) with client-observed p50/p99 latency, throughput and shed
+//! rate per scenario, plus server-side admission->reply quantiles from
+//! the `serve_request_us` histogram delta each scenario leaves behind.
 //!
 //! Acceptance (ISSUE 6): the server survives the full fault schedule —
 //! every request gets exactly one typed response, healthy responses are
 //! bitwise-identical to single-shot `predict`, and the final drain is
 //! clean. Scale via BANDITPAM_BENCH_SCALE=smoke|quick|paper.
 
+use banditpam::bench::report::{JsonObj, Report};
 use banditpam::data::synthetic;
 use banditpam::model::{Fit, KMedoidsModel};
+use banditpam::obs::HistogramSnapshot;
 use banditpam::serve::faults::{pipe, FaultPlan, PipeReader, PipeWriter};
 use banditpam::serve::protocol::{
     encode_request, parse_response, read_frame, ErrorCode, PredictRequest, Request,
@@ -63,22 +67,25 @@ struct ScenarioResult {
 }
 
 impl ScenarioResult {
-    fn json(&self) -> String {
-        format!(
-            "{{\"scenario\": \"{}\", \"requests\": {}, \"ok\": {}, \"shed\": {}, \
-             \"errors\": {}, \"p50_ms\": {:.4}, \"p99_ms\": {:.4}, \
-             \"throughput_rps\": {:.1}, \"shed_rate\": {:.4}, \"wall_secs\": {:.4}}}",
-            self.name,
-            self.requests,
-            self.ok,
-            self.shed,
-            self.errors,
-            self.p50_ms,
-            self.p99_ms,
-            self.throughput_rps,
-            self.shed as f64 / self.requests.max(1) as f64,
-            self.wall_secs
-        )
+    /// One `data` row: the client-observed fields plus the server-side
+    /// admission->reply quantiles from the scenario's `serve_request_us`
+    /// histogram delta (micros; log2-bucket upper edges).
+    fn row(&self, server_lat: &HistogramSnapshot) -> JsonObj {
+        JsonObj::new()
+            .str("scenario", &self.name)
+            .u64("requests", self.requests as u64)
+            .u64("ok", self.ok as u64)
+            .u64("shed", self.shed as u64)
+            .u64("errors", self.errors as u64)
+            .f64("p50_ms", self.p50_ms)
+            .f64("p99_ms", self.p99_ms)
+            .f64("throughput_rps", self.throughput_rps)
+            .f64("shed_rate", self.shed as f64 / self.requests.max(1) as f64)
+            .f64("wall_secs", self.wall_secs)
+            .u64("server_p50_us", server_lat.quantile(0.50))
+            .u64("server_p99_us", server_lat.quantile(0.99))
+            .f64("server_mean_us", server_lat.mean())
+            .u64("server_count", server_lat.count)
     }
 
     fn line(&self) -> String {
@@ -254,10 +261,15 @@ fn main() {
         .expect("registry")
     };
 
-    let mut results: Vec<ScenarioResult> = Vec::new();
+    // Server-side latency: scenarios run in one process, so each one's
+    // contribution is the delta between `serve_request_us` snapshots
+    // taken around it.
+    let request_hist = banditpam::obs::global().histogram("serve_request_us");
+    let mut results: Vec<(ScenarioResult, HistogramSnapshot)> = Vec::new();
 
     // --- healthy load: mixed dense/sparse, no faults --------------------
     {
+        let before = request_hist.snapshot();
         let server = Server::new(
             open_registry(),
             ServeOptions { threads: 2, ..Default::default() },
@@ -266,13 +278,14 @@ fn main() {
         assert_eq!(r.errors, 0, "healthy load must not error");
         assert_eq!(r.shed, 0, "default queue bounds must not shed this load");
         println!("{}", r.line());
-        results.push(r);
+        results.push((r, request_hist.snapshot().minus(&before)));
         server.begin_shutdown();
         server.join();
     }
 
     // --- hostile frames riding along ------------------------------------
     {
+        let before = request_hist.snapshot();
         let server = Server::new(
             open_registry(),
             ServeOptions { threads: 2, ..Default::default() },
@@ -286,13 +299,14 @@ fn main() {
             "exactly the corrupted frames error"
         );
         println!("{}", r.line());
-        results.push(r);
+        results.push((r, request_hist.snapshot().minus(&before)));
         server.begin_shutdown();
         server.join();
     }
 
     // --- forced batch panics (isolation under fire) ---------------------
     {
+        let before = request_hist.snapshot();
         let server = Server::new(
             open_registry(),
             ServeOptions {
@@ -307,13 +321,14 @@ fn main() {
         assert!(r.errors > 0, "the injected panics must surface as Internal errors");
         assert!(r.ok > 0, "non-panicked batches keep serving");
         println!("{}", r.line());
-        results.push(r);
+        results.push((r, request_hist.snapshot().minus(&before)));
         server.begin_shutdown();
         server.join();
     }
 
     // --- tight queue: backpressure under concurrency --------------------
     {
+        let before = request_hist.snapshot();
         let server = Server::new(
             open_registry(),
             ServeOptions {
@@ -336,20 +351,18 @@ fn main() {
             4,
         );
         println!("{}", r.line());
-        results.push(r);
+        results.push((r, request_hist.snapshot().minus(&before)));
         server.begin_shutdown();
         server.join();
     }
 
-    let doc = format!(
-        "{{\"bench\": \"serve\", \"scale\": \"{scale:?}\", \"clients\": {clients}, \
-         \"reqs_per_client\": {reqs}, \"scenarios\": [\n  {}\n]}}\n",
-        results.iter().map(|r| r.json()).collect::<Vec<_>>().join(",\n  ")
+    let mut report = Report::new("serve").scale(scale).params(
+        JsonObj::new().u64("clients", clients as u64).u64("reqs_per_client", reqs as u64),
     );
-    match std::fs::write("BENCH_serve.json", &doc) {
-        Ok(()) => println!("wrote BENCH_serve.json"),
-        Err(e) => println!("BENCH_serve.json: write failed ({e})"),
+    for (r, server_lat) in &results {
+        report.row(r.row(server_lat));
     }
+    let _ = report.write();
     std::fs::remove_dir_all(&dir).ok();
     println!("[serve] all scenarios drained cleanly");
 }

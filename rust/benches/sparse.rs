@@ -8,6 +8,7 @@
 //! ~ 10x minus scatter/format overhead.
 
 use banditpam::bench::bench_fn;
+use banditpam::bench::report::{JsonObj, Report};
 use banditpam::data::synthetic;
 use banditpam::prelude::*;
 use banditpam::util::timer::Timer;
@@ -35,7 +36,9 @@ fn main() {
     let refs: Vec<usize> = (64..n.min(64 + 2048)).collect();
     let rn = refs.len();
     let mut out = vec![0.0f64; targets.len() * rn];
-    let mut json_rows: Vec<String> = Vec::new();
+    let mut report = Report::new("sparse")
+        .scale(scale)
+        .params(JsonObj::new().u64("n", n as u64).u64("d", genes as u64).f64("density", density));
     for metric in [Metric::L1, Metric::L2, Metric::Cosine] {
         for threads in [1usize, 4] {
             let dense_backend = NativeBackend::new(&dn.points, metric).with_threads(threads);
@@ -56,12 +59,18 @@ fn main() {
             println!("{}", r.line());
             let speedup = base.mean_secs / r.mean_secs.max(1e-12);
             println!("    -> {speedup:.2}x vs densified input");
-            json_rows.push(format!(
-                "{{\"kind\": \"block\", \"metric\": \"{metric}\", \"threads\": {threads}, \
-                 \"n\": {n}, \"d\": {genes}, \"density\": {density:.6}, \
-                 \"dense_secs\": {:.9}, \"sparse_secs\": {:.9}, \"speedup\": {speedup:.3}}}",
-                base.mean_secs, r.mean_secs
-            ));
+            report.row(
+                JsonObj::new()
+                    .str("kind", "block")
+                    .str("metric", &metric.to_string())
+                    .u64("threads", threads as u64)
+                    .u64("n", n as u64)
+                    .u64("d", genes as u64)
+                    .f64("density", density)
+                    .f64("dense_secs", base.mean_secs)
+                    .f64("sparse_secs", r.mean_secs)
+                    .f64("speedup", speedup),
+            );
         }
     }
 
@@ -83,11 +92,16 @@ fn main() {
             "fit {name:>6}: n={nf} k={k} loss={:.3} evals={} {:.3}s",
             fit.loss, fit.stats.distance_evals, secs
         );
-        json_rows.push(format!(
-            "{{\"kind\": \"fit\", \"storage\": \"{name}\", \"n\": {nf}, \"k\": {k}, \
-             \"loss\": {}, \"evals\": {}, \"wall_secs\": {secs:.6}}}",
-            fit.loss, fit.stats.distance_evals
-        ));
+        report.row(
+            JsonObj::new()
+                .str("kind", "fit")
+                .str("storage", name)
+                .u64("n", nf as u64)
+                .u64("k", k as u64)
+                .f64("loss", fit.loss)
+                .u64("evals", fit.stats.distance_evals)
+                .f64("wall_secs", secs),
+        );
         results.push(fit);
     }
     let parity = results[0].medoids == results[1].medoids;
@@ -97,9 +111,5 @@ fn main() {
     );
     assert!(parity, "sparse and densified fits must return identical medoids");
 
-    let doc = format!("[\n  {}\n]\n", json_rows.join(",\n  "));
-    match std::fs::write("BENCH_sparse.json", &doc) {
-        Ok(()) => println!("wrote BENCH_sparse.json"),
-        Err(e) => println!("BENCH_sparse.json: write failed ({e})"),
-    }
+    let _ = report.write();
 }

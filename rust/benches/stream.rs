@@ -9,6 +9,7 @@
 //! budget — the bounded-memory claim, asserted here so CI enforces it.
 
 use banditpam::bench::bench_fn;
+use banditpam::bench::report::{JsonObj, Report};
 use banditpam::data::stream::{self, StreamOptions};
 use banditpam::data::{loader, synthetic, Points};
 use banditpam::prelude::*;
@@ -32,18 +33,24 @@ fn main() {
     let bytes = std::fs::metadata(&mtx).map(|m| m.len()).unwrap_or(0);
     println!("dataset: {} -> {} ({bytes} bytes, {total_nnz} nnz)", ds.name, mtx.display());
 
-    let mut json_rows: Vec<String> = Vec::new();
+    let mut report = Report::new("stream").scale(scale).params(
+        JsonObj::new().u64("n", n as u64).u64("d", genes as u64).u64("total_nnz", total_nnz as u64),
+    );
 
     // --- full load: in-memory baseline --------------------------------
     let mem = bench_fn("load mtx in-memory", 1, iters, || {
         loader::load_mtx(&mtx, false, 0).expect("in-memory load")
     });
     println!("{}", mem.line());
-    json_rows.push(format!(
-        "{{\"kind\": \"load\", \"mode\": \"in-memory\", \"n\": {n}, \"d\": {genes}, \
-         \"total_nnz\": {total_nnz}, \"secs\": {:.9}}}",
-        mem.mean_secs
-    ));
+    report.row(
+        JsonObj::new()
+            .str("kind", "load")
+            .str("mode", "in-memory")
+            .u64("n", n as u64)
+            .u64("d", genes as u64)
+            .u64("total_nnz", total_nnz as u64)
+            .f64("secs", mem.mean_secs),
+    );
     let mem_ds = loader::load_mtx(&mtx, false, 0).expect("in-memory load");
     let Points::Sparse(mem_csr) = &mem_ds.points else { unreachable!() };
 
@@ -71,12 +78,19 @@ fn main() {
             stats.peak_window_nnz,
             100.0 * stats.peak_window_nnz as f64 / total_nnz as f64
         );
-        json_rows.push(format!(
-            "{{\"kind\": \"load\", \"mode\": \"streamed\", \"n\": {n}, \"d\": {genes}, \
-             \"total_nnz\": {total_nnz}, \"chunk_nnz\": {chunk}, \"windows\": {}, \
-             \"peak_window_nnz\": {}, \"spilled\": {}, \"secs\": {:.9}}}",
-            stats.windows, stats.peak_window_nnz, stats.spilled, r.mean_secs
-        ));
+        report.row(
+            JsonObj::new()
+                .str("kind", "load")
+                .str("mode", "streamed")
+                .u64("n", n as u64)
+                .u64("d", genes as u64)
+                .u64("total_nnz", total_nnz as u64)
+                .u64("chunk_nnz", chunk as u64)
+                .u64("windows", stats.windows as u64)
+                .u64("peak_window_nnz", stats.peak_window_nnz as u64)
+                .bool("spilled", stats.spilled)
+                .f64("secs", r.mean_secs),
+        );
     }
 
     // --- transpose: the on-disk row-bucketing spill path ---------------
@@ -96,12 +110,19 @@ fn main() {
             "load mtx streamed --transpose (spill): {secs:.3}s, {} windows, peak window {} nnz",
             stats.windows, stats.peak_window_nnz
         );
-        json_rows.push(format!(
-            "{{\"kind\": \"load\", \"mode\": \"streamed-transpose-spill\", \"n\": {n}, \
-             \"d\": {genes}, \"total_nnz\": {total_nnz}, \"chunk_nnz\": {chunk}, \
-             \"windows\": {}, \"peak_window_nnz\": {}, \"spilled\": true, \"secs\": {secs:.9}}}",
-            stats.windows, stats.peak_window_nnz
-        ));
+        report.row(
+            JsonObj::new()
+                .str("kind", "load")
+                .str("mode", "streamed-transpose-spill")
+                .u64("n", n as u64)
+                .u64("d", genes as u64)
+                .u64("total_nnz", total_nnz as u64)
+                .u64("chunk_nnz", chunk as u64)
+                .u64("windows", stats.windows as u64)
+                .u64("peak_window_nnz", stats.peak_window_nnz as u64)
+                .bool("spilled", true)
+                .f64("secs", secs),
+        );
     }
 
     // --- the experimental protocol: subsample + fit --------------------
@@ -137,12 +158,18 @@ fn main() {
          (peak resident {} nnz vs {} total)",
         stats.peak_resident_nnz, total_nnz
     );
-    json_rows.push(format!(
-        "{{\"kind\": \"subsample\", \"n\": {n}, \"sub_n\": {sub_n}, \"total_nnz\": {total_nnz}, \
-         \"chunk_nnz\": {chunk}, \"peak_resident_nnz\": {}, \"peak_window_nnz\": {}, \
-         \"mem_secs\": {mem_secs:.9}, \"stream_secs\": {st_secs:.9}}}",
-        stats.peak_resident_nnz, stats.peak_window_nnz
-    ));
+    report.row(
+        JsonObj::new()
+            .str("kind", "subsample")
+            .u64("n", n as u64)
+            .u64("sub_n", sub_n as u64)
+            .u64("total_nnz", total_nnz as u64)
+            .u64("chunk_nnz", chunk as u64)
+            .u64("peak_resident_nnz", stats.peak_resident_nnz as u64)
+            .u64("peak_window_nnz", stats.peak_window_nnz as u64)
+            .f64("mem_secs", mem_secs)
+            .f64("stream_secs", st_secs),
+    );
 
     let mut fits = Vec::new();
     for (name, points, rng) in
@@ -158,11 +185,16 @@ fn main() {
             "fit {name:>9}: n={sub_n} k={k} loss={:.3} evals={} {secs:.3}s",
             fit.loss, fit.stats.distance_evals
         );
-        json_rows.push(format!(
-            "{{\"kind\": \"fit\", \"source\": \"{name}\", \"n\": {sub_n}, \"k\": {k}, \
-             \"loss\": {}, \"evals\": {}, \"wall_secs\": {secs:.6}}}",
-            fit.loss, fit.stats.distance_evals
-        ));
+        report.row(
+            JsonObj::new()
+                .str("kind", "fit")
+                .str("source", name)
+                .u64("n", sub_n as u64)
+                .u64("k", k as u64)
+                .f64("loss", fit.loss)
+                .u64("evals", fit.stats.distance_evals)
+                .f64("wall_secs", secs),
+        );
         fits.push(fit);
     }
     assert_eq!(fits[0].medoids, fits[1].medoids, "medoid parity");
@@ -173,10 +205,6 @@ fn main() {
     );
     println!("fit parity in-memory vs streamed-subsample: identical");
 
-    let doc = format!("[\n  {}\n]\n", json_rows.join(",\n  "));
-    match std::fs::write("BENCH_stream.json", &doc) {
-        Ok(()) => println!("wrote BENCH_stream.json"),
-        Err(e) => println!("BENCH_stream.json: write failed ({e})"),
-    }
+    let _ = report.write();
     let _ = std::fs::remove_file(&mtx);
 }

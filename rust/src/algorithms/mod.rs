@@ -49,6 +49,11 @@ pub struct FitStats {
     /// Per-iteration normalizer the paper uses for Figures 1b/2/3:
     /// swap iterations + 1 (the +1 folds in all k BUILD steps).
     pub iters_plus_one: usize,
+    /// Pairwise-cache hits over the whole fit (0 when no cache is
+    /// enabled — see [`FitStats::cache_hit_rate`] to disambiguate).
+    pub cache_hits: u64,
+    /// Pairwise-cache misses over the whole fit.
+    pub cache_misses: u64,
 }
 
 impl FitStats {
@@ -60,6 +65,17 @@ impl FitStats {
     /// Wall-clock per iteration (the paper's Fig 2/3 y-axis).
     pub fn secs_per_iter(&self) -> f64 {
         self.wall_secs / self.iters_plus_one.max(1) as f64
+    }
+
+    /// Pairwise-cache hit rate in `[0, 1]`, or `None` when the backend
+    /// had no cache (hits and misses both zero).
+    pub fn cache_hit_rate(&self) -> Option<f64> {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            None
+        } else {
+            Some(self.cache_hits as f64 / total as f64)
+        }
     }
 }
 
@@ -85,6 +101,10 @@ impl Clustering {
     ) -> Clustering {
         medoids.sort_unstable();
         stats.distance_evals = stats.build_evals + stats.swap_evals + stats.eval_evals;
+        if let Some((hits, misses)) = backend.cache_stats() {
+            stats.cache_hits = hits;
+            stats.cache_misses = misses;
+        }
         let (loss, assignments) = loss_and_assignments(backend, &medoids);
         Clustering { medoids, assignments, loss, stats }
     }
@@ -111,8 +131,10 @@ impl Clustering {
             "finalize_with requires strictly increasing medoids"
         );
         stats.distance_evals = stats.build_evals + stats.swap_evals + stats.eval_evals;
-        #[cfg(not(debug_assertions))]
-        let _ = backend;
+        if let Some((hits, misses)) = backend.cache_stats() {
+            stats.cache_hits = hits;
+            stats.cache_misses = misses;
+        }
         #[cfg(debug_assertions)]
         {
             let before = backend.counter().get();

@@ -135,6 +135,10 @@ pub struct AdaptiveOutcome {
     pub sigmas: Vec<f64>,
     /// True when the convergence cutoff (`early_stop_above`) fired.
     pub early_stopped: bool,
+    /// Confidence-interval half-width of the winning arm at termination
+    /// (how decided the search was; telemetry only — computed after the
+    /// winner is chosen, so it never influences the search).
+    pub best_half_width: f64,
 }
 
 /// Run Algorithm 1. Panics if the arm set is empty.
@@ -304,6 +308,7 @@ pub fn adaptive_search(
         rounds,
         exact_fallbacks,
         pulls,
+        best_half_width: half_width(cfg.ci, &est[best], cfg.delta),
         sigmas: est
             .iter()
             .map(|e| e.sigma.unwrap_or(0.0))

@@ -7,6 +7,7 @@
 //! same rows the figure plots (sample size, evals/iteration, runtime/
 //! iteration, fitted log–log slope) via [`table::Table`].
 
+pub mod report;
 pub mod table;
 
 use crate::stats::summary::mean_ci95;

@@ -1,0 +1,247 @@
+//! Unified `BENCH_*.json` envelope: one emitter for every bench binary.
+//!
+//! Before this module each bench hand-rolled its own JSON (or printed
+//! tables only), so the cross-PR bench trajectory could not be compared
+//! mechanically. Every artifact now shares one envelope:
+//!
+//! ```json
+//! {
+//!   "schema": 1,
+//!   "bench": "serve",
+//!   "scale": "smoke",
+//!   "params": { ... },
+//!   "metrics": { <obs::global() snapshot at write time> },
+//!   "data": [ <the bench's own rows, fields unchanged> ]
+//! }
+//! ```
+//!
+//! The pre-envelope payload rows live unchanged under `data`, so existing
+//! consumers only need to unwrap one level. `metrics` embeds the process
+//! metrics snapshot ([`crate::obs::MetricsRegistry::snapshot_json`]) —
+//! benches are one process per run, so the snapshot is the run's own
+//! telemetry (kernel block counts, serve latency histograms, ...).
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use crate::bench::{table::Table, Scale};
+use crate::util::json::escape;
+
+/// Envelope schema version; bump on breaking shape changes.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Ordered JSON object builder (insertion order preserved — unlike
+/// `util::json::Json::Obj`, which sorts keys — so rows read in the order
+/// the bench wrote them).
+#[derive(Debug, Clone, Default)]
+pub struct JsonObj {
+    fields: Vec<(String, String)>,
+}
+
+impl JsonObj {
+    /// Empty object.
+    pub fn new() -> JsonObj {
+        JsonObj::default()
+    }
+
+    /// String field (escaped).
+    pub fn str(mut self, key: &str, value: &str) -> JsonObj {
+        self.fields.push((key.to_string(), format!("\"{}\"", escape(value))));
+        self
+    }
+
+    /// Unsigned integer field.
+    pub fn u64(mut self, key: &str, value: u64) -> JsonObj {
+        self.fields.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    /// Float field (Rust's shortest-roundtrip rendering; non-finite
+    /// values become `null`).
+    pub fn f64(mut self, key: &str, value: f64) -> JsonObj {
+        let rendered = if value.is_finite() { format!("{value}") } else { "null".to_string() };
+        self.fields.push((key.to_string(), rendered));
+        self
+    }
+
+    /// Boolean field.
+    pub fn bool(mut self, key: &str, value: bool) -> JsonObj {
+        self.fields.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    /// Pre-rendered JSON fragment (caller guarantees validity).
+    pub fn raw(mut self, key: &str, rendered_json: String) -> JsonObj {
+        self.fields.push((key.to_string(), rendered_json));
+        self
+    }
+
+    /// Render as a JSON object.
+    pub fn render(&self) -> String {
+        let mut out = String::from("{");
+        for (i, (k, v)) in self.fields.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            let _ = write!(out, "\"{}\": {v}", escape(k));
+        }
+        out.push('}');
+        out
+    }
+}
+
+/// Builder for one `BENCH_<name>.json` artifact.
+#[derive(Debug, Clone)]
+pub struct Report {
+    name: String,
+    scale: Option<Scale>,
+    params: JsonObj,
+    rows: Vec<String>,
+}
+
+impl Report {
+    /// Report writing to `BENCH_<name>.json` in the working directory.
+    pub fn new(name: &str) -> Report {
+        Report { name: name.to_string(), scale: None, params: JsonObj::new(), rows: Vec::new() }
+    }
+
+    /// Record the bench scale in the envelope.
+    pub fn scale(mut self, scale: Scale) -> Report {
+        self.scale = Some(scale);
+        self
+    }
+
+    /// Set the `params` object (dataset sizes, thread counts, ...).
+    pub fn params(mut self, params: JsonObj) -> Report {
+        self.params = params;
+        self
+    }
+
+    /// Append one payload row under `data`.
+    pub fn row(&mut self, row: JsonObj) {
+        self.rows.push(row.render());
+    }
+
+    /// Append an experiment table: one row per table row, cells keyed by
+    /// header, plus a `"table"` field carrying the title. All cells are
+    /// strings (tables are already formatted for humans); consumers that
+    /// need numbers parse them.
+    pub fn table(&mut self, table: &Table) {
+        for row in &table.rows {
+            let mut obj = JsonObj::new().str("table", &table.title);
+            for (header, cell) in table.headers.iter().zip(row) {
+                obj = obj.str(header, cell);
+            }
+            self.rows.push(obj.render());
+        }
+    }
+
+    /// Rows appended so far.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// No rows yet?
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render the full envelope (metrics snapshot taken now).
+    pub fn render(&self) -> String {
+        let mut out = String::from("{\n");
+        let _ = writeln!(out, "  \"schema\": {SCHEMA_VERSION},");
+        let _ = writeln!(out, "  \"bench\": \"{}\",", escape(&self.name));
+        if let Some(scale) = self.scale {
+            let scale_name = match scale {
+                Scale::Smoke => "smoke",
+                Scale::Quick => "quick",
+                Scale::Paper => "paper",
+            };
+            let _ = writeln!(out, "  \"scale\": \"{scale_name}\",");
+        }
+        let _ = writeln!(out, "  \"params\": {},", self.params.render());
+        let _ = writeln!(out, "  \"metrics\": {},", crate::obs::global().snapshot_json());
+        if self.rows.is_empty() {
+            out.push_str("  \"data\": []\n");
+        } else {
+            let _ = writeln!(out, "  \"data\": [\n    {}\n  ]", self.rows.join(",\n    "));
+        }
+        out.push_str("}\n");
+        out
+    }
+
+    /// Write `BENCH_<name>.json`; returns the path. Prints a one-line
+    /// confirmation (or the error) like the hand-rolled writers did.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let path = PathBuf::from(format!("BENCH_{}.json", self.name));
+        let body = self.render();
+        match std::fs::write(&path, &body) {
+            Ok(()) => {
+                println!("wrote {}", path.display());
+                Ok(path)
+            }
+            Err(e) => {
+                println!("{}: write failed ({e})", path.display());
+                Err(e)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn json_obj_preserves_order_and_escapes() {
+        let obj = JsonObj::new()
+            .str("name", "a \"b\"")
+            .u64("n", 5)
+            .f64("x", 1.5)
+            .f64("bad", f64::INFINITY)
+            .bool("ok", true)
+            .raw("inner", "[1, 2]".to_string());
+        let rendered = obj.render();
+        assert!(
+            rendered.starts_with("{\"name\": \"a \\\"b\\\"\", \"n\": 5"),
+            "{rendered}"
+        );
+        let v = Json::parse(&rendered).expect("valid json");
+        assert_eq!(v.get("n"), Some(&Json::Num(5.0)));
+        assert_eq!(v.get("bad"), Some(&Json::Null));
+        assert_eq!(v.get("inner"), Some(&Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)])));
+    }
+
+    #[test]
+    fn envelope_has_schema_bench_params_metrics_data() {
+        let mut r = Report::new("unit_test")
+            .scale(Scale::Smoke)
+            .params(JsonObj::new().u64("n", 100));
+        r.row(JsonObj::new().str("kind", "fit").f64("loss", 3.25));
+        r.row(JsonObj::new().str("kind", "fit").f64("loss", 1.0));
+        assert_eq!(r.len(), 2);
+        let v = Json::parse(&r.render()).expect("envelope is valid JSON");
+        assert_eq!(v.get("schema"), Some(&Json::Num(SCHEMA_VERSION as f64)));
+        assert_eq!(v.get("bench"), Some(&Json::Str("unit_test".into())));
+        assert_eq!(v.get("scale"), Some(&Json::Str("smoke".into())));
+        assert_eq!(v.get("params").and_then(|p| p.get("n")), Some(&Json::Num(100.0)));
+        assert!(v.get("metrics").is_some(), "metrics snapshot embedded");
+        let data = v.get("data").and_then(|d| d.as_arr()).expect("data array");
+        assert_eq!(data.len(), 2);
+        assert_eq!(data[0].get("loss"), Some(&Json::Num(3.25)));
+    }
+
+    #[test]
+    fn table_rows_are_keyed_by_header() {
+        let mut t = Table::new("demo", &["algo", "loss"]);
+        t.row(vec!["pam".into(), "1.5".into()]);
+        let mut r = Report::new("unit_test_table");
+        r.table(&t);
+        let v = Json::parse(&r.render()).unwrap();
+        let data = v.get("data").and_then(|d| d.as_arr()).unwrap();
+        assert_eq!(data[0].get("table"), Some(&Json::Str("demo".into())));
+        assert_eq!(data[0].get("algo"), Some(&Json::Str("pam".into())));
+        assert_eq!(data[0].get("loss"), Some(&Json::Str("1.5".into())));
+    }
+}

@@ -7,9 +7,11 @@ use crate::coordinator::config::BanditPamConfig;
 use crate::coordinator::session::SwapSession;
 use crate::coordinator::state::MedoidState;
 use crate::coordinator::swap::swap_step_session;
+use crate::obs::{TraceSink, TraceValue};
 use crate::runtime::backend::DistanceBackend;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
+use std::sync::Arc;
 
 /// BanditPAM (paper §3). Tracks PAM's optimization trajectory with high
 /// probability in O(n log n) distance evaluations per iteration.
@@ -20,6 +22,11 @@ pub struct BanditPam {
     pub build_sigmas: Vec<Vec<f64>>,
     /// Per-call adaptive-search telemetry from the last fit.
     pub trace: Vec<SearchTrace>,
+    /// Opt-in JSONL span sink (`--trace-out`). Emission happens *after*
+    /// each search from values the fit already computed, so attaching a
+    /// sink never changes the trajectory, the rng stream or the eval
+    /// counters (pinned by `tests/property_obs.rs`).
+    sink: Option<Arc<TraceSink>>,
 }
 
 /// One Algorithm-1 invocation's telemetry. `PartialEq` so determinism
@@ -40,12 +47,37 @@ pub struct SearchTrace {
 impl BanditPam {
     /// With explicit configuration.
     pub fn new(config: BanditPamConfig) -> Self {
-        BanditPam { config, build_sigmas: Vec::new(), trace: Vec::new() }
+        BanditPam { config, build_sigmas: Vec::new(), trace: Vec::new(), sink: None }
     }
 
     /// Paper-default configuration.
     pub fn default_paper() -> Self {
         Self::new(BanditPamConfig::default())
+    }
+
+    /// Attach a JSONL trace sink: each BUILD round and SWAP iteration
+    /// emits one span event (see `rust/OBS.md` for the schema).
+    pub fn with_trace_sink(mut self, sink: Arc<TraceSink>) -> Self {
+        self.sink = Some(sink);
+        self
+    }
+
+    /// Set or clear the trace sink on an existing instance.
+    pub fn set_trace_sink(&mut self, sink: Option<Arc<TraceSink>>) {
+        self.sink = sink;
+    }
+
+    /// `DistanceCache` effectiveness as trace fields (empty when the
+    /// backend runs without a cache).
+    fn cache_fields(backend: &dyn DistanceBackend, fields: &mut Vec<(&'static str, TraceValue)>) {
+        if let Some((hits, misses)) = backend.cache_stats() {
+            fields.push(("cache_hits", hits.into()));
+            fields.push(("cache_misses", misses.into()));
+            let total = hits + misses;
+            if total > 0 {
+                fields.push(("cache_hit_rate", (hits as f64 / total as f64).into()));
+            }
+        }
     }
 
     /// Run only the BUILD phase (used by the Appendix-Figure-1 experiment).
@@ -67,20 +99,34 @@ impl BanditPam {
             }
             return Ok(state);
         }
-        for _ in 0..k {
+        for step in 0..k {
             let before = backend.counter().get();
-            let (_, outcome) = build_step(backend, &mut state, &self.config, rng);
+            let (chosen, outcome) = build_step(backend, &mut state, &self.config, rng);
             if self.config.record_sigmas {
                 self.build_sigmas.push(outcome.sigmas.clone());
             }
+            let evals = backend.counter().get() - before;
             self.trace.push(SearchTrace {
                 phase: "build",
                 arms: outcome.sigmas.len(),
                 rounds: outcome.rounds,
                 exact_fallbacks: outcome.exact_fallbacks,
-                distance_evals: backend.counter().get() - before,
+                distance_evals: evals,
                 evals_saved: 0,
             });
+            if let Some(sink) = &self.sink {
+                let mut fields: Vec<(&'static str, TraceValue)> = vec![
+                    ("round", step.into()),
+                    ("arms", outcome.sigmas.len().into()),
+                    ("batches", outcome.rounds.into()),
+                    ("exact_fallbacks", outcome.exact_fallbacks.into()),
+                    ("evals", evals.into()),
+                    ("ci_half_width", outcome.best_half_width.into()),
+                    ("chosen", chosen.into()),
+                ];
+                Self::cache_fields(backend, &mut fields);
+                sink.emit("build_round", &fields);
+            }
         }
         Ok(state)
     }
@@ -125,14 +171,31 @@ impl KMedoids for BanditPam {
             let saved_before = session.evals_saved();
             let step = swap_step_session(backend, &mut state, &mut session, &self.config, rng);
             stats.swap_iters += 1;
+            let evals = backend.counter().get() - before;
+            let saved = session.evals_saved().saturating_sub(saved_before);
             self.trace.push(SearchTrace {
                 phase: "swap",
                 arms: state.medoids.len() * (backend.n() - state.medoids.len()),
                 rounds: step.outcome.rounds,
                 exact_fallbacks: step.outcome.exact_fallbacks,
-                distance_evals: backend.counter().get() - before,
-                evals_saved: session.evals_saved().saturating_sub(saved_before),
+                distance_evals: evals,
+                evals_saved: saved,
             });
+            if let Some(sink) = &self.sink {
+                let mut fields: Vec<(&'static str, TraceValue)> = vec![
+                    ("iter", stats.swap_iters.into()),
+                    ("arms", (state.medoids.len() * (backend.n() - state.medoids.len())).into()),
+                    ("batches", step.outcome.rounds.into()),
+                    ("exact_fallbacks", step.outcome.exact_fallbacks.into()),
+                    ("evals", evals.into()),
+                    ("evals_saved", saved.into()),
+                    ("ci_half_width", step.outcome.best_half_width.into()),
+                    ("best_delta", step.best_delta.into()),
+                    ("applied", step.applied.is_some().into()),
+                ];
+                Self::cache_fields(backend, &mut fields);
+                sink.emit("swap_iter", &fields);
+            }
             match step.applied {
                 Some(_) => stats.swaps_applied += 1,
                 None => break,
@@ -142,7 +205,24 @@ impl KMedoids for BanditPam {
         stats.swap_evals = backend.counter().get() - start_evals - build_evals;
         stats.iters_plus_one = stats.swap_iters + 1;
         stats.wall_secs = timer.secs();
-        Ok(Clustering::finalize(backend, state.medoids, stats))
+        let clustering = Clustering::finalize(backend, state.medoids, stats);
+        if let Some(sink) = &self.sink {
+            let mut fields: Vec<(&'static str, TraceValue)> = vec![
+                ("algo", "banditpam".into()),
+                ("n", backend.n().into()),
+                ("k", k.into()),
+                ("loss", clustering.loss.into()),
+                ("distance_evals", clustering.stats.distance_evals.into()),
+                ("swap_iters", clustering.stats.swap_iters.into()),
+                ("swaps_applied", clustering.stats.swaps_applied.into()),
+                ("swap_evals_saved", clustering.stats.swap_evals_saved.into()),
+                ("wall_secs", clustering.stats.wall_secs.into()),
+            ];
+            Self::cache_fields(backend, &mut fields);
+            sink.emit("fit_summary", &fields);
+            let _ = sink.flush();
+        }
+        Ok(clustering)
     }
 }
 

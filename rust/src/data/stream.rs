@@ -327,6 +327,9 @@ pub struct CsrChunkReader {
     peak_resident_nnz: usize,
     spilled: bool,
     spill_path: Option<PathBuf>,
+    /// Process-metric handles, resolved once at open.
+    obs_windows: std::sync::Arc<crate::obs::Counter>,
+    obs_window_nnz: std::sync::Arc<crate::obs::Histogram>,
 }
 
 impl CsrChunkReader {
@@ -403,6 +406,8 @@ impl CsrChunkReader {
             peak_window_nnz,
             peak_resident_nnz: 0,
             spill_path,
+            obs_windows: crate::obs::global().counter("stream_windows_total"),
+            obs_window_nnz: crate::obs::global().histogram("stream_window_nnz"),
         })
     }
 
@@ -494,6 +499,8 @@ impl CsrChunkReader {
         // (which overwrite this with their larger selected+window /
         // full-assembly figures).
         self.peak_resident_nnz = self.peak_resident_nnz.max(matrix.nnz());
+        self.obs_windows.inc();
+        self.obs_window_nnz.record(matrix.nnz() as u64);
         Ok(Some(CsrWindow { start_row: start, matrix }))
     }
 

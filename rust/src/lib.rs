@@ -76,6 +76,7 @@ pub mod distance;
 pub mod error;
 pub mod experiments;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod stats;
@@ -97,6 +98,7 @@ pub mod prelude {
     pub use crate::distance::{counter::DistanceCounter, Metric};
     pub use crate::error::{Error, Result};
     pub use crate::model::{BigFit, BigFitStats, Fit, KMedoidsModel};
+    pub use crate::obs::TraceSink;
     pub use crate::runtime::backend::{DistanceBackend, NativeBackend};
     pub use crate::util::rng::Rng;
 }

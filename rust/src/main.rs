@@ -26,6 +26,7 @@ use banditpam::data::stream::{self, StreamOptions};
 use banditpam::data::{loader, synthetic, Dataset, Points};
 use banditpam::distance::Metric;
 use banditpam::model::{Fit, KMedoidsModel};
+use banditpam::obs::{TraceSink, TraceValue};
 use banditpam::runtime::backend::NativeBackend;
 use banditpam::runtime::executable::Client;
 use banditpam::runtime::manifest::Manifest;
@@ -38,6 +39,7 @@ use banditpam::util::cli::{Args, DataFormat};
 use banditpam::util::rng::Rng;
 use banditpam::{Error, Result};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 /// Full usage text, rendered from the algorithm/synthetic registries.
 fn help() -> String {
@@ -60,19 +62,20 @@ USAGE:
                     [--n N] [--k K]
                     [--metric l2|l1|cosine|tree] [--algo NAME] [--seed S]
                     [--backend native|xla] [--threads T] [--verbose]
-                    [--save-model FILE]
+                    [--save-model FILE] [--trace-out FILE] [--metrics-dump FILE]
   banditpam bigfit  [--data FILE | --synthetic NAME] [--format csv|mtx|idx]
                     [--limit L] [--transpose] [--stream] [--chunk-nnz B]
                     [--n N] [--k K] [--metric l2|l1|cosine|tree] [--algo NAME]
                     [--samples S] [--sample-size Z] [--seed S] [--threads T]
                     [--save-model FILE] [--verbose]
+                    [--trace-out FILE] [--metrics-dump FILE]
   banditpam predict --model FILE [--data FILE | --synthetic NAME]
                     [--format csv|mtx|idx] [--limit L] [--transpose]
                     [--n N] [--seed S] [--threads T] [--out FILE] [--verbose]
   banditpam serve   [--stdio | --listen HOST:PORT] NAME=FILE.bpmodel ...
                     [--threads T] [--max-queue-requests N] [--max-queue-points N]
                     [--max-batch-points N] [--retry-after-ms MS]
-                    [--quarantine-threshold N] [--quiet]
+                    [--quarantine-threshold N] [--quiet] [--metrics-dump FILE]
   banditpam experiment <id|all> [--scale smoke|quick|paper] [--seed S] [--csv]
   banditpam generate-data --synthetic NAME --n N --out FILE[.csv|.mtx]
                     [--format csv|mtx] [--seed S]
@@ -114,6 +117,12 @@ BIGFIT:      CLARA-style outer loop around any --algo: draw --samples
              in-memory run with the same seed.
 EXPERIMENTS: fig1a fig1b fig2 fig3 appfig1 appfig2 appfig34 appfig5
              headline ablations (see DESIGN.md for the paper mapping)
+TELEMETRY:   --trace-out FILE writes structured JSONL phase spans (one
+             event per BUILD round / SWAP iteration, per BigFit sample
+             and eval window — schema in rust/OBS.md); --metrics-dump
+             FILE writes the process-wide metric registry as Prometheus
+             text exposition when the command finishes. Both are inert
+             when omitted: results are bitwise-identical either way.
 ",
         algorithms.join("\n"),
         synthetics.join("\n"),
@@ -187,6 +196,32 @@ fn make_dataset(args: &Args, rng: &mut Rng) -> Result<Dataset> {
     Ok(ds)
 }
 
+/// `--trace-out FILE`: open the JSONL trace sink, or `None` when the
+/// flag is absent (the zero-cost default — no sink, no allocations on
+/// the hot paths).
+fn open_trace(args: &Args) -> Result<Option<Arc<TraceSink>>> {
+    match args.get("trace-out") {
+        Some(path) => Ok(Some(TraceSink::to_path(path)?)),
+        None => Ok(None),
+    }
+}
+
+/// `--metrics-dump FILE`: write the process-wide metric registry as
+/// Prometheus text exposition once the command finishes. `to_stderr`
+/// keeps the confirmation line off stdout for `serve --stdio`, whose
+/// stdout carries protocol frames.
+fn dump_metrics(args: &Args, to_stderr: bool) -> Result<()> {
+    if let Some(path) = args.get("metrics-dump") {
+        std::fs::write(path, banditpam::obs::global().render_prometheus())?;
+        if to_stderr {
+            eprintln!("metrics dump  : {path}");
+        } else {
+            println!("metrics dump  : {path}");
+        }
+    }
+    Ok(())
+}
+
 fn cmd_cluster(args: &Args) -> Result<()> {
     let seed: u64 = args.get_parsed("seed", 42u64)?;
     let mut rng = Rng::seed_from(seed);
@@ -210,7 +245,18 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     )?;
 
     let backend_kind = args.get("backend").unwrap_or("native");
-    let mut algo = make_algorithm(&algo_name)?;
+    let sink = open_trace(args)?;
+    // The banditpam coordinator emits its own per-round spans when a sink
+    // is attached; constructing it directly here (same config as the
+    // registry's `default_paper`) is the only algorithm-specific branch.
+    let mut algo: Box<dyn KMedoids> = match &sink {
+        Some(s) if algo_name == "banditpam" => {
+            let mut a = banditpam::coordinator::banditpam::BanditPam::default_paper();
+            a.set_trace_sink(Some(s.clone()));
+            Box::new(a)
+        }
+        _ => make_algorithm(&algo_name)?,
+    };
     println!(
         "dataset {} (n={}, metric={metric}, k={k}, algo={algo_name}, backend={backend_kind})",
         ds.name,
@@ -261,6 +307,39 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             sizes[a] += 1;
         }
         println!("cluster sizes : {sizes:?}");
+        match fit.stats.cache_hit_rate() {
+            Some(rate) => println!(
+                "distance cache: {} hits / {} misses ({:.1}% hit rate)",
+                fit.stats.cache_hits,
+                fit.stats.cache_misses,
+                100.0 * rate
+            ),
+            None => println!("distance cache: off"),
+        }
+        println!(
+            "swap reuse    : {} evals served from session cache",
+            fit.stats.swap_evals_saved
+        );
+    }
+    if let Some(s) = &sink {
+        // The banditpam coordinator writes its own `fit_summary`; every
+        // other algorithm gets one here so a trace file is never empty.
+        if algo_name != "banditpam" {
+            s.emit(
+                "fit_summary",
+                &[
+                    ("algo", TraceValue::from(algo_name.as_str())),
+                    ("n", TraceValue::from(ds.len())),
+                    ("k", TraceValue::from(k)),
+                    ("loss", TraceValue::from(fit.loss)),
+                    ("distance_evals", TraceValue::from(fit.stats.distance_evals)),
+                    ("swap_iters", TraceValue::from(fit.stats.swap_iters)),
+                    ("wall_secs", TraceValue::from(fit.stats.wall_secs)),
+                ],
+            );
+        }
+        s.flush()?;
+        println!("trace         : {} events", s.len());
     }
     if let Some(path) = args.get("save-model") {
         let fingerprint = format!(
@@ -278,6 +357,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         model.save(Path::new(path))?;
         println!("model saved   : {path} ({} bytes)", std::fs::metadata(path)?.len());
     }
+    dump_metrics(args, false)?;
     Ok(())
 }
 
@@ -297,14 +377,16 @@ fn cmd_bigfit(args: &Args) -> Result<()> {
     )?;
     let samples: usize = args.get_parsed("samples", 5usize)?;
     let sample_size: usize = args.get_parsed("sample-size", 0usize)?;
-    let big = Fit::algorithm(&algo_name)?
+    let sink = open_trace(args)?;
+    let mut fit = Fit::algorithm(&algo_name)?
         .metric(metric)
         .k(k)
         .seed(seed)
-        .threads(threads)
-        .big()
-        .samples(samples)
-        .sample_size(sample_size);
+        .threads(threads);
+    if let Some(s) = &sink {
+        fit = fit.trace_sink(s.clone());
+    }
+    let big = fit.big().samples(samples).sample_size(sample_size);
 
     let streamed = args.flag("stream") || args.get("chunk-nnz").is_some();
     let (model, stats, source) = if streamed {
@@ -377,10 +459,14 @@ fn cmd_bigfit(args: &Args) -> Result<()> {
             );
         }
     }
+    if let Some(s) = &sink {
+        println!("trace         : {} events", s.len());
+    }
     if let Some(path) = args.get("save-model") {
         model.save(Path::new(path))?;
         println!("model saved   : {path} ({} bytes)", std::fs::metadata(path)?.len());
     }
+    dump_metrics(args, false)?;
     Ok(())
 }
 
@@ -540,6 +626,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if !args.flag("quiet") {
         eprintln!("serve: final stats {}", server.stats.snapshot_json());
     }
+    dump_metrics(args, true)?;
     Ok(())
 }
 

@@ -40,6 +40,7 @@ use crate::algorithms::{Clustering, FitStats, KMedoids};
 use crate::data::stream::{CsrChunkReader, StreamOptions, StreamStats};
 use crate::data::{Dataset, Points};
 use crate::error::{Error, Result};
+use crate::obs::{TraceSink, TraceValue};
 use crate::runtime::backend::{loss_and_assignments_streamed, DistanceBackend, NativeBackend};
 use crate::runtime::pool::ThreadPool;
 use crate::util::rng::Rng;
@@ -124,6 +125,9 @@ trait Source {
     fn peak_window_nnz(&self) -> usize;
     /// Peak resident raw entries across the passes so far.
     fn peak_resident_nnz(&self) -> usize;
+    /// Attach a trace sink for per-window eval events (no-op for sources
+    /// that don't emit any).
+    fn set_trace(&mut self, _sink: Option<Arc<TraceSink>>) {}
 }
 
 /// Raw entries a [`Points`] holds (dense/tree storage reports 0 — the
@@ -200,6 +204,7 @@ struct StreamSource {
     kept_nnz: usize,
     peak_window_nnz: usize,
     peak_resident_nnz: usize,
+    trace: Option<Arc<TraceSink>>,
 }
 
 impl StreamSource {
@@ -213,6 +218,7 @@ impl StreamSource {
             kept_nnz: stats.kept_nnz,
             peak_window_nnz: stats.peak_window_nnz,
             peak_resident_nnz: 0,
+            trace: None,
         })
     }
 
@@ -254,10 +260,21 @@ impl Source for StreamSource {
         medoid_nnz: usize,
     ) -> Result<(f64, Vec<usize>)> {
         let mut reader = self.reopen()?;
+        let sink = self.trace.clone();
         let out = loss_and_assignments_streamed(medoid_backend, self.rows, || {
-            Ok(reader
-                .next_window()?
-                .map(|w| (w.start_row, Points::Sparse(w.matrix))))
+            Ok(reader.next_window()?.map(|w| {
+                if let Some(s) = &sink {
+                    s.emit(
+                        "eval_window",
+                        &[
+                            ("start_row", TraceValue::from(w.start_row)),
+                            ("rows", TraceValue::from(w.matrix.rows())),
+                            ("nnz", TraceValue::from(w.matrix.nnz())),
+                        ],
+                    );
+                }
+                (w.start_row, Points::Sparse(w.matrix))
+            }))
         })?;
         self.merge(&reader.stats(), medoid_nnz);
         Ok(out)
@@ -273,6 +290,10 @@ impl Source for StreamSource {
 
     fn peak_resident_nnz(&self) -> usize {
         self.peak_resident_nnz
+    }
+
+    fn set_trace(&mut self, sink: Option<Arc<TraceSink>>) {
+        self.trace = sink;
     }
 }
 
@@ -349,6 +370,7 @@ impl BigFit {
         // candidate evaluations); thread count never changes bits.
         let pool: Option<Arc<ThreadPool>> =
             (threads > 1).then(|| Arc::new(ThreadPool::new(threads)));
+        src.set_trace(self.inner.trace.clone());
         let mut rng = Rng::seed_from(self.inner.seed);
 
         let mut best: Option<(f64, Vec<usize>, Vec<usize>, Points)> = None;
@@ -409,6 +431,20 @@ impl BigFit {
             let eval_secs = t_eval.secs();
 
             trajectory.push(SampleTrace { sample, loss, subsample_secs, fit_secs, eval_secs });
+            if let Some(sink) = &self.inner.trace {
+                sink.emit(
+                    "bigfit_sample",
+                    &[
+                        ("sample", TraceValue::from(sample)),
+                        ("sample_size", TraceValue::from(ssize)),
+                        ("loss", TraceValue::from(loss)),
+                        ("subsample_secs", TraceValue::from(subsample_secs)),
+                        ("fit_secs", TraceValue::from(fit_secs)),
+                        ("eval_secs", TraceValue::from(eval_secs)),
+                        ("eval_rows_per_sec", TraceValue::from(n as f64 / eval_secs)),
+                    ],
+                );
+            }
             if best.as_ref().map(|(l, _, _, _)| loss < *l).unwrap_or(true) {
                 best = Some((loss, medoids, assignments, medoid_points));
             }
@@ -446,6 +482,22 @@ impl BigFit {
             trajectory,
             wall_secs: total.secs(),
         };
+        if let Some(sink) = &self.inner.trace {
+            sink.emit(
+                "bigfit_summary",
+                &[
+                    ("samples", TraceValue::from(self.samples)),
+                    ("sample_size", TraceValue::from(ssize)),
+                    ("n_rows", TraceValue::from(n)),
+                    ("loss", TraceValue::from(loss)),
+                    ("total_nnz", TraceValue::from(big_stats.total_nnz)),
+                    ("peak_window_nnz", TraceValue::from(big_stats.peak_window_nnz)),
+                    ("peak_resident_nnz", TraceValue::from(big_stats.peak_resident_nnz)),
+                    ("wall_secs", TraceValue::from(big_stats.wall_secs)),
+                ],
+            );
+            let _ = sink.flush();
+        }
         Ok((model, big_stats))
     }
 

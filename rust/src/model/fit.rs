@@ -13,8 +13,10 @@ use crate::coordinator::config::BanditPamConfig;
 use crate::data::Dataset;
 use crate::distance::Metric;
 use crate::error::{Error, Result};
+use crate::obs::TraceSink;
 use crate::runtime::backend::NativeBackend;
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 /// Builder for a k-medoids fit. Construct with one of the per-algorithm
 /// entry points ([`Fit::banditpam`], [`Fit::pam`], ...) or by registry
@@ -32,6 +34,12 @@ pub struct Fit {
     pub(crate) threads: usize,
     pub(crate) cache: Option<usize>,
     config: Option<BanditPamConfig>,
+    /// Optional structured trace sink ([`TraceSink`]); attached to the
+    /// BanditPAM coordinator when the algorithm supports tracing.
+    /// Telemetry only — deliberately excluded from [`Fit::fingerprint`]
+    /// (tracing never changes the fit, so two fits differing only here
+    /// are the same model).
+    pub(crate) trace: Option<Arc<TraceSink>>,
 }
 
 impl Fit {
@@ -44,6 +52,7 @@ impl Fit {
             threads: 1,
             cache: None,
             config: None,
+            trace: None,
         }
     }
 
@@ -132,6 +141,16 @@ impl Fit {
         self
     }
 
+    /// Attach a structured trace sink: the BanditPAM coordinator emits one
+    /// JSONL event per BUILD round and SWAP iteration plus a fit summary
+    /// (see `rust/OBS.md`). Ignored by algorithms without tracing support.
+    /// Never changes the fit — traced and untraced runs are bitwise
+    /// identical (asserted by `tests/property_obs.rs`).
+    pub fn trace_sink(mut self, sink: Arc<TraceSink>) -> Fit {
+        self.trace = Some(sink);
+        self
+    }
+
     /// Upgrade this configuration to the bounded-memory CLARA-style outer
     /// loop: [`BigFit`](crate::model::BigFit) draws subsamples, fits this
     /// algorithm on each in memory, and scores every candidate medoid set
@@ -148,7 +167,9 @@ impl Fit {
         if self.algorithm == "banditpam" {
             let config = self.config.clone().unwrap_or_default();
             config.validate()?;
-            Ok(Box::new(BanditPam::new(config)))
+            let mut algo = BanditPam::new(config);
+            algo.set_trace_sink(self.trace.clone());
+            Ok(Box::new(algo))
         } else {
             if self.config.is_some() {
                 return Err(Error::config(format!(

@@ -1,0 +1,543 @@
+//! Lock-free metrics primitives and the process-wide registry.
+//!
+//! Three metric kinds, all updatable from any thread without locking:
+//!
+//! * [`Counter`] — monotonically increasing `u64` (`_total` suffix by
+//!   convention).
+//! * [`Gauge`] — instantaneous `u64` value (queue depths, residency).
+//! * [`Histogram`] — log2-bucketed value distribution with atomic
+//!   buckets. Unlike [`crate::stats::Histogram`] (equal-width, built once
+//!   from a finished sample), this one is fixed-bucket so concurrent
+//!   `record` calls need no rebinning and two histograms merge by plain
+//!   bucket-wise addition.
+//!
+//! The [`MetricsRegistry`] maps names to metrics. Registration takes a
+//! mutex; the returned `Arc` handle is meant to be cached by the caller
+//! (in a struct field or a `OnceLock`) so the hot path is a single
+//! relaxed `fetch_add` — no locks, no allocation.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Number of log2 buckets: bucket 0 holds the value 0, bucket `i >= 1`
+/// holds values in `[2^(i-1), 2^i)`, bucket 64 holds `>= 2^63`.
+pub const HIST_BUCKETS: usize = 65;
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    /// Fresh counter at zero.
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    /// Add 1.
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous value (may go up and down).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicU64,
+}
+
+impl Gauge {
+    /// Fresh gauge at zero.
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    /// Overwrite the value.
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Atomic log2-bucketed histogram of `u64` samples (latencies in
+/// microseconds, sizes in nnz/bytes — any non-negative magnitude where
+/// power-of-two resolution suffices).
+pub struct Histogram {
+    counts: [AtomicU64; HIST_BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.snapshot();
+        write!(f, "Histogram {{ count: {}, sum: {} }}", s.count, s.sum)
+    }
+}
+
+impl Histogram {
+    /// Fresh empty histogram.
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket index of a value: 0 for 0, else `1 + floor(log2 v)`.
+    #[inline]
+    pub fn bucket_of(v: u64) -> usize {
+        (64 - v.leading_zeros()) as usize
+    }
+
+    /// Inclusive upper edge of bucket `i` (the value reported for
+    /// quantiles that land in the bucket).
+    pub fn bucket_upper(i: usize) -> u64 {
+        match i {
+            0 => 0,
+            1..=63 => (1u64 << i) - 1,
+            _ => u64::MAX,
+        }
+    }
+
+    /// Record one sample. Lock-free, allocation-free.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.counts[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a duration, in whole microseconds.
+    #[inline]
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    /// Fold another histogram's samples into this one (bucket-wise sum).
+    pub fn merge(&self, other: &Histogram) {
+        for (dst, src) in self.counts.iter().zip(&other.counts) {
+            dst.fetch_add(src.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.sum.fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Consistent point-in-time copy for quantile extraction.
+    ///
+    /// Buckets are read individually (no global lock), so a snapshot
+    /// racing concurrent `record` calls may be mid-update; totals are
+    /// re-derived from the bucket counts so the snapshot is always
+    /// self-consistent.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let counts: [u64; HIST_BUCKETS] =
+            std::array::from_fn(|i| self.counts[i].load(Ordering::Relaxed));
+        HistogramSnapshot {
+            count: counts.iter().sum(),
+            sum: self.sum.load(Ordering::Relaxed),
+            counts,
+        }
+    }
+}
+
+/// Non-atomic point-in-time copy of a [`Histogram`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub counts: [u64; HIST_BUCKETS],
+    pub sum: u64,
+    pub count: u64,
+}
+
+impl HistogramSnapshot {
+    /// Upper edge of the bucket containing the `q`-quantile sample
+    /// (`0.0 <= q <= 1.0`); 0 when empty. Log2 buckets bound the
+    /// relative error at 2x — honest enough for p50/p99 reporting.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Histogram::bucket_upper(i);
+            }
+        }
+        Histogram::bucket_upper(HIST_BUCKETS - 1)
+    }
+
+    /// Upper edge of the highest non-empty bucket (a 2x upper bound on
+    /// the maximum recorded sample); 0 when empty.
+    pub fn max_bound(&self) -> u64 {
+        self.counts
+            .iter()
+            .rposition(|&c| c > 0)
+            .map(Histogram::bucket_upper)
+            .unwrap_or(0)
+    }
+
+    /// Mean of the recorded samples (exact — the sum is exact even
+    /// though the buckets are coarse); 0.0 when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Bucket-wise difference vs an earlier snapshot of the same
+    /// histogram — the samples recorded in between (benches use this to
+    /// report per-scenario quantiles from cumulative process metrics).
+    pub fn minus(&self, earlier: &HistogramSnapshot) -> HistogramSnapshot {
+        let counts: [u64; HIST_BUCKETS] =
+            std::array::from_fn(|i| self.counts[i].saturating_sub(earlier.counts[i]));
+        HistogramSnapshot {
+            count: counts.iter().sum(),
+            sum: self.sum.saturating_sub(earlier.sum),
+            counts,
+        }
+    }
+}
+
+/// One registered metric.
+#[derive(Debug, Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Metric {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// Name → metric map. Get-or-register takes a mutex; cache the returned
+/// handle for hot paths. Names follow Prometheus conventions:
+/// `[a-z0-9_]+`, counters suffixed `_total`, unit suffixes `_us` / `_nnz`
+/// spelled out (see `rust/OBS.md` for the full catalog).
+pub struct MetricsRegistry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        MetricsRegistry::new()
+    }
+}
+
+impl MetricsRegistry {
+    /// Empty registry.
+    pub const fn new() -> MetricsRegistry {
+        MetricsRegistry { metrics: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Get or register the counter `name`.
+    ///
+    /// Panics if `name` is already registered as a different metric type
+    /// (a naming bug worth failing loudly on).
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.metrics.lock().unwrap();
+        let entry = m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::new())));
+        match entry {
+            Metric::Counter(c) => Arc::clone(c),
+            other => panic!("metric {name:?} already registered as {}", other.type_name()),
+        }
+    }
+
+    /// Get or register the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.metrics.lock().unwrap();
+        let entry = m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::new())));
+        match entry {
+            Metric::Gauge(g) => Arc::clone(g),
+            other => panic!("metric {name:?} already registered as {}", other.type_name()),
+        }
+    }
+
+    /// Get or register the histogram `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.metrics.lock().unwrap();
+        let entry = m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::new())));
+        match entry {
+            Metric::Histogram(h) => Arc::clone(h),
+            other => panic!("metric {name:?} already registered as {}", other.type_name()),
+        }
+    }
+
+    /// Prometheus text exposition (`# TYPE` + samples, histograms as
+    /// cumulative `_bucket{le=...}` series up to the highest non-empty
+    /// bucket, then `+Inf`, `_sum`, `_count`). Deterministic order
+    /// (sorted by name).
+    pub fn render_prometheus(&self) -> String {
+        let metrics: Vec<(String, Metric)> = {
+            let m = self.metrics.lock().unwrap();
+            m.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+        };
+        let mut out = String::new();
+        for (name, metric) in metrics {
+            match metric {
+                Metric::Counter(c) => {
+                    let _ = writeln!(out, "# TYPE {name} counter");
+                    let _ = writeln!(out, "{name} {}", c.get());
+                }
+                Metric::Gauge(g) => {
+                    let _ = writeln!(out, "# TYPE {name} gauge");
+                    let _ = writeln!(out, "{name} {}", g.get());
+                }
+                Metric::Histogram(h) => {
+                    let s = h.snapshot();
+                    let _ = writeln!(out, "# TYPE {name} histogram");
+                    let top = s.counts.iter().rposition(|&c| c > 0).unwrap_or(0);
+                    let mut cum = 0u64;
+                    for (i, &c) in s.counts.iter().enumerate().take(top + 1) {
+                        cum += c;
+                        let _ = writeln!(
+                            out,
+                            "{name}_bucket{{le=\"{}\"}} {cum}",
+                            Histogram::bucket_upper(i)
+                        );
+                    }
+                    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", s.count);
+                    let _ = writeln!(out, "{name}_sum {}", s.sum);
+                    let _ = writeln!(out, "{name}_count {}", s.count);
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON object snapshot (sorted keys): counters and gauges as
+    /// numbers, histograms as `{count, sum, p50, p90, p99, max}` — the
+    /// `metrics` envelope section of `BENCH_*.json`.
+    pub fn snapshot_json(&self) -> String {
+        let metrics: Vec<(String, Metric)> = {
+            let m = self.metrics.lock().unwrap();
+            m.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+        };
+        let mut out = String::from("{");
+        for (i, (name, metric)) in metrics.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            match metric {
+                Metric::Counter(c) => {
+                    let _ = write!(out, "\"{name}\": {}", c.get());
+                }
+                Metric::Gauge(g) => {
+                    let _ = write!(out, "\"{name}\": {}", g.get());
+                }
+                Metric::Histogram(h) => {
+                    let s = h.snapshot();
+                    let _ = write!(
+                        out,
+                        "\"{name}\": {{\"count\": {}, \"sum\": {}, \"p50\": {}, \
+                         \"p90\": {}, \"p99\": {}, \"max\": {}}}",
+                        s.count,
+                        s.sum,
+                        s.quantile(0.50),
+                        s.quantile(0.90),
+                        s.quantile(0.99),
+                        s.max_bound()
+                    );
+                }
+            }
+        }
+        out.push('}');
+        out
+    }
+}
+
+/// The process-wide registry every subsystem records into.
+pub fn global() -> &'static MetricsRegistry {
+    static GLOBAL: MetricsRegistry = MetricsRegistry::new();
+    &GLOBAL
+}
+
+/// Scoped timer recording its elapsed time (whole microseconds) into a
+/// histogram on drop. Built on [`crate::util::timer::Timer`].
+#[derive(Debug)]
+pub struct Span<'a> {
+    hist: &'a Histogram,
+    timer: crate::util::timer::Timer,
+}
+
+impl<'a> Span<'a> {
+    /// Start timing; records into `hist` when dropped.
+    pub fn start(hist: &'a Histogram) -> Span<'a> {
+        Span { hist, timer: crate::util::timer::Timer::start() }
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        self.hist.record_duration(self.timer.elapsed());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(41);
+        assert_eq!(c.get(), 42);
+        let g = Gauge::new();
+        g.set(7);
+        assert_eq!(g.get(), 7);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+    }
+
+    #[test]
+    fn histogram_bucket_edges() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 1);
+        assert_eq!(Histogram::bucket_of(2), 2);
+        assert_eq!(Histogram::bucket_of(3), 2);
+        assert_eq!(Histogram::bucket_of(4), 3);
+        assert_eq!(Histogram::bucket_of(u64::MAX), 64);
+        assert_eq!(Histogram::bucket_upper(0), 0);
+        assert_eq!(Histogram::bucket_upper(1), 1);
+        assert_eq!(Histogram::bucket_upper(2), 3);
+        assert_eq!(Histogram::bucket_upper(64), u64::MAX);
+        // every value lands in a bucket whose upper edge bounds it
+        for v in [0u64, 1, 2, 3, 5, 100, 1 << 40, u64::MAX] {
+            assert!(v <= Histogram::bucket_upper(Histogram::bucket_of(v)), "{v}");
+        }
+    }
+
+    #[test]
+    fn histogram_quantiles_and_mean() {
+        let h = Histogram::new();
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.sum, 5050);
+        assert!((s.mean() - 50.5).abs() < 1e-9);
+        // p50 of 1..=100 is the 50th sample (value 50), bucket upper 63
+        assert_eq!(s.quantile(0.5), 63);
+        // p100 is value 100, bucket [64,128) upper 127
+        assert_eq!(s.quantile(1.0), 127);
+        assert_eq!(s.max_bound(), 127);
+        // empty histogram
+        assert_eq!(Histogram::new().snapshot().quantile(0.5), 0);
+    }
+
+    #[test]
+    fn histogram_merge_equals_combined_recording() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let both = Histogram::new();
+        for v in 0..50u64 {
+            a.record(v * 3);
+            both.record(v * 3);
+        }
+        for v in 0..70u64 {
+            b.record(v * 7 + 1);
+            both.record(v * 7 + 1);
+        }
+        a.merge(&b);
+        assert_eq!(a.snapshot(), both.snapshot());
+    }
+
+    #[test]
+    fn snapshot_minus_recovers_the_delta() {
+        let h = Histogram::new();
+        h.record(10);
+        h.record(20);
+        let before = h.snapshot();
+        h.record(1000);
+        h.record(2000);
+        let delta = h.snapshot().minus(&before);
+        assert_eq!(delta.count, 2);
+        assert_eq!(delta.sum, 3000);
+        assert_eq!(delta.quantile(1.0), 2047);
+    }
+
+    #[test]
+    fn registry_returns_same_handle_and_renders_both_formats() {
+        let r = MetricsRegistry::new();
+        let c = r.counter("test_requests_total");
+        r.counter("test_requests_total").add(2);
+        c.inc();
+        assert_eq!(c.get(), 3);
+        r.gauge("test_depth").set(4);
+        r.histogram("test_latency_us").record(100);
+
+        let prom = r.render_prometheus();
+        assert!(prom.contains("# TYPE test_requests_total counter"), "{prom}");
+        assert!(prom.contains("test_requests_total 3"), "{prom}");
+        assert!(prom.contains("# TYPE test_depth gauge"), "{prom}");
+        assert!(prom.contains("test_depth 4"), "{prom}");
+        assert!(prom.contains("# TYPE test_latency_us histogram"), "{prom}");
+        assert!(prom.contains("test_latency_us_bucket{le=\"+Inf\"} 1"), "{prom}");
+        assert!(prom.contains("test_latency_us_sum 100"), "{prom}");
+
+        let json = crate::util::json::Json::parse(&r.snapshot_json()).expect("valid json");
+        assert_eq!(json.get("test_requests_total"), Some(&crate::util::json::Json::Num(3.0)));
+        assert!(json.get("test_latency_us").and_then(|h| h.get("p50")).is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn registry_rejects_type_confusion() {
+        let r = MetricsRegistry::new();
+        r.counter("test_x");
+        r.gauge("test_x");
+    }
+
+    #[test]
+    fn span_records_on_drop() {
+        let h = Histogram::new();
+        {
+            let _s = Span::start(&h);
+        }
+        assert_eq!(h.snapshot().count, 1);
+    }
+}

@@ -1,0 +1,28 @@
+//! Crate-wide observability: metrics registry, phase-span tracing, and
+//! telemetry export.
+//!
+//! Three layers (see `rust/OBS.md` for the operator-facing catalog):
+//!
+//! 1. **Metrics core** ([`metrics`]) — a process-wide
+//!    [`MetricsRegistry`] of named atomic [`Counter`]s, [`Gauge`]s and
+//!    log2-bucketed [`Histogram`]s. Updates are lock-free; registration
+//!    hands out `Arc` handles meant to be cached by the instrumented
+//!    subsystem, so kernel paths pay one relaxed `fetch_add` and zero
+//!    allocations.
+//! 2. **Structured trace** ([`trace`]) — an opt-in JSONL event writer
+//!    ([`TraceSink`]) emitting phase spans from the coordinator (per
+//!    BUILD round / SWAP iteration) and from BigFit/stream (per sample /
+//!    window). Disabled (`None`) everywhere by default; enabling it
+//!    never changes a fit's results (bitwise-inert, pinned by
+//!    `tests/property_obs.rs`).
+//! 3. **Export surfaces** — Prometheus text exposition
+//!    ([`MetricsRegistry::render_prometheus`], reachable through the
+//!    `serve` protocol's `metrics` frame and the `--metrics-dump` CLI
+//!    flag) and the JSON snapshot embedded in every `BENCH_*.json`
+//!    envelope ([`crate::bench::report`]).
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{global, Counter, Gauge, Histogram, HistogramSnapshot, MetricsRegistry, Span};
+pub use trace::{SharedBuf, TraceSink, TraceValue};

@@ -1,0 +1,253 @@
+//! Opt-in JSONL trace sink for phase spans.
+//!
+//! A [`TraceSink`] serializes structured events — one JSON object per
+//! line — with a process-ordered `seq` number, so consumers can replay
+//! the exact emission order without trusting wall clocks. Producers hold
+//! an `Option<Arc<TraceSink>>`: when it is `None` (the default
+//! everywhere), tracing code is a branch on a `None` and nothing else —
+//! no allocation, no formatting, no lock. Emission only *reads* fit
+//! state (counters, outcomes), never participates in it, so traced and
+//! untraced fits are bitwise-identical (`tests/property_obs.rs`).
+//!
+//! Event catalog and field schema: `rust/OBS.md`.
+
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::util::json::escape;
+
+/// One field value in a trace event.
+#[derive(Debug, Clone)]
+pub enum TraceValue {
+    U64(u64),
+    I64(i64),
+    F64(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl TraceValue {
+    fn write_json(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        match self {
+            TraceValue::U64(v) => {
+                let _ = write!(out, "{v}");
+            }
+            TraceValue::I64(v) => {
+                let _ = write!(out, "{v}");
+            }
+            TraceValue::F64(v) if v.is_finite() => {
+                let _ = write!(out, "{v}");
+            }
+            TraceValue::F64(_) => out.push_str("null"),
+            TraceValue::Bool(v) => {
+                let _ = write!(out, "{v}");
+            }
+            TraceValue::Str(s) => {
+                out.push('"');
+                out.push_str(&escape(s));
+                out.push('"');
+            }
+        }
+    }
+}
+
+impl From<u64> for TraceValue {
+    fn from(v: u64) -> Self {
+        TraceValue::U64(v)
+    }
+}
+
+impl From<usize> for TraceValue {
+    fn from(v: usize) -> Self {
+        TraceValue::U64(v as u64)
+    }
+}
+
+impl From<i64> for TraceValue {
+    fn from(v: i64) -> Self {
+        TraceValue::I64(v)
+    }
+}
+
+impl From<f64> for TraceValue {
+    fn from(v: f64) -> Self {
+        TraceValue::F64(v)
+    }
+}
+
+impl From<bool> for TraceValue {
+    fn from(v: bool) -> Self {
+        TraceValue::Bool(v)
+    }
+}
+
+impl From<&str> for TraceValue {
+    fn from(v: &str) -> Self {
+        TraceValue::Str(v.to_string())
+    }
+}
+
+impl From<String> for TraceValue {
+    fn from(v: String) -> Self {
+        TraceValue::Str(v)
+    }
+}
+
+/// JSONL event writer with process-ordered sequence numbers.
+pub struct TraceSink {
+    out: Mutex<Box<dyn Write + Send>>,
+    seq: AtomicU64,
+}
+
+impl std::fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TraceSink {{ seq: {} }}", self.seq.load(Ordering::Relaxed))
+    }
+}
+
+impl TraceSink {
+    /// Sink writing to a file at `path` (buffered; created/truncated).
+    pub fn to_path(path: impl AsRef<Path>) -> Result<Arc<TraceSink>> {
+        let path = path.as_ref();
+        let file = std::fs::File::create(path).map_err(|e| {
+            Error::data(format!("cannot create trace file {}: {e}", path.display()))
+        })?;
+        Ok(Arc::new(Self::to_writer(Box::new(BufWriter::new(file)))))
+    }
+
+    /// Sink writing to an arbitrary writer (tests use an in-memory
+    /// buffer).
+    pub fn to_writer(out: Box<dyn Write + Send>) -> TraceSink {
+        TraceSink { out: Mutex::new(out), seq: AtomicU64::new(0) }
+    }
+
+    /// Events emitted so far.
+    pub fn len(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// No events emitted yet?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Emit one event line: `{"seq": N, "event": "<event>", <fields...>}`.
+    ///
+    /// `seq` is claimed under the writer lock, so sequence numbers are
+    /// dense and strictly increasing in file order even under concurrent
+    /// emitters. Write errors are swallowed (telemetry must never fail a
+    /// fit); callers that care should `flush()` and check.
+    pub fn emit(&self, event: &str, fields: &[(&str, TraceValue)]) {
+        let mut line = String::with_capacity(64 + fields.len() * 24);
+        line.push_str("{\"seq\": ");
+        let mut out = self.out.lock().unwrap();
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        use std::fmt::Write as _;
+        let _ = write!(line, "{seq}, \"event\": \"{}\"", escape(event));
+        for (k, v) in fields {
+            let _ = write!(line, ", \"{}\": ", escape(k));
+            v.write_json(&mut line);
+        }
+        line.push_str("}\n");
+        let _ = out.write_all(line.as_bytes());
+    }
+
+    /// Flush the underlying writer, reporting any I/O error.
+    pub fn flush(&self) -> Result<()> {
+        self.out
+            .lock()
+            .unwrap()
+            .flush()
+            .map_err(|e| Error::data(format!("flushing trace sink: {e}")))
+    }
+}
+
+/// Shared in-memory buffer implementing `Write` — handed to
+/// [`TraceSink::to_writer`] by tests (and anything else that wants to
+/// inspect the emitted JSONL after the fact).
+#[derive(Debug, Clone, Default)]
+pub struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl SharedBuf {
+    /// Fresh empty buffer.
+    pub fn new() -> SharedBuf {
+        SharedBuf::default()
+    }
+
+    /// Copy of the bytes written so far.
+    pub fn contents(&self) -> Vec<u8> {
+        self.0.lock().unwrap().clone()
+    }
+
+    /// The written bytes as UTF-8 text.
+    pub fn text(&self) -> String {
+        String::from_utf8(self.contents()).expect("trace output is UTF-8")
+    }
+}
+
+impl Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn emits_well_formed_jsonl_with_dense_sequence() {
+        let buf = SharedBuf::new();
+        let sink = TraceSink::to_writer(Box::new(buf.clone()));
+        sink.emit("alpha", &[("x", 1u64.into()), ("ok", true.into())]);
+        sink.emit(
+            "beta",
+            &[
+                ("ratio", 0.5f64.into()),
+                ("label", "a \"quoted\" name".into()),
+                ("bad", f64::NAN.into()),
+            ],
+        );
+        sink.flush().unwrap();
+        assert_eq!(sink.len(), 2);
+        let text = buf.text();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for (i, line) in lines.iter().enumerate() {
+            let v = Json::parse(line).expect("each line is valid JSON");
+            assert_eq!(v.get("seq"), Some(&Json::Num(i as f64)), "line {i}");
+        }
+        let beta = Json::parse(lines[1]).unwrap();
+        assert_eq!(beta.get("event"), Some(&Json::Str("beta".into())));
+        assert_eq!(beta.get("ratio"), Some(&Json::Num(0.5)));
+        assert_eq!(beta.get("label"), Some(&Json::Str("a \"quoted\" name".into())));
+        assert_eq!(beta.get("bad"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn to_path_writes_and_flushes() {
+        let p = std::env::temp_dir().join(format!("banditpam_trace_{}.jsonl", std::process::id()));
+        let sink = TraceSink::to_path(&p).unwrap();
+        sink.emit("ev", &[("n", 3usize.into())]);
+        sink.flush().unwrap();
+        let body = std::fs::read_to_string(&p).unwrap();
+        assert!(body.contains("\"event\": \"ev\""), "{body}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn to_path_rejects_unwritable_location() {
+        let err = TraceSink::to_path("/definitely/not/a/dir/trace.jsonl").unwrap_err();
+        assert_eq!(err.kind(), "data");
+    }
+}

@@ -65,6 +65,13 @@ pub trait DistanceBackend {
 
     /// Short engine name for logs/reports.
     fn name(&self) -> &'static str;
+
+    /// Pairwise-cache effectiveness, when the engine has one:
+    /// `(hits, misses)`. Telemetry only — reading it never perturbs the
+    /// cache. Engines without a cache return `None` (the default).
+    fn cache_stats(&self) -> Option<(u64, u64)> {
+        None
+    }
 }
 
 /// Per-block kernel selection: the `Metric`/`Points` dispatch is resolved
@@ -113,6 +120,10 @@ pub struct NativeBackend<'a> {
     /// three reductions). Sparse l1: abs sums (the overlap-correction
     /// kernel — see `distance/sparse.rs`).
     norms: Vec<f64>,
+    /// Process-metric handles, resolved once at construction so the block
+    /// hot path pays two atomic ops — no registry lookups, no allocation.
+    obs_blocks: Arc<crate::obs::Counter>,
+    obs_block_pairs: Arc<crate::obs::Histogram>,
 }
 
 impl<'a> NativeBackend<'a> {
@@ -134,6 +145,8 @@ impl<'a> NativeBackend<'a> {
             threads: 1,
             pool_min_work: POOL_MIN_WORK,
             norms,
+            obs_blocks: crate::obs::global().counter("backend_blocks_total"),
+            obs_block_pairs: crate::obs::global().histogram("backend_block_pairs"),
         }
     }
 
@@ -470,6 +483,8 @@ impl<'a> DistanceBackend for NativeBackend<'a> {
             return;
         }
         let rn = refs.len();
+        self.obs_blocks.inc();
+        self.obs_block_pairs.record((targets.len() * rn) as u64);
         // Cache-less blocks are counted once up front (the cached path
         // counts misses per shard inside `fill_row`).
         if self.cache.is_none() {
@@ -526,6 +541,10 @@ impl<'a> DistanceBackend for NativeBackend<'a> {
 
     fn name(&self) -> &'static str {
         "native"
+    }
+
+    fn cache_stats(&self) -> Option<(u64, u64)> {
+        self.cache.as_ref().map(|c| c.stats())
     }
 }
 

@@ -88,6 +88,8 @@ pub struct ThreadPool {
     shared: Arc<Shared>,
     handles: Vec<thread::JoinHandle<()>>,
     threads: usize,
+    /// Process-metric handle, resolved once so `run` pays one atomic add.
+    obs_tasks: Arc<crate::obs::Counter>,
 }
 
 impl ThreadPool {
@@ -116,7 +118,12 @@ impl ThreadPool {
                     .expect("spawning pool worker thread")
             })
             .collect();
-        ThreadPool { shared, handles, threads }
+        ThreadPool {
+            shared,
+            handles,
+            threads,
+            obs_tasks: crate::obs::global().counter("pool_tasks_total"),
+        }
     }
 
     /// Total execution lanes (spawned workers + the submitting thread).
@@ -132,6 +139,7 @@ impl ThreadPool {
         if items == 0 {
             return;
         }
+        self.obs_tasks.inc();
         let chunk = chunk.max(1);
         if self.handles.is_empty() {
             // No workers: run inline (still chunked, for identical

@@ -68,6 +68,9 @@ pub struct PendingRequest {
     pub queries: Points,
     /// Absolute expiry; checked at dispatch, `None` = no deadline.
     pub deadline: Option<Instant>,
+    /// When the request was admitted; the dispatcher turns this into the
+    /// `serve_queue_us` latency histogram (admission → dispatch).
+    pub admitted: Instant,
     pub reply: mpsc::Sender<Response>,
 }
 
@@ -95,6 +98,9 @@ pub struct Batcher {
     max_queue_requests: usize,
     max_queue_points: usize,
     max_batch_points: usize,
+    /// Queue-depth gauge, mirrored on every admit/pop (stats scrape reads
+    /// the gauge without taking the queue lock).
+    obs_depth: Arc<crate::obs::Gauge>,
 }
 
 impl Batcher {
@@ -109,6 +115,7 @@ impl Batcher {
             max_queue_requests: cfg.max_queue_requests.max(1),
             max_queue_points: cfg.max_queue_points.max(1),
             max_batch_points: cfg.max_batch_points.max(1),
+            obs_depth: crate::obs::global().gauge("serve_queue_depth"),
         }
     }
 
@@ -128,6 +135,7 @@ impl Batcher {
         }
         st.points += req.queries.len();
         st.queue.push_back(req);
+        self.obs_depth.set(st.queue.len() as u64);
         drop(st);
         self.work.notify_one();
         Submit::Queued
@@ -162,6 +170,7 @@ impl Batcher {
                         i += 1;
                     }
                 }
+                self.obs_depth.set(st.queue.len() as u64);
                 return Some(batch);
             }
             if st.shutdown {
@@ -218,6 +227,7 @@ mod tests {
             slot: Arc::clone(slot),
             queries: Points::Dense(Matrix::zeros(n, dim)),
             deadline: None,
+            admitted: Instant::now(),
             reply: tx.clone(),
         }
     }

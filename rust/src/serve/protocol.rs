@@ -14,8 +14,9 @@
 //! response echoes it, so clients may pipeline requests freely.
 //!
 //! Request kinds: 1 predict, 2 ping, 3 stats, 4 reload, 5 shutdown,
-//! 6 list-models. Response kinds: 0x81 assignments, 0x82 error, 0x83 pong,
-//! 0x84 stats, 0x85 reload-ack, 0x86 shutdown-ack, 0x87 model-list. The
+//! 6 list-models, 7 metrics. Response kinds: 0x81 assignments, 0x82 error,
+//! 0x83 pong, 0x84 stats, 0x85 reload-ack, 0x86 shutdown-ack,
+//! 0x87 model-list, 0x88 metrics (Prometheus text exposition). The
 //! full byte-level spec (with the body grammars) lives in `rust/SERVE.md`,
 //! and the golden fixtures under `tests/fixtures/serve/` pin it.
 //!
@@ -61,6 +62,7 @@ pub mod req {
     pub const RELOAD: u8 = 4;
     pub const SHUTDOWN: u8 = 5;
     pub const LIST_MODELS: u8 = 6;
+    pub const METRICS: u8 = 7;
 }
 
 /// Response frame kinds (the `kind` header byte; high bit set).
@@ -72,6 +74,7 @@ pub mod resp {
     pub const RELOAD_ACK: u8 = 0x85;
     pub const SHUTDOWN_ACK: u8 = 0x86;
     pub const MODEL_LIST: u8 = 0x87;
+    pub const METRICS: u8 = 0x88;
 }
 
 /// A parsed request frame.
@@ -84,6 +87,8 @@ pub enum Request {
     Reload { id: u64, name: String },
     Shutdown { id: u64 },
     ListModels { id: u64 },
+    /// Scrape the process metrics (Prometheus text exposition).
+    Metrics { id: u64 },
 }
 
 impl Request {
@@ -95,7 +100,8 @@ impl Request {
             | Request::Stats { id }
             | Request::Reload { id, .. }
             | Request::Shutdown { id }
-            | Request::ListModels { id } => *id,
+            | Request::ListModels { id }
+            | Request::Metrics { id } => *id,
         }
     }
 }
@@ -161,6 +167,8 @@ pub enum Response {
     ShutdownAck { id: u64 },
     /// Newline-separated `name kind k dim version` lines.
     ModelList { id: u64, text: String },
+    /// Prometheus text exposition of the process metrics.
+    Metrics { id: u64, text: String },
 }
 
 impl Response {
@@ -173,7 +181,8 @@ impl Response {
             | Response::Stats { id, .. }
             | Response::ReloadAck { id, .. }
             | Response::ShutdownAck { id }
-            | Response::ModelList { id, .. } => *id,
+            | Response::ModelList { id, .. }
+            | Response::Metrics { id, .. } => *id,
         }
     }
 }
@@ -391,6 +400,7 @@ pub fn parse_request(kind: u8, body: &[u8]) -> Result<Request, ParseFailure> {
         }
         req::SHUTDOWN => Request::Shutdown { id },
         req::LIST_MODELS => Request::ListModels { id },
+        req::METRICS => Request::Metrics { id },
         other => return Err(c.fail(format!("unknown request kind {other:#04x}"))),
     };
     c.finish()?;
@@ -504,6 +514,7 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
         }
         Request::Shutdown { .. } => req::SHUTDOWN,
         Request::ListModels { .. } => req::LIST_MODELS,
+        Request::Metrics { .. } => req::METRICS,
     };
     frame(kind, body)
 }
@@ -545,6 +556,10 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
         Response::ModelList { text, .. } => {
             push_text(&mut body, text);
             resp::MODEL_LIST
+        }
+        Response::Metrics { text, .. } => {
+            push_text(&mut body, text);
+            resp::METRICS
         }
     };
     frame(kind, body)
@@ -594,6 +609,7 @@ pub fn parse_response(kind: u8, body: &[u8]) -> Result<Response, ParseFailure> {
         resp::RELOAD_ACK => Response::ReloadAck { id, text: c.text("reload report")? },
         resp::SHUTDOWN_ACK => Response::ShutdownAck { id },
         resp::MODEL_LIST => Response::ModelList { id, text: c.text("model list")? },
+        resp::METRICS => Response::Metrics { id, text: c.text("metrics text")? },
         other => return Err(c.fail(format!("unknown response kind {other:#04x}"))),
     };
     c.finish()?;
@@ -628,6 +644,7 @@ mod tests {
             Request::Reload { id: 4, name: String::new() },
             Request::Shutdown { id: 5 },
             Request::ListModels { id: 6 },
+            Request::Metrics { id: 7 },
         ] {
             let back = roundtrip_request(&req);
             assert_eq!(back.id(), req.id());
@@ -712,6 +729,10 @@ mod tests {
             Response::ReloadAck { id: 5, text: "gmm: v2".into() },
             Response::ShutdownAck { id: 6 },
             Response::ModelList { id: 7, text: "gmm dense k=3 dim=8 v1".into() },
+            Response::Metrics {
+                id: 8,
+                text: "# TYPE serve_queue_depth gauge\nserve_queue_depth 0\n".into(),
+            },
         ];
         for resp in cases {
             let back = roundtrip_response(&resp);
@@ -742,6 +763,10 @@ mod tests {
                 | (
                     Response::ModelList { text: t1, .. },
                     Response::ModelList { text: t2, .. },
+                )
+                | (
+                    Response::Metrics { text: t1, .. },
+                    Response::Metrics { text: t2, .. },
                 ) => assert_eq!(t1, t2),
                 (Response::Pong { .. }, Response::Pong { .. })
                 | (Response::ShutdownAck { .. }, Response::ShutdownAck { .. }) => {}

@@ -46,6 +46,7 @@ use crate::data::Points;
 use crate::runtime::pool::ThreadPool;
 use crate::util::json;
 use crate::util::matrix::Matrix;
+use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::net::TcpListener;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -55,7 +56,6 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 /// Monotonic server counters; snapshot as JSON via the `stats` request.
-#[derive(Default)]
 pub struct ServeStats {
     /// Predict requests admitted to the queue.
     pub admitted: AtomicU64,
@@ -75,10 +75,34 @@ pub struct ServeStats {
     pub reloads: AtomicU64,
     /// Requests fast-rejected because their model was quarantined.
     pub quarantined: AtomicU64,
+    /// Server start time; `uptime_secs` in the snapshot.
+    pub started: Instant,
+    /// Predict requests routed per model name (known models only).
+    pub per_model: Mutex<BTreeMap<String, u64>>,
+}
+
+impl Default for ServeStats {
+    fn default() -> ServeStats {
+        ServeStats {
+            admitted: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            deadline_expired: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            served_ok: AtomicU64::new(0),
+            bad_requests: AtomicU64::new(0),
+            reloads: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
+            started: Instant::now(),
+            per_model: Mutex::new(BTreeMap::new()),
+        }
+    }
 }
 
 impl ServeStats {
-    /// JSON object with every counter, stable key order.
+    /// JSON object with every counter, stable key order. The pre-existing
+    /// keys never change; `uptime_secs`, `queue_depth` and `per_model`
+    /// are appended after them.
     pub fn snapshot_json(&self) -> String {
         let pairs = [
             ("admitted", self.admitted.load(Ordering::Relaxed)),
@@ -91,10 +115,21 @@ impl ServeStats {
             ("reloads", self.reloads.load(Ordering::Relaxed)),
             ("quarantined", self.quarantined.load(Ordering::Relaxed)),
         ];
-        let body: Vec<String> = pairs
+        let mut body: Vec<String> = pairs
             .iter()
             .map(|(k, v)| format!("\"{}\":{v}", json::escape(k)))
             .collect();
+        body.push(format!("\"uptime_secs\":{}", self.started.elapsed().as_secs()));
+        body.push(format!(
+            "\"queue_depth\":{}",
+            crate::obs::global().gauge("serve_queue_depth").get()
+        ));
+        let per_model = self.per_model.lock().unwrap();
+        let entries: Vec<String> = per_model
+            .iter()
+            .map(|(k, v)| format!("\"{}\":{v}", json::escape(k)))
+            .collect();
+        body.push(format!("\"per_model\":{{{}}}", entries.join(",")));
         format!("{{{}}}", body.join(","))
     }
 }
@@ -127,6 +162,11 @@ pub struct Server {
     faults: FaultPlan,
     shutting_down: AtomicBool,
     dispatcher: Mutex<Option<thread::JoinHandle<()>>>,
+    /// Latency histograms (microseconds), resolved once at startup:
+    /// admission→dispatch, dispatch→computed, admission→reply.
+    obs_queue_us: Arc<crate::obs::Histogram>,
+    obs_handle_us: Arc<crate::obs::Histogram>,
+    obs_request_us: Arc<crate::obs::Histogram>,
 }
 
 impl Server {
@@ -141,6 +181,9 @@ impl Server {
             faults: opts.faults,
             shutting_down: AtomicBool::new(false),
             dispatcher: Mutex::new(None),
+            obs_queue_us: crate::obs::global().histogram("serve_queue_us"),
+            obs_handle_us: crate::obs::global().histogram("serve_handle_us"),
+            obs_request_us: crate::obs::global().histogram("serve_request_us"),
         });
         let handle = {
             let server = Arc::clone(&server);
@@ -211,6 +254,10 @@ impl Server {
 
     fn process_batch(&self, seq: u64, batch: Vec<PendingRequest>) {
         self.stats.batches.fetch_add(1, Ordering::Relaxed);
+        let dispatched = Instant::now();
+        for req in &batch {
+            self.obs_queue_us.record_duration(dispatched.duration_since(req.admitted));
+        }
         let slot = Arc::clone(&batch[0].slot);
 
         if slot.is_quarantined() {
@@ -266,6 +313,7 @@ impl Server {
                 .predictor_with_pool(Arc::clone(&self.pool))
                 .predict_with_dists(queries.as_ref().unwrap_or(&batch[0].queries))
         }));
+        self.obs_handle_us.record_duration(dispatched.elapsed());
 
         match outcome {
             Ok(Ok((assign, dists))) => {
@@ -282,6 +330,7 @@ impl Server {
                             .collect(),
                         dists: dists[offset..offset + n].to_vec(),
                     });
+                    self.obs_request_us.record_duration(req.admitted.elapsed());
                     offset += n;
                 }
             }
@@ -296,6 +345,7 @@ impl Server {
                         retry_after_ms: 0,
                         message: e.to_string(),
                     });
+                    self.obs_request_us.record_duration(req.admitted.elapsed());
                 }
             }
             Err(payload) => {
@@ -315,6 +365,7 @@ impl Server {
                         retry_after_ms: 0,
                         message: format!("batch panicked: {text}"),
                     });
+                    self.obs_request_us.record_duration(req.admitted.elapsed());
                 }
             }
         }
@@ -398,6 +449,12 @@ impl Server {
                         text: self.stats.snapshot_json(),
                     });
                 }
+                Request::Metrics { id } => {
+                    let _ = tx.send(Response::Metrics {
+                        id,
+                        text: crate::obs::global().render_prometheus(),
+                    });
+                }
                 Request::ListModels { id } => {
                     let _ = tx.send(Response::ModelList {
                         id,
@@ -454,6 +511,13 @@ impl Server {
             );
             return;
         };
+        *self
+            .stats
+            .per_model
+            .lock()
+            .unwrap()
+            .entry(p.model.clone())
+            .or_insert(0) += 1;
         if slot.is_quarantined() {
             self.stats.quarantined.fetch_add(1, Ordering::Relaxed);
             send_err(
@@ -511,6 +575,7 @@ impl Server {
             slot: Arc::clone(slot),
             queries: p.queries,
             deadline,
+            admitted: Instant::now(),
             reply: tx.clone(),
         };
         match self.batcher.submit(pending) {
@@ -743,6 +808,7 @@ mod tests {
                 slot: Arc::clone(&slot),
                 queries: Points::Sparse(a.clone()),
                 deadline: None,
+                admitted: Instant::now(),
                 reply: tx.clone(),
             },
             PendingRequest {
@@ -750,6 +816,7 @@ mod tests {
                 slot,
                 queries: Points::Sparse(b.clone()),
                 deadline: None,
+                admitted: Instant::now(),
                 reply: tx,
             },
         ];

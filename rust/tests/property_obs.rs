@@ -1,0 +1,226 @@
+//! Observability must be bitwise-inert: attaching a trace sink (or not)
+//! must never change what a fit computes — same medoids, same assignment
+//! vector, same loss bits, same eval counters — across algorithms and
+//! thread counts. Also pins the concurrency story for the atomic
+//! histogram and the JSONL trace format (dense, strictly increasing
+//! `seq`; every line valid JSON). No wall-clock assertions — CI-safe.
+
+use banditpam::algorithms::KMedoids;
+use banditpam::coordinator::banditpam::BanditPam;
+use banditpam::coordinator::config::BanditPamConfig;
+use banditpam::data::synthetic;
+use banditpam::distance::Metric;
+use banditpam::model::Fit;
+use banditpam::obs::{Histogram, SharedBuf, TraceSink};
+use banditpam::runtime::backend::NativeBackend;
+use banditpam::util::json::Json;
+use banditpam::util::rng::Rng;
+use std::sync::Arc;
+use std::thread;
+
+/// Parse a JSONL buffer, asserting every line is valid JSON with a
+/// dense, strictly increasing `seq` starting at 0. Returns the events.
+fn check_jsonl(text: &str) -> Vec<Json> {
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let v = Json::parse(line).unwrap_or_else(|e| panic!("line {i} not JSON ({e}): {line}"));
+        assert_eq!(
+            v.get("seq"),
+            Some(&Json::Num(i as f64)),
+            "seq must be dense and ascending in file order (line {i}): {line}"
+        );
+        assert!(v.get("event").is_some(), "line {i} has no event: {line}");
+        events.push(v);
+    }
+    events
+}
+
+fn event_names(events: &[Json]) -> Vec<String> {
+    events
+        .iter()
+        .filter_map(|e| match e.get("event") {
+            Some(Json::Str(s)) => Some(s.clone()),
+            _ => None,
+        })
+        .collect()
+}
+
+#[test]
+fn traced_banditpam_fit_is_bitwise_identical() {
+    let ds = synthetic::mnist_like(&mut Rng::seed_from(11), 240);
+    for threads in [1usize, 8] {
+        let backend = NativeBackend::new(&ds.points, Metric::L2).with_threads(threads);
+
+        let mut plain = BanditPam::new(BanditPamConfig::default());
+        let base = plain.fit(&backend, 4, &mut Rng::seed_from(5)).expect("untraced fit");
+
+        let buf = SharedBuf::new();
+        let sink = Arc::new(TraceSink::to_writer(Box::new(buf.clone())));
+        // A fresh backend so the second fit sees the same cold cache /
+        // counter state as the first.
+        let backend2 = NativeBackend::new(&ds.points, Metric::L2).with_threads(threads);
+        let mut traced =
+            BanditPam::new(BanditPamConfig::default()).with_trace_sink(Arc::clone(&sink));
+        let got = traced.fit(&backend2, 4, &mut Rng::seed_from(5)).expect("traced fit");
+
+        assert_eq!(got.medoids, base.medoids, "threads={threads}");
+        assert_eq!(got.assignments, base.assignments, "threads={threads}");
+        assert_eq!(got.loss.to_bits(), base.loss.to_bits(), "threads={threads}");
+        assert_eq!(
+            got.stats.distance_evals, base.stats.distance_evals,
+            "threads={threads}: tracing must not change the eval count"
+        );
+        assert_eq!(
+            traced.trace, plain.trace,
+            "threads={threads}: per-search telemetry must be identical"
+        );
+
+        sink.flush().expect("flush");
+        let events = check_jsonl(&buf.text());
+        let names = event_names(&events);
+        assert!(
+            names.iter().any(|n| n == "build_round"),
+            "threads={threads}: expected build_round spans, got {names:?}"
+        );
+        assert!(
+            names.iter().any(|n| n == "swap_iter"),
+            "threads={threads}: expected swap_iter spans, got {names:?}"
+        );
+        assert_eq!(
+            names.last().map(String::as_str),
+            Some("fit_summary"),
+            "threads={threads}: the last event is the fit summary"
+        );
+        // One span per BUILD round: k rounds for k medoids.
+        assert_eq!(
+            names.iter().filter(|n| *n == "build_round").count(),
+            4,
+            "threads={threads}"
+        );
+    }
+}
+
+#[test]
+fn traced_bigfit_is_bitwise_identical() {
+    let ds = synthetic::gmm(&mut Rng::seed_from(21), 300, 8, 4, 3.0);
+    for threads in [1usize, 8] {
+        let base_fit = Fit::banditpam().metric(Metric::L2).k(3).seed(13).threads(threads);
+        let (base_model, base_stats) =
+            base_fit.big().samples(3).fit_with_stats(&ds).expect("untraced bigfit");
+
+        let buf = SharedBuf::new();
+        let sink = Arc::new(TraceSink::to_writer(Box::new(buf.clone())));
+        let traced_fit = Fit::banditpam()
+            .metric(Metric::L2)
+            .k(3)
+            .seed(13)
+            .threads(threads)
+            .trace_sink(Arc::clone(&sink));
+        let (model, stats) =
+            traced_fit.big().samples(3).fit_with_stats(&ds).expect("traced bigfit");
+
+        assert_eq!(
+            model.clustering().medoids,
+            base_model.clustering().medoids,
+            "threads={threads}"
+        );
+        assert_eq!(
+            model.clustering().assignments,
+            base_model.clustering().assignments,
+            "threads={threads}"
+        );
+        assert_eq!(
+            model.loss().to_bits(),
+            base_model.loss().to_bits(),
+            "threads={threads}"
+        );
+        assert_eq!(
+            model.clustering().stats.distance_evals,
+            base_model.clustering().stats.distance_evals,
+            "threads={threads}"
+        );
+        assert_eq!(stats.samples, base_stats.samples, "threads={threads}");
+
+        sink.flush().expect("flush");
+        let events = check_jsonl(&buf.text());
+        let names = event_names(&events);
+        assert_eq!(
+            names.iter().filter(|n| *n == "bigfit_sample").count(),
+            3,
+            "threads={threads}: one span per outer-loop sample, got {names:?}"
+        );
+        assert!(
+            names.iter().any(|n| n == "bigfit_summary"),
+            "threads={threads}: expected a bigfit_summary span, got {names:?}"
+        );
+    }
+}
+
+#[test]
+fn histogram_is_deterministic_under_concurrent_hammering() {
+    // 8 threads record disjoint deterministic sequences into one shared
+    // histogram; the result must equal the single-threaded recording of
+    // the same multiset, run after run.
+    let shared = Arc::new(Histogram::new());
+    let serial = Histogram::new();
+    let per_thread = 5_000u64;
+    let handles: Vec<_> = (0..8u64)
+        .map(|t| {
+            let h = Arc::clone(&shared);
+            thread::spawn(move || {
+                for i in 0..per_thread {
+                    h.record(t * 1_000_003 + i * 17);
+                }
+            })
+        })
+        .collect();
+    for t in 0..8u64 {
+        for i in 0..per_thread {
+            serial.record(t * 1_000_003 + i * 17);
+        }
+    }
+    for h in handles {
+        h.join().expect("recorder thread");
+    }
+    assert_eq!(shared.snapshot(), serial.snapshot());
+
+    // Merging per-thread histograms must give the same answer as the
+    // shared recording.
+    let parts: Vec<Histogram> = (0..8u64)
+        .map(|t| {
+            let h = Histogram::new();
+            for i in 0..per_thread {
+                h.record(t * 1_000_003 + i * 17);
+            }
+            h
+        })
+        .collect();
+    let merged = Histogram::new();
+    for p in &parts {
+        merged.merge(p);
+    }
+    assert_eq!(merged.snapshot(), serial.snapshot());
+}
+
+#[test]
+fn concurrent_trace_emitters_keep_seq_dense() {
+    let buf = SharedBuf::new();
+    let sink = Arc::new(TraceSink::to_writer(Box::new(buf.clone())));
+    let handles: Vec<_> = (0..8u64)
+        .map(|t| {
+            let s = Arc::clone(&sink);
+            thread::spawn(move || {
+                for i in 0..200u64 {
+                    s.emit("hammer", &[("thread", t.into()), ("i", i.into())]);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("emitter thread");
+    }
+    sink.flush().expect("flush");
+    assert_eq!(sink.len(), 8 * 200);
+    let events = check_jsonl(&buf.text());
+    assert_eq!(events.len(), 8 * 200);
+}
