@@ -9,14 +9,16 @@
 //! 1.
 
 use crate::algorithms::fastpam1::best_swap_eq12;
-use crate::algorithms::matrix_cache::{exact_build, FullMatrix, MatState};
+use crate::algorithms::matrix_cache::{
+    exact_build, finalize_from_state, FullMatrix, MatState,
+};
 use crate::algorithms::{check_fit_args, degenerate_fit, Clustering, FitStats, KMedoids};
 use crate::runtime::backend::DistanceBackend;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 
 /// FastPAM: near-PAM quality, multiple eager swaps per sweep.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct FastPam {
     pub max_sweeps: usize,
 }
@@ -24,6 +26,14 @@ pub struct FastPam {
 impl FastPam {
     pub fn new() -> FastPam {
         FastPam { max_sweeps: 100 }
+    }
+}
+
+/// `derive(Default)` would zero `max_sweeps` and silently skip the SWAP
+/// phase; delegate to [`FastPam::new`] instead.
+impl Default for FastPam {
+    fn default() -> FastPam {
+        FastPam::new()
     }
 }
 
@@ -110,7 +120,7 @@ impl KMedoids for FastPam {
             wall_secs: timer.secs(),
             ..Default::default()
         };
-        Ok(Clustering::finalize(backend, state.medoids, stats))
+        Ok(finalize_from_state(backend, &m, state, stats))
     }
 }
 
@@ -153,5 +163,16 @@ mod tests {
         let backend = NativeBackend::new(&ds.points, Metric::L2);
         let fit = FastPam::new().fit(&backend, 4, &mut Rng::seed_from(0)).unwrap();
         assert!(fit.stats.swap_iters < 100);
+    }
+
+    #[test]
+    fn total_evals_are_exactly_n_squared() {
+        // Matrix precompute only; the finalize path reuses the cached
+        // d1/a1 instead of re-running loss_and_assignments uncounted.
+        let ds = synthetic::gmm(&mut Rng::seed_from(46), 30, 3, 2, 3.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let fit = FastPam::new().fit(&backend, 3, &mut Rng::seed_from(0)).unwrap();
+        assert_eq!(fit.stats.distance_evals, 30 * 30);
+        assert_eq!(backend.counter().get(), 30 * 30);
     }
 }

@@ -8,14 +8,16 @@
 //! of PAM's k·n². The chosen swap (and therefore the whole trajectory) is
 //! identical to PAM's.
 
-use crate::algorithms::matrix_cache::{exact_build, FullMatrix, MatState};
+use crate::algorithms::matrix_cache::{
+    exact_build, finalize_from_state, FullMatrix, MatState,
+};
 use crate::algorithms::{check_fit_args, degenerate_fit, Clustering, FitStats, KMedoids};
 use crate::runtime::backend::DistanceBackend;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 
 /// FastPAM1: exact-PAM trajectory, O(k) faster SWAP iterations.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct FastPam1 {
     pub max_swap_iters: usize,
 }
@@ -23,6 +25,14 @@ pub struct FastPam1 {
 impl FastPam1 {
     pub fn new() -> FastPam1 {
         FastPam1 { max_swap_iters: 100 }
+    }
+}
+
+/// `derive(Default)` would zero `max_swap_iters` and silently skip the
+/// SWAP phase; delegate to [`FastPam1::new`] instead.
+impl Default for FastPam1 {
+    fn default() -> FastPam1 {
+        FastPam1::new()
     }
 }
 
@@ -111,7 +121,7 @@ impl KMedoids for FastPam1 {
             wall_secs: timer.secs(),
             ..Default::default()
         };
-        Ok(Clustering::finalize(backend, state.medoids, stats))
+        Ok(finalize_from_state(backend, &m, state, stats))
     }
 }
 
@@ -145,6 +155,17 @@ mod tests {
             let fp1 = FastPam1::new().fit(&backend, 2, &mut Rng::seed_from(0)).unwrap();
             assert_eq!(pam.medoids, fp1.medoids, "{metric}");
         }
+    }
+
+    #[test]
+    fn total_evals_are_exactly_n_squared() {
+        // Matrix precompute only; the finalize path reuses the cached
+        // d1/a1 instead of re-running loss_and_assignments uncounted.
+        let ds = synthetic::gmm(&mut Rng::seed_from(44), 30, 3, 2, 3.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let fit = FastPam1::new().fit(&backend, 3, &mut Rng::seed_from(0)).unwrap();
+        assert_eq!(fit.stats.distance_evals, 30 * 30);
+        assert_eq!(backend.counter().get(), 30 * 30);
     }
 
     #[test]

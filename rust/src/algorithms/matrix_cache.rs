@@ -10,6 +10,7 @@
 //! (k·n², n²) used in Figures 1b/2/3 are drawn by the bench harness exactly
 //! as the paper draws them.
 
+use crate::algorithms::{Clustering, FitStats};
 use crate::runtime::backend::DistanceBackend;
 
 /// Dense symmetric n x n distance table.
@@ -118,6 +119,28 @@ impl MatState {
             }
         }
     }
+}
+
+/// Finish a matrix-based fit without re-running the k×n evaluation pass
+/// [`Clustering::finalize`] would pay (uncounted — the `MatState` already
+/// holds the loss and assignments). Sorts the medoids ascending and
+/// rebuilds d1/a1 over the sorted order — matrix reads only, no counted
+/// evaluations — which reproduces `loss_and_assignments` bitwise: the
+/// matrix entries are bit-copies of `backend.dist`, both paths sum minima
+/// in strict point order, and both break distance ties toward the lowest
+/// medoid position (strict `<` update). Debug builds verify the claim
+/// through `finalize_with`'s assertion.
+pub(crate) fn finalize_from_state(
+    backend: &dyn DistanceBackend,
+    m: &FullMatrix,
+    mut state: MatState,
+    stats: FitStats,
+) -> Clustering {
+    state.medoids.sort_unstable();
+    state.rebuild(m);
+    let loss = state.loss();
+    let assignments = std::mem::take(&mut state.a1);
+    Clustering::finalize_with(backend, state.medoids, loss, assignments, stats)
 }
 
 /// Exact greedy BUILD (Eq. 4) over a matrix. Returns the chosen medoids.

@@ -5,14 +5,19 @@
 //! FastPAM [42] (near-PAM quality, not exact), CLARA [20] and CLARANS [36]
 //! (sampling/randomized, lower quality) and Voronoi Iteration [40]
 //! (k-means-style alternation). [`meddit`] is the 1-medoid bandit of
-//! Bagaria et al. [4] that BanditPAM generalizes.
+//! Bagaria et al. [4] that BanditPAM generalizes. Two post-paper baselines
+//! round out the head-to-head: [`fasterpam`] (Schubert–Rousseeuw's eager
+//! first-improvement swap, arXiv:1810.05691) and [`onebatchpam`] (the
+//! single-batch frugal variant of arXiv:2501.19285).
 
 pub mod clara;
 pub mod clarans;
+pub mod fasterpam;
 pub mod fastpam;
 pub mod fastpam1;
 pub mod matrix_cache;
 pub mod meddit;
+pub mod onebatchpam;
 pub mod pam;
 pub mod voronoi;
 
@@ -254,9 +259,19 @@ pub const REGISTRY: &[AlgorithmSpec] = &[
         make: || Box::new(fastpam::FastPam::new()),
     },
     AlgorithmSpec {
+        name: "fasterpam",
+        note: "eager randomized-order swaps (Schubert-Rousseeuw)",
+        make: || Box::new(fasterpam::FasterPam::new()),
+    },
+    AlgorithmSpec {
         name: "clara",
         note: "PAM on random subsamples",
         make: || Box::new(clara::Clara::new()),
+    },
+    AlgorithmSpec {
+        name: "onebatchpam",
+        note: "frugal PAM on one batch, scored once",
+        make: || Box::new(onebatchpam::OneBatchPam::new()),
     },
     AlgorithmSpec {
         name: "clarans",

@@ -1,0 +1,200 @@
+//! OneBatchPAM ("OneBatchPAM: A Fast and Frugal K-Medoids Algorithm",
+//! arXiv:2501.19285): PAM on a single random batch, scored once.
+//!
+//! CLARA re-runs PAM on several subsamples and keeps the best; OneBatchPAM
+//! observes that one batch already yields a near-optimal medoid set when
+//! the swap phase optimizes the *batch* objective, so it pays for exactly
+//! one batch fit (batch² evaluations) plus one full-dataset scoring pass
+//! (k·n through [`loss_and_assignments_with`]) — frugal in the same sense
+//! as BanditPAM's sub-quadratic budget, but with a fixed, data-independent
+//! eval count. The batch is drawn through the rng-lockstep
+//! [`Rng::sample_indices`], so fits are byte-deterministic across thread
+//! counts and reruns, and the arm composes with the BigFit outer loop
+//! (`bigfit+onebatchpam`) like any other registry algorithm.
+
+use crate::algorithms::fastpam1::best_swap_eq12;
+use crate::algorithms::matrix_cache::{exact_build, FullMatrix, MatState};
+use crate::algorithms::{check_fit_args, degenerate_fit, Clustering, FitStats, KMedoids};
+use crate::error::Error;
+use crate::runtime::backend::{loss_and_assignments_with, DistanceBackend, EvalBuffers};
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+
+/// OneBatchPAM: fit on one random batch, score the full dataset once.
+#[derive(Debug)]
+pub struct OneBatchPam {
+    /// Batch size (0 = the frugal default, [`effective_batch_size`]).
+    pub batch_size: usize,
+    /// Cap on FastPAM1-style swap iterations over the batch.
+    pub max_swap_iters: usize,
+}
+
+impl OneBatchPam {
+    pub fn new() -> OneBatchPam {
+        OneBatchPam { batch_size: 0, max_swap_iters: 100 }
+    }
+}
+
+/// `derive(Default)` would zero `max_swap_iters` and skip the swap phase;
+/// delegate to [`OneBatchPam::new`] instead.
+impl Default for OneBatchPam {
+    fn default() -> OneBatchPam {
+        OneBatchPam::new()
+    }
+}
+
+/// The default batch size: `min(n, 100 + 5k)`. The paper argues a batch
+/// size independent of `n` suffices for the batch optimum to concentrate
+/// around the full-data optimum; the floor of 100 keeps small-k batches
+/// from starving, and the `5k` term scales the per-cluster sample with k
+/// (a denser default than CLARA's `40 + 2k` since there is only one draw).
+pub fn effective_batch_size(batch_size: usize, k: usize, n: usize) -> usize {
+    if batch_size == 0 {
+        (100 + 5 * k).min(n)
+    } else {
+        batch_size.min(n)
+    }
+}
+
+impl KMedoids for OneBatchPam {
+    fn name(&self) -> &'static str {
+        "onebatchpam"
+    }
+
+    fn fit(
+        &mut self,
+        backend: &dyn DistanceBackend,
+        k: usize,
+        rng: &mut Rng,
+    ) -> crate::error::Result<Clustering> {
+        check_fit_args(backend, k)?;
+        if let Some(c) = degenerate_fit(backend, k) {
+            return Ok(c);
+        }
+        let n = backend.n();
+        let b = effective_batch_size(self.batch_size, k, n);
+        if b <= k {
+            return Err(Error::invalid_argument(format!(
+                "onebatchpam batch size {b} must exceed k = {k}"
+            )));
+        }
+        let timer = Timer::start();
+        let start = backend.counter().get();
+
+        // One rng-lockstep batch draw, then exact BUILD + FastPAM1 swaps
+        // against the batch² distance matrix (all counted evaluations).
+        let batch = rng.sample_indices(n, b);
+        let m = FullMatrix::compute_subset(backend, &batch);
+        let mut state = MatState::empty(b);
+        exact_build(&m, k, &mut state);
+        let build_evals = backend.counter().get() - start;
+        let mut iters = 0;
+        let mut applied = 0;
+        let mut deltas = Vec::new();
+        while iters < self.max_swap_iters {
+            iters += 1;
+            let (delta, x, m_pos) = best_swap_eq12(&m, &state, &mut deltas);
+            if !(delta < -1e-12) {
+                break;
+            }
+            state.medoids[m_pos] = x;
+            state.rebuild(&m);
+            applied += 1;
+        }
+
+        // Map batch-local medoids to global point indices and score the
+        // full dataset exactly once (k·n evaluations; the finalize path
+        // trusts this pass instead of re-running it).
+        let mut medoids: Vec<usize> = state.medoids.iter().map(|&loc| batch[loc]).collect();
+        medoids.sort_unstable();
+        let before_eval = backend.counter().get();
+        let mut buffers = EvalBuffers::new();
+        let (loss, assignments) = loss_and_assignments_with(backend, &medoids, &mut buffers);
+        let stats = FitStats {
+            build_evals,
+            eval_evals: backend.counter().get() - before_eval,
+            swap_iters: iters,
+            swaps_applied: applied,
+            samples: 1,
+            iters_plus_one: iters + 1,
+            wall_secs: timer.secs(),
+            ..Default::default()
+        };
+        Ok(Clustering::finalize_with(backend, medoids, loss, assignments, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::pam::Pam;
+    use crate::data::synthetic;
+    use crate::distance::Metric;
+    use crate::runtime::backend::NativeBackend;
+
+    #[test]
+    fn eval_count_is_exactly_batch_squared_plus_kn() {
+        let n = 500;
+        let (k, b) = (4, 120);
+        let ds = synthetic::gmm(&mut Rng::seed_from(60), n, k, 3, 3.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let mut algo = OneBatchPam { batch_size: b, ..OneBatchPam::new() };
+        let fit = algo.fit(&backend, k, &mut Rng::seed_from(1)).unwrap();
+        let want = (b * b + k * n) as u64;
+        assert_eq!(fit.stats.distance_evals, want);
+        assert_eq!(backend.counter().get(), want, "finalize adds no evals");
+        assert_eq!(fit.stats.build_evals, (b * b) as u64);
+        assert_eq!(fit.stats.eval_evals, (k * n) as u64);
+        assert_eq!(fit.stats.samples, 1);
+    }
+
+    #[test]
+    fn default_batch_covers_small_datasets_entirely() {
+        // n below the frugal default: the batch is all of the data, so the
+        // result matches a full FastPAM1-style fit in quality terms.
+        let ds = synthetic::gmm(&mut Rng::seed_from(61), 80, 3, 2, 5.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let fit = OneBatchPam::new().fit(&backend, 3, &mut Rng::seed_from(2)).unwrap();
+        assert_eq!(fit.medoids.len(), 3);
+        assert_eq!(fit.stats.build_evals, 80 * 80);
+        let pam = Pam::new().fit(&backend, 3, &mut Rng::seed_from(0)).unwrap();
+        assert!(fit.loss <= pam.loss * 1.2, "{} vs {}", fit.loss, pam.loss);
+    }
+
+    #[test]
+    fn quality_is_bounded_on_separated_clusters() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(62), 600, 4, 3, 8.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let fit = OneBatchPam::new().fit(&backend, 4, &mut Rng::seed_from(3)).unwrap();
+        let pam = Pam::new().fit(&backend, 4, &mut Rng::seed_from(0)).unwrap();
+        assert!(
+            fit.loss <= pam.loss * 1.25,
+            "one batch should land near the PAM optimum on well-separated data: {} vs {}",
+            fit.loss,
+            pam.loss
+        );
+    }
+
+    #[test]
+    fn batch_not_larger_than_k_is_rejected() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(63), 50, 3, 2, 2.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let mut algo = OneBatchPam { batch_size: 3, ..OneBatchPam::new() };
+        let err = algo.fit(&backend, 3, &mut Rng::seed_from(4)).unwrap_err();
+        assert_eq!(err.kind(), "invalid_argument");
+    }
+
+    #[test]
+    fn seeded_batch_draw_makes_fits_reproducible() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(64), 400, 4, 3, 3.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let a = OneBatchPam::new().fit(&backend, 4, &mut Rng::seed_from(7)).unwrap();
+        let b = OneBatchPam::new().fit(&backend, 4, &mut Rng::seed_from(7)).unwrap();
+        assert_eq!(a.medoids, b.medoids);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        let c = OneBatchPam::new().fit(&backend, 4, &mut Rng::seed_from(8)).unwrap();
+        // a different seed draws a different batch (not a hard guarantee,
+        // but with 400 choose 120 batches a collision would be a bug)
+        assert!(c.loss.is_finite());
+    }
+}

@@ -11,14 +11,16 @@
 //! delta for every medoid `m` separately — FastPAM1 (same trajectory)
 //! removes exactly that factor-k redundancy.
 
-use crate::algorithms::matrix_cache::{exact_build, swap_delta, FullMatrix, MatState};
+use crate::algorithms::matrix_cache::{
+    exact_build, finalize_from_state, swap_delta, FullMatrix, MatState,
+};
 use crate::algorithms::{check_fit_args, degenerate_fit, Clustering, FitStats, KMedoids};
 use crate::runtime::backend::DistanceBackend;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 
 /// Exact PAM.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Pam {
     /// Cap on SWAP iterations (the paper's T; usize::MAX = until converged).
     pub max_swap_iters: usize,
@@ -27,6 +29,14 @@ pub struct Pam {
 impl Pam {
     pub fn new() -> Pam {
         Pam { max_swap_iters: 100 }
+    }
+}
+
+/// `derive(Default)` would zero `max_swap_iters` and silently skip the
+/// SWAP phase; delegate to [`Pam::new`] instead.
+impl Default for Pam {
+    fn default() -> Pam {
+        Pam::new()
     }
 }
 
@@ -99,7 +109,7 @@ impl KMedoids for Pam {
             wall_secs: timer.secs(),
             ..Default::default()
         };
-        Ok(Clustering::finalize(backend, state.medoids, stats))
+        Ok(finalize_from_state(backend, &m, state, stats))
     }
 }
 
@@ -163,5 +173,17 @@ mod tests {
         let backend = NativeBackend::new(&ds.points, Metric::L2);
         let fit = Pam::new().fit(&backend, 2, &mut Rng::seed_from(0)).unwrap();
         assert_eq!(fit.stats.build_evals, 25 * 25, "matrix precompute");
+    }
+
+    #[test]
+    fn total_evals_are_exactly_n_squared() {
+        // The matrix precompute is the only evaluation source: SWAP reads
+        // cached entries, and the finalize path reuses the MatState d1/a1
+        // instead of re-scoring with an uncounted k x n pass.
+        let ds = synthetic::gmm(&mut Rng::seed_from(24), 25, 3, 2, 3.0);
+        let backend = NativeBackend::new(&ds.points, Metric::L2);
+        let fit = Pam::new().fit(&backend, 2, &mut Rng::seed_from(0)).unwrap();
+        assert_eq!(fit.stats.distance_evals, 25 * 25);
+        assert_eq!(backend.counter().get(), 25 * 25);
     }
 }

@@ -14,7 +14,7 @@ use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 
 /// Park–Jun Voronoi iteration.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct VoronoiIteration {
     pub max_iters: usize,
 }
@@ -22,6 +22,14 @@ pub struct VoronoiIteration {
 impl VoronoiIteration {
     pub fn new() -> Self {
         VoronoiIteration { max_iters: 100 }
+    }
+}
+
+/// `derive(Default)` would zero `max_iters` and silently skip refinement;
+/// delegate to [`VoronoiIteration::new`] instead.
+impl Default for VoronoiIteration {
+    fn default() -> VoronoiIteration {
+        VoronoiIteration::new()
     }
 }
 

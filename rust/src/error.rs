@@ -145,6 +145,13 @@ impl From<crate::util::cli::ParseError> for Error {
     }
 }
 
+/// So is an option a subcommand does not accept (misspelled flag).
+impl From<crate::util::cli::UnknownOptionError> for Error {
+    fn from(e: crate::util::cli::UnknownOptionError) -> Error {
+        Error::InvalidArgument(e.to_string())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -213,5 +220,14 @@ mod tests {
         let e: Error = p.into();
         assert_eq!(e.kind(), "invalid_argument");
         assert_eq!(e.exit_code(), 2);
+        let u = crate::util::cli::UnknownOptionError {
+            subcommand: "cluster".to_string(),
+            option: "chunk-nzz".to_string(),
+            accepted: "--chunk-nnz V".to_string(),
+        };
+        let e: Error = u.into();
+        assert_eq!(e.kind(), "invalid_argument");
+        assert_eq!(e.exit_code(), 2);
+        assert!(e.message().contains("chunk-nzz"));
     }
 }

@@ -88,9 +88,9 @@ pub use error::{Error, Result};
 /// Convenient single-import surface for examples and downstream users.
 pub mod prelude {
     pub use crate::algorithms::{
-        clara::Clara, clarans::Clarans, fastpam::FastPam, fastpam1::FastPam1,
-        meddit::Meddit, pam::Pam, voronoi::VoronoiIteration, Clustering, FitStats,
-        KMedoids,
+        clara::Clara, clarans::Clarans, fasterpam::FasterPam, fastpam::FastPam,
+        fastpam1::FastPam1, meddit::Meddit, onebatchpam::OneBatchPam, pam::Pam,
+        voronoi::VoronoiIteration, Clustering, FitStats, KMedoids,
     };
     pub use crate::coordinator::{banditpam::BanditPam, config::BanditPamConfig};
     pub use crate::data::sparse::CsrMatrix;

@@ -129,6 +129,80 @@ TELEMETRY:   --trace-out FILE writes structured JSONL phase spans (one
     )
 }
 
+/// Dataset-selection options shared by every subcommand that builds its
+/// input through [`make_dataset`].
+const DATASET_KEYS: &[&str] =
+    &["data", "synthetic", "format", "limit", "n", "density", "chunk-nnz"];
+const DATASET_FLAGS: &[&str] = &["sparse", "stream", "transpose"];
+
+/// Reject any option/flag the subcommand does not read. The parser accepts
+/// anything shaped like `--key value`, so without a declared accepted set a
+/// misspelled option (`--chunk-nzz`, `--sample_size`) silently does nothing
+/// — the same failure class as the `.mtx --limit` bug. Exits 2 through
+/// [`Error::InvalidArgument`], like every other usage error.
+fn check_known_options(args: &Args) -> Result<()> {
+    let Some(sub) = args.subcommand.as_deref() else { return Ok(()) };
+    let mut keys: Vec<&str> = Vec::new();
+    let mut flags: Vec<&str> = vec!["help"];
+    match sub {
+        "cluster" | "bigfit" => {
+            keys.extend_from_slice(DATASET_KEYS);
+            keys.extend_from_slice(&[
+                "k",
+                "metric",
+                "algo",
+                "seed",
+                "threads",
+                "save-model",
+                "trace-out",
+                "metrics-dump",
+            ]);
+            if sub == "cluster" {
+                keys.push("backend");
+            } else {
+                keys.extend_from_slice(&["samples", "sample-size"]);
+            }
+            flags.extend_from_slice(DATASET_FLAGS);
+            flags.push("verbose");
+        }
+        "predict" => {
+            keys.extend_from_slice(DATASET_KEYS);
+            keys.extend_from_slice(&["model", "out", "seed", "threads"]);
+            flags.extend_from_slice(DATASET_FLAGS);
+            flags.push("verbose");
+        }
+        "serve" => {
+            keys.extend_from_slice(&[
+                "listen",
+                "threads",
+                "max-queue-requests",
+                "max-queue-points",
+                "max-batch-points",
+                "retry-after-ms",
+                "quarantine-threshold",
+                "inject-panic-every",
+                "stall-ms",
+                "metrics-dump",
+            ]);
+            flags.extend_from_slice(&["stdio", "quiet"]);
+        }
+        "experiment" => {
+            keys.extend_from_slice(&["scale", "seed"]);
+            flags.push("csv");
+        }
+        "generate-data" => {
+            keys.extend_from_slice(DATASET_KEYS);
+            keys.extend_from_slice(&["out", "seed"]);
+            flags.extend_from_slice(DATASET_FLAGS);
+        }
+        "info" | "help" => {}
+        // unknown subcommands get their own error in `run`
+        _ => return Ok(()),
+    }
+    args.check_known(sub, &keys, &flags)?;
+    Ok(())
+}
+
 fn make_dataset(args: &Args, rng: &mut Rng) -> Result<Dataset> {
     let n: usize = args.get_parsed("n", 1000usize)?;
     let density: f64 = args.get_parsed("density", 0.10)?;
@@ -729,6 +803,13 @@ fn cmd_info() -> Result<()> {
 }
 
 fn run(args: &Args) -> Result<()> {
+    // `--help` anywhere prints usage (it would otherwise be silently
+    // accepted as an inert flag on every subcommand).
+    if args.flag("help") {
+        print!("{}", help());
+        return Ok(());
+    }
+    check_known_options(args)?;
     match args.subcommand.as_deref() {
         Some("cluster") => cmd_cluster(args),
         Some("bigfit") => cmd_bigfit(args),

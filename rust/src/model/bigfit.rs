@@ -560,6 +560,24 @@ mod tests {
         assert_eq!(&pred, &model.clustering().assignments);
     }
 
+    /// ISSUE 9: the outer loop composes with the OneBatchPAM arm (the
+    /// per-sample inner fit draws its own batch from the sample) and the
+    /// result round-trips through the byte format with predict intact.
+    #[test]
+    fn bigfit_onebatchpam_round_trips_bytes_and_predict() {
+        let ds = synthetic::gmm(&mut Rng::seed_from(64), 260, 5, 3, 3.5);
+        let model =
+            Fit::onebatchpam().k(3).seed(8).big().samples(2).fit(&ds).unwrap();
+        assert_eq!(model.algorithm(), "bigfit+onebatchpam");
+        let bytes = model.to_bytes().unwrap();
+        let back = KMedoidsModel::from_bytes(&bytes).unwrap();
+        assert_eq!(back.algorithm(), "bigfit+onebatchpam");
+        assert_eq!(back.clustering().medoids, model.clustering().medoids);
+        assert_eq!(back.loss().to_bits(), model.loss().to_bits());
+        let pred = back.predict(&ds.points).unwrap();
+        assert_eq!(&pred, &model.clustering().assignments);
+    }
+
     #[test]
     fn bigfit_thread_count_never_changes_bits() {
         let ds = synthetic::gmm(&mut Rng::seed_from(62), 220, 6, 3, 4.0);

@@ -76,6 +76,16 @@ impl Fit {
         Fit::with_algorithm("fastpam")
     }
 
+    /// FasterPAM (eager randomized-order swaps, Schubert–Rousseeuw).
+    pub fn fasterpam() -> Fit {
+        Fit::with_algorithm("fasterpam")
+    }
+
+    /// OneBatchPAM (frugal PAM on one batch, scored once).
+    pub fn onebatchpam() -> Fit {
+        Fit::with_algorithm("onebatchpam")
+    }
+
     /// CLARA (PAM on random subsamples).
     pub fn clara() -> Fit {
         Fit::with_algorithm("clara")
@@ -256,7 +266,9 @@ mod tests {
             Fit::pam(),
             Fit::fastpam1(),
             Fit::fastpam(),
+            Fit::fasterpam(),
             Fit::clara(),
+            Fit::onebatchpam(),
             Fit::clarans(),
             Fit::voronoi(),
             Fit::meddit(),

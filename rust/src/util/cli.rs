@@ -36,6 +36,32 @@ impl fmt::Display for ParseError {
 
 impl std::error::Error for ParseError {}
 
+/// Error produced when an option or flag is not in a subcommand's declared
+/// accepted set — a misspelled `--sample_size` must fail loudly instead of
+/// being silently ignored (the same failure class as the `.mtx` `--limit`
+/// bug).
+#[derive(Debug)]
+pub struct UnknownOptionError {
+    /// The subcommand whose table rejected the option.
+    pub subcommand: String,
+    /// The offending option/flag, without the leading `--`.
+    pub option: String,
+    /// Rendered list of what the subcommand does accept.
+    pub accepted: String,
+}
+
+impl fmt::Display for UnknownOptionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "unknown option --{} for `{}` (accepted: {})",
+            self.option, self.subcommand, self.accepted
+        )
+    }
+}
+
+impl std::error::Error for UnknownOptionError {}
+
 /// Options that never take a value (`--verbose file.csv` must not consume
 /// `file.csv`). Everything else uses `--key value` / `--key=value`.
 const BOOLEAN_FLAGS: &[&str] = &[
@@ -152,6 +178,45 @@ impl Args {
         }
     }
 
+    /// Validate every parsed `--key value` option and bare `--flag`
+    /// against a subcommand's declared accepted sets. The parser accepts
+    /// anything shaped like an option, so without this check a misspelled
+    /// key (`--sample_size` for `--sample-size`) lands in the option map
+    /// and is silently never read; the first unknown option wins and
+    /// surfaces as a usage error (exit 2 via `Error::InvalidArgument`).
+    pub fn check_known(
+        &self,
+        subcommand: &str,
+        keys: &[&str],
+        flags: &[&str],
+    ) -> Result<(), UnknownOptionError> {
+        let accepted = || {
+            let mut all: Vec<String> = keys.iter().map(|k| format!("--{k} V")).collect();
+            all.extend(flags.iter().map(|f| format!("--{f}")));
+            all.sort();
+            all.join(", ")
+        };
+        for key in self.options.keys() {
+            if !keys.contains(&key.as_str()) {
+                return Err(UnknownOptionError {
+                    subcommand: subcommand.to_string(),
+                    option: key.clone(),
+                    accepted: accepted(),
+                });
+            }
+        }
+        for flag in &self.flags {
+            if !flags.contains(&flag.as_str()) {
+                return Err(UnknownOptionError {
+                    subcommand: subcommand.to_string(),
+                    option: flag.clone(),
+                    accepted: accepted(),
+                });
+            }
+        }
+        Ok(())
+    }
+
     /// Comma-separated list option parsed as `Vec<T>`.
     pub fn get_list<T: std::str::FromStr>(
         &self,
@@ -229,6 +294,25 @@ mod tests {
         let a = parse("--help");
         assert_eq!(a.subcommand, None);
         assert!(a.flag("help"));
+    }
+
+    #[test]
+    fn check_known_rejects_misspelled_options_and_flags() {
+        let a = parse("cluster --chunk-nzz 4096 data.mtx");
+        let err = a.check_known("cluster", &["chunk-nnz", "k"], &["verbose"]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("--chunk-nzz"), "{msg}");
+        assert!(msg.contains("`cluster`"), "{msg}");
+        assert!(msg.contains("--chunk-nnz"), "accepted list names the fix: {msg}");
+
+        // a misspelled boolean flag is rejected through the flag table
+        let a = parse("cluster --verbos");
+        let err = a.check_known("cluster", &["k"], &["verbose"]).unwrap_err();
+        assert!(err.to_string().contains("--verbos"), "{err}");
+
+        // the declared sets pass
+        let a = parse("cluster --chunk-nnz 4096 --verbose data.mtx");
+        a.check_known("cluster", &["chunk-nnz", "k"], &["verbose"]).unwrap();
     }
 
     #[test]

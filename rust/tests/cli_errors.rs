@@ -131,6 +131,62 @@ fn missing_required_flag_and_unknown_subcommand_exit_2() {
 }
 
 #[test]
+fn misspelled_options_are_rejected_per_subcommand() {
+    // Every subcommand declares its accepted option/flag set; anything the
+    // parser accepted but the subcommand never reads used to be silently
+    // ignored (`--chunk-nzz 4096` simply did nothing). One misspelling per
+    // subcommand, each a usage error naming the offender.
+    let cases: &[(&[&str], &str)] = &[
+        (&["cluster", "--chunk-nzz", "4096"], "--chunk-nzz"),
+        (&["bigfit", "--sample_size", "100"], "--sample_size"),
+        (&["predict", "--modle", "m.bpmodel"], "--modle"),
+        (&["serve", "--liston", "127.0.0.1:0"], "--liston"),
+        (&["experiment", "all", "--scales", "smoke"], "--scales"),
+        (&["generate-data", "--densty", "0.2"], "--densty"),
+        (&["info", "--frobnicate"], "--frobnicate"),
+    ];
+    for (argv, bad) in cases {
+        let out = bin().args(*argv).output().unwrap();
+        assert_eq!(out.status.code(), Some(2), "{argv:?} must exit 2");
+        let err = stderr_line(&out);
+        assert!(
+            err.starts_with("error: invalid argument: unknown option"),
+            "{argv:?}: {err}"
+        );
+        assert!(err.contains(bad), "{argv:?} must name the offender: {err}");
+        assert_eq!(err.lines().count(), 1, "one line, not a debug dump: {err}");
+    }
+}
+
+#[test]
+fn misspelled_option_error_suggests_the_accepted_spelling() {
+    let out = bin().args(["cluster", "--chunk-nzz", "4096"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    let err = stderr_line(&out);
+    assert!(err.contains("--chunk-nnz"), "accepted list names the fix: {err}");
+    assert!(err.contains("`cluster`"), "{err}");
+}
+
+#[test]
+fn help_lists_every_registry_arm_including_the_new_ones() {
+    let out = bin().args(["help"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout).to_string();
+    for spec in banditpam::algorithms::REGISTRY {
+        assert!(text.contains(spec.name), "help must list {}", spec.name);
+    }
+    assert!(text.contains("fasterpam"), "{text}");
+    assert!(text.contains("onebatchpam"), "{text}");
+}
+
+#[test]
+fn dash_dash_help_on_a_subcommand_prints_usage_and_exits_zero() {
+    let out = bin().args(["cluster", "--help"]).output().unwrap();
+    assert!(out.status.success(), "--help is never a usage error");
+    assert!(String::from_utf8_lossy(&out.stdout).contains("USAGE"));
+}
+
+#[test]
 fn predict_happy_path_round_trips_through_the_binary() {
     let dir = tmpdir("happy");
     let model = trained_model(&dir);
@@ -153,6 +209,60 @@ fn predict_happy_path_round_trips_through_the_binary() {
     let written = std::fs::read_to_string(&out_csv).unwrap();
     assert!(written.starts_with("point,assignment,medoid_train_index,distance"));
     assert_eq!(written.lines().count(), 3, "header + 2 assignments");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bigfit_onebatchpam_trains_and_predicts_through_the_binary() {
+    let dir = tmpdir("obp");
+    let train = dir.join("train.csv");
+    let mut csv = String::new();
+    for i in 0..12 {
+        let x = f64::from(i % 4);
+        let y = f64::from(i / 4);
+        csv.push_str(&format!("{x},{y},{}\n", x + y));
+    }
+    std::fs::write(&train, csv).unwrap();
+    let model = dir.join("obp.bpmodel");
+    let out = bin()
+        .args([
+            "bigfit",
+            "--data",
+            train.to_str().unwrap(),
+            "--k",
+            "2",
+            "--algo",
+            "onebatchpam",
+            "--samples",
+            "2",
+            "--threads",
+            "1",
+            "--save-model",
+            model.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "bigfit --algo onebatchpam failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let assign = dir.join("assign.csv");
+    let out = bin()
+        .args([
+            "predict",
+            "--model",
+            model.to_str().unwrap(),
+            "--data",
+            train.to_str().unwrap(),
+            "--out",
+            assign.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let written = std::fs::read_to_string(&assign).unwrap();
+    assert_eq!(written.lines().count(), 13, "header + 12 assignments");
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -1,0 +1,116 @@
+//! `X::default()` must fit identically to `X::new()` for every registry
+//! arm (ISSUE 9 satellite). The PAM-family structs used to
+//! `#[derive(Default)]`, which zeroed their iteration caps — so
+//! `FastPam::default()` (and struct-update `..Default::default()`) ran
+//! zero swap sweeps and silently diverged from `new()`'s cap of 100. The
+//! derives are now manual impls delegating to `new()`; this suite pins
+//! the equivalence end to end, per arm, on a dataset where the swap phase
+//! actually applies swaps.
+
+use banditpam::algorithms::{
+    clara::Clara, clarans::Clarans, fasterpam::FasterPam, fastpam::FastPam,
+    fastpam1::FastPam1, meddit::Meddit, onebatchpam::OneBatchPam, pam::Pam,
+    voronoi::VoronoiIteration, KMedoids, REGISTRY,
+};
+use banditpam::coordinator::banditpam::BanditPam;
+use banditpam::coordinator::config::BanditPamConfig;
+use banditpam::data::synthetic;
+use banditpam::distance::Metric;
+use banditpam::runtime::backend::{DistanceBackend, NativeBackend};
+use banditpam::util::rng::Rng;
+
+/// One `(new, default)` pair per registry arm, in registry order.
+/// BanditPAM has no bare `default()`; its two default constructions
+/// (`default_paper` and `new(BanditPamConfig::default())`) are pinned
+/// against each other instead.
+fn pairs() -> Vec<(&'static str, Box<dyn KMedoids>, Box<dyn KMedoids>)> {
+    vec![
+        (
+            "banditpam",
+            Box::new(BanditPam::default_paper()),
+            Box::new(BanditPam::new(BanditPamConfig::default())),
+        ),
+        ("pam", Box::new(Pam::new()), Box::new(Pam::default())),
+        ("fastpam1", Box::new(FastPam1::new()), Box::new(FastPam1::default())),
+        ("fastpam", Box::new(FastPam::new()), Box::new(FastPam::default())),
+        ("fasterpam", Box::new(FasterPam::new()), Box::new(FasterPam::default())),
+        ("clara", Box::new(Clara::new()), Box::new(Clara::default())),
+        ("onebatchpam", Box::new(OneBatchPam::new()), Box::new(OneBatchPam::default())),
+        ("clarans", Box::new(Clarans::new()), Box::new(Clarans::default())),
+        ("voronoi", Box::new(VoronoiIteration::new()), Box::new(VoronoiIteration::default())),
+        ("meddit", Box::new(Meddit::new()), Box::new(Meddit::default())),
+    ]
+}
+
+#[test]
+fn default_fits_identically_to_new_for_every_registry_arm() {
+    let ds = synthetic::gmm(&mut Rng::seed_from(90), 60, 4, 3, 3.0);
+    let one = synthetic::gmm(&mut Rng::seed_from(91), 40, 4, 1, 3.0);
+    let entries = pairs();
+    assert_eq!(
+        entries.len(),
+        REGISTRY.len(),
+        "every registry arm needs a (new, default) parity pair"
+    );
+    for (i, (name, mut via_new, mut via_default)) in entries.into_iter().enumerate() {
+        assert_eq!(name, REGISTRY[i].name, "pairs() must follow registry order");
+        assert_eq!(via_new.name(), name);
+        assert_eq!(via_default.name(), name);
+        // meddit solves k = 1 only
+        let (data, k) = if name == "meddit" { (&one, 1) } else { (&ds, 3) };
+        let b1 = NativeBackend::new(&data.points, Metric::L2);
+        let a = via_new.fit(&b1, k, &mut Rng::seed_from(17)).unwrap();
+        let b2 = NativeBackend::new(&data.points, Metric::L2);
+        let b = via_default.fit(&b2, k, &mut Rng::seed_from(17)).unwrap();
+        assert_eq!(a.medoids, b.medoids, "{name}: medoids diverge");
+        assert_eq!(a.assignments, b.assignments, "{name}: assignments diverge");
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{name}: loss bits diverge");
+        assert_eq!(
+            a.stats.distance_evals, b.stats.distance_evals,
+            "{name}: eval counts diverge"
+        );
+        assert_eq!(
+            a.stats.swaps_applied, b.stats.swaps_applied,
+            "{name}: swap counts diverge"
+        );
+        assert_eq!(
+            a.stats.swap_iters, b.stats.swap_iters,
+            "{name}: swap iteration counts diverge"
+        );
+        assert_eq!(
+            b1.counter().get(),
+            b2.counter().get(),
+            "{name}: backend counters diverge"
+        );
+        // Non-vacuity: the PAM-family swap loops increment swap_iters
+        // before checking convergence, so a working cap always yields at
+        // least one iteration — the zeroed cap of the old derives yielded
+        // exactly zero, which the swap_iters equality above would catch.
+        if matches!(name, "pam" | "fastpam1" | "fastpam" | "fasterpam") {
+            assert!(a.stats.swap_iters >= 1, "{name}: swap phase never entered");
+        }
+    }
+}
+
+/// The regression the old derives caused: struct-update syntax with
+/// `..Default::default()` must inherit the working caps, not zeros.
+#[test]
+fn struct_update_with_default_keeps_the_iteration_caps() {
+    assert_eq!(Pam { ..Default::default() }.max_swap_iters, Pam::new().max_swap_iters);
+    assert_eq!(FastPam { ..Default::default() }.max_sweeps, FastPam::new().max_sweeps);
+    assert_eq!(
+        FastPam1 { ..Default::default() }.max_swap_iters,
+        FastPam1::new().max_swap_iters
+    );
+    assert_eq!(
+        VoronoiIteration { ..Default::default() }.max_iters,
+        VoronoiIteration::new().max_iters
+    );
+    assert_eq!(
+        FasterPam { ..Default::default() }.max_sweeps,
+        FasterPam::new().max_sweeps
+    );
+    let ob = OneBatchPam { batch_size: 64, ..Default::default() };
+    assert_eq!(ob.max_swap_iters, OneBatchPam::new().max_swap_iters);
+    assert!(FastPam::new().max_sweeps > 0, "the cap the derive zeroed");
+}

@@ -39,6 +39,43 @@ fn fit_once(
     )
 }
 
+/// ISSUE 9: the new arms consume the seeded rng (fasterpam shuffles its
+/// candidate order every sweep, onebatchpam draws its batch through
+/// `sample_indices`), so the determinism claim needs explicit coverage:
+/// medoids, loss bits, backend counters, attributed eval counts and
+/// assignments must be byte-identical across threads {1, 8} and reruns.
+#[test]
+fn new_arm_fits_are_byte_identical_across_thread_counts_and_runs() {
+    let ds = dataset();
+    for name in ["fasterpam", "onebatchpam"] {
+        let mut results = Vec::new();
+        for &threads in &[1usize, 8] {
+            for _run in 0..2 {
+                let backend = NativeBackend::new(&ds.points, Metric::L2)
+                    .with_threads(threads)
+                    .with_pool_min_work(0);
+                let mut algo = banditpam::algorithms::make_algorithm(name).unwrap();
+                let fit = algo.fit(&backend, 4, &mut Rng::seed_from(9)).unwrap();
+                results.push((
+                    fit.medoids,
+                    fit.loss.to_bits(),
+                    backend.counter().get(),
+                    fit.stats.distance_evals,
+                    fit.assignments,
+                ));
+            }
+        }
+        let first = &results[0];
+        for r in &results[1..] {
+            assert_eq!(first.0, r.0, "{name}: medoids must not depend on threads/reruns");
+            assert_eq!(first.1, r.1, "{name}: loss bits must match");
+            assert_eq!(first.2, r.2, "{name}: backend counters must match");
+            assert_eq!(first.3, r.3, "{name}: attributed eval counts must match");
+            assert_eq!(first.4, r.4, "{name}: assignments must match");
+        }
+    }
+}
+
 #[test]
 fn fits_are_byte_identical_across_thread_counts_and_runs() {
     let ds = dataset();

@@ -2,8 +2,9 @@
 //! checking the quality ordering the paper's Figure 1a establishes.
 
 use banditpam::algorithms::{
-    clara::Clara, clarans::Clarans, fastpam::FastPam, fastpam1::FastPam1,
-    pam::Pam, voronoi::VoronoiIteration, KMedoids,
+    clara::Clara, clarans::Clarans, fasterpam::FasterPam, fastpam::FastPam,
+    fastpam1::FastPam1, onebatchpam::OneBatchPam, pam::Pam,
+    voronoi::VoronoiIteration, KMedoids,
 };
 use banditpam::coordinator::banditpam::BanditPam;
 use banditpam::data::synthetic;
@@ -30,7 +31,9 @@ fn all_algorithms_produce_valid_clusterings() {
         Box::new(Pam::new()),
         Box::new(FastPam1::new()),
         Box::new(FastPam::new()),
+        Box::new(FasterPam::new()),
         Box::new(Clara::new()),
+        Box::new(OneBatchPam::new()),
         Box::new(Clarans::new()),
         Box::new(VoronoiIteration::new()),
     ];
