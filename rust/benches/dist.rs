@@ -1,0 +1,178 @@
+//! Dist scaling bench: the sharded scoring path (the dominant cost of
+//! CLARA/BigFit evaluation) driven over worker pools of 1/2/4/8 workers,
+//! plus the cost of recovering from a deterministic worker kill
+//! mid-workload. Workers are real worker loops over the real wire codec
+//! (threads speaking through in-memory pipes — the exact socket code
+//! path, minus the NIC). Emits `BENCH_dist.json` (unified envelope,
+//! rust/OBS.md).
+//!
+//! Acceptance (ISSUE 10): every sharded result — including the run that
+//! loses a worker — is bitwise-identical to the single-process fold, and
+//! eval counters match exactly. Scale via BANDITPAM_BENCH_SCALE.
+
+use banditpam::bench::report::{JsonObj, Report};
+use banditpam::data::{synthetic, Points};
+use banditpam::dist::{run_worker, PoolOptions, WorkerOptions, WorkerPool};
+use banditpam::distance::counter::DistanceCounter;
+use banditpam::distance::Metric;
+use banditpam::runtime::backend::{loss_and_assignments, NativeBackend};
+use banditpam::serve::faults::{pipe, FaultPlan};
+use banditpam::util::rng::Rng;
+use std::io::{Read, Write};
+use std::thread;
+use std::time::Instant;
+
+/// In-process pool over pipe transports; `plans[i]` injects faults into
+/// worker `i`.
+fn pipe_pool<'d>(
+    points: &'d Points,
+    metric: Metric,
+    workers: usize,
+    plans: &[FaultPlan],
+) -> WorkerPool<'d> {
+    let mut transports: Vec<(Box<dyn Write + Send>, Box<dyn Read + Send>)> = Vec::new();
+    for i in 0..workers {
+        let (cw, sr) = pipe();
+        let (sw, cr) = pipe();
+        let opts =
+            WorkerOptions { faults: plans.get(i).cloned().unwrap_or_default(), quiet: true };
+        thread::spawn(move || {
+            let _ = run_worker(sr, sw, &opts);
+        });
+        transports.push((Box::new(cw), Box::new(cr)));
+    }
+    WorkerPool::from_transports(points, metric, transports, PoolOptions::default()).unwrap()
+}
+
+/// Run `passes` scoring passes over the pool, asserting every pass is
+/// bitwise-identical to the single-process fold with the exact eval
+/// count. Returns the wall seconds.
+fn timed_scores(
+    pool: &WorkerPool<'_>,
+    medoids: &Points,
+    passes: usize,
+    want_loss: f64,
+    want_assign: &[usize],
+    want_evals: u64,
+) -> f64 {
+    let t0 = Instant::now();
+    for pass in 0..passes {
+        let counter = DistanceCounter::default();
+        let (loss, assign) = pool.score(medoids, &counter).expect("sharded score");
+        assert_eq!(loss.to_bits(), want_loss.to_bits(), "pass {pass}: loss bits drifted");
+        assert_eq!(assign, want_assign, "pass {pass}: assignments drifted");
+        assert_eq!(counter.get(), want_evals, "pass {pass}: eval count drifted");
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let scale = banditpam::bench::Scale::from_env();
+    let n = scale.pick(240, 2000, 20_000);
+    let dim = scale.pick(8, 32, 64);
+    let passes = scale.pick(3, 10, 25);
+    let k = 5usize;
+    println!("== dist benches ({scale:?}: n={n}, dim={dim}, k={k}, {passes} passes) ==");
+
+    let ds = synthetic::gmm(&mut Rng::seed_from(7), n, dim, k, 3.0);
+    let medoid_rows: Vec<usize> = (0..k).map(|i| i * n / k).collect();
+    let medoids = ds.points.select(&medoid_rows);
+    let want_evals = (k * n) as u64;
+
+    // Single-process reference: result bits and baseline wall time.
+    let local = NativeBackend::new(&ds.points, Metric::L2);
+    let (want_loss, want_assign) = loss_and_assignments(&local, &medoid_rows);
+    let t0 = Instant::now();
+    for _ in 0..passes {
+        let b = NativeBackend::new(&ds.points, Metric::L2);
+        let (l, _) = loss_and_assignments(&b, &medoid_rows);
+        assert_eq!(l.to_bits(), want_loss.to_bits());
+    }
+    let local_secs = t0.elapsed().as_secs_f64();
+    println!("{:<24} {:>8.3}s  ({} passes)", "single-process", local_secs, passes);
+
+    let mut report = Report::new("dist").scale(scale).params(
+        JsonObj::new()
+            .u64("n", n as u64)
+            .u64("dim", dim as u64)
+            .u64("k", k as u64)
+            .u64("passes", passes as u64),
+    );
+    report.row(
+        JsonObj::new()
+            .str("scenario", "single-process")
+            .u64("workers", 0)
+            .f64("wall_secs", local_secs)
+            .f64("passes_per_sec", passes as f64 / local_secs.max(1e-9))
+            .bool("bitwise_ok", true),
+    );
+
+    // --- scaling: 1/2/4/8 workers over the wire -------------------------
+    let mut one_worker_secs = 0.0f64;
+    for workers in [1usize, 2, 4, 8] {
+        let pool = pipe_pool(&ds.points, Metric::L2, workers, &[]);
+        let secs =
+            timed_scores(&pool, &medoids, passes, want_loss, &want_assign, want_evals);
+        if workers == 1 {
+            one_worker_secs = secs;
+        }
+        let speedup = one_worker_secs / secs.max(1e-9);
+        println!(
+            "{:<24} {:>8.3}s  speedup vs 1 worker {:>5.2}x  retries {}",
+            format!("{workers} worker(s)"),
+            secs,
+            speedup,
+            pool.retries()
+        );
+        report.row(
+            JsonObj::new()
+                .str("scenario", "scaling")
+                .u64("workers", workers as u64)
+                .f64("wall_secs", secs)
+                .f64("passes_per_sec", passes as f64 / secs.max(1e-9))
+                .f64("speedup_vs_one_worker", speedup)
+                .f64("overhead_vs_local", secs / local_secs.max(1e-9))
+                .u64("retries", pool.retries())
+                .bool("bitwise_ok", true),
+        );
+    }
+
+    // --- worker-kill recovery cost --------------------------------------
+    // Same 2-worker workload twice: healthy, then with worker 0 killed
+    // deterministically on its 2nd work request. The kill costs one
+    // deadline-free detection + shard reassignment; results stay bitwise
+    // identical.
+    let healthy = pipe_pool(&ds.points, Metric::L2, 2, &[]);
+    let healthy_secs =
+        timed_scores(&healthy, &medoids, passes, want_loss, &want_assign, want_evals);
+    let plans = vec![
+        FaultPlan { panic_on_batches: vec![2], ..Default::default() },
+        FaultPlan::default(),
+    ];
+    let wounded = pipe_pool(&ds.points, Metric::L2, 2, &plans);
+    let wounded_secs =
+        timed_scores(&wounded, &medoids, passes, want_loss, &want_assign, want_evals);
+    assert!(wounded.respawns() >= 1, "the injected kill must have been recovered");
+    println!(
+        "{:<24} {:>8.3}s  healthy {:>8.3}s  recovery overhead {:>5.2}x  respawns {}",
+        "2 workers + kill",
+        wounded_secs,
+        healthy_secs,
+        wounded_secs / healthy_secs.max(1e-9),
+        wounded.respawns()
+    );
+    report.row(
+        JsonObj::new()
+            .str("scenario", "worker-kill-recovery")
+            .u64("workers", 2)
+            .f64("wall_secs", wounded_secs)
+            .f64("healthy_wall_secs", healthy_secs)
+            .f64("recovery_overhead", wounded_secs / healthy_secs.max(1e-9))
+            .u64("respawns", wounded.respawns())
+            .u64("retries", wounded.retries())
+            .bool("bitwise_ok", true),
+    );
+
+    let _ = report.write();
+    println!("[dist] all scenarios bitwise-identical to single-process");
+}

@@ -1,0 +1,1010 @@
+//! Coordinator side of the dist subsystem: the [`WorkerPool`] scheduler
+//! and the [`ShardedBackend`] that plugs it into any
+//! [`crate::algorithms::KMedoids`] fit.
+//!
+//! ## Bitwise parity
+//!
+//! Workers never sum anything. A `Block` response carries raw per-pair
+//! distances and a `Score` response carries per-row (nearest medoid,
+//! distance) pairs; the coordinator folds them **in shard order**, which
+//! is global row order because shards are contiguous ascending row
+//! ranges. The loss accumulator therefore adds the exact same `f64`
+//! values in the exact same sequence as the single-process fold, and the
+//! strict-`<` first-minimum runs worker-side over the same medoid order —
+//! so N workers produce bit-identical medoids/assignments/loss to one
+//! process (`rust/DIST.md` has the full argument).
+//!
+//! ## Robustness
+//!
+//! Every request has a deadline and an idempotent id. Worker death
+//! (EOF, frame corruption, timeout budget exhausted) triggers recovery:
+//! spawned children and TCP peers are respawned/reconnected and their
+//! shards re-loaded; in-memory pipe transports have their shards
+//! reassigned to a surviving worker. Retried requests reuse their id, so
+//! a duplicate answer from a slow-but-alive worker is indistinguishable
+//! from the retry's (deterministic workers return identical bytes).
+//! If the pool cannot recover, [`ShardedBackend`] falls back to local
+//! evaluation — degraded, never wrong.
+
+use crate::data::Points;
+use crate::dist::protocol::{
+    encode_request, parse_response, read_frame, BlockRequest, LoadRequest, Request, Response,
+    ScoreRequest,
+};
+use crate::distance::counter::DistanceCounter;
+use crate::distance::Metric;
+use crate::error::{Error, Result};
+use crate::obs::{Counter, Histogram, TraceSink, TraceValue};
+use crate::runtime::backend::{DistanceBackend, NativeBackend};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+/// Pool configuration.
+#[derive(Debug, Clone)]
+pub struct PoolOptions {
+    /// Per-request deadline; a worker that misses it `max_retries` times
+    /// is declared dead.
+    pub deadline: Duration,
+    /// Recovery budget per request (timeouts + worker deaths) before the
+    /// request errors out and the caller falls back to local compute.
+    pub max_retries: u32,
+    /// Worker binary for `spawn_local` (defaults to the current
+    /// executable; tests point it at `CARGO_BIN_EXE_banditpam`).
+    pub program: Option<PathBuf>,
+    /// Extra CLI args for spawned workers (deterministic fault
+    /// injection: `--inject-exit-on N`, `--stall-ms N`, ...).
+    pub worker_args: Vec<String>,
+}
+
+impl Default for PoolOptions {
+    fn default() -> PoolOptions {
+        PoolOptions {
+            deadline: Duration::from_secs(30),
+            max_retries: 3,
+            program: None,
+            worker_args: Vec::new(),
+        }
+    }
+}
+
+/// What a dead worker gets replaced with.
+enum WorkerKind {
+    /// Locally spawned child over stdio pipes: respawn on death.
+    Child { child: Child },
+    /// In-memory transport (tests/benches): shards reassign to survivors.
+    Pipe,
+    /// Remote TCP worker: reconnect on death.
+    Tcp { addr: String },
+}
+
+enum Event {
+    Frame(u8, Vec<u8>),
+    Closed(String),
+}
+
+struct WorkerHandle {
+    writer: Option<Box<dyn Write + Send>>,
+    events: Receiver<Event>,
+    reader: Option<JoinHandle<()>>,
+    /// Parsed responses whose id didn't match the active wait (other
+    /// in-flight requests on this worker, or duplicates after a retry).
+    stash: Vec<Response>,
+    kind: WorkerKind,
+    alive: bool,
+}
+
+impl WorkerHandle {
+    fn new(
+        writer: Box<dyn Write + Send>,
+        reader: impl Read + Send + 'static,
+        kind: WorkerKind,
+    ) -> WorkerHandle {
+        let (tx, rx) = mpsc::channel();
+        let handle = thread::Builder::new()
+            .name("dist-reader".into())
+            .spawn(move || {
+                let mut reader = reader;
+                loop {
+                    match read_frame(&mut reader) {
+                        Ok(Some((kind, body))) => {
+                            if tx.send(Event::Frame(kind, body)).is_err() {
+                                return;
+                            }
+                        }
+                        Ok(None) => {
+                            let _ = tx.send(Event::Closed("worker EOF".into()));
+                            return;
+                        }
+                        Err(e) => {
+                            let _ = tx.send(Event::Closed(format!("worker stream corrupt: {e}")));
+                            return;
+                        }
+                    }
+                }
+            })
+            .expect("spawning dist reader thread");
+        WorkerHandle {
+            writer: Some(writer),
+            events: rx,
+            reader: Some(handle),
+            stash: Vec::new(),
+            kind,
+            alive: true,
+        }
+    }
+
+    fn send(&mut self, frame: &[u8]) -> std::result::Result<(), String> {
+        let Some(w) = self.writer.as_mut() else {
+            return Err("writer already closed".into());
+        };
+        w.write_all(frame).and_then(|_| w.flush()).map_err(|e| format!("worker write: {e}"))
+    }
+}
+
+enum Wait {
+    Got(Response),
+    Dead(String),
+    Timeout,
+}
+
+fn wait_response(worker: &mut WorkerHandle, id: u64, deadline: Duration) -> Wait {
+    if let Some(i) = worker.stash.iter().position(|r| r.id() == id) {
+        return Wait::Got(worker.stash.remove(i));
+    }
+    let until = Instant::now() + deadline;
+    loop {
+        let now = Instant::now();
+        if now >= until {
+            return Wait::Timeout;
+        }
+        match worker.events.recv_timeout(until - now) {
+            Ok(Event::Frame(kind, body)) => match parse_response(kind, &body) {
+                Ok(resp) if resp.id() == id => return Wait::Got(resp),
+                Ok(resp) => worker.stash.push(resp),
+                Err(e) => return Wait::Dead(format!("unparseable worker response: {e}")),
+            },
+            Ok(Event::Closed(reason)) => return Wait::Dead(reason),
+            Err(RecvTimeoutError::Timeout) => return Wait::Timeout,
+            Err(RecvTimeoutError::Disconnected) => return Wait::Dead("reader thread gone".into()),
+        }
+    }
+}
+
+struct PoolInner {
+    workers: Vec<WorkerHandle>,
+    /// shard index -> worker index.
+    owner: Vec<usize>,
+    next_id: u64,
+}
+
+impl PoolInner {
+    fn fresh_id(&mut self) -> u64 {
+        self.next_id += 1;
+        self.next_id
+    }
+}
+
+/// One in-flight request for one shard.
+struct Pending {
+    shard: usize,
+    req: Request,
+    attempts: u32,
+    started: Instant,
+}
+
+/// A fleet of shard workers plus the scheduling/recovery logic to drive
+/// them. Holds the full dataset so it can (re)load shards on spawn,
+/// respawn and reassignment.
+pub struct WorkerPool<'d> {
+    points: &'d Points,
+    metric: Metric,
+    /// Contiguous ascending row ranges, one per shard: shard order is
+    /// global row order, which the parity argument relies on.
+    shards: Vec<(usize, usize)>,
+    opts: PoolOptions,
+    inner: Mutex<PoolInner>,
+    retries: AtomicU64,
+    respawns: AtomicU64,
+    fallbacks: AtomicU64,
+    obs_requests: Arc<Counter>,
+    obs_retries: Arc<Counter>,
+    obs_respawns: Arc<Counter>,
+    obs_shard_us: Arc<Histogram>,
+    trace: Mutex<Option<Arc<TraceSink>>>,
+}
+
+/// Contiguous even row split: shard `i` of `s` owns `[i*n/s, (i+1)*n/s)`.
+pub fn shard_ranges(n: usize, shards: usize) -> Vec<(usize, usize)> {
+    let s = shards.max(1);
+    (0..s).map(|i| (i * n / s, (i + 1) * n / s)).collect()
+}
+
+impl<'d> WorkerPool<'d> {
+    /// Spawn `workers` local children of this binary (`worker --stdio`)
+    /// over stdio pipes, one shard each, and load the shards.
+    pub fn spawn_local(
+        points: &'d Points,
+        metric: Metric,
+        workers: usize,
+        opts: PoolOptions,
+    ) -> Result<WorkerPool<'d>> {
+        let workers = workers.max(1).min(points.len().max(1));
+        let program = match &opts.program {
+            Some(p) => p.clone(),
+            None => std::env::current_exe()
+                .map_err(|e| Error::data(format!("dist: locating worker binary: {e}")))?,
+        };
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            handles.push(spawn_child(&program, &opts.worker_args)?);
+        }
+        let mut opts = opts;
+        opts.program = Some(program);
+        WorkerPool::assemble(points, metric, opts, handles)
+    }
+
+    /// Build a pool over caller-provided transports (in-memory pipes in
+    /// tests/benches; the worker end runs [`super::worker::run_worker`]
+    /// on its own thread). Transport workers cannot be respawned — their
+    /// shards reassign to survivors on death.
+    #[allow(clippy::type_complexity)]
+    pub fn from_transports(
+        points: &'d Points,
+        metric: Metric,
+        transports: Vec<(Box<dyn Write + Send>, Box<dyn Read + Send>)>,
+        opts: PoolOptions,
+    ) -> Result<WorkerPool<'d>> {
+        if transports.is_empty() {
+            return Err(Error::invalid_argument("dist: at least one worker transport required"));
+        }
+        let handles = transports
+            .into_iter()
+            .map(|(w, r)| WorkerHandle::new(w, r, WorkerKind::Pipe))
+            .collect();
+        WorkerPool::assemble(points, metric, opts, handles)
+    }
+
+    /// Connect to remote workers (`worker --listen host:port`), one
+    /// shard per host.
+    pub fn connect_tcp(
+        points: &'d Points,
+        metric: Metric,
+        hosts: &[String],
+        opts: PoolOptions,
+    ) -> Result<WorkerPool<'d>> {
+        if hosts.is_empty() {
+            return Err(Error::invalid_argument("dist: at least one worker host required"));
+        }
+        let mut handles = Vec::with_capacity(hosts.len());
+        for addr in hosts {
+            handles.push(connect_worker(addr)?);
+        }
+        WorkerPool::assemble(points, metric, opts, handles)
+    }
+
+    fn assemble(
+        points: &'d Points,
+        metric: Metric,
+        opts: PoolOptions,
+        handles: Vec<WorkerHandle>,
+    ) -> Result<WorkerPool<'d>> {
+        if matches!(points, Points::Trees(_)) || metric == Metric::TreeEdit {
+            return Err(Error::unsupported("dist: tree points/metrics have no wire form"));
+        }
+        let shards = shard_ranges(points.len(), handles.len());
+        let owner = (0..shards.len()).collect();
+        let obs = crate::obs::global();
+        let pool = WorkerPool {
+            points,
+            metric,
+            shards,
+            opts,
+            inner: Mutex::new(PoolInner { workers: handles, owner, next_id: 0 }),
+            retries: AtomicU64::new(0),
+            respawns: AtomicU64::new(0),
+            fallbacks: AtomicU64::new(0),
+            obs_requests: obs.counter("dist_requests_total"),
+            obs_retries: obs.counter("dist_retries_total"),
+            obs_respawns: obs.counter("dist_respawns_total"),
+            obs_shard_us: obs.histogram("dist_shard_us"),
+            trace: Mutex::new(None),
+        };
+        {
+            let mut inner = pool.inner.lock().unwrap();
+            for shard in 0..pool.shards.len() {
+                pool.load_shard(&mut inner, shard)?;
+            }
+        }
+        Ok(pool)
+    }
+
+    /// Number of workers (== shards).
+    pub fn n_workers(&self) -> usize {
+        self.inner.lock().unwrap().workers.len()
+    }
+
+    /// Shard layout (contiguous ascending row ranges).
+    pub fn shards(&self) -> &[(usize, usize)] {
+        &self.shards
+    }
+
+    /// Total rows the pool shards over.
+    pub fn n_rows(&self) -> usize {
+        self.points.len()
+    }
+
+    /// The pool's metric.
+    pub fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    /// Request retries performed (timeouts + deaths), for tests.
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    /// Workers respawned/reconnected or shards reassigned, for tests.
+    pub fn respawns(&self) -> u64 {
+        self.respawns.load(Ordering::Relaxed)
+    }
+
+    /// Times the caller had to fall back to local evaluation.
+    pub fn fallbacks(&self) -> u64 {
+        self.fallbacks.load(Ordering::Relaxed)
+    }
+
+    /// Attach a trace sink: per-shard request spans (`dist_shard`
+    /// events) land in `--trace-out`.
+    pub fn set_trace(&self, sink: Option<Arc<TraceSink>>) {
+        *self.trace.lock().unwrap() = sink;
+    }
+
+    pub(crate) fn note_fallback(&self) {
+        self.fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Ping every worker (health check; used by the CLI after spawn).
+    pub fn ping(&self) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        for w in 0..inner.workers.len() {
+            let id = inner.fresh_id();
+            let frame = encode_request(&Request::Ping { id });
+            if let Err(e) = inner.workers[w].send(&frame) {
+                return Err(Error::data(format!("dist: worker {w} unreachable: {e}")));
+            }
+            match wait_response(&mut inner.workers[w], id, self.opts.deadline) {
+                Wait::Got(Response::Pong { .. }) => {}
+                Wait::Got(other) => {
+                    return Err(Error::data(format!("dist: worker {w} bad pong: {other:?}")))
+                }
+                Wait::Dead(reason) => {
+                    return Err(Error::data(format!("dist: worker {w} died: {reason}")))
+                }
+                Wait::Timeout => {
+                    return Err(Error::data(format!("dist: worker {w} ping timed out")))
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// (Re)load `shard` onto its current owner: ship the rows, await the
+    /// `Loaded` ack. Loads are idempotent, so recovery can replay them.
+    fn load_shard(&self, inner: &mut PoolInner, shard: usize) -> Result<()> {
+        let (start, end) = self.shards[shard];
+        let idx: Vec<usize> = (start..end).collect();
+        let points = self.points.select(&idx);
+        let id = inner.fresh_id();
+        let req = Request::Load(LoadRequest { id, shard: shard as u32, metric: self.metric, points });
+        let frame = encode_request(&req);
+        let w = inner.owner[shard];
+        if let Err(e) = inner.workers[w].send(&frame) {
+            inner.workers[w].alive = false;
+            return Err(Error::data(format!("dist: loading shard {shard}: {e}")));
+        }
+        match wait_response(&mut inner.workers[w], id, self.opts.deadline) {
+            Wait::Got(Response::Loaded { rows, .. }) => {
+                let want = (end - start) as u64;
+                if rows != want {
+                    return Err(Error::data(format!(
+                        "dist: shard {shard} loaded {rows} rows, expected {want}"
+                    )));
+                }
+                Ok(())
+            }
+            Wait::Got(Response::Error { message, .. }) => {
+                Err(Error::data(format!("dist: worker rejected shard {shard}: {message}")))
+            }
+            Wait::Got(other) => {
+                Err(Error::data(format!("dist: loading shard {shard}: bad response {other:?}")))
+            }
+            Wait::Dead(reason) => {
+                inner.workers[w].alive = false;
+                Err(Error::data(format!("dist: loading shard {shard}: worker died: {reason}")))
+            }
+            Wait::Timeout => {
+                inner.workers[w].alive = false;
+                Err(Error::data(format!("dist: loading shard {shard}: timed out")))
+            }
+        }
+    }
+
+    /// Replace or retire a dead worker and re-home every shard it owned.
+    fn recover(&self, inner: &mut PoolInner, dead: usize) -> Result<()> {
+        enum Plan {
+            Respawn(PathBuf),
+            Reconnect(String),
+            Reassign,
+        }
+        inner.workers[dead].alive = false;
+        let plan = match &inner.workers[dead].kind {
+            WorkerKind::Child { .. } => Plan::Respawn(
+                self.opts.program.clone().expect("child pools always record their program"),
+            ),
+            WorkerKind::Tcp { addr } => Plan::Reconnect(addr.clone()),
+            WorkerKind::Pipe => Plan::Reassign,
+        };
+        let revived = match plan {
+            Plan::Respawn(program) => {
+                // Reap the corpse before replacing it.
+                if let WorkerKind::Child { child } = &mut inner.workers[dead].kind {
+                    child.kill().ok();
+                    child.wait().ok();
+                }
+                match spawn_child(&program, &self.opts.worker_args) {
+                    Ok(handle) => {
+                        inner.workers[dead] = handle;
+                        true
+                    }
+                    Err(_) => false,
+                }
+            }
+            Plan::Reconnect(addr) => match connect_worker(&addr) {
+                Ok(handle) => {
+                    inner.workers[dead] = handle;
+                    true
+                }
+                Err(_) => false,
+            },
+            Plan::Reassign => false,
+        };
+        if revived {
+            self.respawns.fetch_add(1, Ordering::Relaxed);
+            self.obs_respawns.inc();
+            let owned: Vec<usize> =
+                (0..self.shards.len()).filter(|&s| inner.owner[s] == dead).collect();
+            for shard in owned {
+                self.load_shard(inner, shard)?;
+            }
+            return Ok(());
+        }
+        // No respawn possible: reassign the dead worker's shards to the
+        // first survivor.
+        let Some(survivor) = inner.workers.iter().position(|w| w.alive) else {
+            return Err(Error::data("dist: all workers dead, cannot recover"));
+        };
+        self.respawns.fetch_add(1, Ordering::Relaxed);
+        self.obs_respawns.inc();
+        let owned: Vec<usize> =
+            (0..self.shards.len()).filter(|&s| inner.owner[s] == dead).collect();
+        for shard in owned {
+            inner.owner[shard] = survivor;
+            self.load_shard(inner, shard)?;
+        }
+        Ok(())
+    }
+
+    fn send_pending(&self, inner: &mut PoolInner, p: &Pending) {
+        self.obs_requests.inc();
+        let w = inner.owner[p.shard];
+        if !inner.workers[w].alive {
+            return; // collect() will recover first
+        }
+        let frame = encode_request(&p.req);
+        if inner.workers[w].send(&frame).is_err() {
+            inner.workers[w].alive = false;
+        }
+    }
+
+    /// Drive one pending request to a response, recovering through
+    /// worker deaths and timeouts. Retries reuse the request id
+    /// (idempotent), so duplicate answers are harmless.
+    fn collect(&self, inner: &mut PoolInner, p: &mut Pending) -> Result<Response> {
+        loop {
+            let w = inner.owner[p.shard];
+            if !inner.workers[w].alive {
+                self.bump_retry(p)?;
+                self.recover(inner, w)?;
+                self.send_pending(inner, p);
+                continue;
+            }
+            match wait_response(&mut inner.workers[w], p.req.id(), self.opts.deadline) {
+                Wait::Got(Response::Error { message, .. }) => {
+                    return Err(Error::data(format!(
+                        "dist: worker rejected request for shard {}: {message}",
+                        p.shard
+                    )));
+                }
+                Wait::Got(resp) => {
+                    let elapsed = p.started.elapsed();
+                    self.obs_shard_us.record_duration(elapsed);
+                    if let Some(sink) = self.trace.lock().unwrap().as_ref() {
+                        sink.emit(
+                            "dist_shard",
+                            &[
+                                ("shard", TraceValue::from(p.shard)),
+                                ("worker", TraceValue::from(w)),
+                                ("kind", TraceValue::from(request_kind(&p.req))),
+                                ("us", TraceValue::from(elapsed.as_micros() as u64)),
+                                ("attempts", TraceValue::from(u64::from(p.attempts) + 1)),
+                            ],
+                        );
+                    }
+                    return Ok(resp);
+                }
+                Wait::Dead(_) => {
+                    inner.workers[w].alive = false;
+                    self.bump_retry(p)?;
+                    self.recover(inner, w)?;
+                    self.send_pending(inner, p);
+                }
+                Wait::Timeout => {
+                    self.bump_retry(p)?;
+                    // The worker may be stalled rather than dead: resend
+                    // once with the same id; a second timeout on the same
+                    // request declares it dead.
+                    if p.attempts >= 2 {
+                        inner.workers[w].alive = false;
+                    } else {
+                        self.send_pending(inner, p);
+                    }
+                }
+            }
+        }
+    }
+
+    fn bump_retry(&self, p: &mut Pending) -> Result<()> {
+        p.attempts += 1;
+        if p.attempts > self.opts.max_retries {
+            return Err(Error::data(format!(
+                "dist: request for shard {} exhausted its retry budget ({})",
+                p.shard, self.opts.max_retries
+            )));
+        }
+        self.retries.fetch_add(1, Ordering::Relaxed);
+        self.obs_retries.inc();
+        Ok(())
+    }
+
+    /// Sharded distance block with single-process bit parity:
+    /// `out[t * refs.len() + r] = d(targets[t], refs[r])`, evals added to
+    /// `counter` only on full success (so a failed attempt stays
+    /// side-effect free and the caller can fall back cleanly).
+    pub fn block(
+        &self,
+        targets: &[usize],
+        refs: &[usize],
+        counter: &DistanceCounter,
+        out: &mut [f64],
+    ) -> Result<()> {
+        assert_eq!(out.len(), targets.len() * refs.len(), "dist block shape mismatch");
+        if targets.is_empty() || refs.is_empty() {
+            return Ok(());
+        }
+        let target_points = self.points.select(targets);
+        // Group refs by owning shard, preserving encounter order and the
+        // original output positions (refs can be any permutation slice).
+        let mut groups: BTreeMap<usize, (Vec<u32>, Vec<usize>)> = BTreeMap::new();
+        for (pos, &r) in refs.iter().enumerate() {
+            let shard = self.shard_of(r);
+            let (start, _) = self.shards[shard];
+            let entry = groups.entry(shard).or_default();
+            entry.0.push((r - start) as u32);
+            entry.1.push(pos);
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let mut pendings: Vec<Pending> = groups
+            .iter()
+            .map(|(&shard, (locals, _))| {
+                let id = inner.fresh_id();
+                Pending {
+                    shard,
+                    req: Request::Block(BlockRequest {
+                        id,
+                        shard: shard as u32,
+                        targets: target_points.clone(),
+                        refs: locals.clone(),
+                    }),
+                    attempts: 0,
+                    started: Instant::now(),
+                }
+            })
+            .collect();
+        for p in &pendings {
+            self.send_pending(&mut inner, p);
+        }
+        let mut evals_total = 0u64;
+        let tn = targets.len();
+        let rn = refs.len();
+        for p in &mut pendings {
+            let (locals, positions) = &groups[&p.shard];
+            let resp = self.collect(&mut inner, p)?;
+            let Response::Distances { evals, dists, .. } = resp else {
+                return Err(Error::data(format!(
+                    "dist: shard {} answered a block with the wrong frame",
+                    p.shard
+                )));
+            };
+            if dists.len() != tn * locals.len() {
+                return Err(Error::data(format!(
+                    "dist: shard {} block returned {} distances, expected {}",
+                    p.shard,
+                    dists.len(),
+                    tn * locals.len()
+                )));
+            }
+            for ti in 0..tn {
+                let row = &dists[ti * locals.len()..(ti + 1) * locals.len()];
+                for (j, &pos) in positions.iter().enumerate() {
+                    out[ti * rn + pos] = row[j];
+                }
+            }
+            evals_total += evals;
+        }
+        counter.add(evals_total);
+        Ok(())
+    }
+
+    /// Sharded `loss_and_assignments`: ship the medoid rows to every
+    /// shard, fold the per-row partials in shard (== global row) order.
+    pub fn score(
+        &self,
+        medoid_points: &Points,
+        counter: &DistanceCounter,
+    ) -> Result<(f64, Vec<usize>)> {
+        let n = self.points.len();
+        let mut inner = self.inner.lock().unwrap();
+        let mut pendings: Vec<Pending> = (0..self.shards.len())
+            .map(|shard| {
+                let id = inner.fresh_id();
+                Pending {
+                    shard,
+                    req: Request::Score(ScoreRequest {
+                        id,
+                        shard: shard as u32,
+                        medoids: medoid_points.clone(),
+                    }),
+                    attempts: 0,
+                    started: Instant::now(),
+                }
+            })
+            .collect();
+        for p in &pendings {
+            self.send_pending(&mut inner, p);
+        }
+        let mut loss = 0.0f64;
+        let mut assignments = vec![0usize; n];
+        let mut evals_total = 0u64;
+        for p in &mut pendings {
+            let (start, end) = self.shards[p.shard];
+            let resp = self.collect(&mut inner, p)?;
+            let Response::ScorePartial { evals, assign, dists, .. } = resp else {
+                return Err(Error::data(format!(
+                    "dist: shard {} answered a score with the wrong frame",
+                    p.shard
+                )));
+            };
+            if assign.len() != end - start || dists.len() != end - start {
+                return Err(Error::data(format!(
+                    "dist: shard {} score returned {} rows, expected {}",
+                    p.shard,
+                    assign.len(),
+                    end - start
+                )));
+            }
+            // Shard order is global row order: this `+=` sequence is the
+            // exact single-process accumulation.
+            for (i, (&a, &d)) in assign.iter().zip(dists.iter()).enumerate() {
+                loss += d;
+                assignments[start + i] = a as usize;
+            }
+            evals_total += evals;
+        }
+        counter.add(evals_total);
+        Ok((loss, assignments))
+    }
+
+    /// Owning shard of global row `r` (shards are contiguous ascending).
+    fn shard_of(&self, r: usize) -> usize {
+        debug_assert!(r < self.points.len());
+        match self.shards.binary_search_by(|&(start, end)| {
+            if r < start {
+                std::cmp::Ordering::Greater
+            } else if r >= end {
+                std::cmp::Ordering::Less
+            } else {
+                std::cmp::Ordering::Equal
+            }
+        }) {
+            Ok(s) => s,
+            Err(_) => unreachable!("row {r} outside every shard"),
+        }
+    }
+}
+
+impl Drop for WorkerPool<'_> {
+    fn drop(&mut self) {
+        let Ok(mut inner) = self.inner.lock() else { return };
+        for w in inner.workers.iter_mut() {
+            if w.alive {
+                let frame = encode_request(&Request::Shutdown { id: u64::MAX });
+                let _ = w.send(&frame);
+            }
+            // Dropping the writer EOFs the worker's read loop.
+            w.writer = None;
+        }
+        for w in inner.workers.iter_mut() {
+            if let WorkerKind::Child { child } = &mut w.kind {
+                // Give the child a moment to exit cleanly, then reap hard.
+                let deadline = Instant::now() + Duration::from_secs(2);
+                loop {
+                    match child.try_wait() {
+                        Ok(Some(_)) => break,
+                        Ok(None) if Instant::now() < deadline => {
+                            thread::sleep(Duration::from_millis(20))
+                        }
+                        _ => {
+                            child.kill().ok();
+                            child.wait().ok();
+                            break;
+                        }
+                    }
+                }
+            }
+            if let Some(handle) = w.reader.take() {
+                handle.join().ok();
+            }
+        }
+    }
+}
+
+fn spawn_child(program: &std::path::Path, extra_args: &[String]) -> Result<WorkerHandle> {
+    let mut cmd = Command::new(program);
+    cmd.arg("worker").arg("--stdio").arg("--quiet").args(extra_args);
+    cmd.stdin(Stdio::piped()).stdout(Stdio::piped()).stderr(Stdio::inherit());
+    let mut child = cmd
+        .spawn()
+        .map_err(|e| Error::data(format!("dist: spawning worker {}: {e}", program.display())))?;
+    let stdin = child.stdin.take().expect("piped stdin");
+    let stdout = child.stdout.take().expect("piped stdout");
+    Ok(WorkerHandle::new(Box::new(stdin), stdout, WorkerKind::Child { child }))
+}
+
+fn connect_worker(addr: &str) -> Result<WorkerHandle> {
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| Error::data(format!("dist: connecting worker {addr}: {e}")))?;
+    stream.set_nodelay(true).ok();
+    let write_half = stream
+        .try_clone()
+        .map_err(|e| Error::data(format!("dist: cloning worker stream {addr}: {e}")))?;
+    Ok(WorkerHandle::new(
+        Box::new(write_half),
+        stream,
+        WorkerKind::Tcp { addr: addr.to_string() },
+    ))
+}
+
+fn request_kind(req: &Request) -> &'static str {
+    match req {
+        Request::Load(_) => "load",
+        Request::LoadFile(_) => "load_file",
+        Request::Block(_) => "block",
+        Request::Score(_) => "score",
+        Request::Ping { .. } => "ping",
+        Request::Shutdown { .. } => "shutdown",
+    }
+}
+
+/// A [`DistanceBackend`] that routes batched work through a
+/// [`WorkerPool`] and everything else (single distances, norms, caching
+/// semantics) through the in-process [`NativeBackend`] over the same
+/// points. If the pool cannot recover from worker failures, block and
+/// score calls fall back to local evaluation — identical bits, identical
+/// eval counts, just slower.
+pub struct ShardedBackend<'d> {
+    local: NativeBackend<'d>,
+    pool: &'d WorkerPool<'d>,
+}
+
+impl<'d> ShardedBackend<'d> {
+    /// Backend over `points` (the same rows the pool sharded).
+    pub fn new(points: &'d Points, metric: Metric, pool: &'d WorkerPool<'d>) -> ShardedBackend<'d> {
+        assert_eq!(points.len(), pool.n_rows(), "pool shards a different row count");
+        assert_eq!(metric, pool.metric(), "pool uses a different metric");
+        ShardedBackend { local: NativeBackend::new(points, metric), pool }
+    }
+
+    /// Thread count for the local fallback path.
+    pub fn with_threads(mut self, threads: usize) -> ShardedBackend<'d> {
+        self.local = self.local.with_threads(threads);
+        self
+    }
+
+    /// The pool driving this backend.
+    pub fn pool(&self) -> &WorkerPool<'d> {
+        self.pool
+    }
+}
+
+impl DistanceBackend for ShardedBackend<'_> {
+    fn points(&self) -> &Points {
+        self.local.points()
+    }
+
+    fn metric(&self) -> Metric {
+        self.local.metric()
+    }
+
+    fn counter(&self) -> &DistanceCounter {
+        self.local.counter()
+    }
+
+    fn dist(&self, i: usize, j: usize) -> f64 {
+        self.local.dist(i, j)
+    }
+
+    fn block(&self, targets: &[usize], refs: &[usize], out: &mut [f64]) {
+        match self.pool.block(targets, refs, self.local.counter(), out) {
+            Ok(()) => {}
+            Err(e) => {
+                self.pool.note_fallback();
+                eprintln!("dist: falling back to local block: {}", e.message());
+                self.local.block(targets, refs, out);
+            }
+        }
+    }
+
+    fn score(&self, medoids: &[usize]) -> Option<(f64, Vec<usize>)> {
+        let medoid_points = self.local.points().select(medoids);
+        match self.pool.score(&medoid_points, self.local.counter()) {
+            Ok(result) => Some(result),
+            Err(e) => {
+                self.pool.note_fallback();
+                eprintln!("dist: falling back to local scoring: {}", e.message());
+                None
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::dist::worker::{run_worker, WorkerOptions};
+    use crate::runtime::backend::loss_and_assignments;
+    use crate::serve::faults::{pipe, FaultPlan};
+    use crate::util::rng::Rng;
+
+    /// In-process pool: each worker is a thread running the real worker
+    /// loop over the real wire codec (the exact socket code path).
+    fn pipe_pool<'d>(
+        points: &'d Points,
+        metric: Metric,
+        workers: usize,
+        plans: &[FaultPlan],
+    ) -> WorkerPool<'d> {
+        let mut transports: Vec<(Box<dyn Write + Send>, Box<dyn Read + Send>)> = Vec::new();
+        for i in 0..workers {
+            let (cw, sr) = pipe();
+            let (sw, cr) = pipe();
+            let opts = WorkerOptions {
+                faults: plans.get(i).cloned().unwrap_or_default(),
+                quiet: true,
+            };
+            thread::spawn(move || {
+                let _ = run_worker(sr, sw, &opts);
+            });
+            transports.push((Box::new(cw), Box::new(cr)));
+        }
+        WorkerPool::from_transports(points, metric, transports, PoolOptions::default()).unwrap()
+    }
+
+    #[test]
+    fn shard_ranges_are_contiguous_and_cover() {
+        for (n, s) in [(10, 3), (7, 7), (5, 1), (16, 4)] {
+            let ranges = shard_ranges(n, s);
+            assert_eq!(ranges.len(), s);
+            assert_eq!(ranges[0].0, 0);
+            assert_eq!(ranges[s - 1].1, n);
+            for pair in ranges.windows(2) {
+                assert_eq!(pair[0].1, pair[1].0);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_block_matches_local_block_bitwise() {
+        let data = synthetic::gmm(&mut Rng::seed_from(9), 30, 6, 3, 2.0);
+        let pool = pipe_pool(&data.points, Metric::L2, 3, &[]);
+        let local = NativeBackend::new(&data.points, Metric::L2);
+        let targets = [1usize, 17];
+        // Deliberately unsorted refs spanning all shards.
+        let refs = [29usize, 0, 10, 4, 22, 11];
+        let mut want = vec![0.0f64; targets.len() * refs.len()];
+        local.block(&targets, &refs, &mut want);
+        let counter = DistanceCounter::default();
+        let mut got = vec![0.0f64; want.len()];
+        pool.block(&targets, &refs, &counter, &mut got).unwrap();
+        assert_eq!(
+            got.iter().map(|d| d.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|d| d.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(counter.get(), (targets.len() * refs.len()) as u64);
+    }
+
+    #[test]
+    fn sharded_score_matches_loss_and_assignments_bitwise() {
+        let data = synthetic::gmm(&mut Rng::seed_from(21), 40, 5, 4, 2.0);
+        for workers in [1usize, 2, 4] {
+            let pool = pipe_pool(&data.points, Metric::Cosine, workers, &[]);
+            let local = NativeBackend::new(&data.points, Metric::Cosine);
+            let medoid_rows = [3usize, 11, 26, 39];
+            let (want_loss, want_assign) = loss_and_assignments(&local, &medoid_rows);
+            let counter = DistanceCounter::default();
+            let medoids = data.points.select(&medoid_rows);
+            let (loss, assign) = pool.score(&medoids, &counter).unwrap();
+            assert_eq!(loss.to_bits(), want_loss.to_bits(), "workers={workers}");
+            assert_eq!(assign, want_assign, "workers={workers}");
+            assert_eq!(counter.get(), (medoid_rows.len() * data.points.len()) as u64);
+        }
+    }
+
+    #[test]
+    fn pipe_worker_death_reassigns_the_shard_to_a_survivor() {
+        let data = synthetic::gmm(&mut Rng::seed_from(5), 20, 4, 2, 2.0);
+        // Worker 0 dies on its 2nd work request; worker 1 stays healthy.
+        let plans =
+            vec![FaultPlan { panic_on_batches: vec![2], ..Default::default() }, FaultPlan::default()];
+        let pool = pipe_pool(&data.points, Metric::L2, 2, &plans);
+        let local = NativeBackend::new(&data.points, Metric::L2);
+        let medoid_rows = [1usize, 12];
+        let medoids = data.points.select(&medoid_rows);
+        let (want_loss, want_assign) = loss_and_assignments(&local, &medoid_rows);
+        for round in 0..3 {
+            let counter = DistanceCounter::default();
+            let (loss, assign) = pool.score(&medoids, &counter).unwrap();
+            assert_eq!(loss.to_bits(), want_loss.to_bits(), "round {round}");
+            assert_eq!(assign, want_assign, "round {round}");
+            assert_eq!(counter.get(), (medoid_rows.len() * data.points.len()) as u64);
+        }
+        assert!(pool.respawns() >= 1, "the dead worker's shard must be reassigned");
+        assert!(pool.retries() >= 1);
+    }
+
+    #[test]
+    fn sharded_backend_score_hook_serves_loss_and_assignments() {
+        let data = synthetic::gmm(&mut Rng::seed_from(13), 25, 4, 3, 2.0);
+        let pool = pipe_pool(&data.points, Metric::L1, 2, &[]);
+        let backend = ShardedBackend::new(&data.points, Metric::L1, &pool);
+        let local = NativeBackend::new(&data.points, Metric::L1);
+        let medoids = [2usize, 9, 20];
+        let (want_loss, want_assign) = loss_and_assignments(&local, &medoids);
+        let (loss, assign) = loss_and_assignments(&backend, &medoids);
+        assert_eq!(loss.to_bits(), want_loss.to_bits());
+        assert_eq!(assign, want_assign);
+        assert_eq!(backend.counter().get(), local.counter().get());
+    }
+}

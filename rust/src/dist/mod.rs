@@ -1,0 +1,30 @@
+//! `dist` — sharded multi-worker fit: data-parallel distance evaluation
+//! over a wire protocol, with fault-tolerant workers and bitwise
+//! single-process parity.
+//!
+//! Three pieces:
+//!
+//! * [`protocol`] — the "BD" length-prefixed wire dialect (same framing
+//!   discipline as serve: magic/version, length checks before
+//!   allocation, fatal-vs-recoverable error tiers).
+//! * [`worker`] — the shard server (`banditpam worker` subcommand):
+//!   owns contiguous row shards, answers distance tiles and
+//!   nearest-medoid partials with the exact in-process kernels.
+//! * [`coordinator`] — the [`coordinator::WorkerPool`] scheduler
+//!   (deadlines, idempotent retries, respawn/reassign recovery) and
+//!   [`coordinator::ShardedBackend`], a drop-in
+//!   [`crate::runtime::backend::DistanceBackend`] so `--workers N` works
+//!   with every algorithm arm.
+//!
+//! The design contract is **N workers == 1 process, bitwise**: workers
+//! return raw distances (never partial sums), the coordinator folds
+//! per-shard partials in shard order — which is global row order — and
+//! eval counters merge exactly. `rust/DIST.md` spells out the argument
+//! and the failure semantics.
+
+pub mod coordinator;
+pub mod protocol;
+pub mod worker;
+
+pub use coordinator::{PoolOptions, ShardedBackend, WorkerPool};
+pub use worker::{run_worker, WorkerOptions};

@@ -1,0 +1,810 @@
+//! Wire dialect for the shard-worker protocol ("BD" frames).
+//!
+//! Same framing discipline as the serve protocol (`serve/protocol.rs`),
+//! distinct dialect: every frame is an 8-byte header — magic `"BD"`,
+//! version, kind, `u32` little-endian body length — followed by the body.
+//! The length is validated against [`MAX_FRAME_BODY`] *before* any
+//! allocation, so a hostile peer cannot make the process reserve memory
+//! it never sends.
+//!
+//! Two error tiers, mirroring serve:
+//!
+//! * [`FrameError`] — framing-level corruption (bad magic/version,
+//!   oversized length, truncated stream). The connection is unusable;
+//!   the coordinator treats the worker as dead.
+//! * [`ParseFailure`] — the frame arrived intact but the body grammar is
+//!   invalid. Recoverable: the worker answers [`Response::Error`] echoing
+//!   the request id and keeps serving.
+//!
+//! Payload layouts are byte-compatible with the serve predict body where
+//! they overlap (points payload: storage tag, `u32` rows/cols, then dense
+//! `f32` values or sparse `u64` nnz + `u64` indptr + `u32` indices +
+//! `f32` values), so the two dialects stay mutually intelligible to
+//! fixture generators. See `rust/DIST.md` for the full grammar.
+
+use crate::data::sparse::CsrMatrix;
+use crate::data::Points;
+use crate::distance::Metric;
+use crate::util::matrix::Matrix;
+use std::fmt;
+use std::io::{ErrorKind, Read, Write};
+
+/// Frame magic: "BD" (banditpam dist).
+pub const MAGIC: [u8; 2] = *b"BD";
+/// Wire version; bump on breaking changes.
+pub const VERSION: u8 = 1;
+/// Hard cap on a frame body, checked before allocation (64 MiB).
+pub const MAX_FRAME_BODY: usize = 64 << 20;
+/// Cap on a shard-file path in a `LoadFile` request.
+pub const MAX_PATH: usize = 4096;
+/// Cap on an error-message payload.
+pub const MAX_ERROR_MSG: usize = 1024;
+
+/// Request frame kinds (coordinator -> worker).
+pub mod req {
+    /// Install an in-memory shard: metric + points payload.
+    pub const LOAD: u8 = 1;
+    /// Install a shard backed by a row window of an `.mtx` file.
+    pub const LOAD_FILE: u8 = 2;
+    /// Evaluate a targets-vs-shard-rows distance tile.
+    pub const BLOCK: u8 = 3;
+    /// Assign every shard row to its nearest medoid.
+    pub const SCORE: u8 = 4;
+    pub const PING: u8 = 5;
+    pub const SHUTDOWN: u8 = 6;
+}
+
+/// Response frame kinds (worker -> coordinator).
+pub mod resp {
+    pub const LOADED: u8 = 0x81;
+    pub const DISTANCES: u8 = 0x82;
+    pub const SCORE_PARTIAL: u8 = 0x83;
+    pub const PONG: u8 = 0x84;
+    pub const ERROR: u8 = 0x85;
+    pub const SHUTDOWN_ACK: u8 = 0x86;
+}
+
+/// Framing-level corruption: the connection is not recoverable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FrameError(pub String);
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Body-grammar failure: the frame is rejected, the connection lives.
+/// `id` echoes the request id when enough of the body parsed to know it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseFailure {
+    pub id: u64,
+    pub message: String,
+}
+
+impl fmt::Display for ParseFailure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.message)
+    }
+}
+
+impl std::error::Error for ParseFailure {}
+
+/// Install an in-memory shard on a worker. The points are the shard's
+/// rows (bit-copies of the coordinator's rows `base..base+rows`); block
+/// and score requests address them by shard-local index.
+#[derive(Debug, Clone)]
+pub struct LoadRequest {
+    pub id: u64,
+    pub shard: u32,
+    pub metric: Metric,
+    pub points: Points,
+}
+
+/// Install a shard backed by rows `[start_row, end_row)` of an `.mtx`
+/// file the worker reads itself (bounded-memory via `CsrChunkReader`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadFileRequest {
+    pub id: u64,
+    pub shard: u32,
+    pub metric: Metric,
+    pub start_row: u64,
+    pub end_row: u64,
+    pub chunk_nnz: u64,
+    pub path: String,
+}
+
+/// Evaluate `targets` (shipped rows) against shard-local rows `refs`.
+/// The response carries raw per-pair distances — never partial sums —
+/// so every floating-point accumulation happens coordinator-side in the
+/// single-process order (the bitwise-parity argument in `DIST.md`).
+#[derive(Debug, Clone)]
+pub struct BlockRequest {
+    pub id: u64,
+    pub shard: u32,
+    pub targets: Points,
+    pub refs: Vec<u32>,
+}
+
+/// Assign every row of the shard to its nearest of the shipped medoids
+/// (strict-`<` first-minimum, same as the in-process fold).
+#[derive(Debug, Clone)]
+pub struct ScoreRequest {
+    pub id: u64,
+    pub shard: u32,
+    pub medoids: Points,
+}
+
+/// Coordinator -> worker frames.
+#[derive(Debug, Clone)]
+pub enum Request {
+    Load(LoadRequest),
+    LoadFile(LoadFileRequest),
+    Block(BlockRequest),
+    Score(ScoreRequest),
+    Ping { id: u64 },
+    Shutdown { id: u64 },
+}
+
+impl Request {
+    /// The request id (echoed by every response).
+    pub fn id(&self) -> u64 {
+        match self {
+            Request::Load(r) => r.id,
+            Request::LoadFile(r) => r.id,
+            Request::Block(r) => r.id,
+            Request::Score(r) => r.id,
+            Request::Ping { id } | Request::Shutdown { id } => *id,
+        }
+    }
+}
+
+/// Worker -> coordinator frames.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Shard installed; `rows` is the shard's row count.
+    Loaded { id: u64, shard: u32, rows: u64 },
+    /// Block result: `dists[t * refs.len() + j]` row-major over the
+    /// request's target x ref grid; `evals` is the worker-side distance
+    /// evaluation count for the request.
+    Distances { id: u64, shard: u32, evals: u64, dists: Vec<f64> },
+    /// Score result: per shard row (in shard order) the nearest-medoid
+    /// index and distance. No sums cross the wire.
+    ScorePartial { id: u64, shard: u32, evals: u64, assign: Vec<u32>, dists: Vec<f64> },
+    Pong { id: u64 },
+    /// Recoverable rejection of one request (body-tier).
+    Error { id: u64, message: String },
+    ShutdownAck { id: u64 },
+}
+
+impl Response {
+    /// The echoed request id.
+    pub fn id(&self) -> u64 {
+        match self {
+            Response::Loaded { id, .. }
+            | Response::Distances { id, .. }
+            | Response::ScorePartial { id, .. }
+            | Response::Pong { id }
+            | Response::Error { id, .. }
+            | Response::ShutdownAck { id } => *id,
+        }
+    }
+}
+
+/// Metric wire tag (`None` for metrics with no wire form: tree edit
+/// distance ships trees, which have no dist payload encoding).
+pub fn metric_to_wire(metric: Metric) -> Option<u8> {
+    match metric {
+        Metric::L2 => Some(0),
+        Metric::L1 => Some(1),
+        Metric::Cosine => Some(2),
+        Metric::TreeEdit => None,
+    }
+}
+
+fn metric_from_wire(c: &Cur, tag: u8) -> Result<Metric, ParseFailure> {
+    match tag {
+        0 => Ok(Metric::L2),
+        1 => Ok(Metric::L1),
+        2 => Ok(Metric::Cosine),
+        other => Err(c.fail(format!("unknown metric tag {other}"))),
+    }
+}
+
+/// Bounds-checked little-endian cursor over a frame body (same contract
+/// as the serve cursor, which is private to that module).
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    id: u64,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Cur<'a> {
+        Cur { buf, pos: 0, id: 0 }
+    }
+
+    fn fail(&self, message: impl Into<String>) -> ParseFailure {
+        ParseFailure { id: self.id, message: message.into() }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], ParseFailure> {
+        if self.remaining() < n {
+            return Err(self.fail(format!(
+                "truncated body: {what} needs {n} bytes, {} left",
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, ParseFailure> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, ParseFailure> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, ParseFailure> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    /// Leading request id; every body starts with one so error replies
+    /// can correlate.
+    fn id_field(&mut self) -> Result<u64, ParseFailure> {
+        let id = self.u64("request id")?;
+        self.id = id;
+        Ok(id)
+    }
+
+    /// Decode `count` items of `size` bytes, with the byte total checked
+    /// against the remaining body *before* the vector is reserved.
+    fn vec<T>(
+        &mut self,
+        count: usize,
+        size: usize,
+        what: &str,
+        decode: impl Fn(&[u8]) -> T,
+    ) -> Result<Vec<T>, ParseFailure> {
+        let total = count
+            .checked_mul(size)
+            .ok_or_else(|| self.fail(format!("{what} length overflow ({count} items)")))?;
+        let bytes = self.take(total, what)?;
+        Ok(bytes.chunks_exact(size).map(decode).collect())
+    }
+
+    /// `u32`-length-prefixed UTF-8 text with an explicit cap.
+    fn text(&mut self, what: &str, max: usize) -> Result<String, ParseFailure> {
+        let len = self.u32(&format!("{what} length"))? as usize;
+        if len > max {
+            return Err(self.fail(format!("{what} length {len} exceeds cap {max}")));
+        }
+        let bytes = self.take(len, what)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| self.fail(format!("{what} is not valid UTF-8")))
+    }
+
+    /// Reject trailing bytes: a frame must be exactly its grammar.
+    fn finish(self) -> Result<(), ParseFailure> {
+        if self.remaining() != 0 {
+            return Err(self.fail(format!("{} trailing bytes after body", self.remaining())));
+        }
+        Ok(())
+    }
+}
+
+/// Read one frame. `Ok(None)` is a clean EOF at a frame boundary; EOF
+/// mid-frame and every header violation are [`FrameError`]s.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<(u8, Vec<u8>)>, FrameError> {
+    let mut header = [0u8; 8];
+    let mut got = 0;
+    while got < header.len() {
+        match r.read(&mut header[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => return Err(FrameError(format!("EOF inside frame header ({got}/8 bytes)"))),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(FrameError(format!("reading frame header: {e}"))),
+        }
+    }
+    if header[..2] != MAGIC {
+        return Err(FrameError(format!(
+            "bad frame magic {:02x}{:02x} (expected \"BD\")",
+            header[0], header[1]
+        )));
+    }
+    if header[2] != VERSION {
+        return Err(FrameError(format!(
+            "unsupported protocol version {} (expected {VERSION})",
+            header[2]
+        )));
+    }
+    let kind = header[3];
+    let len = u32::from_le_bytes(header[4..8].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_BODY {
+        return Err(FrameError(format!(
+            "frame body length {len} exceeds cap {MAX_FRAME_BODY}"
+        )));
+    }
+    let mut body = vec![0u8; len];
+    let mut got = 0;
+    while got < len {
+        match r.read(&mut body[got..]) {
+            Ok(0) => return Err(FrameError(format!("EOF inside frame body ({got}/{len} bytes)"))),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(FrameError(format!("reading frame body: {e}"))),
+        }
+    }
+    Ok(Some((kind, body)))
+}
+
+/// Write one frame (header + body).
+pub fn write_frame(w: &mut impl Write, kind: u8, body: &[u8]) -> std::io::Result<()> {
+    debug_assert!(body.len() <= MAX_FRAME_BODY, "frame body exceeds cap");
+    let mut header = [0u8; 8];
+    header[..2].copy_from_slice(&MAGIC);
+    header[2] = VERSION;
+    header[3] = kind;
+    header[4..8].copy_from_slice(&(body.len() as u32).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(body)
+}
+
+fn frame(kind: u8, body: Vec<u8>) -> Vec<u8> {
+    assert!(body.len() <= MAX_FRAME_BODY, "frame body exceeds cap");
+    let mut out = Vec::with_capacity(8 + body.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(kind);
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+fn push_text(body: &mut Vec<u8>, text: &str) {
+    body.extend_from_slice(&(text.len() as u32).to_le_bytes());
+    body.extend_from_slice(text.as_bytes());
+}
+
+/// Points payload: storage tag, rows, cols, then storage-specific data.
+/// Byte-identical layout to the serve predict query payload.
+fn encode_points(body: &mut Vec<u8>, points: &Points) {
+    match points {
+        Points::Dense(m) => {
+            body.push(0);
+            body.extend_from_slice(&(m.rows() as u32).to_le_bytes());
+            body.extend_from_slice(&(m.cols() as u32).to_le_bytes());
+            for v in m.as_slice() {
+                body.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Points::Sparse(m) => {
+            body.push(1);
+            body.extend_from_slice(&(m.rows() as u32).to_le_bytes());
+            body.extend_from_slice(&(m.cols() as u32).to_le_bytes());
+            let (indptr, indices, values) = m.parts();
+            body.extend_from_slice(&(indices.len() as u64).to_le_bytes());
+            for p in indptr {
+                body.extend_from_slice(&(*p as u64).to_le_bytes());
+            }
+            for j in indices {
+                body.extend_from_slice(&j.to_le_bytes());
+            }
+            for v in values {
+                body.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Points::Trees(_) => unreachable!("tree points have no wire form"),
+    }
+}
+
+fn parse_points(c: &mut Cur<'_>, what: &str) -> Result<Points, ParseFailure> {
+    let storage = c.u8(&format!("{what} storage tag"))?;
+    let n = c.u32(&format!("{what} row count"))? as usize;
+    let dim = c.u32(&format!("{what} dim"))? as usize;
+    match storage {
+        0 => {
+            let total = n
+                .checked_mul(dim)
+                .ok_or_else(|| c.fail(format!("{what} size overflow ({n} x {dim})")))?;
+            let values =
+                c.vec(total, 4, &format!("{what} values"), |b| {
+                    f32::from_le_bytes(b.try_into().unwrap())
+                })?;
+            if let Some(bad) = values.iter().find(|v| !v.is_finite()) {
+                return Err(c.fail(format!("non-finite value {bad} in {what}")));
+            }
+            Ok(Points::Dense(Matrix::from_vec(values, n, dim)))
+        }
+        1 => {
+            let nnz = c.u64(&format!("{what} nnz"))?;
+            let nnz = usize::try_from(nnz)
+                .map_err(|_| c.fail(format!("{what} nnz {nnz} exceeds address space")))?;
+            let rows_plus_one = n
+                .checked_add(1)
+                .ok_or_else(|| c.fail(format!("{what} row count overflow")))?;
+            let indptr = c.vec(rows_plus_one, 8, &format!("{what} indptr"), |b| {
+                u64::from_le_bytes(b.try_into().unwrap()) as usize
+            })?;
+            let indices = c.vec(nnz, 4, &format!("{what} indices"), |b| {
+                u32::from_le_bytes(b.try_into().unwrap())
+            })?;
+            let values = c.vec(nnz, 4, &format!("{what} values"), |b| {
+                f32::from_le_bytes(b.try_into().unwrap())
+            })?;
+            let m = CsrMatrix::try_from_parts(n, dim, indptr, indices, values)
+                .map_err(|e| c.fail(format!("corrupt CSR {what}: {e}")))?;
+            Ok(Points::Sparse(m))
+        }
+        other => Err(c.fail(format!("unknown {what} storage tag {other}"))),
+    }
+}
+
+/// Encode a request into a complete frame (header + body).
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut body = req.id().to_le_bytes().to_vec();
+    let kind = match req {
+        Request::Load(r) => {
+            body.extend_from_slice(&r.shard.to_le_bytes());
+            body.push(metric_to_wire(r.metric).expect("metric has no wire form"));
+            encode_points(&mut body, &r.points);
+            req::LOAD
+        }
+        Request::LoadFile(r) => {
+            body.extend_from_slice(&r.shard.to_le_bytes());
+            body.push(metric_to_wire(r.metric).expect("metric has no wire form"));
+            body.extend_from_slice(&r.start_row.to_le_bytes());
+            body.extend_from_slice(&r.end_row.to_le_bytes());
+            body.extend_from_slice(&r.chunk_nnz.to_le_bytes());
+            push_text(&mut body, &r.path);
+            req::LOAD_FILE
+        }
+        Request::Block(r) => {
+            body.extend_from_slice(&r.shard.to_le_bytes());
+            encode_points(&mut body, &r.targets);
+            body.extend_from_slice(&(r.refs.len() as u32).to_le_bytes());
+            for j in &r.refs {
+                body.extend_from_slice(&j.to_le_bytes());
+            }
+            req::BLOCK
+        }
+        Request::Score(r) => {
+            body.extend_from_slice(&r.shard.to_le_bytes());
+            encode_points(&mut body, &r.medoids);
+            req::SCORE
+        }
+        Request::Ping { .. } => req::PING,
+        Request::Shutdown { .. } => req::SHUTDOWN,
+    };
+    frame(kind, body)
+}
+
+/// Parse a request body (the `kind` comes from the frame header).
+pub fn parse_request(kind: u8, body: &[u8]) -> Result<Request, ParseFailure> {
+    let mut c = Cur::new(body);
+    let id = c.id_field()?;
+    let req = match kind {
+        req::LOAD => {
+            let shard = c.u32("shard id")?;
+            let tag = c.u8("metric tag")?;
+            let metric = metric_from_wire(&c, tag)?;
+            let points = parse_points(&mut c, "shard payload")?;
+            Request::Load(LoadRequest { id, shard, metric, points })
+        }
+        req::LOAD_FILE => {
+            let shard = c.u32("shard id")?;
+            let tag = c.u8("metric tag")?;
+            let metric = metric_from_wire(&c, tag)?;
+            let start_row = c.u64("start row")?;
+            let end_row = c.u64("end row")?;
+            let chunk_nnz = c.u64("chunk nnz")?;
+            let path = c.text("shard path", MAX_PATH)?;
+            if end_row <= start_row {
+                return Err(c.fail(format!("empty file window [{start_row}, {end_row})")));
+            }
+            Request::LoadFile(LoadFileRequest {
+                id,
+                shard,
+                metric,
+                start_row,
+                end_row,
+                chunk_nnz,
+                path,
+            })
+        }
+        req::BLOCK => {
+            let shard = c.u32("shard id")?;
+            let targets = parse_points(&mut c, "target payload")?;
+            let count = c.u32("ref count")? as usize;
+            let refs = c.vec(count, 4, "ref indices", |b| {
+                u32::from_le_bytes(b.try_into().unwrap())
+            })?;
+            Request::Block(BlockRequest { id, shard, targets, refs })
+        }
+        req::SCORE => {
+            let shard = c.u32("shard id")?;
+            let medoids = parse_points(&mut c, "medoid payload")?;
+            Request::Score(ScoreRequest { id, shard, medoids })
+        }
+        req::PING => Request::Ping { id },
+        req::SHUTDOWN => Request::Shutdown { id },
+        other => return Err(c.fail(format!("unknown request kind 0x{other:02x}"))),
+    };
+    c.finish()?;
+    Ok(req)
+}
+
+/// Encode a response into a complete frame (header + body).
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let mut body = resp.id().to_le_bytes().to_vec();
+    let kind = match resp {
+        Response::Loaded { shard, rows, .. } => {
+            body.extend_from_slice(&shard.to_le_bytes());
+            body.extend_from_slice(&rows.to_le_bytes());
+            resp::LOADED
+        }
+        Response::Distances { shard, evals, dists, .. } => {
+            body.extend_from_slice(&shard.to_le_bytes());
+            body.extend_from_slice(&evals.to_le_bytes());
+            body.extend_from_slice(&(dists.len() as u32).to_le_bytes());
+            for d in dists {
+                body.extend_from_slice(&d.to_le_bytes());
+            }
+            resp::DISTANCES
+        }
+        Response::ScorePartial { shard, evals, assign, dists, .. } => {
+            assert_eq!(assign.len(), dists.len(), "score partial shape mismatch");
+            body.extend_from_slice(&shard.to_le_bytes());
+            body.extend_from_slice(&evals.to_le_bytes());
+            body.extend_from_slice(&(assign.len() as u32).to_le_bytes());
+            for a in assign {
+                body.extend_from_slice(&a.to_le_bytes());
+            }
+            for d in dists {
+                body.extend_from_slice(&d.to_le_bytes());
+            }
+            resp::SCORE_PARTIAL
+        }
+        Response::Pong { .. } => resp::PONG,
+        Response::Error { message, .. } => {
+            let mut msg = message.clone();
+            msg.truncate(MAX_ERROR_MSG);
+            push_text(&mut body, &msg);
+            resp::ERROR
+        }
+        Response::ShutdownAck { .. } => resp::SHUTDOWN_ACK,
+    };
+    frame(kind, body)
+}
+
+/// Parse a response body (the `kind` comes from the frame header).
+pub fn parse_response(kind: u8, body: &[u8]) -> Result<Response, ParseFailure> {
+    let mut c = Cur::new(body);
+    let id = c.id_field()?;
+    let resp = match kind {
+        resp::LOADED => {
+            let shard = c.u32("shard id")?;
+            let rows = c.u64("shard rows")?;
+            Response::Loaded { id, shard, rows }
+        }
+        resp::DISTANCES => {
+            let shard = c.u32("shard id")?;
+            let evals = c.u64("eval count")?;
+            let count = c.u32("distance count")? as usize;
+            let dists = c.vec(count, 8, "distances", |b| {
+                f64::from_le_bytes(b.try_into().unwrap())
+            })?;
+            Response::Distances { id, shard, evals, dists }
+        }
+        resp::SCORE_PARTIAL => {
+            let shard = c.u32("shard id")?;
+            let evals = c.u64("eval count")?;
+            let n = c.u32("row count")? as usize;
+            let assign = c.vec(n, 4, "assignments", |b| {
+                u32::from_le_bytes(b.try_into().unwrap())
+            })?;
+            let dists = c.vec(n, 8, "distances", |b| {
+                f64::from_le_bytes(b.try_into().unwrap())
+            })?;
+            Response::ScorePartial { id, shard, evals, assign, dists }
+        }
+        resp::PONG => Response::Pong { id },
+        resp::ERROR => {
+            let message = c.text("error message", MAX_ERROR_MSG)?;
+            Response::Error { id, message }
+        }
+        resp::SHUTDOWN_ACK => Response::ShutdownAck { id },
+        other => return Err(c.fail(format!("unknown response kind 0x{other:02x}"))),
+    };
+    c.finish()?;
+    Ok(resp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense_points() -> Points {
+        Points::Dense(Matrix::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3))
+    }
+
+    fn sparse_points() -> Points {
+        Points::Sparse(
+            CsrMatrix::try_from_parts(2, 4, vec![0, 2, 3], vec![0, 3, 1], vec![1.5, -2.0, 0.25])
+                .unwrap(),
+        )
+    }
+
+    fn roundtrip_request(req: &Request) -> Request {
+        let bytes = encode_request(req);
+        let mut r = &bytes[..];
+        let (kind, body) = read_frame(&mut r).unwrap().unwrap();
+        assert!(read_frame(&mut r).unwrap().is_none());
+        parse_request(kind, &body).unwrap()
+    }
+
+    fn roundtrip_response(resp: &Response) -> Response {
+        let bytes = encode_response(resp);
+        let mut r = &bytes[..];
+        let (kind, body) = read_frame(&mut r).unwrap().unwrap();
+        parse_response(kind, &body).unwrap()
+    }
+
+    #[test]
+    fn load_round_trips_dense_and_sparse() {
+        for points in [dense_points(), sparse_points()] {
+            let req = Request::Load(LoadRequest {
+                id: 3,
+                shard: 1,
+                metric: Metric::Cosine,
+                points: points.clone(),
+            });
+            let Request::Load(got) = roundtrip_request(&req) else { panic!("wrong variant") };
+            assert_eq!(got.id, 3);
+            assert_eq!(got.shard, 1);
+            assert_eq!(got.metric, Metric::Cosine);
+            assert_eq!(got.points.len(), points.len());
+            assert_eq!(got.points.kind(), points.kind());
+        }
+    }
+
+    #[test]
+    fn load_file_round_trips() {
+        let req = Request::LoadFile(LoadFileRequest {
+            id: 9,
+            shard: 2,
+            metric: Metric::L1,
+            start_row: 100,
+            end_row: 250,
+            chunk_nnz: 4096,
+            path: "data/cells.mtx".into(),
+        });
+        let Request::LoadFile(got) = roundtrip_request(&req) else { panic!("wrong variant") };
+        assert_eq!(got.start_row, 100);
+        assert_eq!(got.end_row, 250);
+        assert_eq!(got.path, "data/cells.mtx");
+    }
+
+    #[test]
+    fn block_and_score_round_trip() {
+        let req = Request::Block(BlockRequest {
+            id: 4,
+            shard: 0,
+            targets: dense_points(),
+            refs: vec![0, 2, 5],
+        });
+        let Request::Block(got) = roundtrip_request(&req) else { panic!("wrong variant") };
+        assert_eq!(got.refs, vec![0, 2, 5]);
+
+        let req = Request::Score(ScoreRequest { id: 5, shard: 3, medoids: sparse_points() });
+        let Request::Score(got) = roundtrip_request(&req) else { panic!("wrong variant") };
+        assert_eq!((got.id, got.shard), (5, 3));
+    }
+
+    #[test]
+    fn responses_round_trip_bit_exactly() {
+        let cases = [
+            Response::Loaded { id: 1, shard: 0, rows: 42 },
+            Response::Distances { id: 2, shard: 1, evals: 6, dists: vec![0.5, 1.25, f64::MIN_POSITIVE] },
+            Response::ScorePartial {
+                id: 3,
+                shard: 2,
+                evals: 8,
+                assign: vec![0, 1, 1, 0],
+                dists: vec![0.1, 0.2, 0.3, 0.4],
+            },
+            Response::Pong { id: 4 },
+            Response::Error { id: 5, message: "nope".into() },
+            Response::ShutdownAck { id: 6 },
+        ];
+        for resp in cases {
+            assert_eq!(roundtrip_response(&resp), resp);
+        }
+    }
+
+    #[test]
+    fn oversized_length_is_rejected_before_allocation() {
+        let mut bytes = encode_request(&Request::Ping { id: 1 });
+        bytes[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_frame(&mut &bytes[..]).unwrap_err();
+        assert!(err.0.contains("exceeds cap"), "{err}");
+    }
+
+    #[test]
+    fn serve_dialect_frames_are_rejected_at_the_framing_tier() {
+        // A "BQ" frame against the "BD" parser: wrong dialect, dead link.
+        let mut bytes = encode_request(&Request::Ping { id: 1 });
+        bytes[..2].copy_from_slice(b"BQ");
+        let err = read_frame(&mut &bytes[..]).unwrap_err();
+        assert!(err.0.contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn truncated_body_is_a_framing_error() {
+        let bytes = encode_request(&Request::Ping { id: 7 });
+        let err = read_frame(&mut &bytes[..bytes.len() - 3]).unwrap_err();
+        assert!(err.0.contains("EOF inside frame body"), "{err}");
+    }
+
+    #[test]
+    fn body_failures_echo_the_request_id() {
+        // Block with a lying ref count: id parsed before the violation.
+        let req = Request::Block(BlockRequest {
+            id: 77,
+            shard: 0,
+            targets: dense_points(),
+            refs: vec![1],
+        });
+        let mut bytes = encode_request(&req);
+        let len = bytes.len();
+        bytes.truncate(len - 2);
+        let body_len = (len - 8 - 2) as u32;
+        bytes[4..8].copy_from_slice(&body_len.to_le_bytes());
+        let mut r = &bytes[..];
+        let (kind, body) = read_frame(&mut r).unwrap().unwrap();
+        let fail = parse_request(kind, &body).unwrap_err();
+        assert_eq!(fail.id, 77);
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut bytes = encode_request(&Request::Ping { id: 1 });
+        bytes.push(0);
+        bytes[4..8].copy_from_slice(&9u32.to_le_bytes());
+        let mut r = &bytes[..];
+        let (kind, body) = read_frame(&mut r).unwrap().unwrap();
+        let fail = parse_request(kind, &body).unwrap_err();
+        assert!(fail.message.contains("trailing"), "{fail}");
+    }
+
+    #[test]
+    fn non_finite_shard_values_are_rejected() {
+        let req = Request::Load(LoadRequest {
+            id: 8,
+            shard: 0,
+            metric: Metric::L2,
+            points: dense_points(),
+        });
+        let mut bytes = encode_request(&req);
+        // Overwrite the first f32 value with NaN: body starts at 8, then
+        // id(8) + shard(4) + metric(1) + tag(1) + rows(4) + cols(4).
+        let off = 8 + 8 + 4 + 1 + 1 + 4 + 4;
+        bytes[off..off + 4].copy_from_slice(&f32::NAN.to_le_bytes());
+        let mut r = &bytes[..];
+        let (kind, body) = read_frame(&mut r).unwrap().unwrap();
+        let fail = parse_request(kind, &body).unwrap_err();
+        assert!(fail.message.contains("non-finite"), "{fail}");
+    }
+}

@@ -1,0 +1,508 @@
+//! Shard worker: the server side of the dist protocol.
+//!
+//! A worker owns one or more contiguous row shards (installed by `Load`
+//! or `LoadFile`), and answers distance tiles (`Block`) and nearest-medoid
+//! partials (`Score`) against them. All kernels are the exact in-process
+//! ones — [`NativeBackend::block_vs`] over the shipped target rows and
+//! [`assign_against`] for scoring — so every distance a worker returns is
+//! bit-identical to the value the single-process path would compute
+//! (pinned by `block_vs_matches_block_on_training_set`).
+//!
+//! No floating-point accumulation happens here: responses carry raw
+//! per-pair / per-row distances, never partial sums, which is what makes
+//! the coordinator's shard-order fold bitwise worker-count-invariant
+//! (`rust/DIST.md`).
+//!
+//! Failure discipline mirrors serve: framing-level corruption kills the
+//! connection ([`FrameError`] tier), body-level garbage is answered with
+//! a recoverable [`Response::Error`] echoing the request id. A
+//! deterministic [`FaultPlan`] can kill the worker at a pinned work
+//! request (Block/Score are counted; Load/Ping are not) to exercise the
+//! coordinator's recovery path.
+
+use crate::data::stream::{CsrChunkReader, StreamOptions};
+use crate::data::Points;
+use crate::dist::protocol::{
+    encode_response, parse_request, read_frame, BlockRequest, LoadFileRequest, LoadRequest,
+    Request, Response, ScoreRequest,
+};
+use crate::distance::Metric;
+use crate::error::{Error, Result};
+use crate::runtime::backend::{assign_against, NativeBackend};
+use crate::serve::faults::FaultPlan;
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::TcpListener;
+use std::path::Path;
+
+/// Worker runtime knobs.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerOptions {
+    /// Deterministic fault plan; `should_panic` is consulted against the
+    /// 1-based sequence of *work* requests (Block/Score).
+    pub faults: FaultPlan,
+    /// Suppress stderr chatter.
+    pub quiet: bool,
+}
+
+/// How a worker loop ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerExit {
+    /// Clean `Shutdown` request was acknowledged.
+    Shutdown,
+    /// The coordinator hung up at a frame boundary.
+    Eof,
+    /// The fault plan killed the worker (writer dropped, no ack).
+    Killed,
+}
+
+/// One installed shard: the rows, their metric, and the precomputed
+/// per-row norm table `block_vs` kernels consume.
+struct ShardState {
+    metric: Metric,
+    points: Points,
+    norms: Vec<f64>,
+}
+
+impl ShardState {
+    fn install(metric: Metric, points: Points) -> std::result::Result<ShardState, String> {
+        if matches!(points, Points::Trees(_)) {
+            return Err("tree shards are not supported over the wire".into());
+        }
+        if !metric.supports(&points) {
+            return Err(format!("metric {} does not support {} points", metric.name(), points.kind()));
+        }
+        let norms = NativeBackend::norms_for(metric, &points);
+        Ok(ShardState { metric, points, norms })
+    }
+}
+
+/// Serve one connection: read request frames from `r`, answer on `w`.
+///
+/// Returns how the loop ended; framing-tier corruption is the only error
+/// path. Dropping the writer (on `Killed` or return) is what the
+/// coordinator observes as worker death.
+pub fn run_worker(mut r: impl Read, mut w: impl Write, opts: &WorkerOptions) -> Result<WorkerExit> {
+    let mut shards: HashMap<u32, ShardState> = HashMap::new();
+    let mut work_seq: u64 = 0;
+    loop {
+        let (kind, body) = match read_frame(&mut r) {
+            Ok(Some(frame)) => frame,
+            Ok(None) => return Ok(WorkerExit::Eof),
+            Err(e) => return Err(Error::data(format!("dist worker: fatal frame error: {e}"))),
+        };
+        let req = match parse_request(kind, &body) {
+            Ok(req) => req,
+            Err(fail) => {
+                let resp = Response::Error { id: fail.id, message: fail.message };
+                w.write_all(&encode_response(&resp))?;
+                w.flush()?;
+                continue;
+            }
+        };
+        if matches!(req, Request::Block(_) | Request::Score(_)) {
+            work_seq += 1;
+            if let Some(delay) = opts.faults.stall() {
+                std::thread::sleep(delay);
+            }
+            if opts.faults.should_panic(work_seq) {
+                if !opts.quiet {
+                    eprintln!("dist worker: injected kill at work request {work_seq}");
+                }
+                return Ok(WorkerExit::Killed);
+            }
+        }
+        let shutdown = matches!(req, Request::Shutdown { .. });
+        let resp = handle(&mut shards, req);
+        w.write_all(&encode_response(&resp))?;
+        w.flush()?;
+        if shutdown {
+            return Ok(WorkerExit::Shutdown);
+        }
+    }
+}
+
+/// TCP mode (`worker --listen addr`): serve connections one at a time,
+/// forever. Each connection gets fresh shard state and a fresh fault
+/// sequence, so reconnect-after-kill behaves deterministically.
+pub fn listen_tcp(addr: &str, opts: &WorkerOptions) -> Result<()> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| Error::invalid_argument(format!("dist worker: binding {addr}: {e}")))?;
+    if !opts.quiet {
+        eprintln!(
+            "dist worker listening on {}",
+            listener.local_addr().map(|a| a.to_string()).unwrap_or_else(|_| addr.to_string())
+        );
+    }
+    loop {
+        let (stream, peer) = match listener.accept() {
+            Ok(conn) => conn,
+            Err(e) => {
+                if !opts.quiet {
+                    eprintln!("dist worker: accept failed: {e}");
+                }
+                continue;
+            }
+        };
+        stream.set_nodelay(true).ok();
+        let write_half = match stream.try_clone() {
+            Ok(half) => half,
+            Err(_) => continue,
+        };
+        match run_worker(stream, write_half, opts) {
+            Ok(exit) => {
+                if !opts.quiet {
+                    eprintln!("dist worker: connection from {peer} ended: {exit:?}");
+                }
+            }
+            Err(e) => {
+                if !opts.quiet {
+                    eprintln!("dist worker: connection from {peer} failed: {}", e.message());
+                }
+            }
+        }
+    }
+}
+
+fn handle(shards: &mut HashMap<u32, ShardState>, req: Request) -> Response {
+    match req {
+        Request::Load(r) => handle_load(shards, r),
+        Request::LoadFile(r) => handle_load_file(shards, r),
+        Request::Block(r) => handle_block(shards, r),
+        Request::Score(r) => handle_score(shards, r),
+        Request::Ping { id } => Response::Pong { id },
+        Request::Shutdown { id } => Response::ShutdownAck { id },
+    }
+}
+
+fn handle_load(shards: &mut HashMap<u32, ShardState>, r: LoadRequest) -> Response {
+    let LoadRequest { id, shard, metric, points } = r;
+    let rows = points.len() as u64;
+    match ShardState::install(metric, points) {
+        Ok(state) => {
+            // Re-Load of a live shard id replaces it: loads are idempotent
+            // so the coordinator can retry them blindly.
+            shards.insert(shard, state);
+            Response::Loaded { id, shard, rows }
+        }
+        Err(message) => Response::Error { id, message },
+    }
+}
+
+fn handle_load_file(shards: &mut HashMap<u32, ShardState>, r: LoadFileRequest) -> Response {
+    let LoadFileRequest { id, shard, metric, start_row, end_row, chunk_nnz, path } = r;
+    match read_file_window(&path, start_row, end_row, chunk_nnz) {
+        Ok(points) => {
+            let rows = points.len() as u64;
+            match ShardState::install(metric, points) {
+                Ok(state) => {
+                    shards.insert(shard, state);
+                    Response::Loaded { id, shard, rows }
+                }
+                Err(message) => Response::Error { id, message },
+            }
+        }
+        Err(message) => Response::Error { id, message },
+    }
+}
+
+/// Read rows `[start_row, end_row)` of an `.mtx` file through the
+/// bounded-memory window reader, splicing window slices into one shard
+/// CSR. Peak memory is the shard plus one in-flight window.
+fn read_file_window(
+    path: &str,
+    start_row: u64,
+    end_row: u64,
+    chunk_nnz: u64,
+) -> std::result::Result<Points, String> {
+    let start = usize::try_from(start_row).map_err(|_| "start row exceeds address space")?;
+    let end = usize::try_from(end_row).map_err(|_| "end row exceeds address space")?;
+    let opts = StreamOptions {
+        chunk_nnz: usize::try_from(chunk_nnz).unwrap_or(usize::MAX).max(1),
+        // `limit` caps total rows read, so the reader stops at the window
+        // end instead of scanning the whole file.
+        limit: end,
+        ..StreamOptions::default()
+    };
+    let mut reader = CsrChunkReader::open(Path::new(path), opts)
+        .map_err(|e| format!("opening shard file {path}: {}", e.message()))?;
+    if end > reader.rows() {
+        return Err(format!(
+            "shard window [{start}, {end}) exceeds file rows {}",
+            reader.rows()
+        ));
+    }
+    let cols = reader.cols();
+    let mut indptr = vec![0usize];
+    let mut indices: Vec<u32> = Vec::new();
+    let mut values: Vec<f32> = Vec::new();
+    while let Some(window) = reader
+        .next_window()
+        .map_err(|e| format!("reading shard file {path}: {}", e.message()))?
+    {
+        let wstart = window.start_row;
+        let wend = wstart + window.matrix.rows();
+        if wend <= start {
+            continue;
+        }
+        if wstart >= end {
+            break;
+        }
+        let lo = start.max(wstart);
+        let hi = end.min(wend);
+        let (ip, ix, vs) = window.matrix.parts();
+        for row in (lo - wstart)..(hi - wstart) {
+            let (a, b) = (ip[row], ip[row + 1]);
+            indices.extend_from_slice(&ix[a..b]);
+            values.extend_from_slice(&vs[a..b]);
+            indptr.push(indices.len());
+        }
+    }
+    let rows = indptr.len() - 1;
+    if rows != end - start {
+        return Err(format!(
+            "shard window [{start}, {end}) produced {rows} rows (file shorter than claimed)"
+        ));
+    }
+    let matrix = crate::data::sparse::CsrMatrix::try_from_parts(rows, cols, indptr, indices, values)
+        .map_err(|e| format!("spliced shard window is not valid CSR: {e}"))?;
+    Ok(Points::Sparse(matrix))
+}
+
+fn handle_block(shards: &mut HashMap<u32, ShardState>, r: BlockRequest) -> Response {
+    let BlockRequest { id, shard, targets, refs } = r;
+    let Some(state) = shards.get(&shard) else {
+        return Response::Error { id, message: format!("unknown shard {shard}") };
+    };
+    if targets.is_empty() || refs.is_empty() {
+        return Response::Distances { id, shard, evals: 0, dists: Vec::new() };
+    }
+    if targets.kind() != state.points.kind() {
+        return Response::Error {
+            id,
+            message: format!(
+                "target storage {} does not match shard storage {}",
+                targets.kind(),
+                state.points.kind()
+            ),
+        };
+    }
+    if targets.dim() != state.points.dim() {
+        return Response::Error {
+            id,
+            message: format!(
+                "target dim {} does not match shard dim {}",
+                targets.dim(),
+                state.points.dim()
+            ),
+        };
+    }
+    let rows = state.points.len();
+    if let Some(bad) = refs.iter().find(|&&j| j as usize >= rows) {
+        return Response::Error {
+            id,
+            message: format!("ref index {bad} out of range for shard with {rows} rows"),
+        };
+    }
+    // The shipped target rows become their own backend; `block_vs` against
+    // the shard rows runs the exact kernels the one-process path uses.
+    let backend = NativeBackend::new(&targets, state.metric);
+    let tidx: Vec<usize> = (0..targets.len()).collect();
+    let local: Vec<usize> = refs.iter().map(|&j| j as usize).collect();
+    let mut dists = vec![0.0f64; targets.len() * local.len()];
+    backend.block_vs(&tidx, &state.points, &state.norms, &local, &mut dists);
+    let evals = backend.counter().get();
+    Response::Distances { id, shard, evals, dists }
+}
+
+fn handle_score(shards: &mut HashMap<u32, ShardState>, r: ScoreRequest) -> Response {
+    let ScoreRequest { id, shard, medoids } = r;
+    let Some(state) = shards.get(&shard) else {
+        return Response::Error { id, message: format!("unknown shard {shard}") };
+    };
+    if medoids.is_empty() {
+        return Response::Error { id, message: "empty medoid set".into() };
+    }
+    if medoids.kind() != state.points.kind() || medoids.dim() != state.points.dim() {
+        return Response::Error {
+            id,
+            message: format!(
+                "medoid payload {}x{} does not match shard {}x{}",
+                medoids.kind(),
+                medoids.dim(),
+                state.points.kind(),
+                state.points.dim()
+            ),
+        };
+    }
+    let backend = NativeBackend::new(&medoids, state.metric);
+    let (assign, dists) = assign_against(&backend, &state.points);
+    let evals = backend.counter().get();
+    let assign: Vec<u32> = assign.into_iter().map(|a| a as u32).collect();
+    Response::ScorePartial { id, shard, evals, assign, dists }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::dist::protocol::{encode_request, parse_response, ScoreRequest};
+    use crate::runtime::backend::{loss_and_assignments, DistanceBackend};
+    use crate::util::rng::Rng;
+
+    fn run(frames: &[Request], opts: &WorkerOptions) -> (Vec<Response>, WorkerExit) {
+        let mut input = Vec::new();
+        for req in frames {
+            input.extend_from_slice(&encode_request(req));
+        }
+        let mut out = Vec::new();
+        let exit = run_worker(&input[..], &mut out, opts).unwrap();
+        let mut responses = Vec::new();
+        let mut r = &out[..];
+        while let Some((kind, body)) = read_frame(&mut r).unwrap() {
+            responses.push(parse_response(kind, &body).unwrap());
+        }
+        (responses, exit)
+    }
+
+    #[test]
+    fn load_block_score_shutdown_round_trip() {
+        let data = synthetic::gmm(&mut Rng::seed_from(7), 20, 4, 3, 2.0);
+        let shard = data.points.select(&(5..15).collect::<Vec<_>>());
+        let targets = data.points.select(&[0, 1]);
+        let frames = vec![
+            Request::Load(LoadRequest { id: 1, shard: 0, metric: Metric::L2, points: shard }),
+            Request::Block(BlockRequest {
+                id: 2,
+                shard: 0,
+                targets: targets.clone(),
+                refs: vec![0, 3, 9],
+            }),
+            Request::Score(ScoreRequest { id: 3, shard: 0, medoids: targets }),
+            Request::Shutdown { id: 4 },
+        ];
+        let (responses, exit) = run(&frames, &WorkerOptions::default());
+        assert_eq!(exit, WorkerExit::Shutdown);
+        assert_eq!(responses.len(), 4);
+        assert_eq!(responses[0], Response::Loaded { id: 1, shard: 0, rows: 10 });
+        let Response::Distances { evals, dists, .. } = &responses[1] else {
+            panic!("expected distances, got {:?}", responses[1])
+        };
+        assert_eq!(*evals, 6);
+        assert_eq!(dists.len(), 6);
+        // Bitwise parity with the direct in-process block on the same rows.
+        let backend = NativeBackend::new(&data.points, Metric::L2);
+        let mut want = vec![0.0f64; 6];
+        backend.block(&[0, 1], &[5, 8, 14], &mut want);
+        assert_eq!(
+            dists.iter().map(|d| d.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|d| d.to_bits()).collect::<Vec<_>>()
+        );
+        let Response::ScorePartial { assign, dists, evals, .. } = &responses[2] else {
+            panic!("expected score partial, got {:?}", responses[2])
+        };
+        assert_eq!(assign.len(), 10);
+        assert_eq!(dists.len(), 10);
+        assert_eq!(*evals, 20);
+        assert_eq!(responses[3], Response::ShutdownAck { id: 4 });
+    }
+
+    #[test]
+    fn score_partial_matches_loss_and_assignments_per_row() {
+        let data = synthetic::gmm(&mut Rng::seed_from(11), 24, 5, 3, 2.5);
+        let medoid_rows = [2usize, 7, 19];
+        let medoids = data.points.select(&medoid_rows);
+        let frames = vec![
+            Request::Load(LoadRequest {
+                id: 1,
+                shard: 0,
+                metric: Metric::L1,
+                points: data.points.clone(),
+            }),
+            Request::Score(ScoreRequest { id: 2, shard: 0, medoids }),
+        ];
+        let (responses, _) = run(&frames, &WorkerOptions::default());
+        let Response::ScorePartial { assign, dists, .. } = &responses[1] else {
+            panic!("expected score partial")
+        };
+        let backend = NativeBackend::new(&data.points, Metric::L1);
+        let (want_loss, want_assign) = loss_and_assignments(&backend, &medoid_rows);
+        assert_eq!(assign.iter().map(|&a| a as usize).collect::<Vec<_>>(), want_assign);
+        let mut loss = 0.0f64;
+        for d in dists {
+            loss += d;
+        }
+        assert_eq!(loss.to_bits(), want_loss.to_bits());
+    }
+
+    #[test]
+    fn body_garbage_is_answered_and_the_connection_survives() {
+        let ping = encode_request(&Request::Ping { id: 2 });
+        // Unknown request kind, then a healthy ping on the same stream.
+        let mut input = encode_request(&Request::Ping { id: 1 });
+        input[3] = 0x7E; // unknown kind; body stays a valid id
+        input.extend_from_slice(&ping);
+        let mut out = Vec::new();
+        let exit = run_worker(&input[..], &mut out, &WorkerOptions::default()).unwrap();
+        assert_eq!(exit, WorkerExit::Eof);
+        let mut r = &out[..];
+        let (kind, body) = read_frame(&mut r).unwrap().unwrap();
+        let Response::Error { id, .. } = parse_response(kind, &body).unwrap() else {
+            panic!("expected error response")
+        };
+        assert_eq!(id, 1);
+        let (kind, body) = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(parse_response(kind, &body).unwrap(), Response::Pong { id: 2 });
+    }
+
+    #[test]
+    fn fault_plan_kills_at_the_pinned_work_request_without_ack() {
+        let data = synthetic::gmm(&mut Rng::seed_from(3), 12, 4, 2, 2.0);
+        let medoids = data.points.select(&[0, 5]);
+        let frames = vec![
+            Request::Load(LoadRequest {
+                id: 1,
+                shard: 0,
+                metric: Metric::L2,
+                points: data.points.clone(),
+            }),
+            Request::Score(ScoreRequest { id: 2, shard: 0, medoids: medoids.clone() }),
+            Request::Score(ScoreRequest { id: 3, shard: 0, medoids }),
+        ];
+        let opts = WorkerOptions {
+            faults: FaultPlan { panic_on_batches: vec![2], ..Default::default() },
+            quiet: true,
+        };
+        let (responses, exit) = run(&frames, &opts);
+        assert_eq!(exit, WorkerExit::Killed);
+        // Load + first score answered; the second work request dies silently.
+        assert_eq!(responses.len(), 2);
+        assert_eq!(responses[0], Response::Loaded { id: 1, shard: 0, rows: 12 });
+        assert!(matches!(responses[1], Response::ScorePartial { id: 2, .. }));
+    }
+
+    #[test]
+    fn unknown_shard_and_bad_refs_are_recoverable_errors() {
+        let data = synthetic::gmm(&mut Rng::seed_from(5), 8, 3, 2, 2.0);
+        let targets = data.points.select(&[0]);
+        let frames = vec![
+            Request::Block(BlockRequest {
+                id: 1,
+                shard: 9,
+                targets: targets.clone(),
+                refs: vec![0],
+            }),
+            Request::Load(LoadRequest {
+                id: 2,
+                shard: 0,
+                metric: Metric::L2,
+                points: data.points.clone(),
+            }),
+            Request::Block(BlockRequest { id: 3, shard: 0, targets, refs: vec![99] }),
+        ];
+        let (responses, _) = run(&frames, &WorkerOptions::default());
+        assert!(matches!(&responses[0], Response::Error { id: 1, message } if message.contains("unknown shard")));
+        assert!(matches!(responses[1], Response::Loaded { .. }));
+        assert!(matches!(&responses[2], Response::Error { id: 3, message } if message.contains("out of range")));
+    }
+}

@@ -72,6 +72,7 @@ pub mod bandits;
 pub mod bench;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod distance;
 pub mod error;
 pub mod experiments;

@@ -5,6 +5,7 @@
 //!   bigfit         bounded-memory CLARA-style fit over a streamed .mtx
 //!   predict        assign points to the medoids of a saved model
 //!   serve          long-lived prediction server over saved models
+//!   worker         dist shard server (spawned by `cluster --workers N`)
 //!   experiment     regenerate a paper table/figure (see DESIGN.md)
 //!   generate-data  write a synthetic dataset to CSV
 //!   info           runtime / artifact diagnostics
@@ -24,6 +25,7 @@ use banditpam::algorithms::{make_algorithm, KMedoids};
 use banditpam::bench::Scale;
 use banditpam::data::stream::{self, StreamOptions};
 use banditpam::data::{loader, synthetic, Dataset, Points};
+use banditpam::dist::{PoolOptions, ShardedBackend, WorkerOptions, WorkerPool};
 use banditpam::distance::Metric;
 use banditpam::model::{Fit, KMedoidsModel};
 use banditpam::obs::{TraceSink, TraceValue};
@@ -62,11 +64,13 @@ USAGE:
                     [--n N] [--k K]
                     [--metric l2|l1|cosine|tree] [--algo NAME] [--seed S]
                     [--backend native|xla] [--threads T] [--verbose]
+                    [--workers N | --worker-hosts H:P,...] [--worker-deadline-ms MS]
                     [--save-model FILE] [--trace-out FILE] [--metrics-dump FILE]
   banditpam bigfit  [--data FILE | --synthetic NAME] [--format csv|mtx|idx]
                     [--limit L] [--transpose] [--stream] [--chunk-nnz B]
                     [--n N] [--k K] [--metric l2|l1|cosine|tree] [--algo NAME]
                     [--samples S] [--sample-size Z] [--seed S] [--threads T]
+                    [--workers N | --worker-hosts H:P,...] [--worker-deadline-ms MS]
                     [--save-model FILE] [--verbose]
                     [--trace-out FILE] [--metrics-dump FILE]
   banditpam predict --model FILE [--data FILE | --synthetic NAME]
@@ -76,6 +80,7 @@ USAGE:
                     [--threads T] [--max-queue-requests N] [--max-queue-points N]
                     [--max-batch-points N] [--retry-after-ms MS]
                     [--quarantine-threshold N] [--quiet] [--metrics-dump FILE]
+  banditpam worker  [--stdio | --listen HOST:PORT] [--quiet]
   banditpam experiment <id|all> [--scale smoke|quick|paper] [--seed S] [--csv]
   banditpam generate-data --synthetic NAME --n N --out FILE[.csv|.mtx]
                     [--format csv|mtx] [--seed S]
@@ -115,6 +120,15 @@ BIGFIT:      CLARA-style outer loop around any --algo: draw --samples
              resident — peak memory is the sample, the k medoid rows and
              one window — and the result is bitwise-identical to the
              in-memory run with the same seed.
+DIST:        `cluster`/`bigfit --workers N` shard the dataset rows over N
+             locally spawned worker processes (`banditpam worker` children
+             over stdio pipes); --worker-hosts H:P,... uses remote workers
+             started with `worker --listen HOST:PORT` instead. Results are
+             bitwise-identical to the single-process fit — same medoids,
+             loss bits and eval counts. Worker death is detected and
+             recovered (respawn / reconnect / reassign) with idempotent
+             retries; --worker-deadline-ms bounds each request (default
+             30000). Wire dialect and the parity argument: rust/DIST.md.
 EXPERIMENTS: fig1a fig1b fig2 fig3 appfig1 appfig2 appfig34 appfig5
              headline ablations (see DESIGN.md for the paper mapping)
 TELEMETRY:   --trace-out FILE writes structured JSONL phase spans (one
@@ -156,6 +170,13 @@ fn check_known_options(args: &Args) -> Result<()> {
                 "save-model",
                 "trace-out",
                 "metrics-dump",
+                "workers",
+                "worker-hosts",
+                "worker-deadline-ms",
+                // Undocumented fault-injection knob for the dist smoke
+                // harness: forwarded to spawned workers as
+                // `--inject-exit-on N` (see rust/DIST.md §faults).
+                "dist-inject-exit-on",
             ]);
             if sub == "cluster" {
                 keys.push("backend");
@@ -183,6 +204,15 @@ fn check_known_options(args: &Args) -> Result<()> {
                 "inject-panic-every",
                 "stall-ms",
                 "metrics-dump",
+            ]);
+            flags.extend_from_slice(&["stdio", "quiet"]);
+        }
+        "worker" => {
+            keys.extend_from_slice(&[
+                "listen",
+                "inject-exit-on",
+                "inject-exit-every",
+                "stall-ms",
             ]);
             flags.extend_from_slice(&["stdio", "quiet"]);
         }
@@ -296,6 +326,39 @@ fn dump_metrics(args: &Args, to_stderr: bool) -> Result<()> {
     Ok(())
 }
 
+/// Whether `--workers`/`--worker-hosts` ask for a sharded fit.
+fn dist_requested(args: &Args) -> Result<bool> {
+    Ok(args.get_parsed("workers", 0usize)? > 0 || args.get("worker-hosts").is_some())
+}
+
+/// Build the worker pool for a sharded fit: local children over stdio
+/// pipes (`--workers N`) or remote TCP workers (`--worker-hosts`).
+fn build_pool<'d>(args: &Args, points: &'d Points, metric: Metric) -> Result<WorkerPool<'d>> {
+    let opts = PoolOptions {
+        deadline: std::time::Duration::from_millis(
+            args.get_parsed("worker-deadline-ms", 30_000u64)?,
+        ),
+        worker_args: match args.get("dist-inject-exit-on") {
+            Some(n) => vec!["--inject-exit-on".to_string(), n.to_string()],
+            None => Vec::new(),
+        },
+        ..PoolOptions::default()
+    };
+    match args.get("worker-hosts") {
+        Some(hosts) => {
+            let hosts: Vec<String> = hosts
+                .split(',')
+                .map(|h| h.trim().to_string())
+                .filter(|h| !h.is_empty())
+                .collect();
+            WorkerPool::connect_tcp(points, metric, &hosts, opts)
+        }
+        None => {
+            WorkerPool::spawn_local(points, metric, args.get_parsed("workers", 1usize)?, opts)
+        }
+    }
+}
+
 fn cmd_cluster(args: &Args) -> Result<()> {
     let seed: u64 = args.get_parsed("seed", 42u64)?;
     let mut rng = Rng::seed_from(seed);
@@ -319,6 +382,12 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     )?;
 
     let backend_kind = args.get("backend").unwrap_or("native");
+    let distributed = dist_requested(args)?;
+    if distributed && backend_kind != "native" {
+        return Err(Error::invalid_argument(
+            "--workers/--worker-hosts require --backend native (workers run the native kernels)",
+        ));
+    }
     let sink = open_trace(args)?;
     // The banditpam coordinator emits its own per-round spans when a sink
     // is attached; constructing it directly here (same config as the
@@ -344,6 +413,27 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         );
     }
     let fit = match backend_kind {
+        "native" if distributed => {
+            let pool = build_pool(args, &ds.points, metric)?;
+            pool.set_trace(sink.clone());
+            println!(
+                "dist          : {} worker(s), {} shard(s) over {} rows",
+                pool.n_workers(),
+                pool.shards().len(),
+                pool.n_rows()
+            );
+            let backend = ShardedBackend::new(&ds.points, metric, &pool).with_threads(threads);
+            let fit = algo.fit(&backend, k, &mut rng)?;
+            if pool.retries() + pool.respawns() + pool.fallbacks() > 0 {
+                println!(
+                    "dist recovery : {} retries, {} respawns, {} local fallbacks",
+                    pool.retries(),
+                    pool.respawns(),
+                    pool.fallbacks()
+                );
+            }
+            fit
+        }
         "native" => {
             let backend = NativeBackend::new(&ds.points, metric).with_threads(threads);
             algo.fit(&backend, k, &mut rng)?
@@ -463,6 +553,13 @@ fn cmd_bigfit(args: &Args) -> Result<()> {
     let big = fit.big().samples(samples).sample_size(sample_size);
 
     let streamed = args.flag("stream") || args.get("chunk-nnz").is_some();
+    let distributed = dist_requested(args)?;
+    if distributed && streamed {
+        return Err(Error::invalid_argument(
+            "--workers/--worker-hosts and --stream are mutually exclusive (workers hold \
+             in-memory row shards; see rust/DIST.md for the sharded-sources follow-on)",
+        ));
+    }
     let (model, stats, source) = if streamed {
         let path = args.get("data").ok_or_else(|| {
             Error::invalid_argument(
@@ -498,7 +595,19 @@ fn cmd_bigfit(args: &Args) -> Result<()> {
             )));
         }
         let name = ds.name.clone();
-        let (model, stats) = big.fit_with_stats(&ds)?;
+        let (model, stats) = if distributed {
+            let pool = build_pool(args, &ds.points, metric)?;
+            pool.set_trace(sink.clone());
+            println!(
+                "dist          : {} worker(s), {} shard(s) over {} rows",
+                pool.n_workers(),
+                pool.shards().len(),
+                pool.n_rows()
+            );
+            big.fit_with_workers(&ds, &pool)?
+        } else {
+            big.fit_with_stats(&ds)?
+        };
         (model, stats, name)
     };
 
@@ -704,6 +813,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `banditpam worker`: the dist shard server. Normally spawned by the
+/// coordinator (`cluster --workers N` launches children of the current
+/// binary over stdio pipes), or started by hand with `--listen` for
+/// multi-host fits. Speaks the "BD" wire dialect in rust/DIST.md.
+fn cmd_worker(args: &Args) -> Result<()> {
+    // Deterministic fault-injection knobs for tests/CI (inert unless
+    // set): `--inject-exit-on N` kills the worker on its N-th work
+    // request, `--inject-exit-every N` on every N-th, `--stall-ms MS`
+    // sleeps before each work request. Counted over Block/Score requests
+    // only, so load order does not shift the kill site.
+    let faults = FaultPlan {
+        panic_on_batches: match args.get_parsed("inject-exit-on", 0u64)? {
+            0 => Vec::new(),
+            n => vec![n],
+        },
+        panic_every: match args.get_parsed("inject-exit-every", 0u64)? {
+            0 => None,
+            n => Some(n),
+        },
+        stall_ms: args.get_parsed("stall-ms", 0u64)?,
+    };
+    let opts = WorkerOptions { faults, quiet: args.flag("quiet") };
+    match args.get("listen") {
+        Some(addr) => banditpam::dist::worker::listen_tcp(addr, &opts),
+        None => {
+            let stdin = std::io::stdin();
+            let stdout = std::io::stdout();
+            let exit = banditpam::dist::run_worker(stdin.lock(), stdout.lock(), &opts)?;
+            if !args.flag("quiet") {
+                eprintln!("worker: exit {exit:?}");
+            }
+            Ok(())
+        }
+    }
+}
+
 fn cmd_experiment(args: &Args) -> Result<()> {
     let id = args
         .positional
@@ -815,6 +960,7 @@ fn run(args: &Args) -> Result<()> {
         Some("bigfit") => cmd_bigfit(args),
         Some("predict") => cmd_predict(args),
         Some("serve") => cmd_serve(args),
+        Some("worker") => cmd_worker(args),
         Some("experiment") => cmd_experiment(args),
         Some("generate-data") => cmd_generate(args),
         Some("info") => cmd_info(),

@@ -39,6 +39,7 @@ use crate::algorithms::clara::effective_sample_size;
 use crate::algorithms::{Clustering, FitStats, KMedoids};
 use crate::data::stream::{CsrChunkReader, StreamOptions, StreamStats};
 use crate::data::{Dataset, Points};
+use crate::dist::WorkerPool;
 use crate::error::{Error, Result};
 use crate::obs::{TraceSink, TraceValue};
 use crate::runtime::backend::{loss_and_assignments_streamed, DistanceBackend, NativeBackend};
@@ -145,6 +146,12 @@ fn nnz_of(points: &Points) -> usize {
 /// uses, so dense and CSV data run through identical evaluation code.
 struct MemSource<'d> {
     points: &'d Points,
+    /// When set, candidate evaluation is sharded over the pool instead of
+    /// folded locally — bitwise the same result (the pool's score path
+    /// folds per-row partials in global row order through the same
+    /// kernels; see `rust/DIST.md`), and the eval counter still lands on
+    /// `medoid_backend.counter()` with the exact single-process count.
+    workers: Option<&'d WorkerPool<'d>>,
 }
 
 impl Source for MemSource<'_> {
@@ -165,6 +172,9 @@ impl Source for MemSource<'_> {
         medoid_backend: &NativeBackend<'_>,
         _medoid_nnz: usize,
     ) -> Result<(f64, Vec<usize>)> {
+        if let Some(pool) = self.workers {
+            return pool.score(medoid_backend.points(), medoid_backend.counter());
+        }
         let n = self.points.len();
         let mut start = 0usize;
         loss_and_assignments_streamed(medoid_backend, n, || {
@@ -326,7 +336,29 @@ impl BigFit {
 
     /// [`BigFit::fit`] also returning the [`BigFitStats`] accounting.
     pub fn fit_with_stats(&self, data: &Dataset) -> Result<(KMedoidsModel, BigFitStats)> {
-        let mut src = MemSource { points: &data.points };
+        let mut src = MemSource { points: &data.points, workers: None };
+        self.run(&mut src)
+    }
+
+    /// [`BigFit::fit_with_stats`] with candidate evaluation sharded over
+    /// a [`WorkerPool`] — the full-dataset scoring pass (the dominant
+    /// cost at scale) is distributed; sample draws and inner fits stay
+    /// local. The pool must be built over `data.points` with the fit's
+    /// metric. Bitwise-identical to the single-process run: same medoids,
+    /// loss bits and eval counts.
+    pub fn fit_with_workers(
+        &self,
+        data: &Dataset,
+        pool: &WorkerPool<'_>,
+    ) -> Result<(KMedoidsModel, BigFitStats)> {
+        if pool.n_rows() != data.points.len() {
+            return Err(Error::invalid_argument(format!(
+                "dist: pool shards {} rows but the dataset has {}",
+                pool.n_rows(),
+                data.points.len()
+            )));
+        }
+        let mut src = MemSource { points: &data.points, workers: Some(pool) };
         self.run(&mut src)
     }
 

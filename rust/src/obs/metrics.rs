@@ -246,6 +246,18 @@ impl Metric {
     }
 }
 
+/// Split a registry name into `(family, labels)`: `kernel_us{kernel=
+/// "l2_dense"}` -> `("kernel_us", Some("kernel=\"l2_dense\""))`; names
+/// without a well-formed `{...}` suffix are a bare family.
+fn split_labels(name: &str) -> (&str, Option<&str>) {
+    match name.find('{') {
+        Some(i) if name.ends_with('}') && name.len() > i + 2 => {
+            (&name[..i], Some(&name[i + 1..name.len() - 1]))
+        }
+        _ => (name, None),
+    }
+}
+
 /// Name → metric map. Get-or-register takes a mutex; cache the returned
 /// handle for hot paths. Names follow Prometheus conventions:
 /// `[a-z0-9_]+`, counters suffixed `_total`, unit suffixes `_us` / `_nnz`
@@ -309,38 +321,58 @@ impl MetricsRegistry {
     /// cumulative `_bucket{le=...}` series up to the highest non-empty
     /// bucket, then `+Inf`, `_sum`, `_count`). Deterministic order
     /// (sorted by name).
+    ///
+    /// A registry name may carry a label suffix — `kernel_us{kernel=
+    /// "l2_dense"}` — in which case the family is the part before `{`:
+    /// the `# TYPE` line is emitted once per family (labeled series of
+    /// one family sort adjacently in the `BTreeMap`), samples keep the
+    /// labels, and histogram buckets splice `le` after them.
     pub fn render_prometheus(&self) -> String {
         let metrics: Vec<(String, Metric)> = {
             let m = self.metrics.lock().unwrap();
             m.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
         };
         let mut out = String::new();
+        let mut last_family: Option<String> = None;
         for (name, metric) in metrics {
+            let (family, labels) = split_labels(&name);
+            if last_family.as_deref() != Some(family) {
+                let _ = writeln!(out, "# TYPE {family} {}", metric.type_name());
+                last_family = Some(family.to_string());
+            }
+            // `{labels}` rendered back for plain samples, and as a prefix
+            // (`label,`) ahead of `le` for bucket lines.
+            let plain = match labels {
+                Some(l) => format!("{{{l}}}"),
+                None => String::new(),
+            };
+            let le_prefix = match labels {
+                Some(l) => format!("{l},"),
+                None => String::new(),
+            };
             match metric {
                 Metric::Counter(c) => {
-                    let _ = writeln!(out, "# TYPE {name} counter");
-                    let _ = writeln!(out, "{name} {}", c.get());
+                    let _ = writeln!(out, "{family}{plain} {}", c.get());
                 }
                 Metric::Gauge(g) => {
-                    let _ = writeln!(out, "# TYPE {name} gauge");
-                    let _ = writeln!(out, "{name} {}", g.get());
+                    let _ = writeln!(out, "{family}{plain} {}", g.get());
                 }
                 Metric::Histogram(h) => {
                     let s = h.snapshot();
-                    let _ = writeln!(out, "# TYPE {name} histogram");
                     let top = s.counts.iter().rposition(|&c| c > 0).unwrap_or(0);
                     let mut cum = 0u64;
                     for (i, &c) in s.counts.iter().enumerate().take(top + 1) {
                         cum += c;
                         let _ = writeln!(
                             out,
-                            "{name}_bucket{{le=\"{}\"}} {cum}",
+                            "{family}_bucket{{{le_prefix}le=\"{}\"}} {cum}",
                             Histogram::bucket_upper(i)
                         );
                     }
-                    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", s.count);
-                    let _ = writeln!(out, "{name}_sum {}", s.sum);
-                    let _ = writeln!(out, "{name}_count {}", s.count);
+                    let _ =
+                        writeln!(out, "{family}_bucket{{{le_prefix}le=\"+Inf\"}} {}", s.count);
+                    let _ = writeln!(out, "{family}_sum{plain} {}", s.sum);
+                    let _ = writeln!(out, "{family}_count{plain} {}", s.count);
                 }
             }
         }
@@ -360,6 +392,9 @@ impl MetricsRegistry {
             if i > 0 {
                 out.push_str(", ");
             }
+            // Labeled names (`kernel_us{kernel="l2_dense"}`) carry quotes,
+            // so the key must be escaped to stay valid JSON.
+            let name = crate::util::json::escape(name);
             match metric {
                 Metric::Counter(c) => {
                     let _ = write!(out, "\"{name}\": {}", c.get());
@@ -522,6 +557,45 @@ mod tests {
         let json = crate::util::json::Json::parse(&r.snapshot_json()).expect("valid json");
         assert_eq!(json.get("test_requests_total"), Some(&crate::util::json::Json::Num(3.0)));
         assert!(json.get("test_latency_us").and_then(|h| h.get("p50")).is_some());
+    }
+
+    #[test]
+    fn labeled_series_share_one_type_line_and_splice_le() {
+        let r = MetricsRegistry::new();
+        r.histogram("test_kernel_us{kernel=\"cosine_dense\"}").record(5);
+        r.histogram("test_kernel_us{kernel=\"l2_dense\"}").record(9);
+        r.counter("test_tiles_total{kind=\"sparse\"}").add(2);
+        let prom = r.render_prometheus();
+        // One TYPE line per family, even with two labeled series.
+        assert_eq!(prom.matches("# TYPE test_kernel_us histogram").count(), 1, "{prom}");
+        // value 5 lands in the (3, 7] bucket; value 9 in (7, 15].
+        assert!(
+            prom.contains("test_kernel_us_bucket{kernel=\"cosine_dense\",le=\"7\"} 1"),
+            "{prom}"
+        );
+        assert!(prom.contains("test_kernel_us_bucket{kernel=\"l2_dense\",le=\"15\"} 1"), "{prom}");
+        assert!(
+            prom.contains("test_kernel_us_bucket{kernel=\"l2_dense\",le=\"+Inf\"} 1"),
+            "{prom}"
+        );
+        assert!(prom.contains("test_kernel_us_sum{kernel=\"l2_dense\"} 9"), "{prom}");
+        assert!(prom.contains("test_kernel_us_count{kernel=\"cosine_dense\"} 1"), "{prom}");
+        assert!(prom.contains("# TYPE test_tiles_total counter"), "{prom}");
+        assert!(prom.contains("test_tiles_total{kind=\"sparse\"} 2"), "{prom}");
+        // No bare-name samples leak for labeled series.
+        assert!(!prom.contains("test_kernel_us_sum "), "{prom}");
+    }
+
+    #[test]
+    fn split_labels_handles_plain_and_malformed_names() {
+        assert_eq!(split_labels("plain_total"), ("plain_total", None));
+        assert_eq!(
+            split_labels("kernel_us{kernel=\"l1_sparse\"}"),
+            ("kernel_us", Some("kernel=\"l1_sparse\""))
+        );
+        // Malformed suffixes degrade to a bare family, never panic.
+        assert_eq!(split_labels("odd{"), ("odd{", None));
+        assert_eq!(split_labels("odd{}"), ("odd{}", None));
     }
 
     #[test]

@@ -72,6 +72,17 @@ pub trait DistanceBackend {
     fn cache_stats(&self) -> Option<(u64, u64)> {
         None
     }
+
+    /// Engine-level override for [`loss_and_assignments`]: return the
+    /// full `(loss, assignments)` result, or `None` to use the tiled
+    /// local fold. Engines that can score more efficiently (the sharded
+    /// pool fans the pass out to workers) implement this; the contract is
+    /// **bitwise equality** with the local fold — same strict-`<`
+    /// first-minimum, same row-order loss accumulation, same eval counts
+    /// into [`DistanceBackend::counter`].
+    fn score(&self, _medoids: &[usize]) -> Option<(f64, Vec<usize>)> {
+        None
+    }
 }
 
 /// Per-block kernel selection: the `Metric`/`Points` dispatch is resolved
@@ -124,6 +135,11 @@ pub struct NativeBackend<'a> {
     /// hot path pays two atomic ops — no registry lookups, no allocation.
     obs_blocks: Arc<crate::obs::Counter>,
     obs_block_pairs: Arc<crate::obs::Histogram>,
+    /// Per-kernel wall-time histogram (`kernel_us{kernel="l2_dense"}`,
+    /// ...): one scoped span per block/block_vs call. Timing only — the
+    /// span never touches the data path, so it is bitwise-inert
+    /// (asserted in `tests/property_obs.rs`).
+    obs_kernel_us: Arc<crate::obs::Histogram>,
 }
 
 impl<'a> NativeBackend<'a> {
@@ -147,6 +163,11 @@ impl<'a> NativeBackend<'a> {
             norms,
             obs_blocks: crate::obs::global().counter("backend_blocks_total"),
             obs_block_pairs: crate::obs::global().histogram("backend_block_pairs"),
+            obs_kernel_us: crate::obs::global().histogram(&format!(
+                "kernel_us{{kernel=\"{}_{}\"}}",
+                metric.name(),
+                points.kind()
+            )),
         }
     }
 
@@ -398,6 +419,7 @@ impl<'a> NativeBackend<'a> {
         }
         let rn = refs.len();
         self.counter.add((targets.len() * rn) as u64);
+        let _kernel_span = crate::obs::Span::start(&self.obs_kernel_us);
         let kern = self.kernel();
         let work = targets.len() * rn * self.elem_cost();
         let pool = self
@@ -485,6 +507,7 @@ impl<'a> DistanceBackend for NativeBackend<'a> {
         let rn = refs.len();
         self.obs_blocks.inc();
         self.obs_block_pairs.record((targets.len() * rn) as u64);
+        let _kernel_span = crate::obs::Span::start(&self.obs_kernel_us);
         // Cache-less blocks are counted once up front (the cached path
         // counts misses per shard inside `fill_row`).
         if self.cache.is_none() {
@@ -633,6 +656,11 @@ pub fn loss_and_assignments_with(
     bufs: &mut EvalBuffers,
 ) -> (f64, Vec<usize>) {
     assert!(!medoids.is_empty());
+    // Engines with a full-pass override (the sharded worker pool) take it
+    // here; the contract is bitwise equality with the fold below.
+    if let Some(result) = backend.score(medoids) {
+        return result;
+    }
     let n = backend.n();
     let k = medoids.len();
     let mut loss = 0.0;

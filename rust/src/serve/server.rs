@@ -104,6 +104,18 @@ impl ServeStats {
     /// keys never change; `uptime_secs`, `queue_depth` and `per_model`
     /// are appended after them.
     pub fn snapshot_json(&self) -> String {
+        self.snapshot_json_at(
+            self.started.elapsed().as_secs(),
+            crate::obs::global().gauge("serve_queue_depth").get(),
+        )
+    }
+
+    /// Deterministic core of [`ServeStats::snapshot_json`]: the two live
+    /// values (uptime, queue depth) are supplied by the caller, so for
+    /// fixed counters the output is byte-deterministic — the per-model
+    /// section iterates a `BTreeMap`, i.e. is sorted by model id. Pinned
+    /// by the `valid_stats_response.bin` golden fixture.
+    pub fn snapshot_json_at(&self, uptime_secs: u64, queue_depth: u64) -> String {
         let pairs = [
             ("admitted", self.admitted.load(Ordering::Relaxed)),
             ("shed", self.shed.load(Ordering::Relaxed)),
@@ -119,11 +131,8 @@ impl ServeStats {
             .iter()
             .map(|(k, v)| format!("\"{}\":{v}", json::escape(k)))
             .collect();
-        body.push(format!("\"uptime_secs\":{}", self.started.elapsed().as_secs()));
-        body.push(format!(
-            "\"queue_depth\":{}",
-            crate::obs::global().gauge("serve_queue_depth").get()
-        ));
+        body.push(format!("\"uptime_secs\":{uptime_secs}"));
+        body.push(format!("\"queue_depth\":{queue_depth}"));
         let per_model = self.per_model.lock().unwrap();
         let entries: Vec<String> = per_model
             .iter()
@@ -714,9 +723,17 @@ pub fn serve_tcp(server: &Arc<Server>, addr: &str) -> std::io::Result<()> {
         match listener.accept() {
             Ok((stream, _peer)) => {
                 stream.set_nodelay(true).ok();
-                let write_half = stream.try_clone()?;
                 let server = Arc::clone(server);
                 handles.push(thread::spawn(move || {
+                    // Sniff before speaking: Prometheus scrapers open with
+                    // "GET ", protocol clients with the "BQ" magic. The
+                    // sniff peeks (consumes nothing), so the protocol
+                    // reader still sees the full stream.
+                    if looks_like_http(&stream) {
+                        let _ = answer_http_metrics(stream);
+                        return;
+                    }
+                    let Ok(write_half) = stream.try_clone() else { return };
                     server.handle_connection(stream, write_half);
                 }));
             }
@@ -735,6 +752,70 @@ pub fn serve_tcp(server: &Arc<Server>, addr: &str) -> std::io::Result<()> {
         let _ = h.join();
     }
     Ok(())
+}
+
+/// Decide whether an accepted connection is a plain-HTTP scraper: peek
+/// (never consume) the first bytes and look for `"GET "`. The binary
+/// protocol opens with the `"BQ"` magic, so one byte usually decides; a
+/// peer that sends nothing within the sniff window is treated as a
+/// protocol client (the frame reader will handle it either way).
+fn looks_like_http(stream: &std::net::TcpStream) -> bool {
+    let mut buf = [0u8; 4];
+    let deadline = Instant::now() + Duration::from_millis(500);
+    stream.set_read_timeout(Some(Duration::from_millis(100))).ok();
+    let is_http = loop {
+        match stream.peek(&mut buf) {
+            Ok(n) if n >= 4 => break &buf == b"GET ",
+            Ok(n) if n >= 1 && buf[0] != b'G' => break false,
+            Ok(0) => break false,
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(_) => break false,
+        }
+        if Instant::now() >= deadline {
+            break false;
+        }
+        thread::sleep(Duration::from_millis(5));
+    };
+    stream.set_read_timeout(None).ok();
+    is_http
+}
+
+/// Answer one plain-HTTP request: `GET /metrics` gets the Prometheus
+/// text exposition of the process metrics, anything else a 404. HTTP/1.0
+/// close-after-response semantics — exactly enough for a scraper.
+fn answer_http_metrics(mut stream: std::net::TcpStream) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2))).ok();
+    // Read the request head (capped) until the blank line; the body of a
+    // GET is empty, so this terminates or times out.
+    let mut head: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 1024];
+    while !head.windows(4).any(|w| w == b"\r\n\r\n") && head.len() < 8192 {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => head.extend_from_slice(&chunk[..n]),
+            Err(_) => break,
+        }
+    }
+    let request_line = std::str::from_utf8(&head)
+        .unwrap_or("")
+        .lines()
+        .next()
+        .unwrap_or("");
+    let path = request_line.split_whitespace().nth(1).unwrap_or("");
+    let (status, body) = if path == "/metrics" {
+        ("200 OK", crate::obs::global().render_prometheus())
+    } else {
+        ("404 Not Found", "not found\n".to_string())
+    };
+    let response = format!(
+        "HTTP/1.0 {status}\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(response.as_bytes())
 }
 
 #[cfg(test)]
@@ -827,5 +908,81 @@ mod tests {
         assert_eq!(m.row(1), (&[1u32, 2][..], &[2.0f32, 3.0][..]));
         assert_eq!(m.row(2), (&[0u32, 3][..], &[4.0f32, 5.0][..]));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Accept one connection on an ephemeral listener while a client
+    /// thread writes `payload`; returns the sniffed verdict and the
+    /// (still-open) server-side stream for follow-up reads.
+    fn sniff(payload: &'static [u8]) -> (bool, std::net::TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = thread::spawn(move || {
+            let mut s = std::net::TcpStream::connect(addr).unwrap();
+            s.write_all(payload).unwrap();
+            s
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let verdict = looks_like_http(&stream);
+        // Keep the client socket alive until the sniff finishes.
+        drop(client.join().unwrap());
+        (verdict, stream)
+    }
+
+    #[test]
+    fn http_sniff_recognizes_get_and_preserves_bytes() {
+        let (verdict, mut stream) = sniff(b"GET /metrics HTTP/1.0\r\n\r\n");
+        assert!(verdict);
+        // Peek must not have consumed anything: the full request line is
+        // still readable.
+        let mut buf = [0u8; 4];
+        stream.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"GET ");
+    }
+
+    #[test]
+    fn http_sniff_rejects_protocol_magic() {
+        let (verdict, mut stream) = sniff(b"BQ\x01\x00\x00\x00\x00\x00");
+        assert!(!verdict);
+        let mut buf = [0u8; 2];
+        stream.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"BQ");
+    }
+
+    #[test]
+    fn metrics_endpoint_serves_prometheus_text() {
+        crate::obs::global().counter("serve_sniff_test_total").add(3);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = thread::spawn(move || {
+            let mut s = std::net::TcpStream::connect(addr).unwrap();
+            s.write_all(b"GET /metrics HTTP/1.0\r\nHost: x\r\n\r\n").unwrap();
+            let mut text = String::new();
+            s.read_to_string(&mut text).unwrap();
+            text
+        });
+        let (stream, _) = listener.accept().unwrap();
+        answer_http_metrics(stream).unwrap();
+        let text = client.join().unwrap();
+        assert!(text.starts_with("HTTP/1.0 200 OK\r\n"), "got: {text}");
+        assert!(text.contains("Content-Type: text/plain; version=0.0.4"));
+        assert!(text.contains("# TYPE serve_sniff_test_total counter"));
+        assert!(text.contains("serve_sniff_test_total 3"));
+    }
+
+    #[test]
+    fn metrics_endpoint_404s_unknown_paths() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = thread::spawn(move || {
+            let mut s = std::net::TcpStream::connect(addr).unwrap();
+            s.write_all(b"GET /nope HTTP/1.0\r\n\r\n").unwrap();
+            let mut text = String::new();
+            s.read_to_string(&mut text).unwrap();
+            text
+        });
+        let (stream, _) = listener.accept().unwrap();
+        answer_http_metrics(stream).unwrap();
+        let text = client.join().unwrap();
+        assert!(text.starts_with("HTTP/1.0 404 Not Found\r\n"), "got: {text}");
     }
 }

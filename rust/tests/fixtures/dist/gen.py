@@ -1,0 +1,144 @@
+#!/usr/bin/env python3
+"""Regenerate the dist-protocol ("BD" dialect) golden fixtures.
+
+The valid_* files pin the wire format byte-exactly in both directions
+(the Rust side asserts encode_request / encode_response output equals
+them, and that parsing recovers every field); the corrupt_* files are
+hostile inputs the parser must reject with a clean error at the right
+tier — framing (connection-fatal) or body (recoverable, id echoed) —
+never a panic. Layout reference: rust/DIST.md.
+"""
+import struct
+from pathlib import Path
+
+HERE = Path(__file__).parent
+MAGIC = b"BD"
+VERSION = 1
+
+REQ_LOAD = 1
+REQ_LOAD_FILE = 2
+REQ_BLOCK = 3
+REQ_SCORE = 4
+REQ_PING = 5
+RESP_LOADED = 0x81
+RESP_DISTANCES = 0x82
+RESP_SCORE_PARTIAL = 0x83
+
+METRIC_L2, METRIC_L1, METRIC_COSINE = 0, 1, 2
+
+
+def frame(kind: int, body: bytes, version: int = VERSION, magic: bytes = MAGIC,
+          length: int | None = None) -> bytes:
+    n = len(body) if length is None else length
+    return magic + bytes([version, kind]) + struct.pack("<I", n) + body
+
+
+def dense_points(rows: int, cols: int, values: list[float]) -> bytes:
+    out = b"\x00" + struct.pack("<II", rows, cols)
+    return out + b"".join(struct.pack("<f", v) for v in values)
+
+
+def sparse_points(rows: int, cols: int, indptr: list[int], indices: list[int],
+                  values: list[float], nnz: int | None = None) -> bytes:
+    out = b"\x01" + struct.pack("<II", rows, cols)
+    out += struct.pack("<Q", len(indices) if nnz is None else nnz)
+    out += b"".join(struct.pack("<Q", p) for p in indptr)
+    out += b"".join(struct.pack("<I", j) for j in indices)
+    out += b"".join(struct.pack("<f", v) for v in values)
+    return out
+
+
+def load(req_id: int, shard: int, metric: int, points: bytes) -> bytes:
+    return struct.pack("<QI", req_id, shard) + bytes([metric]) + points
+
+
+def load_file(req_id: int, shard: int, metric: int, start: int, end: int,
+              chunk_nnz: int, path: bytes, path_len: int | None = None) -> bytes:
+    body = struct.pack("<QI", req_id, shard) + bytes([metric])
+    body += struct.pack("<QQQ", start, end, chunk_nnz)
+    body += struct.pack("<I", len(path) if path_len is None else path_len) + path
+    return body
+
+
+def block(req_id: int, shard: int, targets: bytes, refs: list[int],
+          ref_count: int | None = None) -> bytes:
+    body = struct.pack("<QI", req_id, shard) + targets
+    body += struct.pack("<I", len(refs) if ref_count is None else ref_count)
+    return body + b"".join(struct.pack("<I", j) for j in refs)
+
+
+def write(name: str, data: bytes) -> None:
+    (HERE / name).write_bytes(data)
+    print(f"{name}: {len(data)} bytes")
+
+
+DENSE = dense_points(2, 3, [1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
+SPARSE = sparse_points(2, 4, [0, 2, 3], [0, 3, 1], [1.5, -2.0, 0.25])
+
+# --- valid fixtures: pinned byte-exactly in both directions ---
+write("valid_load_dense.bin", frame(REQ_LOAD, load(3, 1, METRIC_COSINE, DENSE)))
+write("valid_load_sparse.bin", frame(REQ_LOAD, load(4, 0, METRIC_L2, SPARSE)))
+write("valid_load_file.bin",
+      frame(REQ_LOAD_FILE,
+            load_file(9, 2, METRIC_L1, 100, 250, 4096, b"data/cells.mtx")))
+write("valid_block.bin", frame(REQ_BLOCK, block(7, 0, DENSE, [0, 2, 5])))
+write("valid_score.bin", frame(REQ_SCORE, struct.pack("<QI", 5, 3) + SPARSE))
+
+dists = [0.5, 1.25, 2.0, -0.25, 3.5, 0.125]
+write("valid_distances_response.bin",
+      frame(RESP_DISTANCES,
+            struct.pack("<QIQI", 7, 0, 6, len(dists))
+            + b"".join(struct.pack("<d", d) for d in dists)))
+write("valid_score_partial_response.bin",
+      frame(RESP_SCORE_PARTIAL,
+            struct.pack("<QIQI", 5, 3, 8, 4)
+            + b"".join(struct.pack("<I", a) for a in [0, 1, 1, 0])
+            + b"".join(struct.pack("<d", d) for d in [0.1, 0.2, 0.3, 0.4])))
+
+# --- framing-fatal corruptions (read_frame must Err, link dead) ---
+valid_block_frame = frame(REQ_BLOCK, block(7, 0, DENSE, [0, 2, 5]))
+write("corrupt_bad_magic.bin",
+      frame(REQ_BLOCK, block(7, 0, DENSE, [0, 2, 5]), magic=b"XD"))
+# The serve dialect against the dist parser: wrong magic, dead link.
+write("corrupt_serve_magic.bin",
+      frame(REQ_BLOCK, block(7, 0, DENSE, [0, 2, 5]), magic=b"BQ"))
+write("corrupt_bad_version.bin",
+      frame(REQ_BLOCK, block(7, 0, DENSE, [0, 2, 5]), version=9))
+write("corrupt_oversized_len.bin",
+      frame(REQ_BLOCK, block(7, 0, DENSE, [0, 2, 5]), length=0xFFFFFFFF))
+write("corrupt_truncated_header.bin", valid_block_frame[:5])
+write("corrupt_truncated_body.bin", valid_block_frame[:-4])
+
+# --- body-grammar corruptions (parse must Err, id echoed, link lives) ---
+write("corrupt_unknown_kind.bin", frame(0x7F, struct.pack("<Q", 21)))
+write("corrupt_trailing_bytes.bin", frame(REQ_PING, struct.pack("<Q", 22) + b"\x00"))
+write("corrupt_lying_ref_count.bin",
+      frame(REQ_BLOCK, block(23, 0, DENSE, [0, 2, 5], ref_count=1000)))
+write("corrupt_bad_metric_tag.bin", frame(REQ_LOAD, load(24, 0, 9, DENSE)))
+write("corrupt_bad_storage_tag.bin",
+      frame(REQ_LOAD, load(25, 0, METRIC_L2, b"\x07" + struct.pack("<II", 2, 3))))
+write("corrupt_nan_value.bin",
+      frame(REQ_LOAD,
+            load(26, 0, METRIC_L2,
+                 dense_points(1, 2, [1.0, float("nan")]))))
+write("corrupt_bad_indptr.bin",
+      frame(REQ_LOAD,
+            load(27, 0, METRIC_L2,
+                 sparse_points(2, 4, [0, 3, 2], [0, 3, 1], [1.5, -2.0, 0.25]))))
+write("corrupt_huge_path.bin",
+      frame(REQ_LOAD_FILE,
+            load_file(28, 0, METRIC_L2, 0, 10, 64, b"x" * 16, path_len=0xFFFF)))
+write("corrupt_empty_window.bin",
+      frame(REQ_LOAD_FILE,
+            load_file(29, 0, METRIC_L2, 50, 50, 64, b"data/cells.mtx")))
+write("corrupt_dim_overflow.bin",
+      frame(REQ_LOAD,
+            load(30, 0, METRIC_L2,
+                 b"\x00" + struct.pack("<II", 0xFFFFFFFF, 0xFFFFFFFF))))
+
+# --- corrupt responses (the coordinator-side parser, same two tiers) ---
+write("corrupt_resp_unknown_kind.bin", frame(0x7E, struct.pack("<Q", 31)))
+write("corrupt_resp_lying_count.bin",
+      frame(RESP_DISTANCES,
+            struct.pack("<QIQI", 32, 0, 6, 1000)
+            + b"".join(struct.pack("<d", d) for d in [0.5, 1.25, 2.0])))

@@ -13,6 +13,7 @@ HERE = Path(__file__).parent
 MAGIC = b"BQ"
 VERSION = 1
 KIND_PREDICT = 1
+KIND_STATS_RESP = 0x84
 
 
 def frame(kind: int, body: bytes, version: int = VERSION, magic: bytes = MAGIC,
@@ -59,6 +60,19 @@ write("valid_dense_predict.bin", valid_dense)
 valid_sparse_body = sparse_predict(42, b"cells", 0, 2, 4,
                                    [0, 2, 3], [0, 3, 1], [1.5, -2.0, 0.25])
 write("valid_sparse_predict.bin", frame(KIND_PREDICT, valid_sparse_body))
+
+# The stats response must be byte-deterministic for fixed counters:
+# stable key order, per_model sorted by model id (BTreeMap iteration).
+# The Rust side rebuilds this exact JSON from a populated ServeStats via
+# snapshot_json_at(42, 7) and asserts the encoded frame equals this file.
+stats_json = (
+    '{"admitted":9,"shed":2,"deadline_expired":1,"batches":4,"panics":1,'
+    '"served_ok":7,"bad_requests":3,"reloads":2,"quarantined":1,'
+    '"uptime_secs":42,"queue_depth":7,"per_model":{"alpha":5,"zeta":2}}'
+)
+stats_body = struct.pack("<Q", 77)
+stats_body += struct.pack("<I", len(stats_json)) + stats_json.encode()
+write("valid_stats_response.bin", frame(KIND_STATS_RESP, stats_body))
 
 # --- framing-fatal corruptions (read_frame must Err) ---
 write("corrupt_bad_magic.bin", frame(KIND_PREDICT, valid_dense_body, magic=b"XQ"))

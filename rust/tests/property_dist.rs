@@ -1,0 +1,176 @@
+//! Acceptance suite for the dist subsystem: **N workers == 1 process,
+//! bitwise**. Seeded fits through [`ShardedBackend`] over worker pools of
+//! every size must return byte-identical medoids, assignment vectors and
+//! loss bits — and the exact same summed eval counters — as the plain
+//! single-process [`NativeBackend`] fit, across storage kinds and
+//! metrics. Fault tolerance is held to the same bar: a worker killed
+//! deterministically mid-fit must recover (reassign/respawn) and still
+//! produce identical results.
+//!
+//! Workers here are real worker loops over the real wire codec: threads
+//! speaking through in-memory pipes (the exact socket code path), plus
+//! one test that spawns actual `banditpam worker` child processes over
+//! stdio pipes.
+
+use banditpam::algorithms::KMedoids;
+use banditpam::coordinator::banditpam::BanditPam;
+use banditpam::coordinator::config::BanditPamConfig;
+use banditpam::data::{synthetic, Dataset, Points};
+use banditpam::dist::{run_worker, PoolOptions, ShardedBackend, WorkerOptions, WorkerPool};
+use banditpam::distance::Metric;
+use banditpam::model::Fit;
+use banditpam::runtime::backend::NativeBackend;
+use banditpam::serve::faults::{pipe, FaultPlan};
+use banditpam::util::rng::Rng;
+use std::io::{Read, Write};
+use std::thread;
+
+/// In-process pool: each worker is a thread running the real worker loop
+/// over the real wire codec. `plans[i]` injects deterministic faults into
+/// worker `i` (default: healthy).
+fn pipe_pool<'d>(
+    points: &'d Points,
+    metric: Metric,
+    workers: usize,
+    plans: &[FaultPlan],
+) -> WorkerPool<'d> {
+    let mut transports: Vec<(Box<dyn Write + Send>, Box<dyn Read + Send>)> = Vec::new();
+    for i in 0..workers {
+        let (cw, sr) = pipe();
+        let (sw, cr) = pipe();
+        let opts =
+            WorkerOptions { faults: plans.get(i).cloned().unwrap_or_default(), quiet: true };
+        thread::spawn(move || {
+            let _ = run_worker(sr, sw, &opts);
+        });
+        transports.push((Box::new(cw), Box::new(cr)));
+    }
+    WorkerPool::from_transports(points, metric, transports, PoolOptions::default()).unwrap()
+}
+
+/// The two storage kinds under test, from one seeded generator: the
+/// sparse dataset is the dense one converted to CSR, so the values (and
+/// therefore every distance bit) are pinned by the same draw.
+fn datasets() -> Vec<Dataset> {
+    let dense = synthetic::gmm(&mut Rng::seed_from(77), 60, 6, 3, 3.0);
+    let sparse = dense.to_sparse().expect("dense gmm converts to CSR");
+    vec![dense, sparse]
+}
+
+fn single_process_fit(
+    points: &Points,
+    metric: Metric,
+    k: usize,
+    seed: u64,
+) -> banditpam::algorithms::Clustering {
+    let backend = NativeBackend::new(points, metric);
+    BanditPam::new(BanditPamConfig::default())
+        .fit(&backend, k, &mut Rng::seed_from(seed))
+        .expect("single-process fit")
+}
+
+#[test]
+fn sharded_fits_match_single_process_bitwise() {
+    for ds in datasets() {
+        for metric in [Metric::L2, Metric::L1, Metric::Cosine] {
+            let base = single_process_fit(&ds.points, metric, 3, 42);
+            for workers in [1usize, 2, 4] {
+                let pool = pipe_pool(&ds.points, metric, workers, &[]);
+                let backend = ShardedBackend::new(&ds.points, metric, &pool);
+                let got = BanditPam::new(BanditPamConfig::default())
+                    .fit(&backend, 3, &mut Rng::seed_from(42))
+                    .expect("sharded fit");
+                let tag = format!("{} metric={metric} workers={workers}", ds.points.kind());
+                assert_eq!(got.medoids, base.medoids, "{tag}");
+                assert_eq!(got.assignments, base.assignments, "{tag}");
+                assert_eq!(got.loss.to_bits(), base.loss.to_bits(), "{tag}");
+                assert_eq!(
+                    got.stats.distance_evals, base.stats.distance_evals,
+                    "{tag}: summed shard eval counters must equal the local count"
+                );
+                assert_eq!(pool.fallbacks(), 0, "{tag}: healthy pool must never fall back");
+            }
+        }
+    }
+}
+
+#[test]
+fn worker_killed_at_pinned_request_recovers_identically() {
+    let ds = synthetic::gmm(&mut Rng::seed_from(19), 48, 5, 3, 3.0);
+    let base = single_process_fit(&ds.points, Metric::L2, 3, 11);
+    // Worker 0 dies on its 3rd work request — deterministically, at the
+    // same pinned point in the request stream every run. Its shard
+    // reassigns to a survivor and the fit must not notice.
+    let plans = vec![
+        FaultPlan { panic_on_batches: vec![3], ..Default::default() },
+        FaultPlan::default(),
+    ];
+    let pool = pipe_pool(&ds.points, Metric::L2, 2, &plans);
+    let backend = ShardedBackend::new(&ds.points, Metric::L2, &pool);
+    let got = BanditPam::new(BanditPamConfig::default())
+        .fit(&backend, 3, &mut Rng::seed_from(11))
+        .expect("fit through a worker kill");
+    assert_eq!(got.medoids, base.medoids);
+    assert_eq!(got.assignments, base.assignments);
+    assert_eq!(got.loss.to_bits(), base.loss.to_bits());
+    assert_eq!(got.stats.distance_evals, base.stats.distance_evals);
+    assert!(pool.respawns() >= 1, "the kill must have been recovered");
+    assert!(pool.retries() >= 1, "the in-flight request must have been retried");
+}
+
+#[test]
+fn spawned_subprocess_workers_match_single_process() {
+    // Real child processes of the real binary over stdio pipes — the
+    // exact `cluster --workers N` deployment. `current_exe()` inside a
+    // test binary is the test runner, so point the pool at the built CLI.
+    let ds = synthetic::gmm(&mut Rng::seed_from(3), 40, 4, 3, 3.0);
+    let base = single_process_fit(&ds.points, Metric::L2, 3, 5);
+    let opts = PoolOptions {
+        program: Some(env!("CARGO_BIN_EXE_banditpam").into()),
+        ..PoolOptions::default()
+    };
+    let pool = WorkerPool::spawn_local(&ds.points, Metric::L2, 2, opts)
+        .expect("spawn local workers");
+    pool.ping().expect("workers answer ping");
+    let backend = ShardedBackend::new(&ds.points, Metric::L2, &pool);
+    let got = BanditPam::new(BanditPamConfig::default())
+        .fit(&backend, 3, &mut Rng::seed_from(5))
+        .expect("subprocess-sharded fit");
+    assert_eq!(got.medoids, base.medoids);
+    assert_eq!(got.assignments, base.assignments);
+    assert_eq!(got.loss.to_bits(), base.loss.to_bits());
+    assert_eq!(got.stats.distance_evals, base.stats.distance_evals);
+}
+
+#[test]
+fn bigfit_with_workers_matches_single_process() {
+    // The distributed bigfit path shards the full-dataset scoring pass;
+    // the model, loss bits and every eval-count component must match the
+    // local run.
+    let ds = synthetic::gmm(&mut Rng::seed_from(29), 150, 6, 4, 3.0);
+    let fit = || Fit::banditpam().metric(Metric::L2).k(3).seed(13).threads(1);
+    let (base_model, base_stats) =
+        fit().big().samples(3).fit_with_stats(&ds).expect("local bigfit");
+
+    let pool = pipe_pool(&ds.points, Metric::L2, 3, &[]);
+    let (model, stats) = fit()
+        .big()
+        .samples(3)
+        .fit_with_workers(&ds, &pool)
+        .expect("sharded bigfit");
+
+    assert_eq!(model.clustering().medoids, base_model.clustering().medoids);
+    assert_eq!(model.clustering().assignments, base_model.clustering().assignments);
+    assert_eq!(model.loss().to_bits(), base_model.loss().to_bits());
+    assert_eq!(
+        model.clustering().stats.distance_evals,
+        base_model.clustering().stats.distance_evals
+    );
+    assert_eq!(
+        model.clustering().stats.eval_evals,
+        base_model.clustering().stats.eval_evals,
+        "the sharded scoring pass must count exactly the local evals"
+    );
+    assert_eq!(stats.samples, base_stats.samples);
+    assert_eq!(stats.n_rows, base_stats.n_rows);
+}

@@ -157,6 +157,44 @@ fn traced_bigfit_is_bitwise_identical() {
 }
 
 #[test]
+fn kernel_span_timers_are_bitwise_inert_and_recorded() {
+    // The per-kernel scoped timers around the tiled block kernels
+    // (`kernel_us{kernel="<metric>_<storage>"}`) only observe wall time:
+    // two identical fits must agree bit for bit, and the labeled
+    // histogram must have recorded the kernel invocations.
+    let ds = synthetic::gmm(&mut Rng::seed_from(31), 200, 8, 4, 3.0);
+    let backend = NativeBackend::new(&ds.points, Metric::L2).with_threads(4);
+    let mut a = BanditPam::new(BanditPamConfig::default());
+    let first = a.fit(&backend, 3, &mut Rng::seed_from(7)).expect("first fit");
+
+    let backend2 = NativeBackend::new(&ds.points, Metric::L2).with_threads(4);
+    let mut b = BanditPam::new(BanditPamConfig::default());
+    let second = b.fit(&backend2, 3, &mut Rng::seed_from(7)).expect("second fit");
+
+    assert_eq!(first.medoids, second.medoids);
+    assert_eq!(first.assignments, second.assignments);
+    assert_eq!(first.loss.to_bits(), second.loss.to_bits());
+    assert_eq!(first.stats.distance_evals, second.stats.distance_evals);
+
+    let snap = banditpam::obs::global()
+        .histogram("kernel_us{kernel=\"l2_dense\"}")
+        .snapshot();
+    assert!(snap.count > 0, "kernel_us{{kernel=\"l2_dense\"}} recorded nothing");
+
+    // The labeled family renders as Prometheus label syntax, not as a
+    // mangled bare name.
+    let text = banditpam::obs::global().render_prometheus();
+    assert!(
+        text.contains("# TYPE kernel_us histogram"),
+        "expected one kernel_us TYPE line:\n{text}"
+    );
+    assert!(
+        text.contains("kernel_us_bucket{kernel=\"l2_dense\",le="),
+        "expected labeled bucket lines:\n{text}"
+    );
+}
+
+#[test]
 fn histogram_is_deterministic_under_concurrent_hammering() {
     // 8 threads record disjoint deterministic sequences into one shared
     // histogram; the result must equal the single-threaded recording of
